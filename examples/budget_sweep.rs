@@ -1,0 +1,78 @@
+//! MCU-budget sweep: how does TinyTrain degrade as the device memory
+//! budget shrinks from Raspberry-Pi-class towards MCU-class (paper
+//! Sec 3.3, "given a more limited memory budget, our dynamic channel
+//! selection maintains higher accuracy")?
+//!
+//! Sweeps B_mem over {2 MB, 1 MB, 0.5 MB, 0.25 MB} and compares the
+//! dynamic (Fisher) channel scheme against static L2/Random at each
+//! budget, on one unseen domain.
+//!
+//!   cargo run --release --example budget_sweep [-- --episodes N]
+
+use tinytrain::coordinator::{
+    run_episode, Budgets, ChannelScheme, Criterion, Method, ModelEngine, TrainConfig,
+};
+use tinytrain::data::{domain_by_name, Sampler};
+use tinytrain::metrics::Table;
+use tinytrain::model::ParamStore;
+use tinytrain::runtime::{ArtifactStore, Runtime};
+use tinytrain::util::cli::Args;
+use tinytrain::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let episodes = args.usize("episodes", 2);
+    let steps = args.usize("steps", 8);
+    let domain_name = args.str("domain", "flower");
+
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover(None)?;
+    let engine = ModelEngine::load(&rt, &store, "mcunet")?;
+    let params = ParamStore::load_or_init(&engine.meta, &engine.weights_path, 42);
+    let domain = domain_by_name(&domain_name).unwrap();
+    let sampler = Sampler::new(domain.as_ref(), &engine.meta.shapes);
+
+    let budgets_mb = [0.20, 0.12, 0.09, 0.07];
+    let schemes = [
+        ("Dynamic (Fisher)", ChannelScheme::Fisher),
+        ("Static (L2)", ChannelScheme::L2Norm),
+        ("Static (Random)", ChannelScheme::Random(9)),
+    ];
+    let mut table = Table::new(
+        &format!("accuracy vs memory budget on {domain_name} (mcunet)"),
+        &schemes.iter().map(|(n, _)| *n).collect::<Vec<_>>(),
+    );
+    for mb in budgets_mb {
+        let mut cells = Vec::new();
+        for (name, scheme) in schemes {
+            let method = Method::TinyTrain {
+                criterion: Criterion::MultiObjective,
+                scheme,
+                budgets: Budgets { mem_bytes: mb * 1e6, compute_frac: 0.15 },
+                ratio: 0.5,
+            };
+            let mut acc = 0.0;
+            let mut layers = 0usize;
+            for e in 0..episodes {
+                let mut rng = Rng::new(33 + e as u64);
+                let ep = sampler.sample(&mut rng);
+                let tc = TrainConfig { steps, lr: 6e-3, seed: rng.next_u64() };
+                let res = run_episode(&engine, &params, &method, &ep, tc)?;
+                acc += res.acc_after;
+                layers = res.selected_layers.len();
+            }
+            acc /= episodes as f64;
+            println!(
+                "budget {:>5.2} MB  {:<18} acc {:>5.1}%  ({} layers fit)",
+                mb,
+                name,
+                acc * 100.0,
+                layers
+            );
+            cells.push(format!("{:.1}", acc * 100.0));
+        }
+        table.row(&format!("{mb} MB"), cells);
+    }
+    println!("\n{}", table.to_markdown());
+    Ok(())
+}

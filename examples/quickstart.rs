@@ -1,0 +1,56 @@
+//! Quickstart: deploy a meta-trained backbone to an unseen domain and
+//! adapt it on-device with TinyTrain's task-adaptive sparse update.
+//!
+//!   make artifacts && cargo build --release
+//!   cargo run --release --example quickstart
+//!
+//! (Best with meta-trained weights: `make weights` first.)
+
+use tinytrain::coordinator::{run_episode, Method, ModelEngine, TrainConfig};
+use tinytrain::data::{domain_by_name, Sampler};
+use tinytrain::model::ParamStore;
+use tinytrain::runtime::{ArtifactStore, Runtime};
+use tinytrain::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Runtime + artifacts (HLO text compiled once by PJRT).
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover(None)?;
+    let engine = ModelEngine::load(&rt, &store, "mcunet")?;
+    println!(
+        "loaded mcunet: {} conv layers, {} trainable params",
+        engine.meta.scaled.layers.len(),
+        engine.meta.total_theta
+    );
+
+    // 2. Weights from the offline stage (or He-init fallback).
+    let params = ParamStore::load_or_init(&engine.meta, &engine.weights_path, 42);
+
+    // 3. A new on-device task: an episode from an unseen cross-domain
+    //    dataset (few labelled support samples, imbalanced shots).
+    let domain = domain_by_name("traffic").unwrap();
+    let mut rng = Rng::new(7);
+    let episode = Sampler::new(domain.as_ref(), &engine.meta.shapes).sample(&mut rng);
+    println!(
+        "episode: {} ways, {} support / {} query samples",
+        episode.ways,
+        episode.support.len(),
+        episode.query.len()
+    );
+
+    // 4. TinyTrain: fisher pass -> multi-objective scoring -> dynamic
+    //    layer/channel selection under the 1 MB / 15% budgets -> sparse
+    //    fine-tuning (Algorithm 1).
+    let cfg = TrainConfig { steps: 10, lr: 6e-3, seed: 1 };
+    let result = run_episode(&engine, &params, &Method::tinytrain_default(), &episode, cfg)?;
+
+    println!(
+        "accuracy: {:.1}% -> {:.1}%  (selection {:.2}s, fine-tuning {:.2}s)",
+        result.acc_before * 100.0,
+        result.acc_after * 100.0,
+        result.selection_s,
+        result.train_s
+    );
+    println!("selected layers (score order): {:?}", result.selected_layers);
+    Ok(())
+}

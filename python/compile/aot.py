@@ -1,0 +1,105 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts + metadata JSON.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--arch mcunet ...]
+
+Emits, per architecture:
+  <arch>_fwd.hlo.txt     embedding graph
+  <arch>_fisher.hlo.txt  fisher-information pass (paper Eq. 2)
+  <arch>_step.hlo.txt    channel-masked Adam train step (Algorithm 1)
+  <arch>_meta.json       packing + stats metadata (meta.py)
+plus kernel_smoke.hlo.txt (tiny matmul+2 computation used by the rust
+runtime's integration tests) and manifest.json.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import graphs, meta
+from .archs import ARCH_NAMES, get_arch
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_graph(fn, shapes) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*shapes))
+
+
+def kernel_smoke_hlo() -> str:
+    """fn(x, y) = (pallas_matmul(x, y) + 2,) over f32[2,2] — runtime smoke."""
+    import jax.numpy as jnp
+
+    from .kernels import matmul
+
+    def fn(x, y):
+        return (matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def build_arch(name: str, out_dir: str, verbose=True) -> dict:
+    arch = get_arch(name, "scaled")
+    files = {}
+    for graph_name, maker in (
+        ("fwd", graphs.make_fwd),
+        ("fisher", graphs.make_fisher),
+        ("step", graphs.make_step),
+    ):
+        t0 = time.time()
+        fn, shapes = maker(arch)
+        text = lower_graph(fn, shapes)
+        fname = f"{name}_{graph_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[graph_name] = fname
+        if verbose:
+            print(
+                f"  {fname}: {len(text)/1e6:.2f} MB in {time.time()-t0:.1f}s",
+                flush=True,
+            )
+    m = meta.build_meta(name)
+    mname = f"{name}_meta.json"
+    with open(os.path.join(out_dir, mname), "w") as f:
+        json.dump(m, f, indent=1)
+    files["meta"] = mname
+    return files
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--arch", nargs="*", default=list(ARCH_NAMES))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"archs": {}, "kernel_smoke": "kernel_smoke.hlo.txt"}
+    with open(os.path.join(args.out_dir, "kernel_smoke.hlo.txt"), "w") as f:
+        f.write(kernel_smoke_hlo())
+    print("kernel_smoke.hlo.txt written", flush=True)
+    for name in args.arch:
+        print(f"[{name}] lowering...", flush=True)
+        manifest["archs"][name] = build_arch(name, args.out_dir)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("manifest.json written", flush=True)
+
+
+if __name__ == "__main__":
+    main()

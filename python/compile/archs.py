@@ -1,0 +1,311 @@
+"""Backbone architecture specifications.
+
+Each of the paper's three backbones (MCUNet, MobileNetV2-0.35,
+ProxylessNASNet-0.3) exists in two flavours:
+
+- ``scaled``  — width/resolution-scaled (32x32 input) variants with the
+  *same topology shape* (inverted-residual stacks, same block counts,
+  same stride pattern roles). These are what the runnable AOT graphs and
+  all accuracy experiments use.
+- ``paper``   — 128x128-input, paper-width variants used purely
+  *analytically* by the L3 accounting engine (Tables 2, 4, 7, 8, 11 and
+  the device-latency simulations). They are never lowered or executed.
+
+A conv "layer" is stem | pw (1x1) | dw (depthwise) | head, following the
+paper's counting (e.g. MobileNetV2: 17 blocks -> 50 block convs + stem +
+head = 52 layers). Every conv layer carries a folded affine (gamma, beta)
+in lieu of BatchNorm (DESIGN.md "Substitutions").
+
+TinyTL lite-residual adapters are attached per block (zero-initialised
+1x1 residual), so one graph serves every baseline (DESIGN.md "Design
+decisions").
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from .shapes import FEAT_DIM, IMG
+
+
+@dataclass(frozen=True)
+class Conv:
+    """One conv layer: the unit of TinyTrain's layer selection."""
+
+    name: str
+    kind: str  # 'stem' | 'pw' | 'dw' | 'head'
+    cin: int
+    cout: int
+    k: int
+    stride: int
+    act: bool  # ReLU6 after affine?
+    in_hw: int
+    out_hw: int
+    block: int  # owning block index, -1 for stem/head
+
+    @property
+    def weight_shape(self) -> Tuple[int, ...]:
+        if self.kind == "dw":
+            return (self.k, self.k, self.cout)
+        if self.kind in ("pw", "head"):
+            return (self.cin, self.cout)
+        return (self.k, self.k, self.cin, self.cout)  # stem dense conv
+
+    @property
+    def weight_params(self) -> int:
+        n = 1
+        for d in self.weight_shape:
+            n *= d
+        return n
+
+    @property
+    def params(self) -> int:
+        """Trainable parameters incl. folded affine (gamma, beta)."""
+        return self.weight_params + 2 * self.cout
+
+    @property
+    def macs(self) -> int:
+        """Forward multiply-accumulates for one image."""
+        pixels = self.out_hw * self.out_hw
+        if self.kind == "dw":
+            return pixels * self.cout * self.k * self.k
+        return pixels * self.cout * self.cin * self.k * self.k
+
+    @property
+    def act_elems(self) -> int:
+        """Output activation element count for one image."""
+        return self.out_hw * self.out_hw * self.cout
+
+
+@dataclass(frozen=True)
+class Block:
+    """Inverted-residual block: [expand pw] -> dw -> project pw."""
+
+    idx: int
+    cin: int
+    cout: int
+    expand: int
+    k: int
+    stride: int
+    in_hw: int
+    out_hw: int
+    skip: bool
+    conv_ids: Tuple[int, ...]  # indices into Arch.convs
+
+
+@dataclass
+class Arch:
+    name: str
+    flavor: str  # 'scaled' | 'paper'
+    img: int
+    feat_dim: int
+    convs: List[Conv] = field(default_factory=list)
+    blocks: List[Block] = field(default_factory=list)
+
+    @property
+    def total_params(self) -> int:
+        return sum(c.params for c in self.convs)
+
+    @property
+    def total_macs(self) -> int:
+        return sum(c.macs for c in self.convs)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.convs)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    def adapter_shapes(self, block: Block) -> Tuple[Tuple[int, int], Tuple[int]]:
+        """TinyTL lite-residual adapter: 1x1 (cin -> cout) + bias."""
+        return (block.cin, block.cout), (block.cout,)
+
+
+def _build(name, flavor, img, stem_c, stem_stride, specs, head_dim):
+    """Assemble an Arch from block specs [(cout, expand, k, stride), ...]."""
+    arch = Arch(name=name, flavor=flavor, img=img, feat_dim=head_dim)
+    hw = img
+    out_hw = -(-hw // stem_stride)
+    arch.convs.append(
+        Conv("stem", "stem", 3, stem_c, 3, stem_stride, True, hw, out_hw, -1)
+    )
+    hw = out_hw
+    cin = stem_c
+    for bi, (cout, e, k, s) in enumerate(specs):
+        mid = cin * e
+        conv_ids = []
+        in_hw = hw
+        out_hw = -(-hw // s)
+        if e != 1:
+            conv_ids.append(len(arch.convs))
+            arch.convs.append(
+                Conv(f"b{bi}.expand", "pw", cin, mid, 1, 1, True, in_hw, in_hw, bi)
+            )
+        conv_ids.append(len(arch.convs))
+        arch.convs.append(
+            Conv(f"b{bi}.dw", "dw", mid, mid, k, s, True, in_hw, out_hw, bi)
+        )
+        conv_ids.append(len(arch.convs))
+        arch.convs.append(
+            Conv(f"b{bi}.project", "pw", mid, cout, 1, 1, False, out_hw, out_hw, bi)
+        )
+        skip = s == 1 and cin == cout
+        arch.blocks.append(
+            Block(bi, cin, cout, e, k, s, in_hw, out_hw, skip, tuple(conv_ids))
+        )
+        cin = cout
+        hw = out_hw
+    arch.convs.append(Conv("head", "head", cin, head_dim, 1, 1, True, hw, hw, -1))
+    return arch
+
+
+def _make_divisible(v, divisor=8):
+    new_v = max(divisor, int(v + divisor / 2) // divisor * divisor)
+    if new_v < 0.9 * v:
+        new_v += divisor
+    return new_v
+
+
+# ----------------------------------------------------------------------------
+# Scaled (runnable, 32x32) variants — same topology roles, reduced widths.
+# ----------------------------------------------------------------------------
+
+def mcunet_scaled() -> Arch:
+    # 14 blocks like MCUNet-5FPS; stride-2 at stem, b1, b4.
+    specs = [
+        (8, 1, 3, 1),
+        (12, 3, 3, 2),
+        (12, 3, 3, 1),
+        (16, 3, 3, 1),
+        (16, 3, 3, 2),
+        (16, 3, 3, 1),
+        (16, 3, 3, 1),
+        (24, 3, 3, 1),
+        (24, 3, 3, 1),
+        (24, 3, 3, 1),
+        (32, 3, 3, 1),
+        (32, 3, 3, 1),
+        (40, 3, 3, 1),
+        (40, 3, 3, 1),
+    ]
+    return _build("mcunet", "scaled", IMG, 8, 2, specs, FEAT_DIM)
+
+
+def mbv2_scaled() -> Arch:
+    # 17 blocks like MobileNetV2 (n = 1,2,3,4,3,3,1); first block e=1.
+    specs = []
+    table = [(1, 8, 1, 1), (4, 12, 2, 2), (4, 16, 3, 1), (4, 24, 4, 2),
+             (4, 32, 3, 1), (4, 40, 3, 1), (4, 48, 1, 1)]
+    for e, c, n, s in table:
+        for i in range(n):
+            specs.append((c, e, 3, s if i == 0 else 1))
+    return _build("mbv2", "scaled", IMG, 8, 2, specs, FEAT_DIM)
+
+
+def proxyless_scaled() -> Arch:
+    # 20 blocks like ProxylessNAS-Mobile: mixed kernel sizes 3/5, e in {1,3,6}.
+    specs = [
+        (8, 1, 3, 1),
+        (12, 3, 5, 2),
+        (12, 3, 3, 1),
+        (12, 3, 3, 1),
+        (16, 3, 5, 1),
+        (16, 3, 3, 1),
+        (16, 3, 3, 1),
+        (16, 3, 3, 1),
+        (24, 6, 5, 2),
+        (24, 3, 3, 1),
+        (24, 3, 3, 1),
+        (24, 3, 3, 1),
+        (32, 6, 5, 1),
+        (32, 3, 3, 1),
+        (32, 3, 3, 1),
+        (32, 3, 3, 1),
+        (40, 6, 5, 1),
+        (40, 3, 3, 1),
+        (40, 3, 3, 1),
+        (48, 6, 3, 1),
+    ]
+    return _build("proxyless", "scaled", IMG, 8, 2, specs, FEAT_DIM)
+
+
+# ----------------------------------------------------------------------------
+# Paper-scale (analytic-only, 128x128) variants — widths chosen to land on
+# the paper's Table 4 statistics (params / MACs / layers / blocks).
+# ----------------------------------------------------------------------------
+
+def mcunet_paper() -> Arch:
+    # MCUNet 5FPS-class: 14 blocks, mixed e/k — lands at 0.451M params /
+    # 21.7M MACs vs the paper's 0.46M / 22.5M (Table 4).
+    specs = [
+        (16, 1, 3, 1),
+        (16, 4, 7, 2),
+        (24, 4, 3, 2),
+        (24, 4, 5, 1),
+        (40, 4, 5, 2),
+        (40, 4, 3, 1),
+        (40, 4, 3, 1),
+        (48, 4, 5, 2),
+        (48, 4, 5, 1),
+        (80, 4, 3, 1),
+        (80, 4, 5, 1),
+        (80, 4, 3, 2),
+        (112, 4, 3, 1),
+        (112, 4, 5, 1),
+    ]
+    return _build("mcunet", "paper", 128, 16, 2, specs, 256)
+
+
+def mbv2_paper() -> Arch:
+    # MobileNetV2 with width multiplier 0.35: 17 blocks, ~0.29M params.
+    wm = 0.35
+    table = [(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+             (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+    specs = []
+    for e, c, n, s in table:
+        cc = _make_divisible(c * wm)
+        for i in range(n):
+            specs.append((cc, e, 3, s if i == 0 else 1))
+    return _build("mbv2", "paper", 128, _make_divisible(32 * wm), 2, specs, 448)
+
+
+def proxyless_paper() -> Arch:
+    # ProxylessNAS-Mobile-class, 20 blocks — 0.333M params / 18.7M MACs vs
+    # the paper's 0.36M / 19.2M (Table 4).
+    wm = 0.35
+    base = [
+        (16, 1, 3, 1),
+        (24, 3, 5, 2),
+        (24, 3, 3, 1),
+        (24, 3, 3, 1),
+        (24, 3, 3, 1),
+        (40, 6, 7, 2),
+        (40, 3, 3, 1),
+        (40, 3, 5, 1),
+        (40, 3, 5, 1),
+        (80, 6, 7, 2),
+        (80, 3, 5, 1),
+        (80, 3, 5, 1),
+        (80, 3, 5, 1),
+        (96, 6, 5, 1),
+        (96, 3, 5, 1),
+        (96, 3, 5, 1),
+        (96, 3, 5, 1),
+        (192, 6, 7, 2),
+        (192, 6, 7, 1),
+        (320, 6, 7, 1),
+    ]
+    specs = [(_make_divisible(c * wm), e, k, s) for (c, e, k, s) in base]
+    return _build("proxyless", "paper", 128, _make_divisible(32 * wm), 2, specs, 432)
+
+
+ARCH_NAMES = ("mcunet", "mbv2", "proxyless")
+
+_SCALED = {"mcunet": mcunet_scaled, "mbv2": mbv2_scaled, "proxyless": proxyless_scaled}
+_PAPER = {"mcunet": mcunet_paper, "mbv2": mbv2_paper, "proxyless": proxyless_paper}
+
+
+def get_arch(name: str, flavor: str = "scaled") -> Arch:
+    table = _SCALED if flavor == "scaled" else _PAPER
+    return table[name]()

@@ -1,0 +1,117 @@
+"""The three AOT graph families the rust runtime executes.
+
+- fwd    : (theta, imgs)                         -> (emb,)
+- fisher : (theta, sup_x, sup_y, sup_v, qx, qy, qv) -> (loss, fisher_flat)
+- step   : (theta, m, v, t, mask, lr, sup..., qry...) -> (theta', m', v', loss)
+
+All tensors are static-shaped (see shapes.py); parameters travel as one
+flat f32 vector in the packing of layers.param_entries. The Fisher pass
+taps every conv layer's activation via zero "probes" and differentiates
+w.r.t. them — the gradients feed the L1 fisher kernel (paper Eq. 2). The
+train step computes masked Adam via the L1 update kernel; the mask is a
+full parameter-extent vector the rust side assembles from the selected
+layers/channels.
+"""
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, protonet
+from .archs import Arch
+from .kernels import adam_update, fisher
+from .shapes import CHANNELS, EVAL_BATCH, IMG, MAX_QUERY, MAX_SUPPORT, MAX_WAYS
+
+
+def episode_arg_shapes():
+    """Shapes of (sup_x, sup_y, sup_v, qry_x, qry_y, qry_v)."""
+    return [
+        (MAX_SUPPORT, IMG, IMG, CHANNELS),
+        (MAX_SUPPORT, MAX_WAYS),
+        (MAX_SUPPORT,),
+        (MAX_QUERY, IMG, IMG, CHANNELS),
+        (MAX_QUERY, MAX_WAYS),
+        (MAX_QUERY,),
+    ]
+
+
+def make_fwd(arch: Arch):
+    """Embedding graph over a fixed EVAL_BATCH of images."""
+
+    def fwd(theta, imgs):
+        emb, _ = layers.forward(arch, theta, imgs)
+        return (emb,)
+
+    return fwd, [
+        jax.ShapeDtypeStruct((layers.total_params(arch),), jnp.float32),
+        jax.ShapeDtypeStruct((EVAL_BATCH, IMG, IMG, CHANNELS), jnp.float32),
+    ]
+
+
+def _probe_shapes(arch: Arch, batch: int) -> List[jax.ShapeDtypeStruct]:
+    return [
+        jax.ShapeDtypeStruct((batch, c.out_hw, c.out_hw, c.cout), jnp.float32)
+        for c in arch.convs
+    ]
+
+
+def make_fisher(arch: Arch):
+    """Fisher-information pass (paper Eq. 2 per channel, all conv layers).
+
+    Prototypes come from the support set; the loss is evaluated on the
+    (pseudo-)query set whose activations are tapped. Output fisher_flat
+    concatenates per-layer Delta_o in conv order (segment table in
+    <arch>_meta.json).
+    """
+
+    def fisher_pass(theta, sup_x, sup_y, sup_v, qry_x, qry_y, qry_v):
+        sup_emb, _ = layers.forward(arch, theta, sup_x)
+
+        def loss_of_probes(probes):
+            qry_emb, acts = layers.forward(arch, theta, qry_x, probes=probes, collect=True)
+            loss = protonet.episode_loss(sup_emb, sup_y, sup_v, qry_emb, qry_y, qry_v)
+            return loss, acts
+
+        zeros = [jnp.zeros(s.shape, s.dtype) for s in _probe_shapes(arch, MAX_QUERY)]
+        (loss, acts), grads = jax.value_and_grad(loss_of_probes, has_aux=True)(zeros)
+        deltas = [fisher(a, g) for a, g in zip(acts, grads)]
+        return loss, jnp.concatenate(deltas, axis=0)
+
+    shapes = [jax.ShapeDtypeStruct((layers.total_params(arch),), jnp.float32)] + [
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in episode_arg_shapes()
+    ]
+    return fisher_pass, shapes
+
+
+def make_step(arch: Arch):
+    """One channel-masked Adam fine-tuning step (Algorithm 1, line 6).
+
+    Support set forms the prototypes; the pseudo-query set (augmented
+    support, assembled rust-side per Hu et al., 2022) receives the CE
+    loss. Gradients flow to the full theta; the L1 update kernel applies
+    them through the parameter-extent mask.
+    """
+
+    def step(theta, m, v, t, mask, lr, sup_x, sup_y, sup_v, qry_x, qry_y, qry_v):
+        def loss_fn(th):
+            # One fused forward over support+query: halves the per-layer op
+            # count vs two traced chains (EXPERIMENTS.md §Perf, L2 pass).
+            all_emb, _ = layers.forward(arch, th, jnp.concatenate([sup_x, qry_x], axis=0))
+            sup_emb = all_emb[: MAX_SUPPORT]
+            qry_emb = all_emb[MAX_SUPPORT:]
+            return protonet.episode_loss(sup_emb, sup_y, sup_v, qry_emb, qry_y, qry_v)
+
+        loss, grads = jax.value_and_grad(loss_fn)(theta)
+        theta1, m1, v1 = adam_update(theta, m, v, grads, mask, lr, t)
+        return theta1, m1, v1, loss
+
+    p = layers.total_params(arch)
+    shapes = (
+        [jax.ShapeDtypeStruct((p,), jnp.float32)] * 3
+        + [jax.ShapeDtypeStruct((1,), jnp.float32)]  # t
+        + [jax.ShapeDtypeStruct((p,), jnp.float32)]  # mask
+        + [jax.ShapeDtypeStruct((1,), jnp.float32)]  # lr
+        + [jax.ShapeDtypeStruct(s, jnp.float32) for s in episode_arg_shapes()]
+    )
+    return step, shapes

@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+The L2 model graphs (python/compile/model.py, graphs.py) call these so the
+kernels lower into the same AOT HLO artifacts the rust runtime executes.
+"""
+
+from .depthwise import depthwise_conv, depthwise_conv_tiled
+from .fisher import fisher, fisher_tiled
+from .pointwise import matmul, matmul_tiled, pointwise_conv, pointwise_conv_tiled
+from .update import adam_update, adam_update_tiled, sgd_update
+
+__all__ = [
+    "depthwise_conv",
+    "depthwise_conv_tiled",
+    "fisher",
+    "fisher_tiled",
+    "matmul",
+    "matmul_tiled",
+    "pointwise_conv",
+    "pointwise_conv_tiled",
+    "adam_update",
+    "adam_update_tiled",
+    "sgd_update",
+]

@@ -1,0 +1,119 @@
+"""Pallas depthwise KxK convolution kernel (SAME padding, NHWC).
+
+Depthwise convolutions have no contraction over channels, so on TPU they
+are VPU (vector) work rather than MXU work: the kernel holds a spatial
+halo block in VMEM and applies the KxK stencil as K^2 shifted
+multiply-accumulates over the channel-major layout. The paper's
+inverted-residual blocks interleave these with the pointwise (MXU)
+kernels; see DESIGN.md "Hardware-Adaptation".
+
+- ``depthwise_conv`` — single-block variant used by the L2 model graphs
+  (whole operand in VMEM; fine at the repo's scaled shapes).
+- ``depthwise_conv_tiled`` — grid over the batch: one sample's padded
+  (Hp, Wp, C) halo block per step, the paper-scale VMEM schedule.
+
+Backward passes are provided through custom_vjp using jax.vjp of the
+reference convolution (fwd(pallas) == fwd(ref) is pinned by tests, so
+gradients are exact); the depthwise backward is VPU-shaped either way.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import depthwise_conv_ref
+
+
+def _stencil(xp, w, k, stride, oh, ow):
+    """K^2 shifted multiply-accumulate over a padded block.
+
+    xp: (N, Hp, Wp, C) already SAME-padded, w: (K, K, C).
+    """
+    n, _, _, c = xp.shape
+    acc = jnp.zeros((n, oh, ow, c), xp.dtype)
+    for di in range(k):
+        for dj in range(k):
+            patch = jax.lax.slice(
+                xp,
+                (0, di, dj, 0),
+                (n, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            acc = acc + patch * w[di, dj]
+    return acc
+
+
+def _dw_kernel(xp_ref, w_ref, k, stride, oh, ow, o_ref):
+    o_ref[...] = _stencil(xp_ref[...], w_ref[...], k, stride, oh, ow)
+
+
+def _pad_same(x, k, stride=1):
+    """XLA-convention SAME padding (asymmetric when stride doesn't divide)."""
+    _, h, w, _ = x.shape
+    oh = -(-h // stride)
+    ow = -(-w // stride)
+    ph = max((oh - 1) * stride + k - h, 0)
+    pw = max((ow - 1) * stride + k - w, 0)
+    return jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)))
+
+
+def _dw_fwd_impl(x, w, stride, tiled):
+    n, h, wd, c = x.shape
+    k = w.shape[0]
+    oh = -(-h // stride)
+    ow = -(-wd // stride)
+    xp = _pad_same(x, k, stride)
+    hp, wp = xp.shape[1], xp.shape[2]
+    body = functools.partial(_dw_kernel, k=k, stride=stride, oh=oh, ow=ow)
+
+    def wrapped(xp_ref, w_ref, o_ref):
+        body(xp_ref, w_ref, o_ref=o_ref)
+
+    if not tiled:
+        return pl.pallas_call(
+            wrapped,
+            out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), x.dtype),
+            interpret=True,
+        )(xp, w)
+    # Grid over samples: one (1, Hp, Wp, C) halo block resident per step.
+    return pl.pallas_call(
+        wrapped,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((k, k, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), x.dtype),
+        interpret=True,
+    )(xp, w)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_dw(stride, tiled):
+    @jax.custom_vjp
+    def dw(x, w, b):
+        return _dw_fwd_impl(x, w, stride, tiled) + b
+
+    def fwd(x, w, b):
+        return dw(x, w, b), (x, w, b)
+
+    def bwd(res, g):
+        x, w, b = res
+        _, vjp = jax.vjp(lambda x_, w_, b_: depthwise_conv_ref(x_, w_, b_, stride), x, w, b)
+        return vjp(g)
+
+    dw.defvjp(fwd, bwd)
+    return dw
+
+
+def depthwise_conv(x, w, b, stride=1):
+    """Depthwise KxK conv, SAME, NHWC: x (N,H,W,C), w (K,K,C), b (C,)."""
+    return _make_dw(stride, False)(x, w, b)
+
+
+def depthwise_conv_tiled(x, w, b, stride=1):
+    """Per-sample-tiled variant (paper-scale VMEM halo schedule)."""
+    return _make_dw(stride, True)(x, w, b)

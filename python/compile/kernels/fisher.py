@@ -1,0 +1,66 @@
+"""Pallas per-channel Fisher-information reduction (paper Eq. 2).
+
+Delta_o[c] = 1/(2N) * sum_n ( sum_{h,w} a[n,h,w,c] * g[n,h,w,c] )^2
+
+This is the kernel behind TinyTrain's task-adaptive selection: it turns a
+layer's activations and their loss-gradients into one importance score per
+channel. On TPU it is a two-stage VPU reduction — the inner spatial
+trace keeps an (N, C) partial in VMEM, the outer square-and-sum collapses
+the batch — which is what both variants below express.
+
+- ``fisher`` — single-block variant used by the L2 fisher-pass graph.
+- ``fisher_tiled`` — grid over the batch, accumulating the squared traces
+  into the (C,) output block across steps (the paper-scale schedule where
+  the activations of a large batch do not fit VMEM at once).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fisher_kernel(a_ref, g_ref, o_ref):
+    a = a_ref[...]
+    g = g_ref[...]
+    n = a.shape[0]
+    trace = jnp.sum(a * g, axis=(1, 2))  # (N, C)
+    o_ref[...] = jnp.sum(trace * trace, axis=0) / (2.0 * n)
+
+
+def fisher(a, g):
+    """Per-channel Fisher info: a, g (N, H, W, C) -> (C,)."""
+    c = a.shape[-1]
+    return pl.pallas_call(
+        _fisher_kernel,
+        out_shape=jax.ShapeDtypeStruct((c,), a.dtype),
+        interpret=True,
+    )(a, g)
+
+
+def _fisher_tiled_kernel(a_ref, g_ref, o_ref, *, inv2n):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # (1, H, W, C)
+    g = g_ref[...]
+    trace = jnp.sum(a * g, axis=(1, 2))  # (1, C)
+    o_ref[...] += trace[0] * trace[0] * inv2n
+
+
+def fisher_tiled(a, g):
+    """Batch-tiled variant: one sample's activation block per grid step."""
+    n, h, w, c = a.shape
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_fisher_tiled_kernel, inv2n=1.0 / (2.0 * n)),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((c,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((c,), a.dtype),
+        interpret=True,
+    )(a, g)

@@ -1,0 +1,156 @@
+"""Pallas pointwise (1x1) convolution kernel.
+
+The inverted-residual hot loop is dominated by 1x1 convolutions (expand /
+project); as a (pixels x Cin) @ (Cin x Cout) matmul they are the MXU-bound
+part of the paper's workload on TPU (see DESIGN.md "Hardware-Adaptation").
+
+Two variants:
+
+- ``pointwise_conv`` — the variant the L2 model graphs call. The whole
+  operand is one VMEM block (grid=()); at the repo's scaled shapes the
+  operands fit comfortably, and under interpret=True the body lowers to a
+  single fused dot, so the AOT artifact stays small and fast on CPU-PJRT.
+- ``pointwise_conv_tiled`` — the paper-scale TPU schedule: an
+  (M/bm, N/bn, K/bk) grid with (bm, bk)x(bk, bn) VMEM tiles accumulated in
+  the (bm, bn) output block, i.e. the classic MXU pipeline expressed via
+  BlockSpec. Correctness is pinned to the same oracle; DESIGN.md §Perf
+  derives its VMEM/MXU estimates from these block shapes.
+
+Both are wrapped in a custom_vjp whose backward pass runs the same Pallas
+matmul (dx and dw are matmuls too), keeping the training hot path on the
+kernel rather than falling back to XLA-native einsums.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def _matmul_impl(a, b):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Single-block Pallas matmul: (M, K) @ (K, N) -> (M, N).
+
+    Differentiable: both cotangents are Pallas matmuls themselves.
+    """
+    return _matmul_impl(a, b)
+
+
+def _mm_vjp_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _mm_vjp_bwd(res, g):
+    a, b = res
+    return _matmul_impl(g, b.T), _matmul_impl(a.T, g)
+
+
+matmul.defvjp(_mm_vjp_fwd, _mm_vjp_bwd)
+
+
+def _matmul_tiled_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def matmul_tiled(a, b, bm=128, bn=128, bk=128):
+    """Grid-tiled Pallas matmul with K-accumulation in the output block.
+
+    Pads each dim up to a multiple of its block size (TPU would demand
+    (8, 128)-aligned tiles; padding expresses the same constraint).
+    """
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_tiled_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _pw_fwd_impl(x, w, b, mm):
+    n, h, wd, ci = x.shape
+    co = w.shape[1]
+    y = mm(x.reshape(n * h * wd, ci), w)
+    return y.reshape(n, h, wd, co) + b
+
+
+@jax.custom_vjp
+def pointwise_conv(x, w, b):
+    """1x1 conv NHWC via the single-block Pallas matmul.
+
+    x: (N, H, W, Cin), w: (Cin, Cout), b: (Cout,) -> (N, H, W, Cout).
+    """
+    return _pw_fwd_impl(x, w, b, matmul)
+
+
+def _pw_vjp_fwd(x, w, b):
+    return pointwise_conv(x, w, b), (x, w)
+
+
+def _pw_vjp_bwd(res, g):
+    x, w = res
+    n, h, wd, ci = x.shape
+    co = w.shape[1]
+    gf = g.reshape(n * h * wd, co)
+    xf = x.reshape(n * h * wd, ci)
+    dx = matmul(gf, w.T).reshape(x.shape)
+    dw = matmul(xf.T, gf)
+    db = jnp.sum(gf, axis=0)
+    return dx, dw, db
+
+
+pointwise_conv.defvjp(_pw_vjp_fwd, _pw_vjp_bwd)
+
+
+@jax.custom_vjp
+def pointwise_conv_tiled(x, w, b):
+    """1x1 conv NHWC via the grid-tiled (paper-scale TPU) Pallas matmul."""
+    return _pw_fwd_impl(x, w, b, matmul_tiled)
+
+
+def _pwt_vjp_fwd(x, w, b):
+    return pointwise_conv_tiled(x, w, b), (x, w)
+
+
+def _pwt_vjp_bwd(res, g):
+    x, w = res
+    n, h, wd, ci = x.shape
+    co = w.shape[1]
+    gf = g.reshape(n * h * wd, co)
+    xf = x.reshape(n * h * wd, ci)
+    dx = matmul_tiled(gf, w.T).reshape(x.shape)
+    dw = matmul_tiled(xf.T, gf)
+    db = jnp.sum(gf, axis=0)
+    return dx, dw, db
+
+
+pointwise_conv_tiled.defvjp(_pwt_vjp_fwd, _pwt_vjp_bwd)

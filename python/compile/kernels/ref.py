@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against the functions here by
+pytest (python/tests/test_kernels.py, hypothesis sweeps over shapes).
+These are also used as the backward-pass bodies inside the kernels'
+custom_vjp rules: since fwd(pallas) == fwd(ref) (asserted by tests),
+jax.grad of the pallas-wrapped layer equals jax.grad of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def pointwise_conv_ref(x, w, b):
+    """1x1 convolution, NHWC.
+
+    x: (N, H, W, Cin), w: (Cin, Cout), b: (Cout,) -> (N, H, W, Cout).
+    """
+    return jnp.einsum("nhwi,io->nhwo", x, w) + b
+
+
+def depthwise_conv_ref(x, w, b, stride=1):
+    """Depthwise KxK convolution, SAME padding, NHWC.
+
+    x: (N, H, W, C), w: (K, K, C), b: (C,) -> (N, H', W', C) with
+    H' = ceil(H / stride).
+    """
+    out = jax.lax.conv_general_dilated(
+        x,
+        w[:, :, None, :],  # (K, K, 1, C) depthwise filter (HWIO, C groups)
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def im2col_ref(x, k, stride=1):
+    """Extract KxK patches (SAME padding): (N,H,W,C) -> (N,H',W',K*K*C)."""
+    n, h, w_, c = x.shape
+    oh = -(-h // stride)
+    ow = -(-w_ // stride)
+    ph = max((oh - 1) * stride + k - h, 0)
+    pw = max((ow - 1) * stride + k - w_, 0)
+    xp = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2), (0, 0)))
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(
+                jax.lax.slice(
+                    xp,
+                    (0, di, dj, 0),
+                    (n, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.concatenate(cols, axis=-1)
+
+
+def dense_conv_ref(x, w, b, stride=1):
+    """Dense KxK convolution (SAME), NHWC: w (K, K, Cin, Cout)."""
+    return (
+        jax.lax.conv_general_dilated(
+            x,
+            w,
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        + b
+    )
+
+
+def fisher_ref(a, g):
+    """Per-channel Fisher information on activations (paper Eq. 2).
+
+    a, g: (N, H, W, C) activations and their loss-gradients.
+    Delta_o[c] = 1/(2N) * sum_n ( sum_{h,w} a[n,h,w,c] * g[n,h,w,c] )^2
+    """
+    n = a.shape[0]
+    trace = jnp.sum(a * g, axis=(1, 2))  # (N, C)
+    return jnp.sum(trace * trace, axis=0) / (2.0 * n)
+
+
+def adam_update_ref(p, m, v, g, mask, lr, t, b1=0.9, b2=0.999, eps=1e-8):
+    """Channel-masked Adam step over flat parameter vectors.
+
+    mask is 1.0 where the parameter is selected for update; moments are
+    gated by the mask as well (optimiser state exists only for selected
+    parameters — matches the paper's optimiser-memory accounting).
+    Returns (p', m', v').
+    """
+    m1 = mask * (b1 * m + (1.0 - b1) * g) + (1.0 - mask) * m
+    v1 = mask * (b2 * v + (1.0 - b2) * g * g) + (1.0 - mask) * v
+    mhat = m1 / (1.0 - b1**t)
+    vhat = v1 / (1.0 - b2**t)
+    p1 = p - mask * lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p1, m1, v1
+
+
+def sgd_update_ref(p, g, mask, lr):
+    """Channel-masked plain-SGD step (used by the optimiser ablation)."""
+    return p - mask * lr * g

@@ -1,0 +1,90 @@
+"""Pallas channel-masked optimiser update kernels.
+
+TinyTrain's sparse update is expressed as *dense masked math* rather than
+gather/scatter of packed channels: one AOT-compiled executable stays valid
+for every possible layer/channel selection, and on TPU dense mask-multiply
+beats dynamic scatter into tiled layouts (DESIGN.md "Hardware-Adaptation").
+The memory/compute savings of sparsity are analytic, exactly as in the
+paper's own accounting (Table 2).
+
+All operands are flat f32 vectors over the whole parameter space; the L2
+graph broadcasts the per-layer (C_out,) channel masks to parameter extent
+before calling in here, so this is the single hot update kernel of the
+training step.
+
+- ``adam_update`` / ``sgd_update`` — single-block variants for the model.
+- ``adam_update_tiled`` — chunked grid variant (paper-scale schedule for
+  parameter spaces larger than VMEM).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import ADAM_B1, ADAM_B2, ADAM_EPS
+
+
+def _adam_body(p, m, v, g, mask, lr, t):
+    m1 = mask * (ADAM_B1 * m + (1.0 - ADAM_B1) * g) + (1.0 - mask) * m
+    v1 = mask * (ADAM_B2 * v + (1.0 - ADAM_B2) * g * g) + (1.0 - mask) * v
+    mhat = m1 / (1.0 - ADAM_B1**t)
+    vhat = v1 / (1.0 - ADAM_B2**t)
+    p1 = p - mask * lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return p1, m1, v1
+
+
+def _adam_kernel(p_ref, m_ref, v_ref, g_ref, mask_ref, lr_ref, t_ref, po_ref, mo_ref, vo_ref):
+    lr = lr_ref[0]
+    t = t_ref[0]
+    p1, m1, v1 = _adam_body(p_ref[...], m_ref[...], v_ref[...], g_ref[...], mask_ref[...], lr, t)
+    po_ref[...] = p1
+    mo_ref[...] = m1
+    vo_ref[...] = v1
+
+
+def adam_update(p, m, v, g, mask, lr, t):
+    """Masked Adam step over flat vectors.
+
+    p, m, v, g, mask: (P,) f32; lr, t: (1,) f32. Moments are gated by the
+    mask (optimiser state exists only for selected parameters, matching
+    the paper's optimiser-memory accounting). Returns (p', m', v').
+    """
+    shape = jax.ShapeDtypeStruct(p.shape, p.dtype)
+    return pl.pallas_call(
+        _adam_kernel,
+        out_shape=(shape, shape, shape),
+        interpret=True,
+    )(p, m, v, g, mask, lr, t)
+
+
+def adam_update_tiled(p, m, v, g, mask, lr, t, block=65536):
+    """Chunk-gridded masked Adam (paper-scale VMEM schedule)."""
+    n = p.shape[0]
+    block = min(block, n)
+    npad = -(-n // block) * block
+    pad = lambda x: jnp.pad(x, (0, npad - n))
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    shape = jax.ShapeDtypeStruct((npad,), p.dtype)
+    p1, m1, v1 = pl.pallas_call(
+        _adam_kernel,
+        grid=(npad // block,),
+        in_specs=[vec, vec, vec, vec, vec, scl, scl],
+        out_specs=(vec, vec, vec),
+        out_shape=(shape, shape, shape),
+        interpret=True,
+    )(pad(p), pad(m), pad(v), pad(g), pad(mask), lr, t)
+    return p1[:n], m1[:n], v1[:n]
+
+
+def _sgd_kernel(p_ref, g_ref, mask_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - mask_ref[...] * lr_ref[0] * g_ref[...]
+
+
+def sgd_update(p, g, mask, lr):
+    """Masked plain-SGD step over flat vectors (optimiser ablation)."""
+    return pl.pallas_call(
+        _sgd_kernel,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        interpret=True,
+    )(p, g, mask, lr)

@@ -1,0 +1,155 @@
+"""Flat parameter packing and the backbone forward pass.
+
+The PJRT interchange keeps the entire trainable state as a few flat f32
+vectors (theta, adam-m, adam-v, mask), so the L3 Rust coordinator manages
+one buffer per role instead of hundreds of named tensors. This module
+defines the canonical packing (ParamSpec list; also serialised into
+<arch>_meta.json for the Rust side) and the forward pass that unpacks
+theta and runs the Pallas kernels.
+
+Per conv layer the parameters are: weight, gamma, beta — the affine
+(gamma, beta) stands in for folded BatchNorm and is fused into the conv
+at trace time (conv(x, W)*gamma == conv(x, W*gamma)), so it costs no
+extra FLOPs. Per block a TinyTL lite-residual adapter (1x1 conv + bias,
+zero-initialised) is appended after the backbone parameters.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .archs import Arch, Conv
+from .kernels import depthwise_conv, matmul, pointwise_conv
+from .kernels.ref import im2col_ref
+
+
+@dataclass(frozen=True)
+class ParamEntry:
+    """One tensor inside the flat theta vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    size: int
+    role: str  # 'weight' | 'gamma' | 'beta' | 'adapter_w' | 'adapter_b'
+    layer: int  # conv index, or block index for adapters
+    mask_axis: int  # axis indexed by the output-channel mask
+
+
+def param_entries(arch: Arch) -> List[ParamEntry]:
+    """Canonical packing order: all conv layers (w, gamma, beta), then all
+    block adapters (w, b)."""
+    entries: List[ParamEntry] = []
+    off = 0
+
+    def push(name, shape, role, layer, mask_axis):
+        nonlocal off
+        size = 1
+        for d in shape:
+            size *= d
+        entries.append(ParamEntry(name, tuple(shape), off, size, role, layer, mask_axis))
+        off += size
+
+    for li, c in enumerate(arch.convs):
+        ws = c.weight_shape
+        push(f"{c.name}.w", ws, "weight", li, len(ws) - 1)
+        push(f"{c.name}.gamma", (c.cout,), "gamma", li, 0)
+        push(f"{c.name}.beta", (c.cout,), "beta", li, 0)
+    for b in arch.blocks:
+        (aw, ab) = arch.adapter_shapes(b)
+        push(f"b{b.idx}.adapter.w", aw, "adapter_w", b.idx, 1)
+        push(f"b{b.idx}.adapter.b", ab, "adapter_b", b.idx, 0)
+    return entries
+
+
+def total_params(arch: Arch) -> int:
+    e = param_entries(arch)[-1]
+    return e.offset + e.size
+
+
+def unpack(theta, entries: List[ParamEntry]) -> Dict[str, jnp.ndarray]:
+    return {e.name: theta[e.offset : e.offset + e.size].reshape(e.shape) for e in entries}
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def _conv_apply(c: Conv, params: Dict[str, jnp.ndarray], x):
+    """Run one conv layer with folded affine via the Pallas kernels."""
+    w = params[f"{c.name}.w"]
+    gamma = params[f"{c.name}.gamma"]
+    beta = params[f"{c.name}.beta"]
+    if c.kind in ("pw", "head"):
+        y = pointwise_conv(x, w * gamma[None, :], beta)
+    elif c.kind == "dw":
+        y = depthwise_conv(x, w * gamma[None, None, :], beta, stride=c.stride)
+    else:  # dense stem conv: im2col + Pallas matmul
+        n, h, wd, ci = x.shape
+        cols = im2col_ref(x, c.k, c.stride)  # (N, H', W', K*K*Cin)
+        oh, ow = cols.shape[1], cols.shape[2]
+        wf = (w * gamma).reshape(-1, c.cout)  # (K*K*Cin, Cout)
+        y = matmul(cols.reshape(n * oh * ow, -1), wf).reshape(n, oh, ow, c.cout) + beta
+    return relu6(y) if c.act else y
+
+
+def forward(
+    arch: Arch,
+    theta,
+    x,
+    probes: Optional[List[jnp.ndarray]] = None,
+    collect: bool = False,
+):
+    """Backbone forward pass.
+
+    x: (B, IMG, IMG, 3) NHWC. Returns (emb, acts) where emb is the
+    L2-normalised (B, FEAT_DIM) embedding and acts the per-conv-layer
+    activation list (empty unless collect=True).
+
+    ``probes``, when given, is a per-conv-layer list of zero tensors added
+    to each layer's output activation; gradients w.r.t. them are the
+    activation gradients that feed the Fisher kernel (DESIGN.md).
+    """
+    entries = param_entries(arch)
+    params = unpack(theta, entries)
+    acts: List[jnp.ndarray] = []
+
+    def tap(li, a):
+        if probes is not None:
+            a = a + probes[li]
+        if collect:
+            acts.append(a)
+        return a
+
+    li = 0
+    c = arch.convs[li]
+    h = tap(li, _conv_apply(c, params, x))
+    li += 1
+    for b in arch.blocks:
+        xin = h
+        for ci in b.conv_ids:
+            c = arch.convs[ci]
+            h = tap(ci, _conv_apply(c, params, h))
+        # TinyTL lite-residual adapter (zero-init => inactive unless trained).
+        aw = params[f"b{b.idx}.adapter.w"]
+        ab = params[f"b{b.idx}.adapter.b"]
+        pooled = xin
+        if b.stride > 1:
+            n, hh, ww, cc = xin.shape
+            oh, ow = h.shape[1], h.shape[2]
+            pooled = xin[:, : oh * b.stride, : ow * b.stride, :]
+            pooled = pooled.reshape(n, oh, b.stride, ow, b.stride, cc).mean(axis=(2, 4))
+        h = h + pointwise_conv(pooled, aw, ab)
+        if b.skip:
+            h = h + xin
+        li = b.conv_ids[-1] + 1
+    # Head conv was appended after the last block in arch.convs.
+    head = arch.convs[-1]
+    h = tap(len(arch.convs) - 1, _conv_apply(head, params, h))
+    emb = jnp.mean(h, axis=(1, 2))  # global average pool -> (B, F)
+    # rsqrt(.+eps) keeps the normalisation differentiable at emb == 0
+    # (||.||'s 0/0 gradient would NaN the whole training step).
+    emb = emb * jax.lax.rsqrt(jnp.sum(emb * emb, axis=-1, keepdims=True) + 1e-12)
+    return emb, acts

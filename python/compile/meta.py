@@ -1,0 +1,109 @@
+"""Metadata emission: the single source of truth for the L3 Rust side.
+
+aot.py writes one <arch>_meta.json per architecture describing (a) the
+flat-theta packing (param entries with offsets/shapes/mask axes), (b) the
+fisher output segmentation, (c) per-layer statistics for BOTH flavours
+(scaled: drives the runnable graphs and the multi-objective criterion;
+paper: drives the analytic accounting of Tables 2/4/7/8/11), and (d) the
+static episode shape constants. Rust never re-derives any of this.
+"""
+
+from typing import Any, Dict
+
+from . import layers, shapes
+from .archs import Arch, get_arch
+
+
+def conv_dict(c) -> Dict[str, Any]:
+    return {
+        "name": c.name,
+        "kind": c.kind,
+        "cin": c.cin,
+        "cout": c.cout,
+        "k": c.k,
+        "stride": c.stride,
+        "act": c.act,
+        "in_hw": c.in_hw,
+        "out_hw": c.out_hw,
+        "block": c.block,
+        "weight_params": c.weight_params,
+        "params": c.params,
+        "macs": c.macs,
+        "act_elems": c.act_elems,
+    }
+
+
+def block_dict(b) -> Dict[str, Any]:
+    return {
+        "idx": b.idx,
+        "cin": b.cin,
+        "cout": b.cout,
+        "expand": b.expand,
+        "k": b.k,
+        "stride": b.stride,
+        "in_hw": b.in_hw,
+        "out_hw": b.out_hw,
+        "skip": b.skip,
+        "conv_ids": list(b.conv_ids),
+    }
+
+
+def flavor_dict(arch: Arch) -> Dict[str, Any]:
+    return {
+        "img": arch.img,
+        "feat_dim": arch.feat_dim,
+        "layers": [conv_dict(c) for c in arch.convs],
+        "blocks": [block_dict(b) for b in arch.blocks],
+        "total_params": arch.total_params,
+        "total_macs": arch.total_macs,
+    }
+
+
+def build_meta(name: str) -> Dict[str, Any]:
+    scaled = get_arch(name, "scaled")
+    paper = get_arch(name, "paper")
+    entries = layers.param_entries(scaled)
+    fisher_segments = []
+    off = 0
+    for li, c in enumerate(scaled.convs):
+        fisher_segments.append(
+            {"layer": li, "name": c.name, "offset": off, "size": c.cout}
+        )
+        off += c.cout
+    return {
+        "arch": name,
+        "flavors": {"scaled": flavor_dict(scaled), "paper": flavor_dict(paper)},
+        "param_entries": [
+            {
+                "name": e.name,
+                "shape": list(e.shape),
+                "offset": e.offset,
+                "size": e.size,
+                "role": e.role,
+                "layer": e.layer,
+                "mask_axis": e.mask_axis,
+            }
+            for e in entries
+        ],
+        "total_theta": layers.total_params(scaled),
+        "fisher_len": off,
+        "fisher_segments": fisher_segments,
+        "shapes": {
+            "img": shapes.IMG,
+            "channels": shapes.CHANNELS,
+            "max_ways": shapes.MAX_WAYS,
+            "max_support": shapes.MAX_SUPPORT,
+            "max_query": shapes.MAX_QUERY,
+            "eval_batch": shapes.EVAL_BATCH,
+            "feat_dim": shapes.FEAT_DIM,
+            "cosine_tau": shapes.COSINE_TAU,
+            "adam_b1": shapes.ADAM_B1,
+            "adam_b2": shapes.ADAM_B2,
+            "adam_eps": shapes.ADAM_EPS,
+        },
+        "artifacts": {
+            "fwd": f"{name}_fwd.hlo.txt",
+            "fisher": f"{name}_fisher.hlo.txt",
+            "step": f"{name}_step.hlo.txt",
+        },
+    }

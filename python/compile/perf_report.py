@@ -1,0 +1,105 @@
+"""L1/L2 performance analysis (DESIGN.md §Perf).
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the L1
+report is *structural*: per-kernel VMEM footprint and MXU-utilisation
+estimates from the BlockSpec tile shapes, at both the runnable (scaled)
+and paper-scale operand shapes. The L2 report parses the lowered HLO text
+and summarises op-category counts and the fusion surface (how much of the
+graph XLA can fuse vs. how many dots/convs remain).
+
+Usage: python -m compile.perf_report [--arch mcunet] [--out-dir ../artifacts]
+"""
+
+import argparse
+import os
+import re
+from collections import Counter
+
+from .archs import ARCH_NAMES, get_arch
+
+VMEM_BYTES = 16 * 2 ** 20  # v4-class per-core VMEM
+MXU_DIM = 128  # systolic array edge
+
+
+def kernel_vmem_report(arch_name: str):
+    """Per-kernel VMEM residency + MXU alignment at paper-scale shapes."""
+    arch = get_arch(arch_name, "paper")
+    rows = []
+    for c in arch.convs:
+        if c.kind in ("pw", "head"):
+            # pointwise tile: (bm=pixels-block, bk=cin) x (bk, bn=cout)
+            pixels = c.out_hw * c.out_hw
+            bm = min(pixels * 8, 1024)  # batch-of-8 spatial tile
+            bk, bn = c.cin, c.cout
+            vmem = 4 * (bm * bk + bk * bn + bm * bn)
+            # MXU utilisation ~ how full the 128x128 array is per pass
+            util = min(1.0, bk / MXU_DIM) * min(1.0, bn / MXU_DIM)
+            rows.append((c.name, "pw/MXU", vmem, util))
+        elif c.kind == "dw":
+            # depthwise halo block: one sample (Hp, Wp, C) + (K,K,C)
+            hp = c.in_hw + c.k - 1
+            vmem = 4 * (hp * hp * c.cin + c.k * c.k * c.cin + c.out_hw * c.out_hw * c.cout)
+            rows.append((c.name, "dw/VPU", vmem, 0.0))
+        else:  # stem: im2col + matmul
+            pixels = c.out_hw * c.out_hw
+            bk = c.k * c.k * c.cin
+            vmem = 4 * (min(pixels * 8, 1024) * bk + bk * c.cout)
+            util = min(1.0, bk / MXU_DIM) * min(1.0, c.cout / MXU_DIM)
+            rows.append((c.name, "stem/MXU", vmem, util))
+    return rows
+
+
+def hlo_op_summary(path: str):
+    """Parse HLO text: op-category histogram + top shapes."""
+    ops = Counter()
+    with open(path) as f:
+        for line in f:
+            m = re.search(r"=\s*[a-z0-9\[\],{}\s]*\b([a-z][a-z0-9-]*)\(", line)
+            if m:
+                ops[m.group(1)] += 1
+    return ops
+
+
+INTERESTING = [
+    "dot", "convolution", "fusion", "add", "multiply", "reduce", "broadcast",
+    "reshape", "transpose", "select", "maximum", "minimum", "rsqrt", "divide",
+    "dynamic-update-slice", "while", "slice", "pad", "concatenate",
+]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", nargs="*", default=list(ARCH_NAMES))
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+
+    for name in args.arch:
+        print(f"== L1 kernel VMEM/MXU report: {name} (paper-scale) ==")
+        rows = kernel_vmem_report(name)
+        worst = max(rows, key=lambda r: r[2])
+        mxu = [r for r in rows if r[3] > 0]
+        avg_util = sum(r[3] for r in mxu) / max(len(mxu), 1)
+        over = [r for r in rows if r[2] > VMEM_BYTES]
+        print(f"  layers: {len(rows)}, max kernel VMEM: {worst[0]} "
+              f"{worst[2]/2**20:.2f} MiB (budget {VMEM_BYTES/2**20:.0f} MiB)")
+        print(f"  MXU-layer mean utilisation estimate: {avg_util:.2f} "
+              f"({len(mxu)} matmul-shaped layers)")
+        print(f"  kernels exceeding VMEM budget: {len(over)}")
+
+        print(f"== L2 HLO summary: {name} ==")
+        for graph in ("fwd", "fisher", "step"):
+            path = os.path.join(args.out_dir, f"{name}_{graph}.hlo.txt")
+            if not os.path.exists(path):
+                print(f"  {graph}: (artifact missing — run make artifacts)")
+                continue
+            ops = hlo_op_summary(path)
+            total = sum(ops.values())
+            heavy = ops.get("dot", 0) + ops.get("convolution", 0)
+            shown = {k: ops[k] for k in INTERESTING if ops.get(k)}
+            print(f"  {graph}: {total} ops, heavy(dot+conv)={heavy}, "
+                  f"while={ops.get('while', 0)}, breakdown={shown}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""ProtoNet (Snell et al., 2017) with cosine distance and padding masks.
+
+TinyTrain meta-trains and fine-tunes through ProtoNet episodes: class
+prototypes are computed on the support set, queries are classified by
+nearest centroid under cosine distance (paper Eq. 1; cosine follows Hu et
+al., 2022). Because the AOT graphs have static shapes, episodes arrive
+padded to (MAX_WAYS, MAX_SUPPORT, MAX_QUERY) with validity masks, and all
+reductions below are mask-aware.
+"""
+
+import jax.numpy as jnp
+
+from .shapes import COSINE_TAU
+
+
+def prototypes(sup_emb, sup_onehot, sup_valid):
+    """Masked class centroids.
+
+    sup_emb: (S, F) embeddings; sup_onehot: (S, W); sup_valid: (S,).
+    Returns (proto (W, F) L2-normalised, way_valid (W,)).
+    """
+    w = sup_onehot * sup_valid[:, None]  # (S, W)
+    counts = jnp.sum(w, axis=0)  # (W,)
+    proto = w.T @ sup_emb / jnp.maximum(counts, 1.0)[:, None]
+    proto = proto * jnp.sqrt(1.0 / (jnp.sum(proto * proto, axis=-1, keepdims=True) + 1e-12))
+    way_valid = (counts > 0).astype(sup_emb.dtype)
+    return proto, way_valid
+
+
+def logits(query_emb, proto, way_valid):
+    """Cosine-similarity logits with invalid ways masked to -inf."""
+    sim = query_emb @ proto.T  # embeddings and protos are L2-normalised
+    return sim * COSINE_TAU + (way_valid - 1.0) * 1e9
+
+
+def masked_ce(lgts, onehot, valid):
+    """Mean cross-entropy over valid examples."""
+    logp = lgts - jnp.log(jnp.sum(jnp.exp(lgts - jnp.max(lgts, -1, keepdims=True)), -1, keepdims=True)) - jnp.max(lgts, -1, keepdims=True)
+    nll = -jnp.sum(onehot * logp, axis=-1)  # (Q,)
+    denom = jnp.maximum(jnp.sum(valid), 1.0)
+    return jnp.sum(nll * valid) / denom
+
+
+def masked_accuracy(lgts, onehot, valid):
+    """Mean top-1 accuracy over valid examples."""
+    pred = jnp.argmax(lgts, axis=-1)
+    label = jnp.argmax(onehot, axis=-1)
+    correct = (pred == label).astype(lgts.dtype)
+    denom = jnp.maximum(jnp.sum(valid), 1.0)
+    return jnp.sum(correct * valid) / denom
+
+
+def episode_loss(sup_emb, sup_y, sup_valid, qry_emb, qry_y, qry_valid):
+    """ProtoNet episode loss: prototypes from support, CE on the query."""
+    proto, way_valid = prototypes(sup_emb, sup_y, sup_valid)
+    lg = logits(qry_emb, proto, way_valid)
+    return masked_ce(lg, qry_y, qry_valid)

@@ -1,0 +1,34 @@
+"""Static episode/tensor shape constants shared by L2 graphs and the L3 coordinator.
+
+The PJRT AOT path requires static shapes, so episodes are padded to the
+maxima below and accompanied by validity masks. The L3 Rust side reads the
+same constants from artifacts/<arch>_meta.json (emitted by aot.py) — this
+module is the single definition point.
+
+Scaled down from the paper's regime (<=50-way, <=500 support, 128x128
+images) to a 1-core CPU testbed; see DESIGN.md "Substitutions".
+"""
+
+# Episode padding maxima (paper: ways<=50, support<=500, query<=10/class).
+MAX_WAYS = 10
+MAX_SUPPORT = 40
+MAX_QUERY = 40
+
+# Input image geometry (paper: 128x128x3; scaled for the CPU testbed).
+IMG = 32
+CHANNELS = 3
+
+# Embedding dimensionality of the ProtoNet feature space.
+FEAT_DIM = 64
+
+# Batch size of the standalone embedding (fwd) graph.
+EVAL_BATCH = MAX_SUPPORT + MAX_QUERY
+
+# Cosine-distance temperature for prototype logits (Hu et al., 2022 use
+# a learned scale; a fixed sharp temperature behaves equivalently here).
+COSINE_TAU = 10.0
+
+# Adam defaults used by the exported train-step graph.
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8

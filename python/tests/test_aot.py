@@ -1,0 +1,90 @@
+"""AOT pipeline tests: HLO text emission and metadata consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, graphs, layers, meta
+from compile.archs import ARCH_NAMES, get_arch
+
+
+def test_kernel_smoke_hlo_contains_entry():
+    text = aot.kernel_smoke_hlo()
+    assert "ENTRY" in text
+    assert "f32[2,2]" in text
+
+
+def test_fwd_graph_lowers_to_hlo_text():
+    arch = get_arch("mcunet")
+    fn, shapes = graphs.make_fwd(arch)
+    text = aot.lower_graph(fn, shapes)
+    assert "ENTRY" in text
+    # theta parameter present with the right extent
+    assert f"f32[{layers.total_params(arch)}]" in text
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_meta_consistency(name):
+    m = meta.build_meta(name)
+    # param entries tile [0, total_theta) exactly
+    off = 0
+    for e in m["param_entries"]:
+        assert e["offset"] == off
+        size = 1
+        for d in e["shape"]:
+            size *= d
+        assert e["size"] == size
+        off += size
+    assert off == m["total_theta"]
+    # fisher segments align with per-layer couts
+    scaled = m["flavors"]["scaled"]
+    assert len(m["fisher_segments"]) == len(scaled["layers"])
+    foff = 0
+    for seg, layer in zip(m["fisher_segments"], scaled["layers"]):
+        assert seg["offset"] == foff
+        assert seg["size"] == layer["cout"]
+        foff += seg["size"]
+    assert foff == m["fisher_len"]
+    # totals agree with the layer table
+    assert scaled["total_params"] == sum(l["params"] for l in scaled["layers"])
+    assert scaled["total_macs"] == sum(l["macs"] for l in scaled["layers"])
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_meta_is_json_serialisable(name):
+    m = meta.build_meta(name)
+    text = json.dumps(m)
+    back = json.loads(text)
+    assert back["arch"] == name
+
+
+def test_artifacts_on_disk_match_current_meta():
+    """If `make artifacts` has run, the shipped meta must match the code."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    path = os.path.join(art_dir, "mcunet_meta.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        on_disk = json.load(f)
+    fresh = meta.build_meta("mcunet")
+    assert on_disk["total_theta"] == fresh["total_theta"], "stale artifacts — re-run make artifacts"
+    assert on_disk["param_entries"] == fresh["param_entries"]
+    assert on_disk["flavors"]["paper"] == fresh["flavors"]["paper"]
+
+
+def test_probe_gradients_are_activation_gradients():
+    """The probe trick: grad w.r.t. an additive zero probe equals the
+    activation gradient (sanity check of the Fisher-pass construction)."""
+    def f(x, probe):
+        h = jnp.tanh(x + probe)
+        return jnp.sum(h * h)
+
+    x = jnp.array([0.3, -0.7, 1.2])
+    g_probe = jax.grad(f, argnums=1)(x, jnp.zeros_like(x))
+    g_x = jax.grad(f, argnums=0)(x, jnp.zeros_like(x))
+    import numpy as np
+
+    np.testing.assert_allclose(g_probe, g_x, rtol=1e-6)

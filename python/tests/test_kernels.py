@@ -1,0 +1,267 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes/strides/values; every kernel (and its tiled
+paper-scale variant) must match ref.py, and the custom_vjp gradients must
+match jax.grad of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    adam_update,
+    adam_update_tiled,
+    depthwise_conv,
+    depthwise_conv_tiled,
+    fisher,
+    fisher_tiled,
+    matmul,
+    matmul_tiled,
+    pointwise_conv,
+    pointwise_conv_tiled,
+    sgd_update,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 33),
+    k=st.integers(1, 17),
+    n=st.integers(1, 29),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand(seed, (m, k))
+    b = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul(a, b), a @ b, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 40),
+    n=st.integers(1, 50),
+    bm=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_tiled_matches_ref(m, k, n, bm, seed):
+    a = rand(seed, (m, k))
+    b = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        matmul_tiled(a, b, bm=bm, bn=bm, bk=bm), a @ b, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_grad_matches_ref():
+    a = rand(0, (6, 5))
+    b = rand(1, (5, 7))
+    ga, gb = jax.grad(lambda a, b: jnp.sum(matmul(a, b) ** 2), (0, 1))(a, b)
+    ga2, gb2 = jax.grad(lambda a, b: jnp.sum((a @ b) ** 2), (0, 1))(a, b)
+    np.testing.assert_allclose(ga, ga2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gb, gb2, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- pointwise
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 5),
+    h=st.integers(1, 10),
+    ci=st.integers(1, 12),
+    co=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_pointwise_matches_ref(n, h, ci, co, seed):
+    x = rand(seed, (n, h, h, ci))
+    w = rand(seed + 1, (ci, co))
+    b = rand(seed + 2, (co,))
+    expected = ref.pointwise_conv_ref(x, w, b)
+    np.testing.assert_allclose(pointwise_conv(x, w, b), expected, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        pointwise_conv_tiled(x, w, b), expected, rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_pointwise_grads_match_ref(seed):
+    x = rand(seed, (2, 4, 4, 3))
+    w = rand(seed + 1, (3, 5))
+    b = rand(seed + 2, (5,))
+
+    def loss(f):
+        return lambda x, w, b: jnp.sum(jnp.tanh(f(x, w, b)))
+
+    g1 = jax.grad(loss(pointwise_conv), (0, 1, 2))(x, w, b)
+    g2 = jax.grad(loss(ref.pointwise_conv_ref), (0, 1, 2))(x, w, b)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- depthwise
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4),
+    h=st.integers(2, 12),
+    w=st.integers(2, 12),
+    c=st.integers(1, 10),
+    k=st.sampled_from([3, 5, 7]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_depthwise_matches_ref(n, h, w, c, k, stride, seed):
+    x = rand(seed, (n, h, w, c))
+    wt = rand(seed + 1, (k, k, c))
+    b = rand(seed + 2, (c,))
+    expected = ref.depthwise_conv_ref(x, wt, b, stride)
+    np.testing.assert_allclose(
+        depthwise_conv(x, wt, b, stride), expected, rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        depthwise_conv_tiled(x, wt, b, stride), expected, rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("k", [3, 5])
+def test_depthwise_grads_match_ref(stride, k):
+    x = rand(7, (2, 8, 8, 4))
+    wt = rand(8, (k, k, 4))
+    b = rand(9, (4,))
+
+    def loss(f):
+        return lambda x, w, b: jnp.sum(jnp.tanh(f(x, w, b, stride)))
+
+    g1 = jax.grad(loss(depthwise_conv), (0, 1, 2))(x, wt, b)
+    g2 = jax.grad(loss(ref.depthwise_conv_ref), (0, 1, 2))(x, wt, b)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_odd_and_even_sizes_stride2():
+    # SAME padding is asymmetric when stride does not divide the extent.
+    for h in (7, 8, 9, 16):
+        x = rand(h, (1, h, h, 2))
+        wt = rand(h + 1, (3, 3, 2))
+        b = jnp.zeros(2)
+        np.testing.assert_allclose(
+            depthwise_conv(x, wt, b, 2),
+            ref.depthwise_conv_ref(x, wt, b, 2),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------- fisher
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 8),
+    h=st.integers(1, 8),
+    c=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_fisher_matches_ref(n, h, c, seed):
+    a = rand(seed, (n, h, h, c))
+    g = rand(seed + 1, (n, h, h, c))
+    expected = ref.fisher_ref(a, g)
+    np.testing.assert_allclose(fisher(a, g), expected, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(fisher_tiled(a, g), expected, rtol=1e-4, atol=1e-6)
+
+
+def test_fisher_nonnegative_and_zero_grad():
+    a = rand(3, (4, 5, 5, 6))
+    assert jnp.all(fisher(a, jnp.zeros_like(a)) == 0.0)
+    g = rand(4, (4, 5, 5, 6))
+    assert jnp.all(fisher(a, g) >= 0.0)
+
+
+def test_fisher_matches_hand_computation():
+    # 1 sample, 1 channel, 2x2 spatial: Delta = (sum a*g)^2 / 2
+    a = jnp.ones((1, 2, 2, 1))
+    g = 2.0 * jnp.ones((1, 2, 2, 1))
+    np.testing.assert_allclose(fisher(a, g), [(4 * 2.0) ** 2 / 2.0])
+
+
+# ---------------------------------------------------------------- update
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 300),
+    t=st.integers(1, 50),
+    seed=st.integers(0, 2**16),
+)
+def test_adam_update_matches_ref(p, t, seed):
+    key = seed
+    params = rand(key, (p,))
+    m = rand(key + 1, (p,), 0.1)
+    v = jnp.abs(rand(key + 2, (p,), 0.1))
+    g = rand(key + 3, (p,))
+    mask = (rand(key + 4, (p,)) > 0).astype(jnp.float32)
+    lr, tt = jnp.array([0.01]), jnp.array([float(t)])
+    got = adam_update(params, m, v, g, mask, lr, tt)
+    exp = ref.adam_update_ref(params, m, v, g, mask, 0.01, float(t))
+    for a, b in zip(got, exp):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    got_tiled = adam_update_tiled(params, m, v, g, mask, lr, tt, block=64)
+    for a, b in zip(got_tiled, exp):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_adam_update_respects_mask():
+    p = rand(0, (64,))
+    m = rand(1, (64,), 0.1)
+    v = jnp.abs(rand(2, (64,), 0.1))
+    g = rand(3, (64,))
+    mask = (jnp.arange(64) < 32).astype(jnp.float32)
+    p1, m1, v1 = adam_update(p, m, v, g, mask, jnp.array([0.1]), jnp.array([1.0]))
+    # Unselected params and moments are bit-identical to their inputs.
+    np.testing.assert_array_equal(p1[32:], p[32:])
+    np.testing.assert_array_equal(m1[32:], m[32:])
+    np.testing.assert_array_equal(v1[32:], v[32:])
+    # Selected params moved.
+    assert float(jnp.max(jnp.abs(p1[:32] - p[:32]))) > 0.0
+
+
+def test_sgd_update_matches_ref():
+    p = rand(0, (50,))
+    g = rand(1, (50,))
+    mask = (jnp.arange(50) % 2).astype(jnp.float32)
+    np.testing.assert_allclose(
+        sgd_update(p, g, mask, jnp.array([0.05])),
+        ref.sgd_update_ref(p, g, mask, 0.05),
+        rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------- im2col / dense conv
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("k", [3, 5])
+def test_im2col_dense_conv_equivalence(stride, k):
+    x = rand(0, (2, 9, 9, 3))
+    w = rand(1, (k, k, 3, 6))
+    cols = ref.im2col_ref(x, k, stride)
+    got = jnp.einsum("nhwp,po->nhwo", cols, w.reshape(-1, 6))
+    exp = ref.dense_conv_ref(x, w, jnp.zeros(6), stride)
+    np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,123 @@
+"""L2 layer/packing tests: flat-theta packing, forward shapes, folding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile.archs import ARCH_NAMES, get_arch
+from compile.kernels import ref
+from compile.shapes import FEAT_DIM
+
+
+def he_theta(arch, seed=0):
+    rng = np.random.default_rng(seed)
+    th = np.zeros(layers.total_params(arch), np.float32)
+    for e in layers.param_entries(arch):
+        if e.role == "weight":
+            fan_in = int(np.prod(e.shape[:-1])) if len(e.shape) > 1 else e.shape[0]
+            th[e.offset : e.offset + e.size] = rng.normal(
+                0, np.sqrt(2.0 / max(fan_in, 1)), e.size
+            )
+        elif e.role == "gamma":
+            th[e.offset : e.offset + e.size] = 1.0
+    return jnp.array(th)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_entries_contiguous(name):
+    arch = get_arch(name)
+    entries = layers.param_entries(arch)
+    off = 0
+    for e in entries:
+        assert e.offset == off, e.name
+        assert e.size == int(np.prod(e.shape))
+        off += e.size
+    assert off == layers.total_params(arch)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_entry_roles_and_mask_axes(name):
+    arch = get_arch(name)
+    for e in layers.param_entries(arch):
+        if e.role == "weight":
+            assert e.mask_axis == len(e.shape) - 1
+        elif e.role in ("gamma", "beta", "adapter_b"):
+            assert e.shape == (e.size,)
+            assert e.mask_axis == 0
+        elif e.role == "adapter_w":
+            assert len(e.shape) == 2 and e.mask_axis == 1
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_taps(name):
+    arch = get_arch(name)
+    theta = he_theta(arch)
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, arch.img, arch.img, 3))
+    emb, acts = layers.forward(arch, theta, x, collect=True)
+    assert emb.shape == (3, FEAT_DIM)
+    assert len(acts) == len(arch.convs)
+    for a, c in zip(acts, arch.convs):
+        assert a.shape == (3, c.out_hw, c.out_hw, c.cout), c.name
+    # embeddings are unit-normalised
+    np.testing.assert_allclose(jnp.linalg.norm(emb, axis=-1), 1.0, atol=1e-3)
+
+
+def test_affine_fold_equivalence():
+    # conv(x, w*gamma) + beta == conv(x, w)*gamma + beta
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 6, 4))
+    w = jax.random.normal(jax.random.PRNGKey(2), (4, 5))
+    gamma = jax.random.normal(jax.random.PRNGKey(3), (5,))
+    beta = jax.random.normal(jax.random.PRNGKey(4), (5,))
+    folded = ref.pointwise_conv_ref(x, w * gamma[None, :], beta)
+    unfolded = ref.pointwise_conv_ref(x, w, jnp.zeros(5)) * gamma + beta
+    np.testing.assert_allclose(folded, unfolded, rtol=1e-4, atol=1e-5)
+
+
+def test_zero_adapters_are_inactive():
+    # With adapters zero-initialised, zeroing them vs leaving them must agree.
+    arch = get_arch("mcunet")
+    theta = he_theta(arch)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, arch.img, arch.img, 3))
+    emb1, _ = layers.forward(arch, theta, x)
+    th2 = np.array(theta)
+    for e in layers.param_entries(arch):
+        if e.role.startswith("adapter"):
+            assert np.all(th2[e.offset : e.offset + e.size] == 0.0)
+    emb2, _ = layers.forward(arch, jnp.array(th2), x)
+    np.testing.assert_allclose(emb1, emb2, rtol=1e-6)
+
+
+def test_probes_shift_activations():
+    arch = get_arch("mcunet")
+    theta = he_theta(arch)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, arch.img, arch.img, 3))
+    _, acts0 = layers.forward(arch, theta, x, collect=True)
+    probes = [jnp.zeros_like(a) for a in acts0]
+    probes[5] = probes[5] + 1.0
+    _, acts1 = layers.forward(arch, theta, x, probes=probes, collect=True)
+    np.testing.assert_allclose(acts1[5], acts0[5] + 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_table4_paper_stats(name):
+    """Paper-scale flavours land near the paper's Table 4 statistics."""
+    targets = {
+        "mcunet": (0.46e6, 22.5e6, 14),
+        "mbv2": (0.29e6, 17.4e6, 17),
+        "proxyless": (0.36e6, 19.2e6, 20),
+    }
+    p, m, nb = targets[name]
+    arch = get_arch(name, "paper")
+    assert arch.n_blocks == nb
+    assert abs(arch.total_params - p) / p < 0.12
+    assert abs(arch.total_macs - m) / m < 0.12
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_layer_counts_match_paper_convention(name):
+    # stem + block convs + head; paper reports 42/52/61.
+    arch = get_arch(name, "paper")
+    expected = {"mcunet": 43, "mbv2": 52, "proxyless": 61}[name]
+    assert arch.n_layers == expected

@@ -1,0 +1,86 @@
+"""ProtoNet loss/prototype tests: masking, cosine classification, CE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import protonet
+
+
+def onehot(labels, ways):
+    return jnp.eye(ways, dtype=jnp.float32)[jnp.array(labels)]
+
+
+def test_prototypes_are_masked_means():
+    emb = jnp.array([[1.0, 0.0], [3.0, 0.0], [0.0, 2.0], [9.0, 9.0]])
+    y = onehot([0, 0, 1, 0], 2)
+    valid = jnp.array([1.0, 1.0, 1.0, 0.0])  # last row is padding
+    proto, wv = protonet.prototypes(emb, y, valid)
+    # class 0 mean = (1+3)/2 = 2 along x, normalised -> (1, 0)
+    np.testing.assert_allclose(proto[0], [1.0, 0.0], atol=1e-5)
+    np.testing.assert_allclose(proto[1], [0.0, 1.0], atol=1e-5)
+    np.testing.assert_allclose(wv, [1.0, 1.0])
+
+
+def test_empty_way_is_masked_out_of_logits():
+    emb = jnp.array([[1.0, 0.0]])
+    y = onehot([0], 3)
+    valid = jnp.ones(1)
+    proto, wv = protonet.prototypes(emb, y, valid)
+    assert wv[1] == 0.0 and wv[2] == 0.0
+    lg = protonet.logits(jnp.array([[1.0, 0.0]]), proto, wv)
+    assert lg[0, 0] > -1e8
+    assert lg[0, 1] < -1e8  # masked way
+
+
+def test_masked_ce_matches_manual():
+    lg = jnp.array([[2.0, 0.0], [0.0, 2.0]])
+    y = onehot([0, 0], 2)
+    v = jnp.array([1.0, 0.0])  # only the first example counts
+    loss = protonet.masked_ce(lg, y, v)
+    manual = -jnp.log(jnp.exp(2.0) / (jnp.exp(2.0) + 1.0))
+    np.testing.assert_allclose(loss, manual, rtol=1e-5)
+
+
+def test_masked_accuracy_ignores_padding():
+    lg = jnp.array([[5.0, 0.0], [0.0, 5.0], [5.0, 0.0]])
+    y = onehot([0, 0, 0], 2)
+    v = jnp.array([1.0, 1.0, 0.0])
+    acc = protonet.masked_accuracy(lg, y, v)
+    np.testing.assert_allclose(acc, 0.5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(2, 12),
+    q=st.integers(2, 12),
+    w=st.integers(2, 5),
+    f=st.integers(3, 16),
+    seed=st.integers(0, 1000),
+)
+def test_episode_loss_finite_and_grads_flow(s, q, w, f, seed):
+    k = jax.random.PRNGKey(seed)
+    sup = jax.random.normal(k, (s, f))
+    qry = jax.random.normal(jax.random.PRNGKey(seed + 1), (q, f))
+    sup_y = onehot(np.random.default_rng(seed).integers(0, w, s), w)
+    qry_y = onehot(np.random.default_rng(seed + 1).integers(0, w, q), w)
+    ones_s, ones_q = jnp.ones(s), jnp.ones(q)
+
+    def loss_fn(sup):
+        return protonet.episode_loss(sup, sup_y, ones_s, qry, qry_y, ones_q)
+
+    loss, g = jax.value_and_grad(loss_fn)(sup)
+    assert np.isfinite(float(loss))
+    assert np.all(np.isfinite(np.array(g)))
+
+
+def test_perfect_separation_gives_low_loss():
+    # support/query on orthogonal axes -> loss ~ 0 under sharp tau
+    sup = jnp.array([[1.0, 0.0], [0.0, 1.0]])
+    qry = jnp.array([[1.0, 0.0], [0.0, 1.0]])
+    y = onehot([0, 1], 2)
+    v = jnp.ones(2)
+    loss = protonet.episode_loss(sup, y, v, qry, y, v)
+    assert float(loss) < 0.05

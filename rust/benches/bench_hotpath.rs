@@ -1,0 +1,80 @@
+//! `cargo bench` — hot-path microbenchmarks over the live PJRT
+//! executables (the L3 §Perf targets in DESIGN.md): embedding forward,
+//! fisher pass, masked train step, plus the pure-rust episode evaluator
+//! and mask construction. Records the numbers EXPERIMENTS.md §Perf cites.
+
+use std::time::Duration;
+
+use tinytrain::coordinator::{episode_accuracy, ModelEngine};
+use tinytrain::data::{domain_by_name, Sampler};
+use tinytrain::model::ParamStore;
+use tinytrain::runtime::{ArtifactStore, Runtime};
+use tinytrain::util::bench::bench;
+use tinytrain::util::rng::Rng;
+
+fn main() {
+    let budget = Duration::from_secs(3);
+    let rt = Runtime::cpu().expect("pjrt");
+    let store = ArtifactStore::discover(None).expect("run `make artifacts`");
+    let engine = ModelEngine::load(&rt, &store, "mcunet").expect("engine");
+    let meta = &engine.meta;
+    let mut params = ParamStore::init(meta, 1);
+
+    let domain = domain_by_name("traffic").unwrap();
+    let mut rng = Rng::new(5);
+    let ep = Sampler::new(domain.as_ref(), &meta.shapes).sample(&mut rng);
+    let padded = ep.pad(&meta.shapes);
+    let pseudo = ep.pseudo_query(&meta.shapes, &mut rng);
+    let mask = vec![1.0f32; meta.total_theta];
+
+    println!(
+        "-- PJRT hot path (mcunet scaled, EVAL_BATCH={}) --",
+        meta.shapes.eval_batch
+    );
+    // warm-up: compile outside the timed regions
+    let emb = engine.embed_with(&params, engine.eval_batch(&padded)).unwrap();
+    engine.fisher_pass(&params, &padded, &pseudo).unwrap();
+    engine
+        .train_step(&mut params.clone(), &mask, 1e-3, &padded, &pseudo)
+        .unwrap();
+
+    bench("fwd: embed 80 images", budget, || {
+        std::hint::black_box(
+            engine.embed_with(&params, engine.eval_batch(&padded)).unwrap().data[0],
+        );
+    });
+    bench("fisher pass (support+pseudo-query)", budget, || {
+        std::hint::black_box(engine.fisher_pass(&params, &padded, &pseudo).unwrap().loss);
+    });
+    bench("train step (host round-trip path)", budget, || {
+        std::hint::black_box(
+            engine.train_step(&mut params, &mask, 1e-3, &padded, &pseudo).unwrap(),
+        );
+    });
+
+    // Device-resident path (§Perf optimisation): theta/m/v stay on device.
+    let mut state = engine.upload_state(&params).unwrap();
+    let dev_ep = engine.upload_episode(&padded, &pseudo).unwrap();
+    let mask_buf = engine.upload_mask(&mask).unwrap();
+    bench("train step (device-resident path)", budget, || {
+        std::hint::black_box(
+            engine.train_step_device(&mut state, &mask_buf, 1e-3, &dev_ep).unwrap(),
+        );
+    });
+    bench("fwd: embed 80 images (device theta)", budget, || {
+        std::hint::black_box(
+            engine.embed_device(&state, engine.eval_batch(&padded)).unwrap().data[0],
+        );
+    });
+
+    println!("-- pure-rust episode path --");
+    bench("evaluator: prototypes + cosine top-1", Duration::from_millis(300), || {
+        std::hint::black_box(episode_accuracy(&emb.data, &padded, &meta.shapes));
+    });
+    bench("episode: sample + pad + pseudo-query", Duration::from_millis(500), || {
+        let mut r = Rng::new(9);
+        let e = Sampler::new(domain.as_ref(), &meta.shapes).sample(&mut r);
+        let p = e.pad(&meta.shapes);
+        std::hint::black_box((p.sup_x[0], e.pseudo_query(&meta.shapes, &mut r).0[0]));
+    });
+}

@@ -1,0 +1,98 @@
+//! `cargo bench` — end-to-end benchmarks, one group per paper artefact
+//! family (in-house harness; criterion is not in the offline vendor set).
+//!
+//! - analytic: Table 2/7/8/11 accounting engine over paper-scale archs
+//! - devices:  Table 9/10 / Figure 5 latency+energy simulation
+//! - sampler:  Table 5 episode generation across all nine domains
+//! - selection: Algorithm-1 scoring + budgeted selection + mask build
+
+use std::time::Duration;
+
+use tinytrain::accounting::{backward_macs, backward_memory, Optimizer, UpdatePlan};
+use tinytrain::coordinator::selection::run_selection;
+use tinytrain::coordinator::{Budgets, ChannelScheme, Criterion, FisherReport, ModelEngine};
+use tinytrain::data::{all_domains, Sampler};
+use tinytrain::devices::{pi_zero_2, train_cost};
+use tinytrain::model::ParamStore;
+use tinytrain::runtime::{ArtifactStore, Runtime};
+use tinytrain::util::bench::bench;
+use tinytrain::util::rng::Rng;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let rt = Runtime::cpu().expect("pjrt");
+    let store = ArtifactStore::discover(None).expect("run `make artifacts`");
+    let engine = ModelEngine::load(&rt, &store, "mcunet").expect("engine");
+    let meta = &engine.meta;
+    let arch = &meta.paper;
+    let (n, nb) = (arch.layers.len(), arch.blocks.len());
+
+    println!("-- accounting engine (Tables 2/7/8) --");
+    let plans = [
+        UpdatePlan::full(n, nb),
+        UpdatePlan::last_layer(n, nb),
+        UpdatePlan::tinytl(n, nb),
+    ];
+    bench("table2: backward_memory x3 plans", budget, || {
+        for p in &plans {
+            std::hint::black_box(backward_memory(arch, p, Optimizer::Adam).total());
+        }
+    });
+    bench("table2: backward_macs x3 plans", budget, || {
+        for p in &plans {
+            std::hint::black_box(backward_macs(arch, p).total());
+        }
+    });
+
+    println!("-- device simulator (Tables 9/10, Figure 5) --");
+    let dev = pi_zero_2();
+    bench("fig5: train_cost full sweep", budget, || {
+        for p in &plans {
+            std::hint::black_box(train_cost(&dev, arch, p, 25, 40, true).total_s());
+        }
+    });
+
+    println!("-- episode sampler (Table 5) --");
+    let shapes = meta.shapes.clone();
+    let domains = all_domains();
+    bench("table5: one episode per domain (9 renders)", budget, || {
+        let mut rng = Rng::new(3);
+        for d in &domains {
+            let s = Sampler::new(d.as_ref(), &shapes);
+            std::hint::black_box(s.sample(&mut rng).support.len());
+        }
+    });
+
+    println!("-- Algorithm 1 selection (Table 3 / Figures 4,6b) --");
+    let params = ParamStore::init(meta, 1);
+    let fisher = FisherReport {
+        deltas: meta.scaled.layers.iter().map(|l| vec![0.5; l.cout]).collect(),
+        potentials: meta.scaled.layers.iter().map(|l| l.cout as f64).collect(),
+    };
+    bench("selection: score+select+mask (multi-objective)", budget, || {
+        let sel = run_selection(
+            meta,
+            Criterion::MultiObjective,
+            Some(&fisher),
+            &params.theta,
+            Budgets::default(),
+            0.5,
+            ChannelScheme::Fisher,
+            Optimizer::Adam,
+        );
+        std::hint::black_box(sel.mask(meta).len());
+    });
+    bench("selection: L2-norm criterion (no fisher)", budget, || {
+        let sel = run_selection(
+            meta,
+            Criterion::L2Norm,
+            None,
+            &params.theta,
+            Budgets::default(),
+            0.5,
+            ChannelScheme::L2Norm,
+            Optimizer::Adam,
+        );
+        std::hint::black_box(sel.layers.len());
+    });
+}

@@ -1,0 +1,174 @@
+//! Backward-pass compute model (paper Table 2's MAC column).
+//!
+//! Backpropagation splits per layer into the dX chain (activation
+//! gradients must flow from the loss back to the *earliest* updated
+//! layer, costing ~1 forward-equivalent per traversed layer) and dW
+//! (weight gradients only for updated layers, scaled by the channel
+//! ratio). LastLayer therefore costs less than one forward pass (0.23x in
+//! Table 2) while FullTrain costs ~2 forwards (plus the adapters for
+//! TinyTL).
+
+use super::UpdatePlan;
+use crate::model::ArchFlavor;
+
+#[derive(Debug, Clone, Default)]
+pub struct BackwardCompute {
+    /// dX chain MACs (loss -> earliest updated layer).
+    pub dx_macs: f64,
+    /// dW MACs for updated layers (+ adapters).
+    pub dw_macs: f64,
+}
+
+impl BackwardCompute {
+    pub fn total(&self) -> f64 {
+        self.dx_macs + self.dw_macs
+    }
+}
+
+/// Forward MACs of one image.
+pub fn forward_macs(arch: &ArchFlavor) -> f64 {
+    arch.total_macs as f64
+}
+
+/// Backward MACs of one image under `plan`.
+pub fn backward_macs(arch: &ArchFlavor, plan: &UpdatePlan) -> BackwardCompute {
+    let mut out = BackwardCompute::default();
+    let earliest_layer = plan.earliest_updated();
+    // Adapters hook at their block's input: dX must reach the earliest
+    // active adapter's block too.
+    let earliest_adapter_layer = plan
+        .adapters
+        .iter()
+        .enumerate()
+        .filter(|(_, &on)| on)
+        .map(|(b, _)| arch.blocks[b].conv_ids[0])
+        .min();
+    let earliest = match (earliest_layer, earliest_adapter_layer) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
+    };
+    let Some(earliest) = earliest else {
+        return out;
+    };
+    // dX: traverse every layer strictly above the earliest updated one.
+    for l in (earliest + 1)..arch.layers.len() {
+        out.dx_macs += arch.layers[l].macs as f64;
+    }
+    // dW: updated layers at their channel ratios.
+    for (l, layer) in arch.layers.iter().enumerate() {
+        let r = plan.layer_ratio[l];
+        if r > 0.0 {
+            out.dw_macs += layer.macs as f64 * r;
+        }
+    }
+    // Adapters: pooled 1x1 conv fwd-equivalent for dW, on in_hw/stride.
+    for (b, block) in arch.blocks.iter().enumerate() {
+        if plan.adapters.get(b).copied().unwrap_or(false) {
+            let hw = (block.in_hw / block.stride.max(1)) as f64;
+            out.dw_macs += hw * hw * (block.cin * block.cout) as f64;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accounting::UpdatePlan;
+    use crate::model::{ArchFlavor, BlockInfo, LayerInfo};
+
+    fn arch3() -> ArchFlavor {
+        let mk = |name: &str, macs: usize| LayerInfo {
+            name: name.into(),
+            kind: "pw".into(),
+            cin: 4,
+            cout: 4,
+            k: 1,
+            stride: 1,
+            act: true,
+            in_hw: 4,
+            out_hw: 4,
+            block: -1,
+            weight_params: 16,
+            params: 24,
+            macs,
+            act_elems: 64,
+        };
+        ArchFlavor {
+            img: 4,
+            feat_dim: 4,
+            layers: vec![mk("a", 100), mk("b", 200), mk("c", 300)],
+            blocks: vec![BlockInfo {
+                idx: 0,
+                cin: 4,
+                cout: 4,
+                expand: 1,
+                k: 3,
+                stride: 1,
+                in_hw: 4,
+                out_hw: 4,
+                skip: false,
+                conv_ids: vec![1],
+            }],
+            total_params: 72,
+            total_macs: 600,
+        }
+    }
+
+    #[test]
+    fn frozen_costs_zero() {
+        let a = arch3();
+        let c = backward_macs(&a, &UpdatePlan::frozen(3, 1));
+        assert_eq!(c.total(), 0.0);
+    }
+
+    #[test]
+    fn last_layer_has_no_dx_chain() {
+        let a = arch3();
+        let c = backward_macs(&a, &UpdatePlan::last_layer(3, 1));
+        assert_eq!(c.dx_macs, 0.0);
+        assert_eq!(c.dw_macs, 300.0);
+    }
+
+    #[test]
+    fn full_train_is_dx_plus_dw() {
+        let a = arch3();
+        let mut plan = UpdatePlan::full(3, 1);
+        plan.batch = 1;
+        let c = backward_macs(&a, &plan);
+        assert_eq!(c.dx_macs, 500.0); // layers above the earliest (b + c)
+        assert_eq!(c.dw_macs, 600.0);
+    }
+
+    #[test]
+    fn deeper_selection_costs_more_dx() {
+        let a = arch3();
+        let mut p_deep = UpdatePlan::frozen(3, 1);
+        p_deep.layer_ratio[0] = 1.0;
+        let mut p_shallow = UpdatePlan::frozen(3, 1);
+        p_shallow.layer_ratio[2] = 1.0;
+        assert!(
+            backward_macs(&a, &p_deep).dx_macs > backward_macs(&a, &p_shallow).dx_macs
+        );
+    }
+
+    #[test]
+    fn ratio_scales_dw_only() {
+        let a = arch3();
+        let mut p = UpdatePlan::frozen(3, 1);
+        p.layer_ratio[1] = 0.5;
+        let c = backward_macs(&a, &p);
+        assert_eq!(c.dw_macs, 100.0);
+        assert_eq!(c.dx_macs, 300.0);
+    }
+
+    #[test]
+    fn adapters_pull_dx_chain() {
+        let a = arch3();
+        let mut p = UpdatePlan::frozen(3, 1);
+        p.adapters[0] = true; // block at layer 1
+        let c = backward_macs(&a, &p);
+        assert!(c.dx_macs > 0.0);
+        assert!(c.dw_macs > 0.0);
+    }
+}

@@ -1,0 +1,279 @@
+//! Backward-pass memory model (paper Appendix A.4 and Tables 2/7/8/11).
+
+use super::{Optimizer, UpdatePlan, BYTES_F32};
+use crate::model::ArchFlavor;
+
+/// Memory components of one training configuration, in bytes.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryBreakdown {
+    /// (B1) weights being updated (incl. their affine params / adapters).
+    pub updated_weights: f64,
+    /// (B2) optimiser state: gradients + moments for updated params.
+    pub optimizer: f64,
+    /// (B3+B4 within F2) activation memory: inference peak for sparse
+    /// methods (buffer reuse), full saved-activation sum for
+    /// whole-backbone methods.
+    pub activations: f64,
+    /// (F1) all model weights — only included by the peak-memory variant
+    /// (Table 8); on MCUs weights live in flash.
+    pub model_weights: f64,
+}
+
+impl MemoryBreakdown {
+    /// Backward-pass memory as reported in Table 2 (no F1).
+    pub fn total(&self) -> f64 {
+        self.updated_weights + self.optimizer + self.activations
+    }
+
+    /// Peak memory incl. all model parameters (Table 8).
+    pub fn peak_total(&self) -> f64 {
+        self.total() + self.model_weights
+    }
+}
+
+/// Updated-parameter bytes for a plan (weights + affine scaled by channel
+/// ratio; adapters whole).
+fn updated_param_bytes(arch: &ArchFlavor, plan: &UpdatePlan) -> f64 {
+    let mut total = 0.0;
+    for (l, layer) in arch.layers.iter().enumerate() {
+        let r = plan.layer_ratio[l];
+        if r > 0.0 {
+            total += layer.params as f64 * r * BYTES_F32;
+        }
+    }
+    for (b, block) in arch.blocks.iter().enumerate() {
+        if plan.adapters.get(b).copied().unwrap_or(false) {
+            let adapter_params = block.cin * block.cout + block.cout;
+            total += adapter_params as f64 * BYTES_F32;
+        }
+    }
+    total
+}
+
+/// Framework-style (PyTorch autograd) saved activations for whole-graph
+/// training: every layer above the earliest update keeps its *output*
+/// (ReLU backward), every updated layer additionally keeps its *input*
+/// (dW), adapters keep their pooled inputs. This is what the paper's
+/// FullTrain / TinyTL baselines pay (they run stock autograd, batch 100),
+/// and what makes them 2-3 orders of magnitude above the sparse methods.
+fn framework_saved_acts_bytes(arch: &ArchFlavor, plan: &UpdatePlan) -> f64 {
+    let earliest = plan.earliest_updated().unwrap_or(arch.layers.len());
+    let adapter_earliest = plan
+        .adapters
+        .iter()
+        .enumerate()
+        .filter(|(_, &on)| on)
+        .map(|(b, _)| arch.blocks[b].conv_ids[0])
+        .min()
+        .unwrap_or(arch.layers.len());
+    let from = earliest.min(adapter_earliest);
+    let mut total = 0.0;
+    for (l, layer) in arch.layers.iter().enumerate() {
+        if l >= from {
+            total += layer.act_elems as f64 * BYTES_F32; // outputs (ReLU bwd)
+        }
+        if plan.layer_ratio[l] > 0.0 {
+            total += (layer.in_hw * layer.in_hw * layer.cin) as f64 * BYTES_F32; // dW inputs
+        }
+    }
+    for (b, block) in arch.blocks.iter().enumerate() {
+        if plan.adapters.get(b).copied().unwrap_or(false) {
+            let hw = block.in_hw / block.stride.max(1);
+            total += (hw * hw * block.cin) as f64 * BYTES_F32;
+        }
+    }
+    total
+}
+
+/// Peak inference buffer: max over layers of (input + output activation
+/// bytes) — the F2 space sparse methods reuse for B3/B4 (Appendix F.1).
+pub fn activation_peak_bytes(arch: &ArchFlavor) -> f64 {
+    arch.layers
+        .iter()
+        .map(|l| {
+            let input = (l.in_hw * l.in_hw * l.cin) as f64 * BYTES_F32;
+            let output = l.act_elems as f64 * BYTES_F32;
+            input + output
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Saved input activations needed to compute dW of the updated layers.
+fn saved_input_acts_bytes(arch: &ArchFlavor, plan: &UpdatePlan) -> f64 {
+    let mut total = 0.0;
+    for (l, layer) in arch.layers.iter().enumerate() {
+        if plan.layer_ratio[l] > 0.0 {
+            total += (layer.in_hw * layer.in_hw * layer.cin) as f64 * BYTES_F32;
+        }
+    }
+    for (b, block) in arch.blocks.iter().enumerate() {
+        if plan.adapters.get(b).copied().unwrap_or(false) {
+            // Lite-residual input is the block input pooled by its stride.
+            let hw = block.in_hw / block.stride.max(1);
+            total += (hw * hw * block.cin) as f64 * BYTES_F32;
+        }
+    }
+    total
+}
+
+/// Full backward-pass memory breakdown for a plan.
+///
+/// Sparse methods (batch == 1, few layers) reuse the inference buffer for
+/// saved activations whenever they fit (Appendix F.1); whole-backbone
+/// training must keep every updated layer's input alive simultaneously,
+/// scaled by the batch size.
+pub fn backward_memory(
+    arch: &ArchFlavor,
+    plan: &UpdatePlan,
+    opt: Optimizer,
+) -> MemoryBreakdown {
+    let updated = updated_param_bytes(arch, plan);
+    let peak = activation_peak_bytes(arch);
+
+    let activations = if !plan.any_update() {
+        0.0
+    } else if plan.batch == 1 {
+        // Sparse on-device regime: saved inputs overlap the inference
+        // buffer whenever they fit (Appendix F.1).
+        let saved = saved_input_acts_bytes(arch, plan);
+        if saved <= peak {
+            peak
+        } else {
+            saved.max(peak)
+        }
+    } else {
+        // Framework autograd regime (FullTrain / TinyTL, batch 100).
+        let saved = framework_saved_acts_bytes(arch, plan) * plan.batch as f64;
+        peak.max(saved)
+    };
+
+    MemoryBreakdown {
+        updated_weights: updated,
+        optimizer: updated * opt.state_factor(),
+        activations,
+        model_weights: arch.total_params as f64 * BYTES_F32,
+    }
+}
+
+/// Table 11: total saved-activation bytes to backprop through the last
+/// `k` blocks (stem/head excluded, as in the paper's block counting).
+pub fn saved_acts_last_k_blocks(arch: &ArchFlavor, k: usize) -> f64 {
+    let n = arch.blocks.len();
+    let from = n.saturating_sub(k);
+    let mut total = 0.0;
+    for block in &arch.blocks[from..] {
+        for &ci in &block.conv_ids {
+            let l = &arch.layers[ci];
+            total += (l.in_hw * l.in_hw * l.cin) as f64 * BYTES_F32;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ArchFlavor, BlockInfo, LayerInfo};
+
+    fn toy_arch() -> ArchFlavor {
+        // stem (8x8x4) -> block0 [pw 4->8, dw 8, pw 8->8] -> head 8->16
+        let mk = |name: &str, kind: &str, cin, cout, k: usize, in_hw, out_hw, block| LayerInfo {
+            name: name.into(),
+            kind: kind.into(),
+            cin,
+            cout,
+            k,
+            stride: 1,
+            act: true,
+            in_hw,
+            out_hw,
+            block,
+            weight_params: if kind == "dw" { k * k * cout } else { k * k * cin * cout },
+            params: (if kind == "dw" { k * k * cout } else { k * k * cin * cout }) + 2 * cout,
+            macs: out_hw * out_hw * cout * k * k * (if kind == "dw" { 1 } else { cin }),
+            act_elems: out_hw * out_hw * cout,
+        };
+        ArchFlavor {
+            img: 8,
+            feat_dim: 16,
+            layers: vec![
+                mk("stem", "stem", 3, 4, 3, 8, 8, -1),
+                mk("b0.expand", "pw", 4, 8, 1, 8, 8, 0),
+                mk("b0.dw", "dw", 8, 8, 3, 8, 8, 0),
+                mk("b0.project", "pw", 8, 8, 1, 8, 8, 0),
+                mk("head", "head", 8, 16, 1, 8, 8, -1),
+            ],
+            blocks: vec![BlockInfo {
+                idx: 0,
+                cin: 4,
+                cout: 8,
+                expand: 2,
+                k: 3,
+                stride: 1,
+                in_hw: 8,
+                out_hw: 8,
+                skip: false,
+                conv_ids: vec![1, 2, 3],
+            }],
+            total_params: 0,
+            total_macs: 0,
+        }
+    }
+
+    #[test]
+    fn frozen_plan_costs_nothing_but_weights() {
+        let a = toy_arch();
+        let plan = UpdatePlan::frozen(5, 1);
+        let m = backward_memory(&a, &plan, Optimizer::Adam);
+        assert_eq!(m.updated_weights, 0.0);
+        assert_eq!(m.optimizer, 0.0);
+        assert_eq!(m.activations, 0.0);
+    }
+
+    #[test]
+    fn adam_state_is_3x_updated() {
+        let a = toy_arch();
+        let plan = UpdatePlan::last_layer(5, 1);
+        let m = backward_memory(&a, &plan, Optimizer::Adam);
+        assert!(m.updated_weights > 0.0);
+        assert_eq!(m.optimizer, 3.0 * m.updated_weights);
+        let s = backward_memory(&a, &plan, Optimizer::Sgd);
+        assert_eq!(s.optimizer, s.updated_weights);
+    }
+
+    #[test]
+    fn full_train_batch_dominates() {
+        let a = toy_arch();
+        let sparse = backward_memory(&a, &UpdatePlan::last_layer(5, 1), Optimizer::Adam);
+        let full = backward_memory(&a, &UpdatePlan::full(5, 1), Optimizer::Adam);
+        assert!(full.total() > 10.0 * sparse.total());
+    }
+
+    #[test]
+    fn sparse_reuses_inference_peak() {
+        let a = toy_arch();
+        let plan = UpdatePlan::last_layer(5, 1);
+        let m = backward_memory(&a, &plan, Optimizer::Adam);
+        assert_eq!(m.activations, activation_peak_bytes(&a));
+    }
+
+    #[test]
+    fn channel_ratio_scales_updated_bytes() {
+        let a = toy_arch();
+        let mut p1 = UpdatePlan::frozen(5, 1);
+        p1.layer_ratio[4] = 1.0;
+        let mut p2 = UpdatePlan::frozen(5, 1);
+        p2.layer_ratio[4] = 0.5;
+        let m1 = backward_memory(&a, &p1, Optimizer::Adam);
+        let m2 = backward_memory(&a, &p2, Optimizer::Adam);
+        assert!((m2.updated_weights - 0.5 * m1.updated_weights).abs() < 1e-9);
+    }
+
+    #[test]
+    fn last_k_blocks_monotone() {
+        let a = toy_arch();
+        assert!(saved_acts_last_k_blocks(&a, 1) > 0.0);
+        assert_eq!(saved_acts_last_k_blocks(&a, 0), 0.0);
+        assert_eq!(saved_acts_last_k_blocks(&a, 1), saved_acts_last_k_blocks(&a, 5));
+    }
+}

@@ -1,0 +1,106 @@
+//! Analytic memory & compute accounting (paper Appendix A.4).
+//!
+//! Reproduces the conventions behind Tables 2, 7, 8 and 11: backward-pass
+//! memory decomposes into updated weights (B1), optimiser state (B2),
+//! non-linearity masks (B3) and saved input activations (B4), where sparse
+//! methods reuse the inference buffer space (F2) for B3/B4 while
+//! full-backbone methods cannot. Backward compute decomposes into the
+//! dX chain (from the loss back to the earliest updated layer) and dW for
+//! the updated layers.
+//!
+//! All functions operate on an `ArchFlavor` layer table, so the same code
+//! prices both the runnable `scaled` flavour (driving the selection
+//! budgets at run time) and the `paper` flavour (regenerating the paper's
+//! absolute numbers).
+
+mod compute;
+mod memory;
+
+pub use compute::{backward_macs, forward_macs, BackwardCompute};
+pub use memory::{
+    activation_peak_bytes, backward_memory, saved_acts_last_k_blocks, MemoryBreakdown,
+};
+
+/// Which parameters a method updates: per-layer channel ratio (0 = frozen,
+/// 1 = all channels) plus whether block adapters are trained.
+#[derive(Debug, Clone)]
+pub struct UpdatePlan {
+    /// ratio[i] = fraction of layer i's output channels updated.
+    pub layer_ratio: Vec<f64>,
+    /// adapter[b] = block b's lite-residual adapter is trained (TinyTL).
+    pub adapters: Vec<bool>,
+    /// Training batch size (paper: 100 for FullTrain/TinyTL, 1 otherwise).
+    pub batch: usize,
+}
+
+impl UpdatePlan {
+    pub fn frozen(n_layers: usize, n_blocks: usize) -> Self {
+        UpdatePlan {
+            layer_ratio: vec![0.0; n_layers],
+            adapters: vec![false; n_blocks],
+            batch: 1,
+        }
+    }
+
+    pub fn full(n_layers: usize, n_blocks: usize) -> Self {
+        UpdatePlan {
+            layer_ratio: vec![1.0; n_layers],
+            adapters: vec![false; n_blocks],
+            batch: 100,
+        }
+    }
+
+    pub fn last_layer(n_layers: usize, n_blocks: usize) -> Self {
+        let mut p = Self::frozen(n_layers, n_blocks);
+        p.layer_ratio[n_layers - 1] = 1.0;
+        p
+    }
+
+    pub fn tinytl(n_layers: usize, n_blocks: usize) -> Self {
+        // Adapters + head (TinyTL trains the classifier too).
+        let mut p = Self::frozen(n_layers, n_blocks);
+        p.adapters = vec![true; n_blocks];
+        p.layer_ratio[n_layers - 1] = 1.0;
+        p.batch = 100;
+        p
+    }
+
+    /// AdapterDrop-X%: drop the first `frac` of blocks' adapters.
+    pub fn adapter_drop(n_layers: usize, n_blocks: usize, frac: f64) -> Self {
+        let mut p = Self::tinytl(n_layers, n_blocks);
+        let dropped = ((n_blocks as f64) * frac).round() as usize;
+        for b in 0..dropped.min(n_blocks) {
+            p.adapters[b] = false;
+        }
+        p
+    }
+
+    /// Earliest (deepest-from-output) index with any update, or None.
+    pub fn earliest_updated(&self) -> Option<usize> {
+        self.layer_ratio.iter().position(|&r| r > 0.0)
+    }
+
+    pub fn any_update(&self) -> bool {
+        self.layer_ratio.iter().any(|&r| r > 0.0) || self.adapters.iter().any(|&a| a)
+    }
+}
+
+/// Optimiser families priced by the accounting (Table 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimizer {
+    Adam,
+    Sgd,
+}
+
+impl Optimizer {
+    /// Bytes of optimiser state per updated-parameter byte:
+    /// gradients (1x) + Adam moments (2x).
+    pub fn state_factor(self) -> f64 {
+        match self {
+            Optimizer::Adam => 3.0,
+            Optimizer::Sgd => 1.0,
+        }
+    }
+}
+
+pub const BYTES_F32: f64 = 4.0;

@@ -1,0 +1,76 @@
+//! Per-layer contribution analysis (paper Figure 3 / Appendix E.2) and
+//! the dynamic-vs-static channel-selection comparison (Figure 4 /
+//! Appendix E.3): update a single layer at a time at a given channel
+//! ratio and measure the accuracy gain, also normalised per parameter and
+//! per MAC.
+
+use anyhow::Result;
+
+use super::engine::ModelEngine;
+use super::trainer::{run_episode, Method, StaticPolicy, TrainConfig};
+use super::ChannelScheme;
+use crate::data::Episode;
+use crate::model::ParamStore;
+
+/// One layer's contribution at one channel ratio.
+#[derive(Debug, Clone)]
+pub struct LayerContribution {
+    pub layer: usize,
+    pub name: String,
+    pub ratio: f64,
+    pub acc_gain: f64,
+    pub gain_per_kparam: f64,
+    pub gain_per_mmac: f64,
+}
+
+/// Figure 3: fine-tune exactly one layer (at `ratio` of its channels,
+/// first-K static) and report the accuracy gain over no adaptation.
+pub fn single_layer_contribution(
+    engine: &ModelEngine,
+    params: &ParamStore,
+    episode: &Episode,
+    layer: usize,
+    ratio: f64,
+    cfg: TrainConfig,
+) -> Result<LayerContribution> {
+    let method = Method::SparseUpdate(StaticPolicy { layer_ratios: vec![(layer, ratio)] });
+    let res = run_episode(engine, params, &method, episode, cfg)?;
+    let info = &engine.meta.scaled.layers[layer];
+    let gain = res.acc_after - res.acc_before;
+    Ok(LayerContribution {
+        layer,
+        name: info.name.clone(),
+        ratio,
+        acc_gain: gain,
+        gain_per_kparam: gain / ((info.params as f64 * ratio) / 1e3).max(1e-9),
+        gain_per_mmac: gain / ((info.macs as f64 * ratio) / 1e6).max(1e-9),
+    })
+}
+
+/// Figure 4: same selected layers, different channel selection schemes.
+/// Returns (scheme label, accuracy) rows.
+pub fn channel_scheme_comparison(
+    engine: &ModelEngine,
+    params: &ParamStore,
+    episode: &Episode,
+    ratio: f64,
+    cfg: TrainConfig,
+) -> Result<Vec<(String, f64)>> {
+    use super::{Budgets, Criterion};
+    let mut rows = Vec::new();
+    for (label, scheme) in [
+        ("Dynamic (Fisher)", ChannelScheme::Fisher),
+        ("Static (L2-Norm)", ChannelScheme::L2Norm),
+        ("Static (Random)", ChannelScheme::Random(cfg.seed)),
+    ] {
+        let method = Method::TinyTrain {
+            criterion: Criterion::MultiObjective,
+            scheme,
+            budgets: Budgets::default(),
+            ratio,
+        };
+        let res = run_episode(engine, params, &method, episode, cfg)?;
+        rows.push((label.to_string(), res.acc_after));
+    }
+    Ok(rows)
+}

@@ -1,0 +1,194 @@
+//! The resource-aware multi-objective criterion (paper Eq. 3) and its
+//! ablation variants (Table 3).
+//!
+//!   s_i = P_i / ( (||W_i|| / max_l ||W_l||) * (M_i / max_l M_l) )
+//!
+//! where P_i is the layer's Fisher potential, ||W_i|| its parameter count
+//! and M_i its MAC count — i.e. Fisher potential per normalised parameter
+//! per normalised MAC.
+
+use super::fisher::FisherReport;
+use crate::model::{ArchFlavor, ModelMeta};
+
+/// Layer-scoring schemes (Table 3's rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    /// Full multi-objective metric (TinyTrain, Eq. 3).
+    MultiObjective,
+    /// Fisher potential only.
+    FisherOnly,
+    /// Fisher / normalised params.
+    FisherPerMemory,
+    /// Fisher / normalised MACs.
+    FisherPerCompute,
+    /// L2 norm of the layer's weights (no Fisher pass needed).
+    L2Norm,
+}
+
+impl Criterion {
+    pub fn name(self) -> &'static str {
+        match self {
+            Criterion::MultiObjective => "TinyTrain(Ours)",
+            Criterion::FisherOnly => "Fisher Only",
+            Criterion::FisherPerMemory => "Fisher / Memory",
+            Criterion::FisherPerCompute => "Fisher / Compute",
+            Criterion::L2Norm => "L2 Norm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Criterion> {
+        Some(match s {
+            "multi" | "tinytrain" => Criterion::MultiObjective,
+            "fisher" => Criterion::FisherOnly,
+            "fisher-mem" => Criterion::FisherPerMemory,
+            "fisher-compute" => Criterion::FisherPerCompute,
+            "l2" => Criterion::L2Norm,
+            _ => return None,
+        })
+    }
+
+    pub fn needs_fisher(self) -> bool {
+        !matches!(self, Criterion::L2Norm)
+    }
+}
+
+/// Per-layer scores s_i for the given criterion.
+pub fn layer_scores(
+    crit: Criterion,
+    arch: &ArchFlavor,
+    fisher: Option<&FisherReport>,
+    weight_l2: Option<&[f64]>,
+) -> Vec<f64> {
+    let n = arch.layers.len();
+    let max_params = arch.layers.iter().map(|l| l.params).max().unwrap_or(1) as f64;
+    let max_macs = arch.layers.iter().map(|l| l.macs).max().unwrap_or(1) as f64;
+    (0..n)
+        .map(|i| {
+            let p_norm = arch.layers[i].params as f64 / max_params;
+            let m_norm = arch.layers[i].macs as f64 / max_macs;
+            let fi = fisher.map(|f| f.potentials[i]).unwrap_or(0.0);
+            match crit {
+                Criterion::MultiObjective => fi / (p_norm * m_norm).max(1e-12),
+                Criterion::FisherOnly => fi,
+                Criterion::FisherPerMemory => fi / p_norm.max(1e-12),
+                Criterion::FisherPerCompute => fi / m_norm.max(1e-12),
+                Criterion::L2Norm => weight_l2.map(|w| w[i]).unwrap_or(0.0),
+            }
+        })
+        .collect()
+}
+
+/// Per-layer weight L2 norms from the flat theta (for the L2Norm scheme).
+pub fn weight_l2_norms(meta: &ModelMeta, theta: &[f32]) -> Vec<f64> {
+    let n = meta.scaled.layers.len();
+    let mut out = vec![0.0f64; n];
+    for e in &meta.entries {
+        if e.role == "weight" {
+            let s: f64 = theta[e.offset..e.offset + e.size]
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum();
+            out[e.layer] += s;
+        }
+    }
+    out.iter_mut().for_each(|v| *v = v.sqrt());
+    out
+}
+
+/// Per-layer per-channel weight L2 norms (static L2 channel selection,
+/// Figure 4 / Figure 6b baselines).
+pub fn channel_l2_norms(meta: &ModelMeta, theta: &[f32]) -> Vec<Vec<f64>> {
+    let mut out: Vec<Vec<f64>> = meta
+        .scaled
+        .layers
+        .iter()
+        .map(|l| vec![0.0f64; l.cout])
+        .collect();
+    for e in &meta.entries {
+        if e.role != "weight" {
+            continue;
+        }
+        let cout = *e.shape.last().unwrap();
+        // weights are packed row-major with cout as the innermost axis
+        for (i, &x) in theta[e.offset..e.offset + e.size].iter().enumerate() {
+            out[e.layer][i % cout] += (x as f64) * (x as f64);
+        }
+    }
+    for l in &mut out {
+        for v in l.iter_mut() {
+            *v = v.sqrt();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ArchFlavor, LayerInfo};
+
+    fn arch2() -> ArchFlavor {
+        let mk = |params: usize, macs: usize| LayerInfo {
+            name: "l".into(),
+            kind: "pw".into(),
+            cin: 2,
+            cout: 2,
+            k: 1,
+            stride: 1,
+            act: true,
+            in_hw: 2,
+            out_hw: 2,
+            block: -1,
+            weight_params: params,
+            params,
+            macs,
+            act_elems: 8,
+        };
+        ArchFlavor {
+            img: 8,
+            feat_dim: 4,
+            layers: vec![mk(100, 1000), mk(50, 500)],
+            blocks: vec![],
+            total_params: 150,
+            total_macs: 1500,
+        }
+    }
+
+    fn fisher(p: Vec<f64>) -> FisherReport {
+        FisherReport { deltas: p.iter().map(|&x| vec![x as f32]).collect(), potentials: p }
+    }
+
+    #[test]
+    fn multiobjective_prefers_cheap_informative_layers() {
+        let a = arch2();
+        let f = fisher(vec![1.0, 1.0]); // equal Fisher
+        let s = layer_scores(Criterion::MultiObjective, &a, Some(&f), None);
+        // layer 1 is half the params and half the MACs -> 4x the score
+        assert!((s[1] / s[0] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fisher_only_ignores_cost() {
+        let a = arch2();
+        let f = fisher(vec![2.0, 1.0]);
+        let s = layer_scores(Criterion::FisherOnly, &a, Some(&f), None);
+        assert!(s[0] > s[1]);
+    }
+
+    #[test]
+    fn single_resource_variants_divide_once() {
+        let a = arch2();
+        let f = fisher(vec![1.0, 1.0]);
+        let sm = layer_scores(Criterion::FisherPerMemory, &a, Some(&f), None);
+        let sc = layer_scores(Criterion::FisherPerCompute, &a, Some(&f), None);
+        assert!((sm[1] / sm[0] - 2.0).abs() < 1e-9);
+        assert!((sc[1] / sc[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn l2norm_uses_weights() {
+        let a = arch2();
+        let s = layer_scores(Criterion::L2Norm, &a, None, Some(&[3.0, 7.0]));
+        assert_eq!(s, vec![3.0, 7.0]);
+    }
+}

@@ -1,0 +1,274 @@
+//! ModelEngine: one deployed architecture's runtime face.
+//!
+//! Owns the compiled fwd / fisher / step executables plus the metadata,
+//! and exposes typed operations over flat tensors. Everything above this
+//! (selection, training loops, baselines) is pure rust logic.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::PaddedEpisode;
+use crate::model::{ModelMeta, ParamStore};
+use crate::runtime::{ArtifactStore, Exec, Runtime, Tensor};
+
+pub struct ModelEngine {
+    pub meta: ModelMeta,
+    pub weights_path: std::path::PathBuf,
+    rt: Runtime,
+    paths: crate::runtime::ModelArtifacts,
+    fwd: std::cell::OnceCell<Arc<Exec>>,
+    fisher: std::cell::OnceCell<Arc<Exec>>,
+    step: std::cell::OnceCell<Arc<Exec>>,
+}
+
+/// Output of one fisher pass (paper Eq. 2 evaluated per channel).
+#[derive(Debug, Clone)]
+pub struct FisherOutput {
+    pub loss: f32,
+    /// Concatenated per-layer Delta_o (segment table: meta.fisher_segments).
+    pub deltas: Vec<f32>,
+}
+
+impl ModelEngine {
+    /// Load metadata immediately; graphs compile lazily on first use
+    /// (analytic experiments never pay PJRT compile time).
+    pub fn load(rt: &Runtime, store: &ArtifactStore, arch: &str) -> Result<Self> {
+        let arts = store.model(arch);
+        let meta = ModelMeta::load(&arts.meta)?;
+        Ok(ModelEngine {
+            meta,
+            weights_path: arts.weights.clone(),
+            rt: rt.clone(),
+            paths: arts,
+            fwd: std::cell::OnceCell::new(),
+            fisher: std::cell::OnceCell::new(),
+            step: std::cell::OnceCell::new(),
+        })
+    }
+
+    fn fwd_exec(&self) -> Result<&Arc<Exec>> {
+        get_or_load(&self.fwd, &self.rt, &self.paths.fwd)
+    }
+
+    fn fisher_exec(&self) -> Result<&Arc<Exec>> {
+        get_or_load(&self.fisher, &self.rt, &self.paths.fisher)
+    }
+
+    fn step_exec(&self) -> Result<&Arc<Exec>> {
+        get_or_load(&self.step, &self.rt, &self.paths.step)
+    }
+
+    /// Embed an EVAL_BATCH of images: returns (B, feat_dim) embeddings.
+    pub fn embed_with(&self, params: &ParamStore, images: Tensor) -> Result<Tensor> {
+        let theta = Tensor::new(params.theta.clone(), vec![self.meta.total_theta]);
+        let mut out = self.fwd_exec()?.run(&[theta, images])?;
+        Ok(out.remove(0))
+    }
+
+    /// Run the fisher pass on an episode (support -> prototypes, pseudo
+    /// query -> tapped loss).
+    pub fn fisher_pass(
+        &self,
+        params: &ParamStore,
+        ep: &PaddedEpisode,
+        pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
+    ) -> Result<FisherOutput> {
+        let s = &self.meta.shapes;
+        let theta = Tensor::new(params.theta.clone(), vec![self.meta.total_theta]);
+        let inputs = vec![
+            theta,
+            Tensor::new(ep.sup_x.clone(), vec![s.max_support, s.img, s.img, s.channels]),
+            Tensor::new(ep.sup_y.clone(), vec![s.max_support, s.max_ways]),
+            Tensor::new(ep.sup_v.clone(), vec![s.max_support]),
+            Tensor::new(pseudo.0.clone(), vec![s.max_query, s.img, s.img, s.channels]),
+            Tensor::new(pseudo.1.clone(), vec![s.max_query, s.max_ways]),
+            Tensor::new(pseudo.2.clone(), vec![s.max_query]),
+        ];
+        let out = self.fisher_exec()?.run(&inputs)?;
+        Ok(FisherOutput { loss: out[0].first(), deltas: out[1].data.clone() })
+    }
+
+    /// One masked Adam step; mutates `params` in place. Returns the loss.
+    pub fn train_step(
+        &self,
+        params: &mut ParamStore,
+        mask: &[f32],
+        lr: f32,
+        ep: &PaddedEpisode,
+        pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
+    ) -> Result<f32> {
+        let s = &self.meta.shapes;
+        params.t += 1;
+        let p = self.meta.total_theta;
+        let inputs = vec![
+            Tensor::new(params.theta.clone(), vec![p]),
+            Tensor::new(params.m.clone(), vec![p]),
+            Tensor::new(params.v.clone(), vec![p]),
+            Tensor::scalar1(params.t as f32),
+            Tensor::new(mask.to_vec(), vec![p]),
+            Tensor::scalar1(lr),
+            Tensor::new(ep.sup_x.clone(), vec![s.max_support, s.img, s.img, s.channels]),
+            Tensor::new(ep.sup_y.clone(), vec![s.max_support, s.max_ways]),
+            Tensor::new(ep.sup_v.clone(), vec![s.max_support]),
+            Tensor::new(pseudo.0.clone(), vec![s.max_query, s.img, s.img, s.channels]),
+            Tensor::new(pseudo.1.clone(), vec![s.max_query, s.max_ways]),
+            Tensor::new(pseudo.2.clone(), vec![s.max_query]),
+        ];
+        let mut out = self.step_exec()?.run(&inputs)?;
+        let loss = out[3].first();
+        params.theta = std::mem::take(&mut out[0].data);
+        params.m = std::mem::take(&mut out[1].data);
+        params.v = std::mem::take(&mut out[2].data);
+        Ok(loss)
+    }
+
+    /// Pack support + query images into one EVAL_BATCH tensor for `embed`.
+    pub fn eval_batch(&self, ep: &PaddedEpisode) -> Tensor {
+        let s = &self.meta.shapes;
+        let img_len = s.img * s.img * s.channels;
+        let mut data = Vec::with_capacity(s.eval_batch * img_len);
+        data.extend_from_slice(&ep.sup_x);
+        data.extend_from_slice(&ep.qry_x);
+        debug_assert_eq!(data.len(), s.eval_batch * img_len);
+        Tensor::new(data, vec![s.eval_batch, s.img, s.img, s.channels])
+    }
+}
+
+/// Device-resident training state: theta / Adam moments stay on the PJRT
+/// device between steps, so each step uploads only the tiny scalars and
+/// downloads only the loss. This is the L3 hot-path optimisation recorded
+/// in EXPERIMENTS.md §Perf (the host round-trip of 3x|theta| floats per
+/// step dominates otherwise).
+pub struct DeviceState {
+    theta: xla::PjRtBuffer,
+    m: xla::PjRtBuffer,
+    v: xla::PjRtBuffer,
+    pub t: u64,
+}
+
+/// Episode tensors pre-uploaded once per adaptation.
+pub struct DeviceEpisode {
+    bufs: Vec<xla::PjRtBuffer>, // sup_x, sup_y, sup_v, qry_x, qry_y, qry_v
+}
+
+impl ModelEngine {
+    /// Upload mutable training state to the device.
+    pub fn upload_state(&self, params: &ParamStore) -> Result<DeviceState> {
+        let p = self.meta.total_theta;
+        Ok(DeviceState {
+            theta: self.rt.to_device(&Tensor::new(params.theta.clone(), vec![p]))?,
+            m: self.rt.to_device(&Tensor::new(params.m.clone(), vec![p]))?,
+            v: self.rt.to_device(&Tensor::new(params.v.clone(), vec![p]))?,
+            t: params.t,
+        })
+    }
+
+    /// Fetch the device state back into a ParamStore.
+    pub fn download_state(&self, state: &DeviceState) -> Result<ParamStore> {
+        Ok(ParamStore {
+            theta: self.rt.to_host(&state.theta)?.data,
+            m: self.rt.to_host(&state.m)?.data,
+            v: self.rt.to_host(&state.v)?.data,
+            t: state.t,
+        })
+    }
+
+    /// Upload the episode + pseudo-query tensors once.
+    pub fn upload_episode(
+        &self,
+        ep: &PaddedEpisode,
+        pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
+    ) -> Result<DeviceEpisode> {
+        let s = &self.meta.shapes;
+        let mk = |data: &[f32], dims: Vec<usize>| {
+            self.rt.to_device(&Tensor::new(data.to_vec(), dims))
+        };
+        Ok(DeviceEpisode {
+            bufs: vec![
+                mk(&ep.sup_x, vec![s.max_support, s.img, s.img, s.channels])?,
+                mk(&ep.sup_y, vec![s.max_support, s.max_ways])?,
+                mk(&ep.sup_v, vec![s.max_support])?,
+                mk(&pseudo.0, vec![s.max_query, s.img, s.img, s.channels])?,
+                mk(&pseudo.1, vec![s.max_query, s.max_ways])?,
+                mk(&pseudo.2, vec![s.max_query])?,
+            ],
+        })
+    }
+
+    /// Replace the pseudo-query buffers (fresh augmentation mid-episode).
+    pub fn refresh_pseudo(
+        &self,
+        dev_ep: &mut DeviceEpisode,
+        pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
+    ) -> Result<()> {
+        let s = &self.meta.shapes;
+        dev_ep.bufs[3] =
+            self.rt.to_device(&Tensor::new(pseudo.0.clone(), vec![s.max_query, s.img, s.img, s.channels]))?;
+        dev_ep.bufs[4] =
+            self.rt.to_device(&Tensor::new(pseudo.1.clone(), vec![s.max_query, s.max_ways]))?;
+        dev_ep.bufs[5] = self.rt.to_device(&Tensor::new(pseudo.2.clone(), vec![s.max_query]))?;
+        Ok(())
+    }
+
+    /// Upload a mask once per episode.
+    pub fn upload_mask(&self, mask: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.rt.to_device(&Tensor::new(mask.to_vec(), vec![self.meta.total_theta]))
+    }
+
+    /// One masked Adam step with device-resident state: uploads 2 scalars,
+    /// downloads 1 scalar.
+    pub fn train_step_device(
+        &self,
+        state: &mut DeviceState,
+        mask: &xla::PjRtBuffer,
+        lr: f32,
+        dev_ep: &DeviceEpisode,
+    ) -> Result<f32> {
+        state.t += 1;
+        let t_buf = self.rt.to_device(&Tensor::scalar1(state.t as f32))?;
+        let lr_buf = self.rt.to_device(&Tensor::scalar1(lr))?;
+        let inputs: Vec<&xla::PjRtBuffer> = vec![
+            &state.theta,
+            &state.m,
+            &state.v,
+            &t_buf,
+            mask,
+            &lr_buf,
+            &dev_ep.bufs[0],
+            &dev_ep.bufs[1],
+            &dev_ep.bufs[2],
+            &dev_ep.bufs[3],
+            &dev_ep.bufs[4],
+            &dev_ep.bufs[5],
+        ];
+        let mut out = self.step_exec()?.run_b(&inputs)?;
+        anyhow::ensure!(out.len() == 4, "step graph returned {} outputs", out.len());
+        let loss = self.rt.to_host(&out[3])?.first();
+        state.v = out.remove(2);
+        state.m = out.remove(1);
+        state.theta = out.remove(0);
+        Ok(loss)
+    }
+
+    /// Embed with device-resident theta (avoids re-uploading weights).
+    pub fn embed_device(&self, state: &DeviceState, images: Tensor) -> Result<Tensor> {
+        let img_buf = self.rt.to_device(&images)?;
+        let out = self.fwd_exec()?.run_b(&[&state.theta, &img_buf])?;
+        anyhow::ensure!(!out.is_empty(), "fwd graph returned no outputs");
+        self.rt.to_host(&out[0])
+    }
+}
+
+fn get_or_load<'a>(
+    cell: &'a std::cell::OnceCell<Arc<Exec>>,
+    rt: &Runtime,
+    path: &std::path::Path,
+) -> Result<&'a Arc<Exec>> {
+    if let Some(e) = cell.get() {
+        return Ok(e);
+    }
+    let exec = rt.load(path)?;
+    let _ = cell.set(exec);
+    Ok(cell.get().unwrap())
+}

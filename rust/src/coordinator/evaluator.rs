@@ -1,0 +1,190 @@
+//! ProtoNet nearest-centroid evaluation (paper Eq. 1) on the rust side.
+//!
+//! The AOT fwd graph produces L2-normalised embeddings; prototypes and
+//! cosine classification are cheap O(B*F) host work owned by the
+//! coordinator.
+
+use crate::data::PaddedEpisode;
+use crate::model::EpisodeShapes;
+
+/// Class prototypes from (masked) support embeddings.
+/// emb: (S, F) row-major; returns (W, F) L2-normalised + way validity.
+pub fn prototypes(
+    emb: &[f32],
+    sup_y: &[f32],
+    sup_v: &[f32],
+    s: &EpisodeShapes,
+) -> (Vec<f32>, Vec<bool>) {
+    let f = s.feat_dim;
+    let w = s.max_ways;
+    let mut proto = vec![0.0f32; w * f];
+    let mut counts = vec![0.0f32; w];
+    for i in 0..s.max_support {
+        if sup_v[i] == 0.0 {
+            continue;
+        }
+        let way = sup_y[i * w..(i + 1) * w]
+            .iter()
+            .position(|&v| v > 0.5)
+            .unwrap_or(0);
+        counts[way] += 1.0;
+        for j in 0..f {
+            proto[way * f + j] += emb[i * f + j];
+        }
+    }
+    let mut valid = vec![false; w];
+    for way in 0..w {
+        if counts[way] > 0.0 {
+            valid[way] = true;
+            let row = &mut proto[way * f..(way + 1) * f];
+            for v in row.iter_mut() {
+                *v /= counts[way];
+            }
+            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+            for v in row.iter_mut() {
+                *v /= norm;
+            }
+        }
+    }
+    (proto, valid)
+}
+
+/// Top-1 accuracy of nearest-centroid (cosine) classification over the
+/// valid query samples.
+pub fn accuracy(
+    qry_emb: &[f32],
+    qry_y: &[f32],
+    qry_v: &[f32],
+    proto: &[f32],
+    way_valid: &[bool],
+    s: &EpisodeShapes,
+) -> f64 {
+    let f = s.feat_dim;
+    let w = s.max_ways;
+    let mut correct = 0.0;
+    let mut total = 0.0;
+    for i in 0..s.max_query {
+        if qry_v[i] == 0.0 {
+            continue;
+        }
+        let e = &qry_emb[i * f..(i + 1) * f];
+        let mut best = 0usize;
+        let mut best_sim = f32::NEG_INFINITY;
+        for way in 0..w {
+            if !way_valid[way] {
+                continue;
+            }
+            let p = &proto[way * f..(way + 1) * f];
+            let sim: f32 = e.iter().zip(p).map(|(a, b)| a * b).sum();
+            if sim > best_sim {
+                best_sim = sim;
+                best = way;
+            }
+        }
+        let label = qry_y[i * w..(i + 1) * w]
+            .iter()
+            .position(|&v| v > 0.5)
+            .unwrap_or(usize::MAX);
+        total += 1.0;
+        if best == label {
+            correct += 1.0;
+        }
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        correct / total
+    }
+}
+
+/// Split one EVAL_BATCH embedding tensor back into (support, query) and
+/// compute episode accuracy.
+pub fn episode_accuracy(emb: &[f32], ep: &PaddedEpisode, s: &EpisodeShapes) -> f64 {
+    let f = s.feat_dim;
+    let sup_emb = &emb[..s.max_support * f];
+    let qry_emb = &emb[s.max_support * f..(s.max_support + s.max_query) * f];
+    let (proto, valid) = prototypes(sup_emb, &ep.sup_y, &ep.sup_v, s);
+    accuracy(qry_emb, &ep.qry_y, &ep.qry_v, &proto, &valid, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> EpisodeShapes {
+        EpisodeShapes {
+            img: 8,
+            channels: 3,
+            max_ways: 3,
+            max_support: 4,
+            max_query: 4,
+            eval_batch: 8,
+            feat_dim: 2,
+            cosine_tau: 10.0,
+        }
+    }
+
+    #[test]
+    fn perfectly_separable_episode_scores_one() {
+        let s = shapes();
+        // 2 ways along axes; 2 support each
+        let sup_emb = vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0];
+        let sup_y = vec![
+            1.0, 0.0, 0.0, //
+            1.0, 0.0, 0.0, //
+            0.0, 1.0, 0.0, //
+            0.0, 1.0, 0.0,
+        ];
+        let sup_v = vec![1.0; 4];
+        let (proto, valid) = prototypes(&sup_emb, &sup_y, &sup_v, &s);
+        assert!(valid[0] && valid[1] && !valid[2]);
+        // queries on the same axes
+        let qry_emb = vec![0.9, 0.1, 0.1, 0.9, 1.0, 0.0, 0.0, 1.0];
+        let qry_y = vec![
+            1.0, 0.0, 0.0, //
+            0.0, 1.0, 0.0, //
+            1.0, 0.0, 0.0, //
+            0.0, 1.0, 0.0,
+        ];
+        let qry_v = vec![1.0; 4];
+        let acc = accuracy(&qry_emb, &qry_y, &qry_v, &proto, &valid, &s);
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn padded_entries_are_ignored() {
+        let s = shapes();
+        let sup_emb = vec![1.0, 0.0, 0.0, 1.0, 9.0, 9.0, 9.0, 9.0];
+        let sup_y = vec![
+            1.0, 0.0, 0.0, //
+            0.0, 1.0, 0.0, //
+            1.0, 0.0, 0.0, // invalid row
+            1.0, 0.0, 0.0, // invalid row
+        ];
+        let sup_v = vec![1.0, 1.0, 0.0, 0.0];
+        let (proto, _) = prototypes(&sup_emb, &sup_y, &sup_v, &s);
+        // way 0 prototype is exactly the first embedding (normalised)
+        assert!((proto[0] - 1.0).abs() < 1e-6);
+        assert!(proto[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn chance_level_on_random_labels() {
+        let s = shapes();
+        // identical embeddings -> ties broken to first valid way
+        let sup_emb = vec![0.7; 8];
+        let sup_y = vec![
+            1.0, 0.0, 0.0, //
+            0.0, 1.0, 0.0, //
+            1.0, 0.0, 0.0, //
+            0.0, 1.0, 0.0,
+        ];
+        let sup_v = vec![1.0; 4];
+        let (proto, valid) = prototypes(&sup_emb, &sup_y, &sup_v, &s);
+        let qry_emb = vec![0.7; 8];
+        let qry_y = sup_y.clone();
+        let qry_v = vec![1.0; 4];
+        let acc = accuracy(&qry_emb, &qry_y, &qry_v, &proto, &valid, &s);
+        assert_eq!(acc, 0.5); // argmax-first ties: half correct
+    }
+}

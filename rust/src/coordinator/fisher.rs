@@ -1,0 +1,104 @@
+//! Fisher aggregation: per-channel Delta_o -> per-layer potentials
+//! (paper Sec 2.2: P = sum_o Delta_o).
+
+use crate::model::ModelMeta;
+
+/// Per-layer view over the flat fisher output.
+#[derive(Debug, Clone)]
+pub struct FisherReport {
+    /// deltas[l][c] = Fisher information of channel c in conv layer l.
+    pub deltas: Vec<Vec<f32>>,
+    /// potentials[l] = sum_c deltas[l][c] (the layer's Fisher potential).
+    pub potentials: Vec<f64>,
+}
+
+impl FisherReport {
+    pub fn from_flat(meta: &ModelMeta, flat: &[f32]) -> FisherReport {
+        assert_eq!(flat.len(), meta.fisher_len, "fisher output length mismatch");
+        let mut deltas = Vec::with_capacity(meta.fisher_segments.len());
+        let mut potentials = Vec::with_capacity(meta.fisher_segments.len());
+        for seg in &meta.fisher_segments {
+            let slice = &flat[seg.offset..seg.offset + seg.size];
+            potentials.push(slice.iter().map(|&x| x as f64).sum());
+            deltas.push(slice.to_vec());
+        }
+        FisherReport { deltas, potentials }
+    }
+
+    /// Indices of the top-k channels of layer `l` by Fisher information.
+    pub fn top_k_channels(&self, l: usize, k: usize) -> Vec<usize> {
+        let d = &self.deltas[l];
+        let mut idx: Vec<usize> = (0..d.len()).collect();
+        idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap_or(std::cmp::Ordering::Equal));
+        idx.truncate(k.min(d.len()));
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ArchFlavor, EpisodeShapes, ModelMeta};
+
+    fn meta_with_segments(sizes: &[usize]) -> ModelMeta {
+        let mut segments = Vec::new();
+        let mut off = 0;
+        for (i, &s) in sizes.iter().enumerate() {
+            segments.push(crate::model::FisherSegment {
+                layer: i,
+                name: format!("l{i}"),
+                offset: off,
+                size: s,
+            });
+            off += s;
+        }
+        ModelMeta {
+            arch: "t".into(),
+            scaled: empty(),
+            paper: empty(),
+            entries: vec![],
+            total_theta: 0,
+            fisher_len: off,
+            fisher_segments: segments,
+            shapes: EpisodeShapes {
+                img: 8,
+                channels: 3,
+                max_ways: 2,
+                max_support: 2,
+                max_query: 2,
+                eval_batch: 4,
+                feat_dim: 4,
+                cosine_tau: 10.0,
+            },
+        }
+    }
+
+    fn empty() -> ArchFlavor {
+        ArchFlavor {
+            img: 8,
+            feat_dim: 4,
+            layers: vec![],
+            blocks: vec![],
+            total_params: 0,
+            total_macs: 0,
+        }
+    }
+
+    #[test]
+    fn potentials_sum_channels() {
+        let meta = meta_with_segments(&[2, 3]);
+        let flat = vec![1.0, 2.0, 0.5, 0.25, 0.25];
+        let r = FisherReport::from_flat(&meta, &flat);
+        assert_eq!(r.potentials, vec![3.0, 1.0]);
+        assert_eq!(r.deltas[1], vec![0.5, 0.25, 0.25]);
+    }
+
+    #[test]
+    fn top_k_orders_by_value() {
+        let meta = meta_with_segments(&[4]);
+        let flat = vec![0.1, 0.9, 0.5, 0.7];
+        let r = FisherReport::from_flat(&meta, &flat);
+        assert_eq!(r.top_k_channels(0, 2), vec![1, 3]);
+        assert_eq!(r.top_k_channels(0, 10).len(), 4);
+    }
+}

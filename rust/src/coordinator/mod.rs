@@ -1,0 +1,26 @@
+//! L3 coordinator — TinyTrain's system contribution.
+//!
+//! Pipeline per deployment (paper Algorithm 1): fisher pass -> multi-
+//! objective scoring (Eq. 3) -> dynamic layer/channel selection under the
+//! device budgets -> channel-masked sparse fine-tuning -> nearest-
+//! centroid evaluation. Baselines share the same loop with different
+//! masks; the offline stage (meta-training, SparseUpdate's evolutionary
+//! search) runs through the same artifacts.
+
+pub mod analysis;
+pub mod criterion;
+pub mod engine;
+pub mod evaluator;
+pub mod fisher;
+pub mod pretrain;
+pub mod search;
+pub mod selection;
+pub mod trainer;
+
+pub use criterion::Criterion;
+pub use engine::{FisherOutput, ModelEngine};
+pub use evaluator::episode_accuracy;
+pub use fisher::FisherReport;
+pub use pretrain::{meta_train, PretrainConfig};
+pub use selection::{Budgets, ChannelScheme, Selection};
+pub use trainer::{run_episode, EpisodeResult, Method, StaticPolicy, TrainConfig};

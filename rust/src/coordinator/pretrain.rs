@@ -1,0 +1,89 @@
+//! Offline stage: episodic ProtoNet meta-training on the source domain
+//! (paper Sec 2.1's FSL-based pre-training), run through the *same* AOT
+//! step artifact as deployment (all-channels mask, no sparsity).
+//!
+//! The paper pre-trains on ImageNet then meta-trains on MiniImageNet for
+//! 100 epochs on a server GPU; our substitute meta-trains from He-init on
+//! the synthetic source domain (DESIGN.md "Substitutions"). The resulting
+//! weights land in artifacts/weights_<arch>.bin and are what every
+//! deployment experiment loads.
+
+use anyhow::Result;
+
+use super::engine::ModelEngine;
+use super::evaluator::episode_accuracy;
+use crate::data::{domain_by_name, Sampler};
+use crate::model::ParamStore;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct PretrainConfig {
+    pub episodes: usize,
+    pub steps_per_episode: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig { episodes: 60, steps_per_episode: 4, lr: 3e-3, seed: 13, log_every: 10 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PretrainReport {
+    pub episodes: usize,
+    pub loss_curve: Vec<f32>,
+    pub probe_acc: Vec<(usize, f64)>,
+}
+
+/// Meta-train in an episodic fashion: every episode samples a source task
+/// and takes a few full-update steps on its ProtoNet loss (a first-order
+/// episodic scheme in the ProtoNet family — prototypes from the support
+/// set, CE on a fresh query set).
+pub fn meta_train(
+    engine: &ModelEngine,
+    params: &mut ParamStore,
+    cfg: &PretrainConfig,
+    mut log: impl FnMut(String),
+) -> Result<PretrainReport> {
+    let meta = &engine.meta;
+    let domain = domain_by_name("source").expect("source domain");
+    let sampler = Sampler::new(domain.as_ref(), &meta.shapes);
+    let mut rng = Rng::new(cfg.seed);
+
+    // Full-update mask: backbone + head, adapters kept frozen at zero.
+    let mut mask = vec![1.0f32; meta.total_theta];
+    for e in meta.entries.iter().filter(|e| e.role.starts_with("adapter")) {
+        mask[e.offset..e.offset + e.size].fill(0.0);
+    }
+
+    let mut report = PretrainReport { episodes: cfg.episodes, loss_curve: vec![], probe_acc: vec![] };
+    for epi in 0..cfg.episodes {
+        let mut erng = rng.fork(epi as u64);
+        let ep = sampler.sample(&mut erng);
+        let padded = ep.pad(&meta.shapes);
+        // Meta-training has real query data (it's offline/source-side).
+        let query = (padded.qry_x.clone(), padded.qry_y.clone(), padded.qry_v.clone());
+        let mut last = 0.0;
+        for _ in 0..cfg.steps_per_episode {
+            last = engine.train_step(params, &mask, cfg.lr, &padded, &query)?;
+        }
+        report.loss_curve.push(last);
+        if (epi + 1) % cfg.log_every == 0 || epi + 1 == cfg.episodes {
+            let emb = engine.embed_with(params, engine.eval_batch(&padded))?;
+            let acc = episode_accuracy(&emb.data, &padded, &meta.shapes);
+            report.probe_acc.push((epi + 1, acc));
+            log(format!(
+                "meta-train [{}] episode {:>4}/{} loss {:.4} probe-acc {:.3}",
+                meta.arch,
+                epi + 1,
+                cfg.episodes,
+                last,
+                acc
+            ));
+        }
+    }
+    Ok(report)
+}

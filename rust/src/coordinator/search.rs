@@ -1,0 +1,228 @@
+//! Offline evolutionary search for the SparseUpdate baseline
+//! (Lin et al., 2022 — MCUNetV3).
+//!
+//! SparseUpdate pre-computes a *static* (layer, channel-ratio) policy on a
+//! server by evolutionary search under the device memory constraint, then
+//! deploys it frozen. We reproduce that faithfully: genomes are per-layer
+//! ratio choices from {0, 1/8, 1/4, 1/2, 1}, fitness is adaptation
+//! accuracy on held-out *source-domain* episodes (the searcher has no
+//! access to the target data — exactly the paper's criticism of the
+//! approach), constrained by the same memory budget TinyTrain gets.
+
+use anyhow::Result;
+
+use super::engine::ModelEngine;
+use super::trainer::{run_episode, Method, StaticPolicy, TrainConfig};
+use crate::accounting::{backward_memory, Optimizer, UpdatePlan};
+use crate::data::{domain_by_name, Sampler};
+use crate::model::ParamStore;
+use crate::util::rng::Rng;
+
+pub const RATIO_CHOICES: [f64; 5] = [0.0, 0.125, 0.25, 0.5, 1.0];
+
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub mem_budget: f64,
+    pub episodes_per_eval: usize,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            population: 8,
+            generations: 4,
+            mem_budget: 0.0, // auto: resolve per arch
+            episodes_per_eval: 1,
+            steps: 4,
+            seed: 77,
+        }
+    }
+}
+
+type Genome = Vec<usize>; // index into RATIO_CHOICES per layer
+
+fn genome_to_policy(g: &Genome) -> StaticPolicy {
+    StaticPolicy {
+        layer_ratios: g
+            .iter()
+            .enumerate()
+            .filter(|(_, &r)| RATIO_CHOICES[r] > 0.0)
+            .map(|(l, &r)| (l, RATIO_CHOICES[r]))
+            .collect(),
+    }
+}
+
+fn resolve_budget(engine: &ModelEngine, budget: f64) -> f64 {
+    if budget > 0.0 {
+        return budget;
+    }
+    let arch = &engine.meta.scaled;
+    let auto = crate::coordinator::Budgets::default().resolve(&engine.meta);
+    let peak = crate::accounting::activation_peak_bytes(arch);
+    peak + 1.6 * (auto.mem_bytes - peak)
+}
+
+fn feasible(engine: &ModelEngine, g: &Genome, budget: f64) -> bool {
+    let budget = resolve_budget(engine, budget);
+    let arch = &engine.meta.scaled;
+    let mut plan = UpdatePlan::frozen(arch.layers.len(), arch.blocks.len());
+    for (l, &r) in g.iter().enumerate() {
+        plan.layer_ratio[l] = RATIO_CHOICES[r];
+    }
+    backward_memory(arch, &plan, Optimizer::Adam).total() <= budget
+}
+
+fn random_feasible(engine: &ModelEngine, rng: &mut Rng, budget: f64) -> Genome {
+    let n = engine.meta.scaled.layers.len();
+    loop {
+        // bias towards sparse genomes so feasibility is reachable
+        let g: Genome = (0..n)
+            .map(|_| if rng.bool(0.75) { 0 } else { rng.int_range(1, RATIO_CHOICES.len() - 1) })
+            .collect();
+        if g.iter().any(|&r| r > 0) && feasible(engine, &g, budget) {
+            return g;
+        }
+    }
+}
+
+fn mutate(engine: &ModelEngine, g: &Genome, rng: &mut Rng, budget: f64) -> Genome {
+    let n = g.len();
+    for _ in 0..20 {
+        let mut child = g.clone();
+        let flips = rng.int_range(1, 3);
+        for _ in 0..flips {
+            let i = rng.below(n);
+            child[i] = rng.below(RATIO_CHOICES.len());
+        }
+        if child.iter().any(|&r| r > 0) && feasible(engine, &child, budget) {
+            return child;
+        }
+    }
+    g.clone()
+}
+
+/// Fitness: mean post-adaptation accuracy on held-out source episodes.
+fn fitness(
+    engine: &ModelEngine,
+    params: &ParamStore,
+    g: &Genome,
+    cfg: &SearchConfig,
+    rng: &mut Rng,
+) -> Result<f64> {
+    let policy = genome_to_policy(g);
+    let method = Method::SparseUpdate(policy);
+    let domain = domain_by_name("source").unwrap();
+    let sampler = Sampler::new(domain.as_ref(), &engine.meta.shapes);
+    let mut total = 0.0;
+    for e in 0..cfg.episodes_per_eval {
+        let mut erng = rng.fork(e as u64);
+        let ep = sampler.sample(&mut erng);
+        let tc = TrainConfig { steps: cfg.steps, lr: 6e-3, seed: erng.next_u64() };
+        let res = run_episode(engine, params, &method, &ep, tc)?;
+        total += res.acc_after;
+    }
+    Ok(total / cfg.episodes_per_eval as f64)
+}
+
+/// Run the evolutionary search; returns the best static policy found.
+pub fn evolutionary_search(
+    engine: &ModelEngine,
+    params: &ParamStore,
+    cfg: &SearchConfig,
+) -> Result<(StaticPolicy, f64)> {
+    let mut rng = Rng::new(cfg.seed);
+    let budget = resolve_budget(engine, cfg.mem_budget);
+    let mut pop: Vec<(Genome, f64)> = Vec::new();
+    for _ in 0..cfg.population {
+        let g = random_feasible(engine, &mut rng, budget);
+        let f = fitness(engine, params, &g, cfg, &mut rng)?;
+        pop.push((g, f));
+    }
+    for _gen in 0..cfg.generations {
+        pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        pop.truncate((cfg.population / 2).max(2));
+        let parents = pop.clone();
+        while pop.len() < cfg.population {
+            let p = &parents[rng.below(parents.len())].0;
+            let child = mutate(engine, p, &mut rng, budget);
+            let f = fitness(engine, params, &child, cfg, &mut rng)?;
+            pop.push((child, f));
+        }
+    }
+    pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    let (best, best_f) = pop.remove(0);
+    Ok((genome_to_policy(&best), best_f))
+}
+
+/// A reasonable default static policy when no search artifact exists:
+/// a band of deeper layers at ratio 0.25 under a memory budget 1.6x
+/// TinyTrain's (the paper's Table-2 relation) and a backward-compute
+/// reach ~1.8x TinyTrain's fraction — roughly what MCUNetV3's released
+/// policies look like. Pass `mem_budget <= 0` to auto-derive.
+pub fn default_policy(engine: &ModelEngine, mem_budget: f64) -> StaticPolicy {
+    let meta = &engine.meta;
+    let arch = &meta.scaled;
+    let n = arch.layers.len();
+    let auto = crate::coordinator::Budgets::default().resolve(meta);
+    let budget = if mem_budget > 0.0 {
+        mem_budget
+    } else {
+        let peak = crate::accounting::activation_peak_bytes(arch);
+        peak + 1.6 * (auto.mem_bytes - peak)
+    };
+    let full_bwd = {
+        let mut p = UpdatePlan::full(n, arch.blocks.len());
+        p.batch = 1;
+        crate::accounting::backward_macs(arch, &p).total()
+    };
+    let compute_cap = full_bwd * auto.compute_frac * 1.8;
+    let mut plan = UpdatePlan::frozen(n, arch.blocks.len());
+    let mut ratios = Vec::new();
+    for l in (0..n).rev() {
+        plan.layer_ratio[l] = 0.25;
+        let over_mem = backward_memory(arch, &plan, Optimizer::Adam).total() > budget;
+        let over_macs = crate::accounting::backward_macs(arch, &plan).total() > compute_cap;
+        if over_mem || over_macs {
+            plan.layer_ratio[l] = 0.0;
+            break;
+        }
+        ratios.push((l, 0.25));
+    }
+    ratios.reverse();
+    StaticPolicy { layer_ratios: ratios }
+}
+
+/// Persist / restore a policy as JSON next to the artifacts.
+pub fn save_policy(path: &std::path::Path, policy: &StaticPolicy, fitness: f64) -> Result<()> {
+    use crate::util::jsonio::{arr, num, obj};
+    let j = obj(vec![
+        ("fitness", num(fitness)),
+        (
+            "layer_ratios",
+            arr(policy
+                .layer_ratios
+                .iter()
+                .map(|&(l, r)| arr(vec![num(l as f64), num(r)]))
+                .collect()),
+        ),
+    ]);
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+pub fn load_policy(path: &std::path::Path) -> Result<StaticPolicy> {
+    let j = crate::util::jsonio::Json::from_file(&path.to_string_lossy())?;
+    let ratios = j
+        .arr_of("layer_ratios")?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr().unwrap();
+            (p[0].as_usize().unwrap(), p[1].as_f64().unwrap())
+        })
+        .collect();
+    Ok(StaticPolicy { layer_ratios: ratios })
+}

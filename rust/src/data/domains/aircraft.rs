@@ -1,0 +1,90 @@
+//! Aircraft-like domain (stands in for FGVC-Aircraft): airframe
+//! silhouettes — fuselage ellipse, swept wings, tailplane — whose
+//! proportions define the model variant (the class). Fine-grained: all
+//! classes share the same gross layout and differ in geometry ratios.
+
+use super::Domain;
+use crate::data::raster::Canvas;
+use crate::util::rng::Rng;
+
+pub struct Aircraft;
+
+impl Domain for Aircraft {
+    fn name(&self) -> &'static str {
+        "aircraft"
+    }
+
+    fn seed(&self) -> u64 {
+        0xA1C
+    }
+
+    fn n_classes(&self) -> usize {
+        102 // FGVC variant count
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        // Class identity: proportions + livery greys.
+        let fus_len = crng.range(0.55, 0.9) as f32;
+        let fus_w = crng.range(0.06, 0.14) as f32;
+        let wing_span = crng.range(0.5, 0.95) as f32;
+        let wing_sweep = crng.range(0.05, 0.3) as f32;
+        let wing_pos = crng.range(0.35, 0.6) as f32;
+        let tail_h = crng.range(0.12, 0.3) as f32;
+        let body_grey = 0.55 + crng.range(0.0, 0.4) as f32;
+        let wing_grey = 0.35 + crng.range(0.0, 0.4) as f32;
+
+        let s = img as f32;
+        // Sky background with slight gradient + noise.
+        let mut c = Canvas::new(img, img, [0.55, 0.68, 0.85]);
+        for y in 0..img {
+            let f = y as f32 / s * 0.25;
+            for x in 0..img {
+                let p = &mut c.px[y * img + x];
+                p[0] = (p[0] + f * 0.3).min(1.0);
+                p[1] = (p[1] + f * 0.25).min(1.0);
+            }
+        }
+        c.noise(rng, 3, 0.06);
+
+        // Sample jitter: heading (left/right), position, scale.
+        let flip = if rng.bool(0.5) { -1.0f32 } else { 1.0 };
+        let cx = s * 0.5 + rng.range(-0.08, 0.08) as f32 * s;
+        let cy = s * 0.5 + rng.range(-0.08, 0.08) as f32 * s;
+        let scale = s * (0.8 + rng.range(0.0, 0.3) as f32);
+        let body = [body_grey, body_grey, body_grey * 1.02];
+        let wings = [wing_grey, wing_grey, wing_grey * 1.05];
+
+        // Fuselage.
+        c.ellipse(cx, cy, fus_len * scale * 0.5, fus_w * scale * 0.5, 0.0, body);
+        // Nose cone.
+        c.disk(cx + flip * fus_len * scale * 0.48, cy, fus_w * scale * 0.5, body);
+        // Wings (swept trapezoid via two triangles, mirrored).
+        let wx = cx + flip * (wing_pos - 0.5) * fus_len * scale;
+        let half = wing_span * scale * 0.5;
+        let sweep = wing_sweep * scale * flip;
+        for dir in [-1.0f32, 1.0] {
+            c.polygon(
+                &[
+                    (wx, cy),
+                    (wx - sweep, cy + dir * half),
+                    (wx - sweep - 0.12 * scale * flip, cy + dir * half),
+                    (wx - 0.16 * scale * flip, cy),
+                ],
+                wings,
+            );
+        }
+        // Tailplane + fin.
+        let tx = cx - flip * fus_len * scale * 0.45;
+        c.polygon(
+            &[
+                (tx, cy),
+                (tx - flip * tail_h * scale * 0.6, cy - tail_h * scale),
+                (tx - flip * tail_h * scale * 0.9, cy - tail_h * scale),
+                (tx - flip * 0.1 * scale, cy),
+            ],
+            wings,
+        );
+        c.to_vec()
+    }
+}

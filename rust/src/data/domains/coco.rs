@@ -1,0 +1,102 @@
+//! COCO-like domain: a *cluttered scene* — the class object appears among
+//! random distractor shapes over a textured background, at random scale
+//! and position. Context clutter, occlusion-ish overlap and small
+//! object-to-image ratios mimic what makes MSCOCO the hardest Meta-Dataset
+//! target.
+
+use super::Domain;
+use crate::data::raster::{hsv, rand_color, Canvas};
+use crate::util::rng::Rng;
+
+pub struct Coco;
+
+impl Domain for Coco {
+    fn name(&self) -> &'static str {
+        "coco"
+    }
+
+    fn seed(&self) -> u64 {
+        0xC0C0
+    }
+
+    fn n_classes(&self) -> usize {
+        80 // COCO category count
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        // Class identity: target object = shape family + palette + trim.
+        let shape = crng.below(5);
+        let col = hsv(crng.range(0.0, 6.0) as f32, 0.75, 0.8);
+        let trim = hsv(crng.range(0.0, 6.0) as f32, 0.6, 0.45);
+        let elong = crng.range(0.5, 1.8) as f32;
+
+        let s = img as f32;
+        let mut c = Canvas::new(img, img, rand_scene_bg(rng));
+        c.noise(rng, 5, 0.2);
+
+        // Distractors: random shapes that do NOT depend on the class.
+        let n_distract = rng.int_range(2, 5);
+        for _ in 0..n_distract {
+            let dcol = rand_color(rng);
+            let dx = rng.range(0.1, 0.9) as f32 * s;
+            let dy = rng.range(0.1, 0.9) as f32 * s;
+            let dr = rng.range(0.05, 0.16) as f32 * s;
+            match rng.below(3) {
+                0 => c.disk(dx, dy, dr, dcol),
+                1 => c.ngon(dx, dy, dr, 4, rng.range(0.0, 1.5) as f32, dcol),
+                _ => c.ngon(dx, dy, dr, 3, rng.range(0.0, 2.0) as f32, dcol),
+            }
+        }
+
+        // Target object at random pose/scale (small-to-medium).
+        let cx = rng.range(0.2, 0.8) as f32 * s;
+        let cy = rng.range(0.2, 0.8) as f32 * s;
+        let r = rng.range(0.1, 0.22) as f32 * s;
+        let rot = rng.range(0.0, std::f64::consts::TAU) as f32;
+        match shape {
+            0 => {
+                c.ellipse(cx, cy, r * elong, r, rot, col);
+                c.ellipse(cx, cy, r * elong * 0.5, r * 0.5, rot, trim);
+            }
+            1 => {
+                c.ngon(cx, cy, r, 5, rot, col);
+                c.disk(cx, cy, r * 0.35, trim);
+            }
+            2 => {
+                c.ngon(cx, cy, r, 6, rot, col);
+                c.ring(cx, cy, r * 0.6, r * 0.2, trim);
+            }
+            3 => {
+                // capsule: two disks + rect
+                let dx = r * elong * rot.cos();
+                let dy = r * elong * rot.sin();
+                c.disk(cx - dx, cy - dy, r * 0.6, col);
+                c.disk(cx + dx, cy + dy, r * 0.6, col);
+                c.line(cx - dx, cy - dy, cx + dx, cy + dy, r * 1.2, col);
+                c.disk(cx, cy, r * 0.3, trim);
+            }
+            _ => {
+                // star-ish: alternating radius polygon
+                let pts: Vec<(f32, f32)> = (0..10)
+                    .map(|i| {
+                        let a = rot + std::f32::consts::TAU * i as f32 / 10.0;
+                        let rr = if i % 2 == 0 { r } else { r * 0.45 };
+                        (cx + rr * a.cos(), cy + rr * a.sin())
+                    })
+                    .collect();
+                c.polygon(&pts, col);
+                c.disk(cx, cy, r * 0.25, trim);
+            }
+        }
+        c.to_vec()
+    }
+}
+
+fn rand_scene_bg(rng: &mut Rng) -> [f32; 3] {
+    match rng.below(3) {
+        0 => [0.55, 0.62, 0.5],  // outdoor
+        1 => [0.6, 0.55, 0.45],  // indoor
+        _ => [0.45, 0.55, 0.65], // street
+    }
+}

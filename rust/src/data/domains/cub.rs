@@ -1,0 +1,78 @@
+//! CUB-200-like domain: fine-grained bird silhouettes. Body/head/beak/
+//! wing geometry is shared; the class fixes plumage palette, beak and
+//! tail proportions — differences are subtle, like real bird species.
+
+use super::Domain;
+use crate::data::raster::{hsv, Canvas};
+use crate::util::rng::Rng;
+
+pub struct Cub;
+
+impl Domain for Cub {
+    fn name(&self) -> &'static str {
+        "cub"
+    }
+
+    fn seed(&self) -> u64 {
+        0xCB200
+    }
+
+    fn n_classes(&self) -> usize {
+        200 // CUB-200 class count
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        let body_col = hsv(crng.range(0.0, 6.0) as f32, 0.4 + crng.range(0.0, 0.5) as f32, 0.35 + crng.range(0.0, 0.5) as f32);
+        let wing_col = hsv(crng.range(0.0, 6.0) as f32, 0.5, 0.3 + crng.range(0.0, 0.4) as f32);
+        let belly_col = hsv(crng.range(0.0, 6.0) as f32, 0.25, 0.7 + crng.range(0.0, 0.3) as f32);
+        let beak_len = crng.range(0.08, 0.2) as f32;
+        let tail_len = crng.range(0.15, 0.35) as f32;
+        let head_ratio = crng.range(0.45, 0.65) as f32;
+
+        let s = img as f32;
+        // Sky/branch background.
+        let mut c = Canvas::new(img, img, [0.75, 0.82, 0.88]);
+        c.noise(rng, 4, 0.1);
+        // branch
+        let by = s * (0.72 + rng.range(0.0, 0.1) as f32);
+        c.line(0.0, by, s, by + rng.range(-3.0, 3.0) as f32, 2.5, [0.35, 0.22, 0.12]);
+
+        let flip = if rng.bool(0.5) { -1.0f32 } else { 1.0 };
+        let cx = s * 0.5 + rng.range(-0.05, 0.05) as f32 * s;
+        let cy = s * 0.52 + rng.range(-0.05, 0.05) as f32 * s;
+        let scale = s * (0.55 + rng.range(0.0, 0.2) as f32);
+
+        // Tail.
+        c.polygon(
+            &[
+                (cx - flip * scale * 0.3, cy),
+                (cx - flip * scale * (0.3 + tail_len), cy - scale * 0.1),
+                (cx - flip * scale * (0.3 + tail_len), cy + scale * 0.08),
+            ],
+            wing_col,
+        );
+        // Body.
+        c.ellipse(cx, cy, scale * 0.33, scale * 0.22, -0.15 * flip, body_col);
+        // Belly patch.
+        c.ellipse(cx - flip * scale * 0.02, cy + scale * 0.08, scale * 0.22, scale * 0.12, 0.0, belly_col);
+        // Head.
+        let hx = cx + flip * scale * 0.32;
+        let hy = cy - scale * 0.18;
+        c.disk(hx, hy, scale * 0.16 * head_ratio, body_col);
+        // Beak.
+        c.polygon(
+            &[
+                (hx + flip * scale * 0.12, hy - scale * 0.03),
+                (hx + flip * scale * (0.12 + beak_len), hy),
+                (hx + flip * scale * 0.12, hy + scale * 0.03),
+            ],
+            [0.9, 0.7, 0.2],
+        );
+        // Eye.
+        c.disk(hx + flip * scale * 0.04, hy - scale * 0.02, 1.2, [0.05, 0.05, 0.05]);
+        // Wing.
+        c.ellipse(cx - flip * scale * 0.05, cy - scale * 0.02, scale * 0.2, scale * 0.1, 0.35 * flip, wing_col);
+        c.to_vec()
+    }
+}

@@ -1,0 +1,78 @@
+//! DTD-like texture domain: each class is a texture *family* with fixed
+//! spectral parameters (gratings, checkers, dot lattices, noise octaves,
+//! cross-hatching). Purely texture-statistics dominated — no shapes.
+
+use super::Domain;
+use crate::data::raster::{hsv, Canvas};
+use crate::util::rng::Rng;
+
+pub struct Dtd;
+
+impl Domain for Dtd {
+    fn name(&self) -> &'static str {
+        "dtd"
+    }
+
+    fn seed(&self) -> u64 {
+        0xD7D
+    }
+
+    fn n_classes(&self) -> usize {
+        47 // DTD category count
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        let family = crng.below(5);
+        let base = hsv(crng.range(0.0, 6.0) as f32, 0.3 + crng.range(0.0, 0.4) as f32, 0.4 + crng.range(0.0, 0.4) as f32);
+        let accent = hsv(crng.range(0.0, 6.0) as f32, 0.5, 0.75);
+        let freq = crng.range(0.25, 1.2) as f32;
+        let angle_c = crng.range(0.0, std::f64::consts::PI) as f32;
+
+        let s = img as f32;
+        let mut c = Canvas::new(img, img, base);
+        // Sample jitter: phase, slight angle wobble, noise amplitude.
+        let phase = rng.range(0.0, std::f64::consts::TAU) as f32;
+        let angle = angle_c + rng.range(-0.15, 0.15) as f32;
+        match family {
+            0 => {
+                // parallel gratings
+                c.grating(freq, angle, phase, 0.8, accent);
+            }
+            1 => {
+                // cross-hatch: two gratings
+                c.grating(freq, angle, phase, 0.6, accent);
+                c.grating(freq * 1.1, angle + std::f32::consts::FRAC_PI_2, phase * 0.7, 0.5, accent);
+            }
+            2 => {
+                // checker with jittered cell size
+                let cell = (2.0 + 6.0 / freq.max(0.3)) * (0.9 + rng.range(0.0, 0.2) as f32);
+                c.checker(cell, accent);
+                c.noise(rng, 8, 0.1);
+            }
+            3 => {
+                // dot lattice
+                let step = (3.0 + 5.0 / freq.max(0.3)) as usize;
+                let r = step as f32 * (0.2 + crng.range(0.0, 0.2) as f32);
+                let off = rng.below(step) as f32;
+                let mut y = off;
+                while y < s {
+                    let mut x = off;
+                    while x < s {
+                        c.disk(x, y, r, accent);
+                        x += step as f32;
+                    }
+                    y += step as f32;
+                }
+            }
+            _ => {
+                // multi-octave blotches
+                c.noise(rng, 3, 0.5);
+                c.noise(rng, 7, 0.35);
+                c.noise(rng, 13, 0.2);
+                c.grating(freq * 0.5, angle, phase, 0.2, accent);
+            }
+        }
+        c.to_vec()
+    }
+}

@@ -1,0 +1,63 @@
+//! VGG-Flowers-like domain: radial petal arrangements over foliage. The
+//! class fixes petal count / shape / palette; samples vary pose and
+//! background. Color- and symmetry-dominated.
+
+use super::Domain;
+use crate::data::raster::{hsv, Canvas};
+use crate::util::rng::Rng;
+
+pub struct Flower;
+
+impl Domain for Flower {
+    fn name(&self) -> &'static str {
+        "flower"
+    }
+
+    fn seed(&self) -> u64 {
+        0xF10E
+    }
+
+    fn n_classes(&self) -> usize {
+        102 // VGG-Flowers class count
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        let petals = crng.int_range(4, 12);
+        let petal_hue = crng.range(0.0, 6.0) as f32;
+        let petal_sat = 0.55 + crng.range(0.0, 0.45) as f32;
+        let petal_len = crng.range(0.25, 0.42) as f32;
+        let petal_w = crng.range(0.35, 0.8) as f32; // relative to length
+        let center_hue = crng.range(0.0, 6.0) as f32;
+        let double = crng.bool(0.4); // double row of petals
+
+        let s = img as f32;
+        // Foliage background.
+        let mut c = Canvas::new(img, img, [0.12, 0.32 + rng.range(0.0, 0.15) as f32, 0.1]);
+        c.noise(rng, 5, 0.22);
+
+        let cx = s * 0.5 + rng.range(-0.07, 0.07) as f32 * s;
+        let cy = s * 0.5 + rng.range(-0.07, 0.07) as f32 * s;
+        let phase = rng.range(0.0, std::f64::consts::TAU) as f32;
+        let scale = 0.85 + rng.range(0.0, 0.3) as f32;
+
+        let rows: &[(f32, f32)] = if double { &[(1.0, 0.0), (0.62, 0.5)] } else { &[(1.0, 0.0)] };
+        for &(row_scale, row_phase) in rows {
+            let len = petal_len * s * scale * row_scale;
+            let wid = len * petal_w * 0.5;
+            let col = hsv(
+                petal_hue,
+                petal_sat,
+                (0.75 + 0.25 * row_scale).min(1.0),
+            );
+            for i in 0..petals {
+                let a = phase + row_phase + std::f32::consts::TAU * i as f32 / petals as f32;
+                let px = cx + a.cos() * len * 0.55;
+                let py = cy + a.sin() * len * 0.55;
+                c.ellipse(px, py, len * 0.5, wid, a, col);
+            }
+        }
+        c.disk(cx, cy, petal_len * s * scale * 0.28, hsv(center_hue, 0.8, 0.85));
+        c.to_vec()
+    }
+}

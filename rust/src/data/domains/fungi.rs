@@ -1,0 +1,73 @@
+//! Fungi-like domain (stands in for FGVCx-Fungi): mushroom cap/stem
+//! geometry with spot/gill texture. Classes differ in cap curvature,
+//! palette and spotting — fine-grained organic shapes on forest floors.
+
+use super::Domain;
+use crate::data::raster::{hsv, Canvas};
+use crate::util::rng::Rng;
+
+pub struct Fungi;
+
+impl Domain for Fungi {
+    fn name(&self) -> &'static str {
+        "fungi"
+    }
+
+    fn seed(&self) -> u64 {
+        0xF51
+    }
+
+    fn n_classes(&self) -> usize {
+        120 // slice of the 1394 species
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        let cap_col = hsv(crng.range(0.0, 1.4) as f32, 0.5 + crng.range(0.0, 0.5) as f32, 0.4 + crng.range(0.0, 0.55) as f32);
+        let stem_col = [0.85, 0.8, 0.68];
+        let cap_w = crng.range(0.25, 0.45) as f32;
+        let cap_h = (crng.range(0.35, 0.8) as f32) * cap_w;
+        let stem_w = crng.range(0.05, 0.12) as f32;
+        let stem_h = crng.range(0.25, 0.45) as f32;
+        let spots = crng.bool(0.5);
+        let n_spots = crng.int_range(4, 10);
+        let double = crng.bool(0.3); // a second smaller mushroom
+
+        let s = img as f32;
+        // Forest-floor background.
+        let mut c = Canvas::new(img, img, [0.25, 0.2, 0.12]);
+        c.noise(rng, 6, 0.25);
+
+        let count = if double { 2 } else { 1 };
+        for i in 0..count {
+            let scale = if i == 0 { 1.0 } else { 0.55 };
+            let cx = s * (0.5 + if i == 0 { rng.range(-0.08, 0.08) as f32 } else { rng.range(-0.3, 0.3) as f32 });
+            let base_y = s * (0.82 + rng.range(-0.04, 0.04) as f32);
+            let sw = stem_w * s * scale;
+            let sh = stem_h * s * scale * (0.9 + rng.range(0.0, 0.2) as f32);
+            let cw = cap_w * s * scale * (0.9 + rng.range(0.0, 0.2) as f32);
+            let ch = cap_h * s * scale;
+            // Stem.
+            c.rect(cx - sw, base_y - sh, cx + sw, base_y, stem_col);
+            // Cap: upper half-ellipse.
+            let cap_y = base_y - sh;
+            c.ellipse(cx, cap_y, cw, ch, 0.0, cap_col);
+            c.rect(cx - cw, cap_y, cx + cw, cap_y + ch * 0.25, cap_col);
+            // Spots.
+            if spots {
+                let mut srng = rng.fork(i as u64 + 100);
+                for _ in 0..n_spots {
+                    let a = srng.range(-1.0, 1.0) as f32;
+                    let b = srng.range(-0.9, 0.1) as f32;
+                    c.disk(
+                        cx + a * cw * 0.8,
+                        cap_y + b * ch * 0.8,
+                        1.0 + srng.range(0.0, 1.5) as f32,
+                        [0.95, 0.93, 0.85],
+                    );
+                }
+            }
+        }
+        c.to_vec()
+    }
+}

@@ -1,0 +1,81 @@
+//! Omniglot-like domain: handwritten glyphs as 2-5 smooth strokes on a
+//! light background. Stroke-dominated, near-binary statistics — the
+//! opposite end of the spectrum from the photographic domains.
+
+use super::Domain;
+use crate::data::raster::Canvas;
+use crate::util::rng::Rng;
+
+pub struct Omniglot;
+
+impl Domain for Omniglot {
+    fn name(&self) -> &'static str {
+        "omniglot"
+    }
+
+    fn seed(&self) -> u64 {
+        0x1623
+    }
+
+    fn n_classes(&self) -> usize {
+        200 // a slice of omniglot's 1623 characters
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        let s = img as f32;
+        // Class identity: stroke skeleton control points in a 5x5 grid.
+        let n_strokes = crng.int_range(2, 5);
+        let mut strokes: Vec<Vec<(f32, f32)>> = Vec::new();
+        for _ in 0..n_strokes {
+            let n_pts = crng.int_range(3, 6);
+            let mut pts = Vec::new();
+            let mut x = crng.range(0.15, 0.85);
+            let mut y = crng.range(0.15, 0.85);
+            for _ in 0..n_pts {
+                pts.push((x, y));
+                x = (x + crng.range(-0.35, 0.35)).clamp(0.1, 0.9);
+                y = (y + crng.range(-0.35, 0.35)).clamp(0.1, 0.9);
+            }
+            strokes.push(pts.iter().map(|&(a, b)| (a as f32, b as f32)).collect());
+        }
+
+        // Sample jitter: per-point wobble, global shift/scale, ink width.
+        let mut c = Canvas::new(img, img, [0.96, 0.95, 0.92]);
+        let shift_x = rng.range(-0.05, 0.05) as f32;
+        let shift_y = rng.range(-0.05, 0.05) as f32;
+        let scale = 0.85 + rng.range(0.0, 0.25) as f32;
+        let width = 1.0 + rng.range(0.0, 1.2) as f32;
+        let ink = [0.08, 0.08, 0.1];
+        for stroke in &strokes {
+            let jittered: Vec<(f32, f32)> = stroke
+                .iter()
+                .map(|&(x, y)| {
+                    let jx = x + rng.range(-0.03, 0.03) as f32;
+                    let jy = y + rng.range(-0.03, 0.03) as f32;
+                    (
+                        ((jx - 0.5) * scale + 0.5 + shift_x) * s,
+                        ((jy - 0.5) * scale + 0.5 + shift_y) * s,
+                    )
+                })
+                .collect();
+            // smooth with midpoint subdivision for curvy look
+            let smooth = subdivide(&jittered);
+            c.polyline(&smooth, width, ink);
+        }
+        c.to_vec()
+    }
+}
+
+fn subdivide(pts: &[(f32, f32)]) -> Vec<(f32, f32)> {
+    if pts.len() < 3 {
+        return pts.to_vec();
+    }
+    let mut out = vec![pts[0]];
+    for w in pts.windows(2) {
+        let mid = ((w[0].0 + w[1].0) * 0.5, (w[0].1 + w[1].1) * 0.5);
+        out.push(mid);
+        out.push(w[1]);
+    }
+    out
+}

@@ -1,0 +1,105 @@
+//! QuickDraw-like domain: crude single-color sketches with heavy
+//! sample-to-sample deformation (human doodles of the same concept vary
+//! wildly). Thin strokes on white; the class fixes a sketch "program".
+
+use super::Domain;
+use crate::data::raster::Canvas;
+use crate::util::rng::Rng;
+
+pub struct QDraw;
+
+impl Domain for QDraw {
+    fn name(&self) -> &'static str {
+        "qdraw"
+    }
+
+    fn seed(&self) -> u64 {
+        0x9D12A0
+    }
+
+    fn n_classes(&self) -> usize {
+        100 // slice of quickdraw's 345 concepts
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        // Class program: a mix of primitive sketch elements.
+        let n_elems = crng.int_range(2, 4);
+        let elems: Vec<(usize, f64, f64, f64)> = (0..n_elems)
+            .map(|_| {
+                (
+                    crng.below(4),
+                    crng.range(0.2, 0.8),
+                    crng.range(0.2, 0.8),
+                    crng.range(0.1, 0.3),
+                )
+            })
+            .collect();
+
+        let s = img as f32;
+        let mut c = Canvas::new(img, img, [0.99, 0.99, 0.99]);
+        let ink = [0.05, 0.05, 0.08];
+        // Heavy jitter: every element wobbles independently.
+        for &(kind, ex, ey, er) in &elems {
+            let cx = (ex + rng.range(-0.08, 0.08)) as f32 * s;
+            let cy = (ey + rng.range(-0.08, 0.08)) as f32 * s;
+            let r = (er * (0.8 + rng.range(0.0, 0.5))) as f32 * s;
+            match kind {
+                0 => {
+                    // wobbly circle: polyline around center
+                    let n = 14;
+                    let pts: Vec<(f32, f32)> = (0..=n)
+                        .map(|i| {
+                            let a = std::f32::consts::TAU * i as f32 / n as f32;
+                            let rr = r * (1.0 + rng.range(-0.12, 0.12) as f32);
+                            (cx + rr * a.cos(), cy + rr * a.sin())
+                        })
+                        .collect();
+                    c.polyline(&pts, 1.0, ink);
+                }
+                1 => {
+                    // zigzag
+                    let n = 5;
+                    let pts: Vec<(f32, f32)> = (0..n)
+                        .map(|i| {
+                            (
+                                cx - r + 2.0 * r * i as f32 / (n - 1) as f32,
+                                cy + if i % 2 == 0 { -r * 0.5 } else { r * 0.5 }
+                                    + rng.range(-2.0, 2.0) as f32,
+                            )
+                        })
+                        .collect();
+                    c.polyline(&pts, 1.0, ink);
+                }
+                2 => {
+                    // wobbly box
+                    let j = |rng: &mut Rng| rng.range(-1.5, 1.5) as f32;
+                    let pts = [
+                        (cx - r + j(rng), cy - r + j(rng)),
+                        (cx + r + j(rng), cy - r + j(rng)),
+                        (cx + r + j(rng), cy + r + j(rng)),
+                        (cx - r + j(rng), cy + r + j(rng)),
+                        (cx - r, cy - r),
+                    ];
+                    c.polyline(&pts, 1.0, ink);
+                }
+                _ => {
+                    // stroke flourish: momentum random walk
+                    let mut pts = vec![(cx, cy)];
+                    let mut vx = rng.range(-2.0, 2.0) as f32;
+                    let mut vy = rng.range(-2.0, 2.0) as f32;
+                    let (mut x, mut y) = (cx, cy);
+                    for _ in 0..10 {
+                        vx += rng.range(-1.0, 1.0) as f32;
+                        vy += rng.range(-1.0, 1.0) as f32;
+                        x = (x + vx).clamp(1.0, s - 2.0);
+                        y = (y + vy).clamp(1.0, s - 2.0);
+                        pts.push((x, y));
+                    }
+                    c.polyline(&pts, 1.0, ink);
+                }
+            }
+        }
+        c.to_vec()
+    }
+}

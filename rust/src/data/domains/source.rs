@@ -1,0 +1,99 @@
+//! Source (meta-train) domain — the MiniImageNet stand-in.
+//!
+//! 64 classes, each drawing its generator *family* and parameters from a
+//! private seed stream disjoint from every meta-test domain. The class
+//! distribution intentionally spans shapes, strokes and textures so the
+//! meta-learned representation is generic, while remaining *out of
+//! domain* w.r.t. all nine targets (different seeds => different class
+//! parameter vectors; cross-domain shift preserved).
+
+use super::Domain;
+use crate::data::raster::{hsv, rand_color, Canvas};
+use crate::util::rng::Rng;
+
+pub struct SourceMix;
+
+impl Domain for SourceMix {
+    fn name(&self) -> &'static str {
+        "source"
+    }
+
+    fn seed(&self) -> u64 {
+        0x50EC
+    }
+
+    fn n_classes(&self) -> usize {
+        64 // MiniImageNet's meta-train class count
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        let family = crng.below(6);
+        let col_a = hsv(crng.range(0.0, 6.0) as f32, 0.7, 0.8);
+        let col_b = hsv(crng.range(0.0, 6.0) as f32, 0.5, 0.55);
+        let p1 = crng.range(0.15, 0.4) as f32;
+        let p2 = crng.range(0.3, 0.9) as f32;
+        let n = crng.int_range(3, 9);
+
+        let s = img as f32;
+        let mut c = Canvas::new(img, img, rand_muted(rng));
+        c.noise(rng, 4, 0.15);
+        let cx = s * 0.5 + rng.range(-0.1, 0.1) as f32 * s;
+        let cy = s * 0.5 + rng.range(-0.1, 0.1) as f32 * s;
+        let r = p1 * s * (0.85 + rng.range(0.0, 0.3) as f32);
+        let rot = rng.range(0.0, std::f64::consts::TAU) as f32;
+
+        match family {
+            0 => {
+                // concentric n-gons
+                c.ngon(cx, cy, r * 1.3, n, rot, col_a);
+                c.ngon(cx, cy, r * 0.8, n, rot + 0.3, col_b);
+            }
+            1 => {
+                // ring cluster
+                for i in 0..n {
+                    let a = rot + std::f32::consts::TAU * i as f32 / n as f32;
+                    c.disk(cx + r * a.cos(), cy + r * a.sin(), r * 0.4, col_a);
+                }
+                c.disk(cx, cy, r * 0.5, col_b);
+            }
+            2 => {
+                // strokes
+                for i in 0..n {
+                    let a = rot + i as f32 * p2;
+                    c.line(
+                        cx - r * a.cos(),
+                        cy - r * a.sin(),
+                        cx + r * a.cos(),
+                        cy + r * a.sin(),
+                        1.5,
+                        if i % 2 == 0 { col_a } else { col_b },
+                    );
+                }
+            }
+            3 => {
+                // texture patch
+                c.grating(p2, rot, 0.0, 0.7, col_a);
+                c.ngon(cx, cy, r, 4, rot, col_b);
+            }
+            4 => {
+                // blob + satellite
+                c.ellipse(cx, cy, r * 1.2, r * 0.7, rot, col_a);
+                c.disk(cx + r, cy - r * 0.6, r * 0.35, col_b);
+                c.disk(cx - r, cy + r * 0.6, r * 0.25, col_b);
+            }
+            _ => {
+                // nested rings
+                c.ring(cx, cy, r * 1.2, r * 0.25, col_a);
+                c.ring(cx, cy, r * 0.7, r * 0.2, col_b);
+                c.disk(cx, cy, r * 0.25, rand_color(rng));
+            }
+        }
+        c.to_vec()
+    }
+}
+
+fn rand_muted(rng: &mut Rng) -> [f32; 3] {
+    let c = rand_color(rng);
+    [c[0] * 0.4 + 0.25, c[1] * 0.4 + 0.25, c[2] * 0.4 + 0.25]
+}

@@ -1,0 +1,87 @@
+//! Traffic-sign-like domain (stands in for GTSRB): saturated border
+//! shapes (ring / triangle / octagon / square) with an inner glyph.
+//! Shape-and-color dominated, low texture — like real road signs.
+
+use super::Domain;
+use crate::data::raster::{hsv, rand_color, Canvas};
+use crate::util::rng::Rng;
+
+pub struct Traffic;
+
+impl Domain for Traffic {
+    fn name(&self) -> &'static str {
+        "traffic"
+    }
+
+    fn seed(&self) -> u64 {
+        0x7201
+    }
+
+    fn n_classes(&self) -> usize {
+        43 // GTSRB's class count
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, img: usize) -> Vec<f32> {
+        let mut crng = self.class_rng(class);
+        // Class identity: outline family, border hue, glyph family.
+        let outline = crng.below(4);
+        let border = hsv(crng.range(0.0, 6.0) as f32, 0.9, 0.9);
+        let inner = if crng.bool(0.5) { [1.0, 1.0, 0.95] } else { [0.12, 0.12, 0.2] };
+        let glyph = crng.below(4);
+        let glyph_color = if inner[0] > 0.5 { [0.1, 0.1, 0.1] } else { [0.95, 0.95, 0.9] };
+
+        // Sample jitter: position/scale/background.
+        let s = img as f32;
+        let mut c = Canvas::new(img, img, rand_bg(rng));
+        c.noise(rng, 4, 0.15);
+        let cx = s * 0.5 + rng.range(-0.06, 0.06) as f32 * s;
+        let cy = s * 0.5 + rng.range(-0.06, 0.06) as f32 * s;
+        let r = s * (0.30 + rng.range(0.0, 0.08) as f32);
+        let rot = rng.range(-0.12, 0.12) as f32;
+
+        match outline {
+            0 => {
+                c.disk(cx, cy, r, inner);
+                c.ring(cx, cy, r, r * 0.28, border);
+            }
+            1 => {
+                c.ngon(cx, cy, r * 1.15, 3, rot - std::f32::consts::FRAC_PI_2, border);
+                c.ngon(cx, cy, r * 0.78, 3, rot - std::f32::consts::FRAC_PI_2, inner);
+            }
+            2 => {
+                c.ngon(cx, cy, r * 1.05, 8, rot, border);
+                c.ngon(cx, cy, r * 0.75, 8, rot, inner);
+            }
+            _ => {
+                c.ngon(cx, cy, r * 1.1, 4, rot + std::f32::consts::FRAC_PI_4, border);
+                c.ngon(cx, cy, r * 0.8, 4, rot + std::f32::consts::FRAC_PI_4, inner);
+            }
+        }
+        match glyph {
+            0 => c.rect(cx - r * 0.45, cy - r * 0.12, cx + r * 0.45, cy + r * 0.12, glyph_color),
+            1 => c.disk(cx, cy, r * 0.22, glyph_color),
+            2 => {
+                // arrow
+                c.line(cx, cy + r * 0.4, cx, cy - r * 0.35, 2.0, glyph_color);
+                c.polygon(
+                    &[
+                        (cx - r * 0.25, cy - r * 0.15),
+                        (cx + r * 0.25, cy - r * 0.15),
+                        (cx, cy - r * 0.5),
+                    ],
+                    glyph_color,
+                );
+            }
+            _ => {
+                c.line(cx - r * 0.35, cy - r * 0.35, cx + r * 0.35, cy + r * 0.35, 2.0, glyph_color);
+                c.line(cx - r * 0.35, cy + r * 0.35, cx + r * 0.35, cy - r * 0.35, 2.0, glyph_color);
+            }
+        }
+        c.to_vec()
+    }
+}
+
+fn rand_bg(rng: &mut Rng) -> [f32; 3] {
+    let base = rand_color(rng);
+    [base[0] * 0.35 + 0.3, base[1] * 0.35 + 0.3, base[2] * 0.35 + 0.3]
+}

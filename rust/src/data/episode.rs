@@ -1,0 +1,286 @@
+//! Various-way-various-shot episode sampler (paper Appendix B,
+//! following Triantafillou et al. 2020), scaled to this testbed's
+//! static-shape maxima.
+//!
+//! Sampling procedure per episode:
+//!   1. ways ~ U[3, min(MAX_WAYS, n_classes)], classes chosen uniformly.
+//!   2. support: imbalanced shots — each class draws an unnormalised
+//!      log-uniform mass, masses are scaled to the support budget, every
+//!      class keeps >= 1 shot (realistically imbalanced, Table 5).
+//!   3. query: class-balanced, min(10, MAX_QUERY / ways) per class
+//!      (paper: 10 per class).
+
+use super::domains::Domain;
+use crate::model::EpisodeShapes;
+use crate::util::rng::Rng;
+
+/// One sampled image with its episode-local label.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub image: Vec<f32>, // IMG*IMG*3, NHWC [-1,1]
+    pub label: usize,    // way index in [0, ways)
+}
+
+/// A fully materialised episode (unpadded).
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub domain: String,
+    pub ways: usize,
+    pub class_ids: Vec<usize>,
+    pub shots: Vec<usize>, // support shots per way
+    pub support: Vec<Sample>,
+    pub query: Vec<Sample>,
+}
+
+/// Episode padded to the AOT graphs' static shapes.
+#[derive(Debug, Clone)]
+pub struct PaddedEpisode {
+    pub sup_x: Vec<f32>,
+    pub sup_y: Vec<f32>,
+    pub sup_v: Vec<f32>,
+    pub qry_x: Vec<f32>,
+    pub qry_y: Vec<f32>,
+    pub qry_v: Vec<f32>,
+    pub n_support: usize,
+    pub n_query: usize,
+    pub ways: usize,
+}
+
+pub struct Sampler<'a> {
+    pub domain: &'a dyn Domain,
+    pub shapes: &'a EpisodeShapes,
+    pub min_ways: usize,
+}
+
+impl<'a> Sampler<'a> {
+    pub fn new(domain: &'a dyn Domain, shapes: &'a EpisodeShapes) -> Self {
+        Sampler { domain, shapes, min_ways: 3 }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Episode {
+        let s = self.shapes;
+        let max_ways = s.max_ways.min(self.domain.n_classes());
+        let ways = rng.int_range(self.min_ways.min(max_ways), max_ways);
+        let class_ids = rng.choose_k(self.domain.n_classes(), ways);
+
+        // Imbalanced support shots: log-uniform masses scaled to budget.
+        let budget = s.max_support;
+        let masses: Vec<f64> = (0..ways).map(|_| (rng.range(0.0, 2.2)).exp()).collect();
+        let total: f64 = masses.iter().sum();
+        let mut shots: Vec<usize> = masses
+            .iter()
+            .map(|m| ((m / total * budget as f64).floor() as usize).max(1))
+            .collect();
+        // Trim any overshoot from the largest classes.
+        while shots.iter().sum::<usize>() > budget {
+            let i = shots
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .map(|(i, _)| i)
+                .unwrap();
+            shots[i] -= 1;
+        }
+
+        let q_per_class = (s.max_query / ways).min(10).max(1);
+
+        let mut support = Vec::new();
+        let mut query = Vec::new();
+        for (w, &cls) in class_ids.iter().enumerate() {
+            for _ in 0..shots[w] {
+                support.push(Sample { image: self.domain.render(cls, rng, s.img), label: w });
+            }
+            for _ in 0..q_per_class {
+                query.push(Sample { image: self.domain.render(cls, rng, s.img), label: w });
+            }
+        }
+        rng.shuffle(&mut support);
+        rng.shuffle(&mut query);
+        Episode {
+            domain: self.domain.name().to_string(),
+            ways,
+            class_ids,
+            shots,
+            support,
+            query,
+        }
+    }
+}
+
+impl Episode {
+    /// Pad to the static AOT shapes, producing the graph input tensors.
+    pub fn pad(&self, s: &EpisodeShapes) -> PaddedEpisode {
+        let img_len = s.img * s.img * s.channels;
+        let pack = |samples: &[Sample], cap: usize| {
+            let mut x = vec![0.0f32; cap * img_len];
+            let mut y = vec![0.0f32; cap * s.max_ways];
+            let mut v = vec![0.0f32; cap];
+            for (i, smp) in samples.iter().take(cap).enumerate() {
+                x[i * img_len..(i + 1) * img_len].copy_from_slice(&smp.image);
+                y[i * s.max_ways + smp.label] = 1.0;
+                v[i] = 1.0;
+            }
+            (x, y, v)
+        };
+        let (sup_x, sup_y, sup_v) = pack(&self.support, s.max_support);
+        let (qry_x, qry_y, qry_v) = pack(&self.query, s.max_query);
+        PaddedEpisode {
+            sup_x,
+            sup_y,
+            sup_v,
+            qry_x,
+            qry_y,
+            qry_v,
+            n_support: self.support.len().min(s.max_support),
+            n_query: self.query.len().min(s.max_query),
+            ways: self.ways,
+        }
+    }
+
+    /// Pseudo-query set for fine-tuning (Hu et al., 2022): augmented
+    /// copies of the *support* images — the only labelled data available
+    /// on-device. Augmentations: horizontal flip, +-2px shift, noise.
+    pub fn pseudo_query(&self, s: &EpisodeShapes, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let img_len = s.img * s.img * s.channels;
+        let cap = s.max_query;
+        let mut x = vec![0.0f32; cap * img_len];
+        let mut y = vec![0.0f32; cap * s.max_ways];
+        let mut v = vec![0.0f32; cap];
+        if self.support.is_empty() {
+            return (x, y, v);
+        }
+        for i in 0..cap.min(self.support.len().max(cap)) {
+            let src = &self.support[rng.below(self.support.len())];
+            let aug = augment(&src.image, s.img, s.channels, rng);
+            x[i * img_len..(i + 1) * img_len].copy_from_slice(&aug);
+            y[i * s.max_ways + src.label] = 1.0;
+            v[i] = 1.0;
+        }
+        (x, y, v)
+    }
+}
+
+/// Light augmentation on a flat NHWC image.
+pub fn augment(img: &[f32], size: usize, channels: usize, rng: &mut Rng) -> Vec<f32> {
+    let flip = rng.bool(0.5);
+    let dx = rng.int_range(0, 4) as i32 - 2;
+    let dy = rng.int_range(0, 4) as i32 - 2;
+    let noise_amp = 0.05f32;
+    let mut out = vec![0.0f32; img.len()];
+    for y in 0..size {
+        for x in 0..size {
+            let sx0 = if flip { size as i32 - 1 - x as i32 } else { x as i32 } + dx;
+            let sy0 = y as i32 + dy;
+            let sx = sx0.clamp(0, size as i32 - 1) as usize;
+            let sy = sy0.clamp(0, size as i32 - 1) as usize;
+            for ch in 0..channels {
+                let v = img[(sy * size + sx) * channels + ch]
+                    + (rng.uniform() as f32 - 0.5) * 2.0 * noise_amp;
+                out[(y * size + x) * channels + ch] = v.clamp(-1.0, 1.0);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::domains::Traffic;
+    use crate::util::prop::check;
+
+    fn shapes() -> EpisodeShapes {
+        EpisodeShapes {
+            img: 16,
+            channels: 3,
+            max_ways: 6,
+            max_support: 20,
+            max_query: 18,
+            eval_batch: 38,
+            feat_dim: 8,
+            cosine_tau: 10.0,
+        }
+    }
+
+    #[test]
+    fn episode_respects_budgets_property() {
+        let s = shapes();
+        check(
+            "episode-budgets",
+            40,
+            1,
+            |r| {
+                let d = Traffic;
+                Sampler::new(&d, &s).sample(r)
+            },
+            |ep| {
+                if ep.ways < 3 || ep.ways > s.max_ways {
+                    return Err(format!("ways {} out of range", ep.ways));
+                }
+                if ep.support.len() > s.max_support {
+                    return Err(format!("support {} over budget", ep.support.len()));
+                }
+                if ep.shots.iter().any(|&k| k == 0) {
+                    return Err("class with zero shots".into());
+                }
+                if ep.shots.len() != ep.ways || ep.class_ids.len() != ep.ways {
+                    return Err("ways/shots mismatch".into());
+                }
+                // every way has at least one query sample
+                for w in 0..ep.ways {
+                    if !ep.query.iter().any(|q| q.label == w) {
+                        return Err(format!("way {w} has no query"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn padding_is_consistent() {
+        let s = shapes();
+        let d = Traffic;
+        let mut rng = Rng::new(3);
+        let ep = Sampler::new(&d, &s).sample(&mut rng);
+        let p = ep.pad(&s);
+        assert_eq!(p.sup_x.len(), s.max_support * s.img * s.img * 3);
+        assert_eq!(p.sup_y.len(), s.max_support * s.max_ways);
+        let n_valid = p.sup_v.iter().filter(|&&v| v == 1.0).count();
+        assert_eq!(n_valid, ep.support.len());
+        // one-hot rows sum to 1 on valid entries, 0 on padded ones
+        for i in 0..s.max_support {
+            let row_sum: f32 = p.sup_y[i * s.max_ways..(i + 1) * s.max_ways].iter().sum();
+            assert_eq!(row_sum, p.sup_v[i]);
+        }
+    }
+
+    #[test]
+    fn pseudo_query_labels_come_from_support() {
+        let s = shapes();
+        let d = Traffic;
+        let mut rng = Rng::new(5);
+        let ep = Sampler::new(&d, &s).sample(&mut rng);
+        let (_, y, v) = ep.pseudo_query(&s, &mut rng);
+        for i in 0..s.max_query {
+            let row = &y[i * s.max_ways..(i + 1) * s.max_ways];
+            let row_sum: f32 = row.iter().sum();
+            assert_eq!(row_sum, v[i]);
+            // labels only within sampled ways
+            for (w, &val) in row.iter().enumerate() {
+                if val > 0.0 {
+                    assert!(w < ep.ways);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn augment_preserves_range_and_shape() {
+        let mut rng = Rng::new(9);
+        let img: Vec<f32> = (0..16 * 16 * 3).map(|i| ((i % 13) as f32 / 6.5) - 1.0).collect();
+        let out = augment(&img, 16, 3, &mut rng);
+        assert_eq!(out.len(), img.len());
+        assert!(out.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+}

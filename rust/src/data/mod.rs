@@ -1,0 +1,14 @@
+//! Data substrate: procedural cross-domain datasets + episodic sampling.
+//!
+//! Replaces the paper's MiniImageNet / Meta-Dataset pipeline with
+//! generators whose cross-domain statistics exercise the same CDFSL
+//! behaviour (DESIGN.md "Substitutions").
+
+pub mod domains;
+pub mod episode;
+pub mod raster;
+pub mod stats;
+
+pub use domains::{all_domains, domain_by_name, Domain, DOMAIN_NAMES};
+pub use episode::{augment, Episode, PaddedEpisode, Sampler, Sample};
+pub use stats::{domain_stats, mean_sd, DomainStats};

@@ -1,0 +1,311 @@
+//! Tiny software rasterizer: the substrate under the synthetic
+//! cross-domain generators (DESIGN.md "Substitutions" — stands in for the
+//! photographic Meta-Dataset domains).
+//!
+//! RGB f32 canvas in [0,1], scanline-ish primitives, value noise, and the
+//! conversion to the NHWC [-1,1] tensors the AOT graphs consume.
+
+use crate::util::rng::Rng;
+
+pub type Color = [f32; 3];
+
+#[derive(Debug, Clone)]
+pub struct Canvas {
+    pub w: usize,
+    pub h: usize,
+    pub px: Vec<Color>,
+}
+
+impl Canvas {
+    pub fn new(w: usize, h: usize, bg: Color) -> Self {
+        Canvas { w, h, px: vec![bg; w * h] }
+    }
+
+    #[inline]
+    pub fn put(&mut self, x: i32, y: i32, c: Color) {
+        if x >= 0 && y >= 0 && (x as usize) < self.w && (y as usize) < self.h {
+            self.px[y as usize * self.w + x as usize] = c;
+        }
+    }
+
+    #[inline]
+    pub fn blend(&mut self, x: i32, y: i32, c: Color, alpha: f32) {
+        if x >= 0 && y >= 0 && (x as usize) < self.w && (y as usize) < self.h {
+            let p = &mut self.px[y as usize * self.w + x as usize];
+            for i in 0..3 {
+                p[i] = p[i] * (1.0 - alpha) + c[i] * alpha;
+            }
+        }
+    }
+
+    /// Filled disk.
+    pub fn disk(&mut self, cx: f32, cy: f32, r: f32, c: Color) {
+        let (x0, x1) = ((cx - r).floor() as i32, (cx + r).ceil() as i32);
+        let (y0, y1) = ((cy - r).floor() as i32, (cy + r).ceil() as i32);
+        for y in y0..=y1 {
+            for x in x0..=x1 {
+                let dx = x as f32 + 0.5 - cx;
+                let dy = y as f32 + 0.5 - cy;
+                if dx * dx + dy * dy <= r * r {
+                    self.put(x, y, c);
+                }
+            }
+        }
+    }
+
+    /// Ring (annulus) of thickness `t`.
+    pub fn ring(&mut self, cx: f32, cy: f32, r: f32, t: f32, c: Color) {
+        let ro2 = r * r;
+        let ri = (r - t).max(0.0);
+        let ri2 = ri * ri;
+        let (x0, x1) = ((cx - r).floor() as i32, (cx + r).ceil() as i32);
+        let (y0, y1) = ((cy - r).floor() as i32, (cy + r).ceil() as i32);
+        for y in y0..=y1 {
+            for x in x0..=x1 {
+                let dx = x as f32 + 0.5 - cx;
+                let dy = y as f32 + 0.5 - cy;
+                let d2 = dx * dx + dy * dy;
+                if d2 <= ro2 && d2 >= ri2 {
+                    self.put(x, y, c);
+                }
+            }
+        }
+    }
+
+    /// Filled axis-aligned ellipse (optionally rotated by `rot` radians).
+    pub fn ellipse(&mut self, cx: f32, cy: f32, rx: f32, ry: f32, rot: f32, c: Color) {
+        let r = rx.max(ry) + 1.0;
+        let (x0, x1) = ((cx - r).floor() as i32, (cx + r).ceil() as i32);
+        let (y0, y1) = ((cy - r).floor() as i32, (cy + r).ceil() as i32);
+        let (s, co) = rot.sin_cos();
+        for y in y0..=y1 {
+            for x in x0..=x1 {
+                let dx = x as f32 + 0.5 - cx;
+                let dy = y as f32 + 0.5 - cy;
+                let u = dx * co + dy * s;
+                let v = -dx * s + dy * co;
+                if (u / rx) * (u / rx) + (v / ry) * (v / ry) <= 1.0 {
+                    self.put(x, y, c);
+                }
+            }
+        }
+    }
+
+    /// Filled convex/concave polygon via even-odd scanline test.
+    pub fn polygon(&mut self, pts: &[(f32, f32)], c: Color) {
+        if pts.len() < 3 {
+            return;
+        }
+        let ymin = pts.iter().map(|p| p.1).fold(f32::MAX, f32::min).floor() as i32;
+        let ymax = pts.iter().map(|p| p.1).fold(f32::MIN, f32::max).ceil() as i32;
+        for y in ymin..=ymax {
+            let fy = y as f32 + 0.5;
+            let mut xs: Vec<f32> = Vec::new();
+            for i in 0..pts.len() {
+                let (x1, y1) = pts[i];
+                let (x2, y2) = pts[(i + 1) % pts.len()];
+                if (y1 <= fy && y2 > fy) || (y2 <= fy && y1 > fy) {
+                    xs.push(x1 + (fy - y1) / (y2 - y1) * (x2 - x1));
+                }
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for pair in xs.chunks(2) {
+                if let [a, b] = pair {
+                    for x in a.round() as i32..=b.round() as i32 {
+                        self.put(x, y, c);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Regular n-gon.
+    pub fn ngon(&mut self, cx: f32, cy: f32, r: f32, n: usize, rot: f32, c: Color) {
+        let pts: Vec<(f32, f32)> = (0..n)
+            .map(|i| {
+                let a = rot + std::f32::consts::TAU * i as f32 / n as f32;
+                (cx + r * a.cos(), cy + r * a.sin())
+            })
+            .collect();
+        self.polygon(&pts, c);
+    }
+
+    /// Thick line segment.
+    pub fn line(&mut self, x1: f32, y1: f32, x2: f32, y2: f32, t: f32, c: Color) {
+        let dx = x2 - x1;
+        let dy = y2 - y1;
+        let len = (dx * dx + dy * dy).sqrt().max(1e-3);
+        let steps = (len * 2.0).ceil() as usize;
+        let half = t * 0.5;
+        for i in 0..=steps {
+            let f = i as f32 / steps as f32;
+            let px = x1 + f * dx;
+            let py = y1 + f * dy;
+            if half <= 0.6 {
+                self.put(px.round() as i32, py.round() as i32, c);
+            } else {
+                self.disk(px, py, half, c);
+            }
+        }
+    }
+
+    pub fn polyline(&mut self, pts: &[(f32, f32)], t: f32, c: Color) {
+        for w in pts.windows(2) {
+            self.line(w[0].0, w[0].1, w[1].0, w[1].1, t, c);
+        }
+    }
+
+    pub fn rect(&mut self, x0: f32, y0: f32, x1: f32, y1: f32, c: Color) {
+        self.polygon(&[(x0, y0), (x1, y0), (x1, y1), (x0, y1)], c);
+    }
+
+    /// Additive value-noise layer with `cells` grid resolution.
+    pub fn noise(&mut self, rng: &mut Rng, cells: usize, amp: f32) {
+        let g = cells.max(2);
+        let grid: Vec<f32> = (0..(g + 1) * (g + 1)).map(|_| rng.uniform() as f32 - 0.5).collect();
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let fx = x as f32 / self.w as f32 * g as f32;
+                let fy = y as f32 / self.h as f32 * g as f32;
+                let (ix, iy) = (fx as usize, fy as usize);
+                let (tx, ty) = (fx - ix as f32, fy - iy as f32);
+                let idx = |i: usize, j: usize| grid[j.min(g) * (g + 1) + i.min(g)];
+                let v = idx(ix, iy) * (1.0 - tx) * (1.0 - ty)
+                    + idx(ix + 1, iy) * tx * (1.0 - ty)
+                    + idx(ix, iy + 1) * (1.0 - tx) * ty
+                    + idx(ix + 1, iy + 1) * tx * ty;
+                let p = &mut self.px[y * self.w + x];
+                for ch in p.iter_mut() {
+                    *ch = (*ch + v * amp).clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+
+    /// Sinusoidal grating overlay (textures domain).
+    pub fn grating(&mut self, freq: f32, angle: f32, phase: f32, amp: f32, c: Color) {
+        let (s, co) = angle.sin_cos();
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let u = x as f32 * co + y as f32 * s;
+                let v = ((u * freq + phase).sin() * 0.5 + 0.5) * amp;
+                let p = &mut self.px[y * self.w + x];
+                for i in 0..3 {
+                    p[i] = (p[i] * (1.0 - v) + c[i] * v).clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+
+    /// Checkerboard overlay.
+    pub fn checker(&mut self, cell: f32, c: Color) {
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let cx = (x as f32 / cell) as i32;
+                let cy = (y as f32 / cell) as i32;
+                if (cx + cy) % 2 == 0 {
+                    self.px[y * self.w + x] = c;
+                }
+            }
+        }
+    }
+
+    /// Flatten to NHWC [-1, 1] floats (one image's worth).
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.w * self.h * 3);
+        for p in &self.px {
+            for ch in p {
+                out.push(ch * 2.0 - 1.0);
+            }
+        }
+        out
+    }
+}
+
+/// Random saturated color.
+pub fn rand_color(rng: &mut Rng) -> Color {
+    let h = rng.uniform() as f32 * 6.0;
+    let s = 0.5 + 0.5 * rng.uniform() as f32;
+    let v = 0.5 + 0.5 * rng.uniform() as f32;
+    hsv(h, s, v)
+}
+
+/// HSV (h in [0,6)) to RGB.
+pub fn hsv(h: f32, s: f32, v: f32) -> Color {
+    let i = h.floor() as i32 % 6;
+    let f = h - h.floor();
+    let p = v * (1.0 - s);
+    let q = v * (1.0 - f * s);
+    let t = v * (1.0 - (1.0 - f) * s);
+    match i {
+        0 => [v, t, p],
+        1 => [q, v, p],
+        2 => [p, v, t],
+        3 => [p, q, v],
+        4 => [t, p, v],
+        _ => [v, p, q],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canvas_bounds_are_safe() {
+        let mut c = Canvas::new(8, 8, [0.0; 3]);
+        c.put(-5, -5, [1.0; 3]);
+        c.put(100, 100, [1.0; 3]);
+        c.disk(-10.0, -10.0, 3.0, [1.0; 3]);
+        c.line(-5.0, -5.0, 50.0, 50.0, 2.0, [1.0; 3]);
+        // no panic = pass; center pixel must be touched by the line
+        assert!(c.px[4 * 8 + 4][0] > 0.0);
+    }
+
+    #[test]
+    fn disk_fills_center_not_corner() {
+        let mut c = Canvas::new(16, 16, [0.0; 3]);
+        c.disk(8.0, 8.0, 4.0, [1.0, 0.0, 0.0]);
+        assert_eq!(c.px[8 * 16 + 8], [1.0, 0.0, 0.0]);
+        assert_eq!(c.px[0], [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn polygon_even_odd() {
+        let mut c = Canvas::new(16, 16, [0.0; 3]);
+        c.polygon(&[(2.0, 2.0), (13.0, 2.0), (13.0, 13.0), (2.0, 13.0)], [0.0, 1.0, 0.0]);
+        assert_eq!(c.px[8 * 16 + 8], [0.0, 1.0, 0.0]);
+        assert_eq!(c.px[0], [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn to_vec_range_and_layout() {
+        let mut c = Canvas::new(4, 4, [0.5; 3]);
+        c.put(0, 0, [1.0, 0.0, 0.5]);
+        let v = c.to_vec();
+        assert_eq!(v.len(), 4 * 4 * 3);
+        assert!((v[0] - 1.0).abs() < 1e-6); // R of (0,0)
+        assert!((v[1] + 1.0).abs() < 1e-6); // G of (0,0)
+        assert!(v.iter().all(|x| (-1.0..=1.0).contains(x)));
+    }
+
+    #[test]
+    fn noise_stays_in_range() {
+        let mut c = Canvas::new(12, 12, [0.5; 3]);
+        let mut rng = Rng::new(9);
+        c.noise(&mut rng, 4, 0.8);
+        assert!(c.px.iter().all(|p| p.iter().all(|&v| (0.0..=1.0).contains(&v))));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let render = |seed| {
+            let mut c = Canvas::new(8, 8, [0.1; 3]);
+            let mut rng = Rng::new(seed);
+            c.noise(&mut rng, 3, 0.5);
+            c.to_vec()
+        };
+        assert_eq!(render(5), render(5));
+        assert_ne!(render(5), render(6));
+    }
+}

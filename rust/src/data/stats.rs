@@ -1,0 +1,108 @@
+//! Episode sampler statistics — regenerates the paper's Table 5
+//! (avg/SD of ways, support/query sizes, shots across sampled episodes).
+
+use super::domains::Domain;
+use super::episode::Sampler;
+use crate::model::EpisodeShapes;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct DomainStats {
+    pub domain: String,
+    pub trials: usize,
+    pub avg_ways: f64,
+    pub sd_ways: f64,
+    pub avg_support: f64,
+    pub sd_support: f64,
+    pub avg_query: f64,
+    pub sd_query: f64,
+    pub avg_shots: f64,
+    pub sd_shots: f64,
+}
+
+pub fn mean_sd(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// Sample `trials` episodes and report their summary statistics.
+pub fn domain_stats(
+    domain: &dyn Domain,
+    shapes: &EpisodeShapes,
+    trials: usize,
+    seed: u64,
+) -> DomainStats {
+    let sampler = Sampler::new(domain, shapes);
+    let mut rng = Rng::new(seed);
+    let mut ways = Vec::new();
+    let mut sup = Vec::new();
+    let mut qry = Vec::new();
+    let mut shots = Vec::new();
+    for t in 0..trials {
+        let mut erng = rng.fork(t as u64);
+        let ep = sampler.sample(&mut erng);
+        ways.push(ep.ways as f64);
+        sup.push(ep.support.len() as f64);
+        qry.push(ep.query.len() as f64);
+        shots.extend(ep.shots.iter().map(|&s| s as f64));
+    }
+    let (avg_ways, sd_ways) = mean_sd(&ways);
+    let (avg_support, sd_support) = mean_sd(&sup);
+    let (avg_query, sd_query) = mean_sd(&qry);
+    let (avg_shots, sd_shots) = mean_sd(&shots);
+    DomainStats {
+        domain: domain.name().to_string(),
+        trials,
+        avg_ways,
+        sd_ways,
+        avg_support,
+        sd_support,
+        avg_query,
+        sd_query,
+        avg_shots,
+        sd_shots,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::domains::all_domains;
+
+    fn shapes() -> EpisodeShapes {
+        EpisodeShapes {
+            img: 16,
+            channels: 3,
+            max_ways: 10,
+            max_support: 40,
+            max_query: 40,
+            eval_batch: 80,
+            feat_dim: 8,
+            cosine_tau: 10.0,
+        }
+    }
+
+    #[test]
+    fn mean_sd_basics() {
+        let (m, s) = mean_sd(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-9);
+        assert!((s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_within_sampler_bounds() {
+        let s = shapes();
+        for d in all_domains().iter().take(3) {
+            let st = domain_stats(d.as_ref(), &s, 50, 7);
+            assert!(st.avg_ways >= 3.0 && st.avg_ways <= 10.0, "{st:?}");
+            assert!(st.avg_support <= 40.0);
+            assert!(st.avg_shots >= 1.0);
+            assert!(st.sd_shots >= 0.0);
+        }
+    }
+}

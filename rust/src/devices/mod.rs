@@ -1,0 +1,179 @@
+//! Edge-device latency & energy simulator (paper Figure 5, Tables 9-10).
+//!
+//! The paper measures wall-clock and energy on a Raspberry Pi Zero 2 and
+//! a Jetson Nano; this testbed has neither, so we model them (DESIGN.md
+//! "Substitutions"): effective training MAC throughput, per-layer
+//! dispatch overhead (what makes the Jetson method-ratios larger than the
+//! Pi's), swap pressure when the training footprint exceeds RAM (what
+//! makes FullTrain take 2 hours on a 512 MB Pi), model-load time, and
+//! wall power. See profile.rs for the calibration anchors.
+
+mod profile;
+
+pub use profile::{jetson_nano, pi_zero_2, DeviceProfile};
+
+use crate::accounting::{backward_macs, backward_memory, forward_macs, Optimizer, UpdatePlan};
+use crate::model::ArchFlavor;
+
+/// Cost of one on-device training run (paper protocol: `samples` support
+/// images, `iters` epochs over them).
+#[derive(Debug, Clone)]
+pub struct TrainCost {
+    pub device: &'static str,
+    /// Dynamic layer/channel selection (Fisher pass) — TinyTrain only.
+    pub fisher_s: f64,
+    /// Model load + iterative fine-tuning.
+    pub run_s: f64,
+    pub energy_j: f64,
+}
+
+impl TrainCost {
+    pub fn total_s(&self) -> f64 {
+        self.fisher_s + self.run_s
+    }
+}
+
+/// Number of layers the backward pass traverses under `plan`.
+fn traversed_layers(arch: &ArchFlavor, plan: &UpdatePlan) -> usize {
+    let earliest = plan.earliest_updated().unwrap_or(arch.layers.len());
+    let adapter_earliest = plan
+        .adapters
+        .iter()
+        .enumerate()
+        .filter(|(_, &on)| on)
+        .map(|(b, _)| arch.blocks[b].conv_ids[0])
+        .min()
+        .unwrap_or(arch.layers.len());
+    arch.layers.len() - earliest.min(adapter_earliest)
+}
+
+/// Simulate one full on-device adaptation (Figure 5 / Tables 9-10).
+pub fn train_cost(
+    device: &DeviceProfile,
+    arch: &ArchFlavor,
+    plan: &UpdatePlan,
+    samples: usize,
+    iters: usize,
+    with_fisher_selection: bool,
+) -> TrainCost {
+    let fwd = forward_macs(arch);
+    let bwd = backward_macs(arch, plan).total();
+    let n_layers = arch.layers.len() as f64;
+    let traversed = traversed_layers(arch, plan) as f64;
+
+    // Swap pressure: batch methods whose footprint exceeds RAM thrash.
+    let mem = backward_memory(arch, plan, Optimizer::Adam).total();
+    let penalty = device.swap_penalty(mem);
+    let eff = device.macs_per_s / penalty;
+
+    // Per-image fwd + bwd work plus per-pass dispatch overheads.
+    let per_image_s =
+        (fwd + bwd) / eff + device.layer_overhead_s * (n_layers + 2.0 * traversed);
+    let train_s = per_image_s * samples as f64 * iters as f64;
+
+    // Fisher pass: one fwd + full bwd (~2x fwd) over the support samples
+    // plus scoring (no swap: batch-1 sparse footprint).
+    let fisher_s = if with_fisher_selection {
+        let per = 3.0 * fwd / device.macs_per_s + device.layer_overhead_s * 3.0 * n_layers;
+        per * samples as f64 + 0.5
+    } else {
+        0.0
+    };
+
+    let run_s = device.load_s + train_s;
+    TrainCost {
+        device: device.name,
+        fisher_s,
+        run_s,
+        energy_j: (run_s + fisher_s) * device.power_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accounting::UpdatePlan;
+    use crate::model::{ArchFlavor, LayerInfo};
+
+    fn arch(n: usize, macs: usize) -> ArchFlavor {
+        let layers: Vec<LayerInfo> = (0..n)
+            .map(|i| LayerInfo {
+                name: format!("l{i}"),
+                kind: "pw".into(),
+                cin: 8,
+                cout: 8,
+                k: 1,
+                stride: 1,
+                act: true,
+                in_hw: 8,
+                out_hw: 8,
+                block: -1,
+                weight_params: 64,
+                params: 80,
+                macs,
+                act_elems: 512,
+            })
+            .collect();
+        ArchFlavor {
+            img: 32,
+            feat_dim: 8,
+            layers,
+            blocks: vec![],
+            total_macs: n * macs,
+            total_params: n * 80,
+        }
+    }
+
+    #[test]
+    fn full_train_slower_than_last_layer() {
+        let a = arch(10, 100_000);
+        let d = pi_zero_2();
+        let full = train_cost(&d, &a, &UpdatePlan::full(10, 0), 25, 40, false);
+        let last = train_cost(&d, &a, &UpdatePlan::last_layer(10, 0), 25, 40, false);
+        assert!(full.run_s > last.run_s);
+        assert!(full.energy_j > last.energy_j);
+    }
+
+    #[test]
+    fn swap_penalty_kicks_in_over_ram() {
+        let d = pi_zero_2();
+        assert_eq!(d.swap_penalty(100.0e6), 1.0);
+        assert!(d.swap_penalty(900.0e6) > 4.0);
+    }
+
+    #[test]
+    fn fisher_overhead_is_small_fraction() {
+        let a = arch(40, 500_000);
+        let d = pi_zero_2();
+        let mut plan = UpdatePlan::frozen(40, 0);
+        for l in 25..40 {
+            plan.layer_ratio[l] = 0.5;
+        }
+        let c = train_cost(&d, &a, &plan, 25, 40, true);
+        let frac = c.fisher_s / c.total_s();
+        assert!(frac < 0.15, "fisher fraction {frac}");
+    }
+
+    #[test]
+    fn energy_scales_with_power() {
+        let a = arch(10, 100_000);
+        let plan = UpdatePlan::last_layer(10, 0);
+        let pi = train_cost(&pi_zero_2(), &a, &plan, 25, 40, false);
+        assert!((pi.energy_j - pi.total_s() * 2.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jetson_dispatch_overhead_dominates_tiny_models() {
+        // More traversed layers should cost relatively more on Jetson.
+        let a = arch(40, 100_000);
+        let mut deep = UpdatePlan::frozen(40, 0);
+        deep.layer_ratio[5] = 0.5;
+        let mut shallow = UpdatePlan::frozen(40, 0);
+        shallow.layer_ratio[38] = 0.5;
+        let pi_ratio = train_cost(&pi_zero_2(), &a, &deep, 25, 40, false).run_s
+            / train_cost(&pi_zero_2(), &a, &shallow, 25, 40, false).run_s;
+        let jn_ratio = train_cost(&jetson_nano(), &a, &deep, 25, 40, false).run_s
+            / train_cost(&jetson_nano(), &a, &shallow, 25, 40, false).run_s;
+        assert!(jn_ratio > pi_ratio, "jetson {jn_ratio} vs pi {pi_ratio}");
+    }
+}

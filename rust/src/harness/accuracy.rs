@@ -1,0 +1,220 @@
+//! Accuracy experiments over the live pipeline: Tables 1/3/6, Figure 1,
+//! Figure 6a (meta-training ablation).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::accounting::{backward_macs, backward_memory, Optimizer};
+use crate::coordinator::{
+    run_episode, Budgets, ChannelScheme, Criterion, Method, ModelEngine, TrainConfig,
+};
+use crate::data::{domain_by_name, Sampler};
+use crate::metrics::{aggregate, fmt_pct, Table};
+use crate::model::ParamStore;
+use crate::util::rng::Rng;
+
+/// Mean accuracy of `method` on `domain` over ctx.episodes episodes.
+pub fn eval_cell(
+    ctx: &Ctx,
+    engine: &ModelEngine,
+    params: &ParamStore,
+    method: &Method,
+    domain: &str,
+) -> Result<crate::metrics::CellStats> {
+    let d = domain_by_name(domain).ok_or_else(|| anyhow::anyhow!("unknown domain {domain}"))?;
+    let sampler = Sampler::new(d.as_ref(), &engine.meta.shapes);
+    let mut rng = Rng::new(ctx.seed ^ fxhash(domain));
+    let mut results = Vec::new();
+    for e in 0..ctx.episodes {
+        let mut erng = rng.fork(e as u64);
+        let ep = sampler.sample(&mut erng);
+        let tc = TrainConfig { steps: ctx.steps, lr: ctx.lr, seed: erng.next_u64() };
+        results.push(run_episode(engine, params, method, &ep, tc)?);
+    }
+    Ok(aggregate(&results))
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// Table 1 (main accuracy grid) / Table 6 (extended baselines).
+pub fn table1(ctx: &Ctx, extended: bool) -> Result<()> {
+    for arch in &ctx.archs {
+        let engine = ctx.engine(arch)?;
+        let params = ctx.params(&engine);
+        let methods = if extended {
+            ctx.extended_methods(&engine)
+        } else {
+            ctx.main_methods(&engine)
+        };
+        let mut cols: Vec<&str> = ctx.domains.iter().map(|s| s.as_str()).collect();
+        cols.push("Avg.");
+        let id = if extended { "table6" } else { "table1" };
+        let mut table = Table::new(
+            &format!(
+                "{} — Top-1 accuracy, {} ({} episodes x {} steps)",
+                if extended { "Table 6" } else { "Table 1" },
+                arch,
+                ctx.episodes,
+                ctx.steps
+            ),
+            &cols,
+        );
+        for method in &methods {
+            let mut cells = Vec::new();
+            let mut sum = 0.0;
+            for domain in &ctx.domains {
+                let stats = eval_cell(ctx, &engine, &params, method, domain)?;
+                ctx.log(&format!(
+                    "[{arch}] {:<18} {:<9} acc={:.3} ±{:.3} (sel {:.1}s train {:.1}s)",
+                    method.label(),
+                    domain,
+                    stats.mean_acc,
+                    stats.ci95,
+                    stats.mean_selection_s,
+                    stats.mean_train_s
+                ));
+                sum += stats.mean_acc;
+                cells.push(fmt_pct(stats.mean_acc));
+            }
+            cells.push(fmt_pct(sum / ctx.domains.len() as f64));
+            table.row(&method.label(), cells);
+        }
+        ctx.emit(&format!("{id}_{arch}"), &table)?;
+    }
+    Ok(())
+}
+
+/// Table 3: multi-objective criterion ablation + layer-selection scheme.
+pub fn table3(ctx: &Ctx) -> Result<()> {
+    let criteria = [
+        Criterion::L2Norm,
+        Criterion::FisherOnly,
+        Criterion::FisherPerMemory,
+        Criterion::FisherPerCompute,
+        Criterion::MultiObjective,
+    ];
+    let mut cols: Vec<&str> = ctx.archs.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        &format!(
+            "Table 3 — criterion ablation, avg accuracy over {} domains",
+            ctx.domains.len()
+        ),
+        &cols.drain(..).collect::<Vec<_>>(),
+    );
+    let mut rows: Vec<(String, Vec<String>)> = criteria
+        .iter()
+        .map(|c| (c.name().to_string(), Vec::new()))
+        .collect();
+    for arch in &ctx.archs {
+        let engine = ctx.engine(arch)?;
+        let params = ctx.params(&engine);
+        for (ci, crit) in criteria.iter().enumerate() {
+            let method = Method::TinyTrain {
+                criterion: *crit,
+                scheme: ChannelScheme::Fisher,
+                budgets: Budgets::default(),
+                ratio: 0.5,
+            };
+            let mut sum = 0.0;
+            for domain in &ctx.domains {
+                let stats = eval_cell(ctx, &engine, &params, &method, domain)?;
+                sum += stats.mean_acc;
+            }
+            let avg = sum / ctx.domains.len() as f64;
+            ctx.log(&format!("[{arch}] criterion {:<18} avg={:.3}", crit.name(), avg));
+            rows[ci].1.push(fmt_pct(avg));
+        }
+    }
+    for (label, cells) in rows {
+        table.row(&label, cells);
+    }
+    ctx.emit("table3", &table)?;
+    Ok(())
+}
+
+/// Figure 1: accuracy vs backward-pass MACs with memory-footprint radii
+/// (joins measured accuracy with the analytic cost of each method's plan;
+/// paper-scale costs, proxyless arch in the paper — here per ctx.archs).
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    for arch in &ctx.archs {
+        let engine = ctx.engine(arch)?;
+        let params = ctx.params(&engine);
+        let mut table = Table::new(
+            &format!("Figure 1 — accuracy vs backward cost, {arch}"),
+            &["avg_acc_pct", "bwd_macs_M(paper)", "bwd_mem_MB(paper)"],
+        );
+        for method in ctx.main_methods(&engine) {
+            let mut sum = 0.0;
+            let mut plan = None;
+            for domain in &ctx.domains {
+                // one representative episode per domain for the plan
+                let stats = eval_cell(ctx, &engine, &params, &method, domain)?;
+                sum += stats.mean_acc;
+                if plan.is_none() {
+                    let d = domain_by_name(domain).unwrap();
+                    let mut rng = Rng::new(1);
+                    let ep = Sampler::new(d.as_ref(), &engine.meta.shapes).sample(&mut rng);
+                    let tc = TrainConfig { steps: 1, lr: ctx.lr, seed: 3 };
+                    plan = Some(run_episode(&engine, &params, &method, &ep, tc)?.plan);
+                }
+            }
+            let avg = sum / ctx.domains.len() as f64;
+            // Price the plan at paper scale: map the scaled plan's ratios
+            // onto the paper-flavour layer table (same topology).
+            let plan = plan.unwrap();
+            let macs = backward_macs(&engine.meta.paper, &plan).total();
+            let mem = backward_memory(&engine.meta.paper, &plan, Optimizer::Adam).total();
+            table.row(
+                &method.label(),
+                vec![
+                    fmt_pct(avg),
+                    format!("{:.2}", macs / 1e6),
+                    format!("{:.2}", mem / 1e6),
+                ],
+            );
+        }
+        ctx.emit(&format!("fig1_{arch}"), &table)?;
+    }
+    Ok(())
+}
+
+/// Figure 6a: accuracy with vs without meta-training, averaged over
+/// domains, per method.
+pub fn fig6a(ctx: &Ctx) -> Result<()> {
+    for arch in &ctx.archs {
+        let engine = ctx.engine(arch)?;
+        let meta_params = ctx.params(&engine); // meta-trained (if weights exist)
+        let raw_params = ParamStore::init(&engine.meta, 42); // no meta-training
+        let mut table = Table::new(
+            &format!("Figure 6a — effect of meta-training, {arch} (avg over domains)"),
+            &["with_meta", "without_meta", "gain_pp"],
+        );
+        for method in ctx.main_methods(&engine) {
+            let mut with = 0.0;
+            let mut without = 0.0;
+            for domain in &ctx.domains {
+                with += eval_cell(ctx, &engine, &meta_params, &method, domain)?.mean_acc;
+                without += eval_cell(ctx, &engine, &raw_params, &method, domain)?.mean_acc;
+            }
+            let n = ctx.domains.len() as f64;
+            table.row(
+                &method.label(),
+                vec![
+                    fmt_pct(with / n),
+                    fmt_pct(without / n),
+                    format!("{:+.1}", (with - without) / n * 100.0),
+                ],
+            );
+            ctx.log(&format!(
+                "[{arch}] fig6a {:<18} with={:.3} without={:.3}",
+                method.label(),
+                with / n,
+                without / n
+            ));
+        }
+        ctx.emit(&format!("fig6a_{arch}"), &table)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,219 @@
+//! Analytic tables evaluated on the paper-scale layer tables:
+//! Table 2 (backward memory & compute), Table 4 (arch statistics),
+//! Table 7 (optimiser breakdown), Table 8 (peak memory), Table 11
+//! (saved activations for the last k blocks).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::accounting::{
+    backward_macs, backward_memory, saved_acts_last_k_blocks, Optimizer, UpdatePlan,
+};
+use crate::coordinator::ModelEngine;
+use crate::metrics::{fmt_kb, fmt_m, fmt_mb, fmt_ratio, Table};
+
+/// The analytic update plans of the six methods, at paper scale.
+/// TinyTrain's plan: its budgeted selection typically lands on the last
+/// third of layers at ~half channels (we derive it from the same
+/// budget-constrained greedy the runtime uses, with uniform scores as a
+/// stand-in — the *costs* only depend on which layers/ratios are picked).
+pub fn paper_plans(engine: &ModelEngine) -> Vec<(String, UpdatePlan)> {
+    let arch = &engine.meta.paper;
+    let (n, nb) = (arch.layers.len(), arch.blocks.len());
+
+    // Budgets are relative to the arch's inference activation peak: the
+    // paper's MCUNet peak is 640 KB and its Table-2/7 budgets sit ~0.26 MB
+    // (TinyTrain) and ~0.8 MB (SparseUpdate) of parameter+optimiser state
+    // above that — we preserve those offsets on our paper-scale flavours.
+    let peak = crate::accounting::activation_peak_bytes(arch);
+    let tiny_budget = peak + 0.27e6;
+    let sparse_budget = peak + 0.80e6;
+
+    // TinyTrain: greedy under the 1 MB / 15% budgets, preferring cheap
+    // late layers (multi-objective shape), ratio 0.5.
+    let mut tiny = UpdatePlan::frozen(n, nb);
+    {
+        let full_bwd = {
+            let mut p = UpdatePlan::full(n, nb);
+            p.batch = 1;
+            backward_macs(arch, &p).total()
+        };
+        // score ~ 1/(params*macs) — the resource side of Eq. 3.
+        let max_p = arch.layers.iter().map(|l| l.params).max().unwrap() as f64;
+        let max_m = arch.layers.iter().map(|l| l.macs).max().unwrap() as f64;
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            let sa = 1.0 / ((arch.layers[a].params as f64 / max_p) * (arch.layers[a].macs as f64 / max_m));
+            let sb = 1.0 / ((arch.layers[b].params as f64 / max_p) * (arch.layers[b].macs as f64 / max_m));
+            sb.partial_cmp(&sa).unwrap()
+        });
+        for &l in &order {
+            tiny.layer_ratio[l] = 0.5;
+            let mem = backward_memory(arch, &tiny, Optimizer::Adam).total();
+            let macs = backward_macs(arch, &tiny).total();
+            if mem > tiny_budget || macs > full_bwd * 0.15 {
+                tiny.layer_ratio[l] = 0.0;
+            }
+        }
+    }
+
+    // SparseUpdate: static offline-searched policy. MCUNetV3's released
+    // policies update a contiguous band of deeper layers at low channel
+    // ratios — the dX chain reaches well into the network, which is why
+    // the paper's Table 2 shows SparseUpdate at 1.5-1.8x TinyTrain's
+    // backward compute despite comparable memory. We grow the band
+    // downward (ratio 1/8) until memory or that compute relation binds.
+    let mut sparse = UpdatePlan::frozen(n, nb);
+    {
+        let tiny_macs = backward_macs(arch, &tiny).total();
+        for l in (0..n).rev() {
+            sparse.layer_ratio[l] = 0.125;
+            if backward_memory(arch, &sparse, Optimizer::Adam).total() > sparse_budget {
+                // too fat for the remaining budget: the searched policies
+                // simply skip such layers and keep reaching deeper
+                sparse.layer_ratio[l] = 0.0;
+                continue;
+            }
+            if backward_macs(arch, &sparse).total() > 1.8 * tiny_macs {
+                break;
+            }
+        }
+    }
+
+    vec![
+        ("FullTrain".into(), UpdatePlan::full(n, nb)),
+        ("LastLayer".into(), UpdatePlan::last_layer(n, nb)),
+        ("TinyTL".into(), UpdatePlan::tinytl(n, nb)),
+        ("SparseUpdate".into(), sparse),
+        ("TinyTrain (Ours)".into(), tiny),
+    ]
+}
+
+/// Table 2: backward-pass memory and compute per method (paper scale).
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(
+        "Table 2 — backward-pass memory & compute (paper-scale archs, analytic)",
+        &["Memory", "Ratio", "Compute", "Ratio"],
+    );
+    for arch_name in &ctx.archs {
+        let engine = ctx.engine(arch_name)?;
+        let arch = &engine.meta.paper;
+        let plans = paper_plans(&engine);
+        let tiny_mem = backward_memory(arch, &plans.last().unwrap().1, Optimizer::Adam).total();
+        let tiny_macs = backward_macs(arch, &plans.last().unwrap().1).total();
+        for (label, plan) in &plans {
+            let mem = backward_memory(arch, plan, Optimizer::Adam).total();
+            let macs = backward_macs(arch, plan).total();
+            table.row(
+                &format!("{arch_name} {label}"),
+                vec![
+                    fmt_mb(mem),
+                    fmt_ratio(mem / tiny_mem),
+                    fmt_m(macs),
+                    fmt_ratio(macs / tiny_macs),
+                ],
+            );
+        }
+    }
+    ctx.emit("table2", &table)?;
+    Ok(())
+}
+
+/// Table 4: architecture statistics (paper flavour).
+pub fn table4(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(
+        "Table 4 — backbone statistics (paper-scale flavours)",
+        &["Param", "MAC", "# Layers", "# Blocks"],
+    );
+    for arch_name in &ctx.archs {
+        let engine = ctx.engine(arch_name)?;
+        let a = &engine.meta.paper;
+        table.row(
+            arch_name,
+            vec![
+                format!("{:.2}M", a.total_params as f64 / 1e6),
+                format!("{:.1}M", a.total_macs as f64 / 1e6),
+                a.layers.len().to_string(),
+                a.blocks.len().to_string(),
+            ],
+        );
+    }
+    ctx.emit("table4", &table)?;
+    Ok(())
+}
+
+/// Table 7: memory breakdown by optimiser (MCUNet in the paper; here for
+/// every requested arch).
+pub fn table7(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(
+        "Table 7 — memory breakdown by optimiser (paper scale)",
+        &["Updated Weights", "Optimizer", "Activation", "Total(ADAM)", "Total(SGD)"],
+    );
+    for arch_name in &ctx.archs {
+        let engine = ctx.engine(arch_name)?;
+        let arch = &engine.meta.paper;
+        for (label, plan) in paper_plans(&engine) {
+            if !["LastLayer", "SparseUpdate", "TinyTrain (Ours)"].contains(&label.as_str()) {
+                continue;
+            }
+            let adam = backward_memory(arch, &plan, Optimizer::Adam);
+            let sgd = backward_memory(arch, &plan, Optimizer::Sgd);
+            table.row(
+                &format!("{arch_name} {label}"),
+                vec![
+                    fmt_mb(adam.updated_weights),
+                    fmt_mb(adam.optimizer),
+                    fmt_mb(adam.activations),
+                    fmt_mb(adam.total()),
+                    fmt_mb(sgd.total()),
+                ],
+            );
+        }
+    }
+    ctx.emit("table7", &table)?;
+    Ok(())
+}
+
+/// Table 8: peak memory incl. all model parameters.
+pub fn table8(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(
+        "Table 8 — peak memory incl. model weights (paper scale)",
+        &["Peak Memory", "Ratio"],
+    );
+    for arch_name in &ctx.archs {
+        let engine = ctx.engine(arch_name)?;
+        let arch = &engine.meta.paper;
+        let plans = paper_plans(&engine);
+        let tiny = backward_memory(arch, &plans.last().unwrap().1, Optimizer::Adam).peak_total();
+        for (label, plan) in &plans {
+            let peak = backward_memory(arch, plan, Optimizer::Adam).peak_total();
+            table.row(
+                &format!("{arch_name} {label}"),
+                vec![fmt_mb(peak), fmt_ratio(peak / tiny)],
+            );
+        }
+    }
+    ctx.emit("table8", &table)?;
+    Ok(())
+}
+
+/// Table 11: saved activation size to backprop through the last k blocks.
+pub fn table11(ctx: &Ctx) -> Result<()> {
+    let mut cols: Vec<String> = ctx.archs.clone();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Table 11 — saved activations for the last k blocks (paper scale, KB)",
+        &col_refs,
+    );
+    for k in (1..=6).rev() {
+        let mut cells = Vec::new();
+        for arch_name in &ctx.archs {
+            let engine = ctx.engine(arch_name)?;
+            cells.push(fmt_kb(saved_acts_last_k_blocks(&engine.meta.paper, k)));
+        }
+        table.row(&format!("last {k} blocks"), cells);
+    }
+    cols.clear();
+    ctx.emit("table11", &table)?;
+    Ok(())
+}

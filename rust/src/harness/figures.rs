@@ -1,0 +1,125 @@
+//! Per-layer analysis figures over the live pipeline:
+//! Figure 3 (+7/8): per-layer accuracy gain / per-param / per-MAC,
+//! Figure 4 (+9/10): dynamic vs static channel selection per ratio,
+//! Figure 6b (+14-16): channel-selection ablation across budgets.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::analysis::{channel_scheme_comparison, single_layer_contribution};
+use crate::coordinator::TrainConfig;
+use crate::data::{domain_by_name, Sampler};
+use crate::metrics::Table;
+use crate::util::rng::Rng;
+
+/// Figure 3: memory- and compute-aware per-layer contribution analysis.
+/// Paper setting: MCUNet on Traffic Sign, channel ratios {1/8,1/4,1/2,1}.
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let ratios = [0.125, 0.25, 0.5, 1.0];
+    for arch in &ctx.archs {
+        let engine = ctx.engine(arch)?;
+        let params = ctx.params(&engine);
+        let domain_name = ctx.domains.first().map(|s| s.as_str()).unwrap_or("traffic");
+        let d = domain_by_name(domain_name).unwrap();
+        let mut rng = Rng::new(ctx.seed);
+        let ep = Sampler::new(d.as_ref(), &engine.meta.shapes).sample(&mut rng);
+
+        let mut table = Table::new(
+            &format!("Figure 3 — per-layer contribution, {arch} on {domain_name}"),
+            &[
+                "r=1/8 gain", "r=1/4 gain", "r=1/2 gain", "r=1 gain",
+                "gain/kparam(r=1)", "gain/MMAC(r=1)",
+            ],
+        );
+        let n_layers = engine.meta.scaled.layers.len();
+        // Sub-sample layers in smoke tier to bound runtime.
+        let stride = if ctx.episodes <= 2 { 4 } else { 1 };
+        for l in (0..n_layers).step_by(stride) {
+            let mut cells = Vec::new();
+            let mut last = None;
+            for r in ratios {
+                let tc = TrainConfig { steps: ctx.steps.min(6), lr: ctx.lr, seed: ctx.seed };
+                let c = single_layer_contribution(&engine, &params, &ep, l, r, tc)?;
+                cells.push(format!("{:+.1}", c.acc_gain * 100.0));
+                last = Some(c);
+            }
+            let c = last.unwrap();
+            cells.push(format!("{:+.2}", c.gain_per_kparam * 100.0));
+            cells.push(format!("{:+.2}", c.gain_per_mmac * 100.0));
+            table.row(&engine.meta.scaled.layers[l].name, cells);
+            ctx.log(&format!("[{arch}] fig3 layer {l} done"));
+        }
+        ctx.emit(&format!("fig3_{arch}"), &table)?;
+    }
+    Ok(())
+}
+
+/// Figure 4: dynamic vs static channel selection at several ratios.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let ratios = [0.125, 0.25, 0.5];
+    for arch in &ctx.archs {
+        let engine = ctx.engine(arch)?;
+        let params = ctx.params(&engine);
+        let domain_name = ctx.domains.first().map(|s| s.as_str()).unwrap_or("traffic");
+        let d = domain_by_name(domain_name).unwrap();
+
+        let mut table = Table::new(
+            &format!("Figure 4 — channel-selection schemes, {arch} on {domain_name}"),
+            &["Dynamic (Fisher)", "Static (L2-Norm)", "Static (Random)"],
+        );
+        for r in ratios {
+            let mut sums = vec![0.0f64; 3];
+            for e in 0..ctx.episodes {
+                let mut rng = Rng::new(ctx.seed ^ (e as u64) << 8);
+                let ep = Sampler::new(d.as_ref(), &engine.meta.shapes).sample(&mut rng);
+                let tc = TrainConfig { steps: ctx.steps, lr: ctx.lr, seed: rng.next_u64() };
+                let rows = channel_scheme_comparison(&engine, &params, &ep, r, tc)?;
+                for (i, (_, acc)) in rows.iter().enumerate() {
+                    sums[i] += acc;
+                }
+            }
+            let n = ctx.episodes as f64;
+            table.row(
+                &format!("ratio {r}"),
+                sums.iter().map(|s| crate::metrics::fmt_pct(s / n)).collect(),
+            );
+            ctx.log(&format!("[{arch}] fig4 ratio {r} done"));
+        }
+        ctx.emit(&format!("fig4_{arch}"), &table)?;
+    }
+    Ok(())
+}
+
+/// Figure 6b: dynamic channel selection vs static, averaged over domains.
+pub fn fig6b(ctx: &Ctx) -> Result<()> {
+    for arch in &ctx.archs {
+        let engine = ctx.engine(arch)?;
+        let params = ctx.params(&engine);
+        let mut table = Table::new(
+            &format!("Figure 6b — channel-selection ablation, {arch} (avg over domains)"),
+            &["Dynamic (Fisher)", "Static (L2-Norm)", "Static (Random)"],
+        );
+        let mut sums = vec![0.0f64; 3];
+        let mut count = 0.0;
+        for domain in &ctx.domains {
+            let d = domain_by_name(domain).unwrap();
+            for e in 0..ctx.episodes {
+                let mut rng = Rng::new(ctx.seed ^ (e as u64) << 16);
+                let ep = Sampler::new(d.as_ref(), &engine.meta.shapes).sample(&mut rng);
+                let tc = TrainConfig { steps: ctx.steps, lr: ctx.lr, seed: rng.next_u64() };
+                let rows = channel_scheme_comparison(&engine, &params, &ep, 0.5, tc)?;
+                for (i, (_, acc)) in rows.iter().enumerate() {
+                    sums[i] += acc;
+                }
+                count += 1.0;
+            }
+            ctx.log(&format!("[{arch}] fig6b {domain} done"));
+        }
+        table.row(
+            "avg accuracy",
+            sums.iter().map(|s| crate::metrics::fmt_pct(s / count)).collect(),
+        );
+        ctx.emit(&format!("fig6b_{arch}"), &table)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Device-simulated latency & energy artefacts: Figure 5, Tables 9-10.
+
+use anyhow::Result;
+
+use super::analytic::paper_plans;
+use super::Ctx;
+use crate::devices::{jetson_nano, pi_zero_2, train_cost, DeviceProfile};
+use crate::metrics::{fmt_ratio, Table};
+
+/// Paper protocol: 25 samples, 40 iterations.
+const SAMPLES: usize = 25;
+const ITERS: usize = 40;
+
+fn device(name: &str) -> DeviceProfile {
+    match name {
+        "jetson-nano" => jetson_nano(),
+        _ => pi_zero_2(),
+    }
+}
+
+/// Tables 9-10: end-to-end latency breakdown, SparseUpdate vs TinyTrain.
+pub fn table9_10(ctx: &Ctx, dev_name: &str) -> Result<()> {
+    let dev = device(dev_name);
+    let id = if dev_name == "jetson-nano" { "table10" } else { "table9" };
+    let mut table = Table::new(
+        &format!(
+            "{} — end-to-end latency breakdown on {} (simulated)",
+            if dev_name == "jetson-nano" { "Table 10" } else { "Table 9" },
+            dev.name
+        ),
+        &["Fisher Calc (s)", "Run Time (s)", "Total (s)", "Ratio"],
+    );
+    for arch_name in &ctx.archs {
+        let engine = ctx.engine(arch_name)?;
+        let arch = &engine.meta.paper;
+        let plans = paper_plans(&engine);
+        let sparse = plans.iter().find(|(l, _)| l == "SparseUpdate").unwrap();
+        let tiny = plans.iter().find(|(l, _)| l == "TinyTrain (Ours)").unwrap();
+        let c_sparse = train_cost(&dev, arch, &sparse.1, SAMPLES, ITERS, false);
+        let c_tiny = train_cost(&dev, arch, &tiny.1, SAMPLES, ITERS, true);
+        let ratio = c_sparse.total_s() / c_tiny.total_s();
+        table.row(
+            &format!("{arch_name} SparseUpdate"),
+            vec![
+                "0.0".into(),
+                format!("{:.0}", c_sparse.run_s),
+                format!("{:.0}", c_sparse.total_s()),
+                fmt_ratio(ratio),
+            ],
+        );
+        table.row(
+            &format!("{arch_name} TinyTrain (Ours)"),
+            vec![
+                format!("{:.1}", c_tiny.fisher_s),
+                format!("{:.0}", c_tiny.run_s),
+                format!("{:.0}", c_tiny.total_s()),
+                "1x".into(),
+            ],
+        );
+        ctx.log(&format!(
+            "[{arch_name}@{}] fisher fraction of total: {:.1}%",
+            dev.name,
+            100.0 * c_tiny.fisher_s / c_tiny.total_s()
+        ));
+    }
+    ctx.emit(id, &table)?;
+    Ok(())
+}
+
+/// Figure 5: end-to-end latency + energy bars for every method.
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    let dev = pi_zero_2();
+    let mut table = Table::new(
+        "Figure 5 — end-to-end latency and energy on Pi Zero 2 (simulated)",
+        &["Latency (s)", "Latency (min)", "Energy (kJ)"],
+    );
+    for arch_name in &ctx.archs {
+        let engine = ctx.engine(arch_name)?;
+        let arch = &engine.meta.paper;
+        for (label, plan) in paper_plans(&engine) {
+            let with_fisher = label.starts_with("TinyTrain");
+            let c = train_cost(&dev, arch, &plan, SAMPLES, ITERS, with_fisher);
+            table.row(
+                &format!("{arch_name} {label}"),
+                vec![
+                    format!("{:.0}", c.total_s()),
+                    format!("{:.1}", c.total_s() / 60.0),
+                    format!("{:.2}", c.energy_j / 1e3),
+                ],
+            );
+        }
+    }
+    ctx.emit("fig5", &table)?;
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (see DESIGN.md "Experiment index" for the mapping).
+//!
+//! Entry point: `tinytrain exp <id> [--tier smoke|full] [--arch a,b]
+//! [--episodes N] [--steps N] [--out results/]`. Accuracy experiments run
+//! the live PJRT pipeline; analytic tables evaluate the paper-scale layer
+//! tables; latency tables run the device simulator.
+
+pub mod accuracy;
+pub mod analytic;
+pub mod figures;
+pub mod latency;
+pub mod sampler_stats;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{search, Method, ModelEngine, StaticPolicy};
+use crate::model::ParamStore;
+use crate::runtime::{ArtifactStore, Runtime};
+use crate::util::cli::Args;
+
+pub const ALL_ARCHS: [&str; 3] = ["mcunet", "mbv2", "proxyless"];
+
+/// Shared context for one harness invocation.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub store: ArtifactStore,
+    pub archs: Vec<String>,
+    pub domains: Vec<String>,
+    pub episodes: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+    pub quiet: bool,
+}
+
+impl Ctx {
+    pub fn from_args(args: &Args) -> Result<Ctx> {
+        let tier = args.str("tier", "smoke");
+        let (def_archs, def_episodes, def_steps): (Vec<&str>, usize, usize) = match tier.as_str()
+        {
+            "full" => (ALL_ARCHS.to_vec(), 10, 20),
+            "paper" => (ALL_ARCHS.to_vec(), 200, 40),
+            _ => (vec!["mcunet"], 2, 8), // smoke
+        };
+        let store = ArtifactStore::discover(args.opt("artifacts"))?;
+        let out_dir = PathBuf::from(args.str("out", "results"));
+        std::fs::create_dir_all(&out_dir).ok();
+        Ok(Ctx {
+            rt: Runtime::cpu()?,
+            store,
+            archs: args.list("arch", &def_archs),
+            domains: args.list("domains", &crate::data::DOMAIN_NAMES),
+            episodes: args.usize("episodes", def_episodes),
+            steps: args.usize("steps", def_steps),
+            lr: args.f64("lr", 6e-3) as f32,
+            seed: args.u64("seed", 7),
+            out_dir,
+            quiet: args.bool("quiet"),
+        })
+    }
+
+    pub fn log(&self, msg: &str) {
+        if !self.quiet {
+            eprintln!("{msg}");
+        }
+    }
+
+    pub fn engine(&self, arch: &str) -> Result<ModelEngine> {
+        ModelEngine::load(&self.rt, &self.store, arch)
+    }
+
+    /// Meta-trained weights for `arch`: loads artifacts/weights_<arch>.bin
+    /// if present (produced by `tinytrain pretrain` / `make weights`),
+    /// otherwise He-init with a warning (accuracy numbers will be weak).
+    pub fn params(&self, engine: &ModelEngine) -> ParamStore {
+        let path = &engine.weights_path;
+        match ParamStore::load(&engine.meta, path) {
+            Ok(p) => p,
+            Err(_) => {
+                self.log(&format!(
+                    "[warn] no meta-trained weights at {} — run `make weights`; using He-init",
+                    path.display()
+                ));
+                ParamStore::init(&engine.meta, 42)
+            }
+        }
+    }
+
+    /// The SparseUpdate baseline's static policy: the saved evolutionary-
+    /// search artifact if present, else the MCUNetV3-like default.
+    pub fn sparse_policy(&self, engine: &ModelEngine) -> StaticPolicy {
+        let path = self.store.dir.join(format!("sparse_policy_{}.json", engine.meta.arch));
+        search::load_policy(&path).unwrap_or_else(|_| search::default_policy(engine, 0.0))
+    }
+
+    /// The standard six-method comparison set (Table 1).
+    pub fn main_methods(&self, engine: &ModelEngine) -> Vec<Method> {
+        vec![
+            Method::None,
+            Method::FullTrain,
+            Method::LastLayer,
+            Method::TinyTl,
+            Method::SparseUpdate(self.sparse_policy(engine)),
+            Method::tinytrain_default(),
+        ]
+    }
+
+    /// Extended set (Table 6: + AdapterDrop variants).
+    pub fn extended_methods(&self, engine: &ModelEngine) -> Vec<Method> {
+        let mut m = self.main_methods(engine);
+        m.insert(4, Method::AdapterDrop(0.75));
+        m.insert(5, Method::AdapterDrop(0.5));
+        m.insert(6, Method::AdapterDrop(0.25));
+        m
+    }
+
+    /// Write an artefact to results/ in markdown + TSV.
+    pub fn emit(&self, name: &str, table: &crate::metrics::Table) -> Result<()> {
+        println!("{}", table.to_markdown());
+        std::fs::write(self.out_dir.join(format!("{name}.md")), table.to_markdown())?;
+        std::fs::write(self.out_dir.join(format!("{name}.tsv")), table.to_tsv())?;
+        Ok(())
+    }
+}
+
+/// Dispatch one experiment id.
+pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
+    let ctx = Ctx::from_args(args)?;
+    match id {
+        "table1" => accuracy::table1(&ctx, false),
+        "table6" => accuracy::table1(&ctx, true),
+        "table2" => analytic::table2(&ctx),
+        "table3" => accuracy::table3(&ctx),
+        "table4" => analytic::table4(&ctx),
+        "table5" => sampler_stats::table5(&ctx),
+        "table7" => analytic::table7(&ctx),
+        "table8" => analytic::table8(&ctx),
+        "table9" => latency::table9_10(&ctx, "pi-zero-2"),
+        "table10" => latency::table9_10(&ctx, "jetson-nano"),
+        "table11" => analytic::table11(&ctx),
+        "fig1" => accuracy::fig1(&ctx),
+        "fig3" => figures::fig3(&ctx),
+        "fig4" => figures::fig4(&ctx),
+        "fig5" => latency::fig5(&ctx),
+        "fig6a" => accuracy::fig6a(&ctx),
+        "fig6b" => figures::fig6b(&ctx),
+        "all-analytic" => {
+            analytic::table2(&ctx)?;
+            analytic::table4(&ctx)?;
+            sampler_stats::table5(&ctx)?;
+            analytic::table7(&ctx)?;
+            analytic::table8(&ctx)?;
+            latency::table9_10(&ctx, "pi-zero-2")?;
+            latency::table9_10(&ctx, "jetson-nano")?;
+            analytic::table11(&ctx)?;
+            latency::fig5(&ctx)
+        }
+        "all" => {
+            for e in [
+                "table1", "table2", "table3", "table4", "table5", "table7", "table8", "table9",
+                "table10", "table11", "fig1", "fig3", "fig4", "fig5", "fig6a", "fig6b",
+            ] {
+                run_experiment(e, args)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown experiment '{other}' (see DESIGN.md experiment index)")),
+    }
+}

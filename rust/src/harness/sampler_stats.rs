@@ -1,0 +1,48 @@
+//! Table 5: summary statistics of the episode sampler per domain.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::data::{domain_by_name, domain_stats};
+use crate::metrics::Table;
+
+pub fn table5(ctx: &Ctx) -> Result<()> {
+    // Shapes come from any arch's meta (they're global constants).
+    let engine = ctx.engine(&ctx.archs[0])?;
+    let shapes = engine.meta.shapes.clone();
+    let trials = ctx.episodes.max(50); // statistics need volume; cheap (no training)
+
+    let col_names: Vec<String> = ctx.domains.clone();
+    let cols: Vec<&str> = col_names.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        &format!("Table 5 — episode sampler statistics ({trials} trials per domain)"),
+        &cols,
+    );
+    let mut rows: Vec<(&str, Vec<String>)> = vec![
+        ("Avg. Num of Ways", vec![]),
+        ("Avg. Num of Samples (Support)", vec![]),
+        ("Avg. Num of Samples (Query)", vec![]),
+        ("Avg. Num of Shots (Support)", vec![]),
+        ("SD of Num of Ways", vec![]),
+        ("SD of Num of Samples (Support)", vec![]),
+        ("SD of Num of Shots (Support)", vec![]),
+        ("Num of Trials", vec![]),
+    ];
+    for name in &ctx.domains {
+        let d = domain_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown domain {name}"))?;
+        let st = domain_stats(d.as_ref(), &shapes, trials, ctx.seed);
+        rows[0].1.push(format!("{:.1}", st.avg_ways));
+        rows[1].1.push(format!("{:.1}", st.avg_support));
+        rows[2].1.push(format!("{:.1}", st.avg_query));
+        rows[3].1.push(format!("{:.1}", st.avg_shots));
+        rows[4].1.push(format!("{:.1}", st.sd_ways));
+        rows[5].1.push(format!("{:.1}", st.sd_support));
+        rows[6].1.push(format!("{:.1}", st.sd_shots));
+        rows[7].1.push(trials.to_string());
+    }
+    for (label, cells) in rows {
+        table.row(label, cells);
+    }
+    ctx.emit("table5", &table)?;
+    Ok(())
+}

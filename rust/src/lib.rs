@@ -1,0 +1,20 @@
+//! TinyTrain (ICML 2024) — resource-aware task-adaptive sparse training at
+//! the data-scarce edge, reproduced as a three-layer rust + JAX + Pallas
+//! stack (see DESIGN.md).
+//!
+//! Layer map:
+//! - L3 (this crate): on-device training coordinator — episodes, Fisher
+//!   aggregation, the multi-objective criterion, dynamic layer/channel
+//!   selection, sparse fine-tuning, baselines, accounting, device sim.
+//! - L2/L1 (python/compile, build-time only): JAX backbones + Pallas
+//!   kernels, AOT-lowered to the HLO artifacts `runtime` executes.
+
+pub mod accounting;
+pub mod coordinator;
+pub mod data;
+pub mod devices;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,212 @@
+//! tinytrain — on-device training coordinator CLI (L3 leader).
+//!
+//! Subcommands:
+//!   pretrain  --arch <a> [--episodes N] [--steps N] [--lr X]   offline meta-training
+//!   search    --arch <a> [--population N] [--generations N]    SparseUpdate ES (offline)
+//!   adapt     --arch <a> --domain <d> [--method M] [--steps N] one on-device adaptation
+//!   exp       <table1|table2|...|fig6b|all|all-analytic> [...] regenerate paper artefacts
+//!   info      [--arch a,b,c]                                   artifact + arch summary
+//!
+//! Run with no args for this help. See DESIGN.md for the experiment index.
+
+use anyhow::{anyhow, Result};
+
+use tinytrain::coordinator::{
+    self, meta_train, search, Method, ModelEngine, PretrainConfig, TrainConfig,
+};
+use tinytrain::data::{domain_by_name, Sampler};
+use tinytrain::harness::{self};
+use tinytrain::model::ParamStore;
+use tinytrain::runtime::{ArtifactStore, Runtime};
+use tinytrain::util::cli::Args;
+use tinytrain::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("pretrain") => pretrain(args),
+        Some("search") => run_search(args),
+        Some("adapt") => adapt(args),
+        Some("exp") => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: tinytrain exp <id> — see DESIGN.md"))?;
+            harness::run_experiment(id, args)
+        }
+        Some("info") => info(args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+tinytrain — TinyTrain (ICML 2024) on-device training coordinator
+
+USAGE:
+  tinytrain pretrain --arch mcunet [--episodes 60] [--steps 4] [--lr 0.003]
+  tinytrain search   --arch mcunet [--population 8] [--generations 4]
+  tinytrain adapt    --arch mcunet --domain traffic [--method tinytrain] [--steps 10]
+  tinytrain exp      <table1|table2|table3|table4|table5|table7|table8|table9|table10|
+                      table11|fig1|fig3|fig4|fig5|fig6a|fig6b|all|all-analytic>
+                     [--tier smoke|full|paper] [--arch a,b] [--episodes N] [--steps N]
+  tinytrain info     [--arch mcunet,mbv2,proxyless]
+
+Methods for `adapt --method`: none, fulltrain, lastlayer, tinytl,
+sparseupdate, tinytrain (default).
+";
+
+fn load_engine(args: &Args) -> Result<(Runtime, ArtifactStore, ModelEngine)> {
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover(args.opt("artifacts"))?;
+    let arch = args.str("arch", "mcunet");
+    let engine = ModelEngine::load(&rt, &store, &arch)?;
+    Ok((rt, store, engine))
+}
+
+/// Offline stage: meta-train on the source domain, save weights.
+fn pretrain(args: &Args) -> Result<()> {
+    let (_rt, _store, engine) = load_engine(args)?;
+    let cfg = PretrainConfig {
+        episodes: args.usize("episodes", 60),
+        steps_per_episode: args.usize("steps", 4),
+        lr: args.f64("lr", 3e-3) as f32,
+        seed: args.u64("seed", 13),
+        log_every: args.usize("log-every", 10),
+    };
+    eprintln!(
+        "meta-training {} on source domain: {} episodes x {} steps",
+        engine.meta.arch, cfg.episodes, cfg.steps_per_episode
+    );
+    let mut params = ParamStore::init(&engine.meta, args.u64("init-seed", 42));
+    let t0 = std::time::Instant::now();
+    meta_train(&engine, &mut params, &cfg, |m| eprintln!("{m}"))?;
+    params.save(&engine.weights_path)?;
+    eprintln!(
+        "saved {} ({} params) in {:.1}s",
+        engine.weights_path.display(),
+        engine.meta.total_theta,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// Offline SparseUpdate evolutionary search; saves the policy artifact.
+fn run_search(args: &Args) -> Result<()> {
+    let (_rt, store, engine) = load_engine(args)?;
+    let params = ParamStore::load_or_init(&engine.meta, &engine.weights_path, 42);
+    let cfg = search::SearchConfig {
+        population: args.usize("population", 8),
+        generations: args.usize("generations", 4),
+        mem_budget: args.f64("mem-budget", 0.0),
+        episodes_per_eval: args.usize("episodes-per-eval", 1),
+        steps: args.usize("steps", 4),
+        seed: args.u64("seed", 77),
+    };
+    eprintln!(
+        "evolutionary search for {}: pop {} x gen {} (offline, server-side in the paper)",
+        engine.meta.arch, cfg.population, cfg.generations
+    );
+    let t0 = std::time::Instant::now();
+    let (policy, fitness) = search::evolutionary_search(&engine, &params, &cfg)?;
+    let path = store.dir.join(format!("sparse_policy_{}.json", engine.meta.arch));
+    search::save_policy(&path, &policy, fitness)?;
+    eprintln!(
+        "best policy ({} layers, fitness {:.3}) saved to {} in {:.0}s",
+        policy.layer_ratios.len(),
+        fitness,
+        path.display(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// One on-device adaptation episode (demo of Algorithm 1).
+fn adapt(args: &Args) -> Result<()> {
+    let (_rt, store, engine) = load_engine(args)?;
+    let params = ParamStore::load_or_init(&engine.meta, &engine.weights_path, 42);
+    let domain_name = args.str("domain", "traffic");
+    let domain =
+        domain_by_name(&domain_name).ok_or_else(|| anyhow!("unknown domain {domain_name}"))?;
+    let method = parse_method(&args.str("method", "tinytrain"), &store, &engine)?;
+    let mut rng = Rng::new(args.u64("seed", 1));
+    let ep = Sampler::new(domain.as_ref(), &engine.meta.shapes).sample(&mut rng);
+    eprintln!(
+        "adapting {} to {}: {} ways, {} support, {} query",
+        engine.meta.arch,
+        domain_name,
+        ep.ways,
+        ep.support.len(),
+        ep.query.len()
+    );
+    let tc = TrainConfig {
+        steps: args.usize("steps", 10),
+        lr: args.f64("lr", 6e-3) as f32,
+        seed: rng.next_u64(),
+    };
+    let res = coordinator::run_episode(&engine, &params, &method, &ep, tc)?;
+    println!(
+        "method={} acc {:.1}% -> {:.1}% | selection {:.2}s train {:.2}s | layers {:?}",
+        res.method,
+        res.acc_before * 100.0,
+        res.acc_after * 100.0,
+        res.selection_s,
+        res.train_s,
+        res.selected_layers
+    );
+    Ok(())
+}
+
+fn parse_method(name: &str, store: &ArtifactStore, engine: &ModelEngine) -> Result<Method> {
+    Ok(match name {
+        "none" => Method::None,
+        "fulltrain" => Method::FullTrain,
+        "lastlayer" => Method::LastLayer,
+        "tinytl" => Method::TinyTl,
+        "sparseupdate" => {
+            let path = store.dir.join(format!("sparse_policy_{}.json", engine.meta.arch));
+            let policy = search::load_policy(&path)
+                .unwrap_or_else(|_| search::default_policy(engine, 0.0));
+            Method::SparseUpdate(policy)
+        }
+        "tinytrain" => Method::tinytrain_default(),
+        other => return Err(anyhow!("unknown method '{other}'")),
+    })
+}
+
+/// Print artifact + architecture summary.
+fn info(args: &Args) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover(args.opt("artifacts"))?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {}", store.dir.display());
+    for arch in args.list("arch", &harness::ALL_ARCHS) {
+        let engine = ModelEngine::load(&rt, &store, &arch)?;
+        let s = &engine.meta.scaled;
+        let p = &engine.meta.paper;
+        println!(
+            "{arch}: scaled {} layers / {} blocks, {:.1}k params, {:.2}M MACs @{}px | \
+             paper {:.2}M params, {:.1}M MACs @{}px | theta={} fisher={}",
+            s.layers.len(),
+            s.blocks.len(),
+            s.total_params as f64 / 1e3,
+            s.total_macs as f64 / 1e6,
+            s.img,
+            p.total_params as f64 / 1e6,
+            p.total_macs as f64 / 1e6,
+            p.img,
+            engine.meta.total_theta,
+            engine.meta.fisher_len,
+        );
+    }
+    Ok(())
+}

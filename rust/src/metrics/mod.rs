@@ -1,0 +1,170 @@
+//! Experiment metrics: episode-result aggregation, confidence intervals,
+//! and table renderers (markdown + TSV) for the experiment harness.
+
+use crate::coordinator::EpisodeResult;
+use crate::data::mean_sd;
+
+/// Aggregate of one (method, domain) cell over repeated episodes.
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    pub n: usize,
+    pub mean_acc: f64,
+    pub ci95: f64,
+    pub mean_selection_s: f64,
+    pub mean_train_s: f64,
+}
+
+pub fn aggregate(results: &[EpisodeResult]) -> CellStats {
+    let accs: Vec<f64> = results.iter().map(|r| r.acc_after).collect();
+    let (mean, sd) = mean_sd(&accs);
+    let n = accs.len().max(1);
+    CellStats {
+        n,
+        mean_acc: mean,
+        ci95: 1.96 * sd / (n as f64).sqrt(),
+        mean_selection_s: results.iter().map(|r| r.selection_s).sum::<f64>() / n as f64,
+        mean_train_s: results.iter().map(|r| r.train_s).sum::<f64>() / n as f64,
+    }
+}
+
+/// A rows-by-columns table of formatted strings with row labels.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, label: &str, cells: Vec<String>) {
+        self.rows.push((label.to_string(), cells));
+    }
+
+    /// Render as aligned markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut widths = vec![self.rows.iter().map(|(l, _)| l.len()).max().unwrap_or(4).max(6)];
+        for (i, c) in self.columns.iter().enumerate() {
+            let w = self
+                .rows
+                .iter()
+                .map(|(_, cells)| cells.get(i).map(|s| s.len()).unwrap_or(0))
+                .max()
+                .unwrap_or(0)
+                .max(c.len());
+            widths.push(w);
+        }
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        out.push_str(&format!("| {:w$} |", "", w = widths[0]));
+        for (i, c) in self.columns.iter().enumerate() {
+            out.push_str(&format!(" {:>w$} |", c, w = widths[i + 1]));
+        }
+        out.push('\n');
+        out.push_str(&format!("|{}|", "-".repeat(widths[0] + 2)));
+        for w in &widths[1..] {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(&format!("| {:w$} |", label, w = widths[0]));
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!(" {:>w$} |", c, w = widths[i + 1]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as TSV (for downstream plotting).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("# {}\n", self.title));
+        out.push_str(&format!("label\t{}\n", self.columns.join("\t")));
+        for (label, cells) in &self.rows {
+            out.push_str(&format!("{}\t{}\n", label, cells.join("\t")));
+        }
+        out
+    }
+}
+
+/// Human-readable byte size (matches the paper's MB convention).
+pub fn fmt_mb(bytes: f64) -> String {
+    format!("{:.2} MB", bytes / 1e6)
+}
+
+pub fn fmt_kb(bytes: f64) -> String {
+    format!("{:.1} KB", bytes / 1e3)
+}
+
+pub fn fmt_m(macs: f64) -> String {
+    format!("{:.2}M", macs / 1e6)
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+pub fn fmt_ratio(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{:.0}x", x)
+    } else {
+        format!("{:.2}x", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accounting::UpdatePlan;
+
+    fn result(acc: f64) -> EpisodeResult {
+        EpisodeResult {
+            method: "m".into(),
+            domain: "d".into(),
+            acc_before: 0.2,
+            acc_after: acc,
+            losses: vec![],
+            selection_s: 1.0,
+            train_s: 2.0,
+            plan: UpdatePlan::frozen(1, 0),
+            selected_layers: vec![],
+        }
+    }
+
+    #[test]
+    fn aggregate_means_and_ci() {
+        let rs: Vec<_> = [0.5, 0.7, 0.6].into_iter().map(result).collect();
+        let s = aggregate(&rs);
+        assert_eq!(s.n, 3);
+        assert!((s.mean_acc - 0.6).abs() < 1e-9);
+        assert!(s.ci95 > 0.0);
+        assert!((s.mean_selection_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markdown_table_renders() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row("row1", vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Test"));
+        assert!(md.contains("| row1"));
+        let tsv = t.to_tsv();
+        assert!(tsv.contains("row1\t1\t2"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_mb(1_500_000.0), "1.50 MB");
+        assert_eq!(fmt_m(6_510_000.0), "6.51M");
+        assert_eq!(fmt_pct(0.693), "69.3");
+        assert_eq!(fmt_ratio(1013.0), "1013x");
+    }
+}

@@ -1,0 +1,221 @@
+//! Parsed form of `<arch>_meta.json`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::jsonio::Json;
+
+/// One conv layer — the unit of TinyTrain's layer selection.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: String, // stem | pw | dw | head
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub act: bool,
+    pub in_hw: usize,
+    pub out_hw: usize,
+    pub block: i64, // -1 for stem/head
+    pub weight_params: usize,
+    pub params: usize,
+    pub macs: usize,
+    pub act_elems: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockInfo {
+    pub idx: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub expand: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub in_hw: usize,
+    pub out_hw: usize,
+    pub skip: bool,
+    pub conv_ids: Vec<usize>,
+}
+
+/// One flavour of an architecture (scaled = runnable, paper = analytic).
+#[derive(Debug, Clone)]
+pub struct ArchFlavor {
+    pub img: usize,
+    pub feat_dim: usize,
+    pub layers: Vec<LayerInfo>,
+    pub blocks: Vec<BlockInfo>,
+    pub total_params: usize,
+    pub total_macs: usize,
+}
+
+/// One tensor inside the flat theta vector.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub role: String, // weight | gamma | beta | adapter_w | adapter_b
+    pub layer: usize, // conv index, or block index for adapter_*
+    pub mask_axis: usize,
+}
+
+/// Static episode shape constants shared with the AOT graphs.
+#[derive(Debug, Clone)]
+pub struct EpisodeShapes {
+    pub img: usize,
+    pub channels: usize,
+    pub max_ways: usize,
+    pub max_support: usize,
+    pub max_query: usize,
+    pub eval_batch: usize,
+    pub feat_dim: usize,
+    pub cosine_tau: f64,
+}
+
+/// Fisher output segment for one conv layer.
+#[derive(Debug, Clone)]
+pub struct FisherSegment {
+    pub layer: usize,
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub arch: String,
+    pub scaled: ArchFlavor,
+    pub paper: ArchFlavor,
+    pub entries: Vec<ParamEntry>,
+    pub total_theta: usize,
+    pub fisher_len: usize,
+    pub fisher_segments: Vec<FisherSegment>,
+    pub shapes: EpisodeShapes,
+}
+
+fn parse_layer(j: &Json) -> Result<LayerInfo> {
+    Ok(LayerInfo {
+        name: j.str_of("name")?,
+        kind: j.str_of("kind")?,
+        cin: j.usize_of("cin")?,
+        cout: j.usize_of("cout")?,
+        k: j.usize_of("k")?,
+        stride: j.usize_of("stride")?,
+        act: j.bool_of("act")?,
+        in_hw: j.usize_of("in_hw")?,
+        out_hw: j.usize_of("out_hw")?,
+        block: j.i64_of("block")?,
+        weight_params: j.usize_of("weight_params")?,
+        params: j.usize_of("params")?,
+        macs: j.usize_of("macs")?,
+        act_elems: j.usize_of("act_elems")?,
+    })
+}
+
+fn parse_block(j: &Json) -> Result<BlockInfo> {
+    Ok(BlockInfo {
+        idx: j.usize_of("idx")?,
+        cin: j.usize_of("cin")?,
+        cout: j.usize_of("cout")?,
+        expand: j.usize_of("expand")?,
+        k: j.usize_of("k")?,
+        stride: j.usize_of("stride")?,
+        in_hw: j.usize_of("in_hw")?,
+        out_hw: j.usize_of("out_hw")?,
+        skip: j.bool_of("skip")?,
+        conv_ids: j
+            .arr_of("conv_ids")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect(),
+    })
+}
+
+fn parse_flavor(j: &Json) -> Result<ArchFlavor> {
+    Ok(ArchFlavor {
+        img: j.usize_of("img")?,
+        feat_dim: j.usize_of("feat_dim")?,
+        layers: j.arr_of("layers")?.iter().map(parse_layer).collect::<Result<_>>()?,
+        blocks: j.arr_of("blocks")?.iter().map(parse_block).collect::<Result<_>>()?,
+        total_params: j.usize_of("total_params")?,
+        total_macs: j.usize_of("total_macs")?,
+    })
+}
+
+impl ModelMeta {
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        let j = Json::from_file(&path.to_string_lossy())?;
+        let flavors = j.req("flavors")?;
+        let shapes = j.req("shapes")?;
+        Ok(ModelMeta {
+            arch: j.str_of("arch")?,
+            scaled: parse_flavor(flavors.req("scaled")?)?,
+            paper: parse_flavor(flavors.req("paper")?)?,
+            entries: j
+                .arr_of("param_entries")?
+                .iter()
+                .map(|e| {
+                    Ok(ParamEntry {
+                        name: e.str_of("name")?,
+                        shape: e
+                            .arr_of("shape")?
+                            .iter()
+                            .map(|v| v.as_usize().unwrap_or(0))
+                            .collect(),
+                        offset: e.usize_of("offset")?,
+                        size: e.usize_of("size")?,
+                        role: e.str_of("role")?,
+                        layer: e.usize_of("layer")?,
+                        mask_axis: e.usize_of("mask_axis")?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            total_theta: j.usize_of("total_theta")?,
+            fisher_len: j.usize_of("fisher_len")?,
+            fisher_segments: j
+                .arr_of("fisher_segments")?
+                .iter()
+                .map(|e| {
+                    Ok(FisherSegment {
+                        layer: e.usize_of("layer")?,
+                        name: e.str_of("name")?,
+                        offset: e.usize_of("offset")?,
+                        size: e.usize_of("size")?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            shapes: EpisodeShapes {
+                img: shapes.usize_of("img")?,
+                channels: shapes.usize_of("channels")?,
+                max_ways: shapes.usize_of("max_ways")?,
+                max_support: shapes.usize_of("max_support")?,
+                max_query: shapes.usize_of("max_query")?,
+                eval_batch: shapes.usize_of("eval_batch")?,
+                feat_dim: shapes.usize_of("feat_dim")?,
+                cosine_tau: shapes.f64_of("cosine_tau")?,
+            },
+        })
+    }
+
+    /// Param entries belonging to conv layer `layer` (not adapters).
+    pub fn layer_entries(&self, layer: usize) -> impl Iterator<Item = &ParamEntry> {
+        self.entries
+            .iter()
+            .filter(move |e| !e.role.starts_with("adapter") && e.layer == layer)
+    }
+
+    /// Adapter entries of block `block`.
+    pub fn adapter_entries(&self, block: usize) -> impl Iterator<Item = &ParamEntry> {
+        self.entries
+            .iter()
+            .filter(move |e| e.role.starts_with("adapter") && e.layer == block)
+    }
+
+    /// Index of the head layer (the `LastLayer` baseline's target).
+    pub fn head_layer(&self) -> usize {
+        self.scaled.layers.len() - 1
+    }
+}

@@ -1,0 +1,16 @@
+//! Model metadata and parameter state.
+//!
+//! The build pipeline's `<arch>_meta.json` is the single source of truth
+//! for layer tables (both the runnable `scaled` flavour and the analytic
+//! `paper` flavour), the flat-theta packing, and the episode shape
+//! constants. This module parses it and manages the mutable training
+//! state (theta / Adam moments) the coordinator feeds to the AOT step
+//! graph.
+
+mod meta;
+mod params;
+
+pub use meta::{
+    ArchFlavor, BlockInfo, EpisodeShapes, FisherSegment, LayerInfo, ModelMeta, ParamEntry,
+};
+pub use params::ParamStore;

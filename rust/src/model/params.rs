@@ -1,0 +1,213 @@
+//! Mutable training state: flat theta + Adam moments + step counter.
+//!
+//! The coordinator owns exactly one of these per deployed model. He-init
+//! and binary save/load live here; the packing comes from ModelMeta.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::meta::ModelMeta;
+use crate::util::rng::Rng;
+
+/// Flat parameter store matching the AOT graphs' theta packing.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+}
+
+const MAGIC: u32 = 0x7A11_0001; // "tinytrain weights v1"
+
+impl ParamStore {
+    /// He(-fan-in) initialisation: weights ~ N(0, sqrt(2/fan_in)),
+    /// gamma = 1, beta = 0, adapters = 0 (inactive lite-residuals).
+    pub fn init(meta: &ModelMeta, seed: u64) -> ParamStore {
+        let mut theta = vec![0.0f32; meta.total_theta];
+        let mut rng = Rng::new(seed);
+        for e in &meta.entries {
+            match e.role.as_str() {
+                "weight" => {
+                    let fan_in: usize = if e.shape.len() > 1 {
+                        e.shape[..e.shape.len() - 1].iter().product()
+                    } else {
+                        e.shape[0]
+                    };
+                    let std = (2.0 / fan_in.max(1) as f64).sqrt();
+                    for x in &mut theta[e.offset..e.offset + e.size] {
+                        *x = rng.normal_scaled(0.0, std) as f32;
+                    }
+                }
+                "gamma" => theta[e.offset..e.offset + e.size].fill(1.0),
+                // beta / adapter_w / adapter_b stay zero.
+                _ => {}
+            }
+        }
+        ParamStore { theta, m: vec![0.0; meta.total_theta], v: vec![0.0; meta.total_theta], t: 0 }
+    }
+
+    /// Fresh optimiser state (new task adaptation starts clean).
+    pub fn reset_optimizer(&mut self) {
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.t = 0;
+    }
+
+    /// Save theta to a little-endian binary file (moments are transient).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(8 + self.theta.len() * 4);
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&(self.theta.len() as u32).to_le_bytes());
+        for v in &self.theta {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes).map_err(|e| anyhow!("writing {}: {e}", path.display()))
+    }
+
+    /// Load theta saved by `save`; moments start at zero.
+    pub fn load(meta: &ModelMeta, path: &Path) -> Result<ParamStore> {
+        let bytes =
+            std::fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        if bytes.len() < 8 {
+            return Err(anyhow!("{}: truncated weights file", path.display()));
+        }
+        let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(anyhow!("{}: bad magic {magic:#x}", path.display()));
+        }
+        let n = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        if n != meta.total_theta {
+            return Err(anyhow!(
+                "{}: has {n} params but {} expects {} — stale artifacts?",
+                path.display(),
+                meta.arch,
+                meta.total_theta
+            ));
+        }
+        if bytes.len() != 8 + 4 * n {
+            return Err(anyhow!("{}: truncated payload", path.display()));
+        }
+        let theta: Vec<f32> = bytes[8..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(ParamStore { theta, m: vec![0.0; n], v: vec![0.0; n], t: 0 })
+    }
+
+    /// Load pre-trained weights if present, else He-init (and warn).
+    pub fn load_or_init(meta: &ModelMeta, path: &Path, seed: u64) -> ParamStore {
+        match Self::load(meta, path) {
+            Ok(p) => p,
+            Err(_) => Self::init(meta, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::meta::{
+        ArchFlavor, EpisodeShapes, ModelMeta, ParamEntry,
+    };
+
+    fn tiny_meta() -> ModelMeta {
+        // A hand-rolled two-entry meta for unit tests (no artifacts dep).
+        ModelMeta {
+            arch: "tiny".into(),
+            scaled: empty_flavor(),
+            paper: empty_flavor(),
+            entries: vec![
+                ParamEntry {
+                    name: "l0.w".into(),
+                    shape: vec![4, 3],
+                    offset: 0,
+                    size: 12,
+                    role: "weight".into(),
+                    layer: 0,
+                    mask_axis: 1,
+                },
+                ParamEntry {
+                    name: "l0.gamma".into(),
+                    shape: vec![3],
+                    offset: 12,
+                    size: 3,
+                    role: "gamma".into(),
+                    layer: 0,
+                    mask_axis: 0,
+                },
+                ParamEntry {
+                    name: "l0.beta".into(),
+                    shape: vec![3],
+                    offset: 15,
+                    size: 3,
+                    role: "beta".into(),
+                    layer: 0,
+                    mask_axis: 0,
+                },
+            ],
+            total_theta: 18,
+            fisher_len: 3,
+            fisher_segments: vec![],
+            shapes: EpisodeShapes {
+                img: 8,
+                channels: 3,
+                max_ways: 2,
+                max_support: 4,
+                max_query: 4,
+                eval_batch: 8,
+                feat_dim: 4,
+                cosine_tau: 10.0,
+            },
+        }
+    }
+
+    fn empty_flavor() -> ArchFlavor {
+        ArchFlavor {
+            img: 8,
+            feat_dim: 4,
+            layers: vec![],
+            blocks: vec![],
+            total_params: 18,
+            total_macs: 0,
+        }
+    }
+
+    #[test]
+    fn init_roles() {
+        let meta = tiny_meta();
+        let p = ParamStore::init(&meta, 1);
+        assert_eq!(p.theta.len(), 18);
+        // gamma == 1, beta == 0
+        assert!(p.theta[12..15].iter().all(|&x| x == 1.0));
+        assert!(p.theta[15..18].iter().all(|&x| x == 0.0));
+        // weights non-degenerate
+        let wsum: f32 = p.theta[..12].iter().map(|x| x.abs()).sum();
+        assert!(wsum > 0.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let meta = tiny_meta();
+        let p = ParamStore::init(&meta, 7);
+        let dir = std::env::temp_dir().join("tinytrain_test_weights.bin");
+        p.save(&dir).unwrap();
+        let q = ParamStore::load(&meta, &dir).unwrap();
+        assert_eq!(p.theta, q.theta);
+        assert_eq!(q.t, 0);
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_wrong_size() {
+        let meta = tiny_meta();
+        let p = ParamStore::init(&meta, 7);
+        let path = std::env::temp_dir().join("tinytrain_test_weights_bad.bin");
+        p.save(&path).unwrap();
+        let mut meta2 = tiny_meta();
+        meta2.total_theta = 99;
+        assert!(ParamStore::load(&meta2, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

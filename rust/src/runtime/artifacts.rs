@@ -1,0 +1,75 @@
+//! Artifact discovery: locates the `artifacts/` directory produced by
+//! `make artifacts` and resolves per-architecture file sets.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+/// Paths of one architecture's artifact family.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub arch: String,
+    pub fwd: PathBuf,
+    pub fisher: PathBuf,
+    pub step: PathBuf,
+    pub meta: PathBuf,
+    pub weights: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Use `dir` if given, else $TINYTRAIN_ARTIFACTS, else ./artifacts
+    /// (searching upward from the current dir so tests/benches work from
+    /// target subdirectories).
+    pub fn discover(dir: Option<&str>) -> Result<Self> {
+        if let Some(d) = dir {
+            return Self::at(Path::new(d));
+        }
+        if let Ok(d) = std::env::var("TINYTRAIN_ARTIFACTS") {
+            return Self::at(Path::new(&d));
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let candidate = cur.join("artifacts");
+            if candidate.join("manifest.json").exists() {
+                return Ok(ArtifactStore { dir: candidate });
+            }
+            if !cur.pop() {
+                break;
+            }
+        }
+        Err(anyhow!(
+            "artifacts/manifest.json not found — run `make artifacts` first \
+             (or set TINYTRAIN_ARTIFACTS)"
+        ))
+    }
+
+    pub fn at(dir: &Path) -> Result<Self> {
+        if !dir.join("manifest.json").exists() {
+            return Err(anyhow!(
+                "{} has no manifest.json — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        Ok(ArtifactStore { dir: dir.to_path_buf() })
+    }
+
+    pub fn model(&self, arch: &str) -> ModelArtifacts {
+        ModelArtifacts {
+            arch: arch.to_string(),
+            fwd: self.dir.join(format!("{arch}_fwd.hlo.txt")),
+            fisher: self.dir.join(format!("{arch}_fisher.hlo.txt")),
+            step: self.dir.join(format!("{arch}_step.hlo.txt")),
+            meta: self.dir.join(format!("{arch}_meta.json")),
+            weights: self.dir.join(format!("weights_{arch}.bin")),
+        }
+    }
+
+    pub fn kernel_smoke(&self) -> PathBuf {
+        self.dir.join("kernel_smoke.hlo.txt")
+    }
+}

@@ -1,0 +1,138 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! This is the only module that touches the `xla` crate. Python never runs
+//! here — `make artifacts` produced the HLO text at build time, and this
+//! module compiles it once per process (executables are cached) and then
+//! serves the L3 hot path.
+//!
+//! Interchange format is HLO *text*: jax >= 0.5 serialises HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+mod artifacts;
+mod tensor;
+
+pub use artifacts::{ArtifactStore, ModelArtifacts};
+pub use tensor::Tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled executable plus its host-facing metadata.
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Exec {
+    /// Execute on host tensors; returns the flattened tuple elements.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()
+            .with_context(|| format!("building inputs for {}", self.name))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        // Graphs are lowered with return_tuple=True.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untupling {}: {e}", self.name))?;
+        parts.into_iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute with device-resident inputs (hot path: avoids host copies
+    /// of unchanged operands like theta/m/v between steps).
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let result = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing {} (buffers)", self.name))?;
+        Ok(result.into_iter().next().unwrap_or_default())
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// PJRT CPU client + executable cache keyed by artifact path.
+///
+/// Cheap to clone (Rc internals): `ModelEngine` holds a clone so it can
+/// compile its graphs lazily — analytic experiments read only metadata
+/// and never pay the compile time.
+#[derive(Clone)]
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Rc<Mutex<HashMap<PathBuf, std::sync::Arc<Exec>>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, cache: Rc::new(Mutex::new(HashMap::new())) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Exec>> {
+        if let Some(exec) = self.cache.lock().unwrap().get(path) {
+            return Ok(exec.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        let exec = std::sync::Arc::new(Exec {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        });
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Move a host tensor to a device-resident buffer.
+    pub fn to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.dims, None)
+            .map_err(|e| anyhow!("host->device transfer: {e}"))
+    }
+
+    /// Fetch a device buffer back to a host tensor.
+    pub fn to_host(&self, b: &xla::PjRtBuffer) -> Result<Tensor> {
+        let lit = b.to_literal_sync().map_err(|e| anyhow!("device->host transfer: {e}"))?;
+        Tensor::from_literal(lit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip_shapes() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dims, vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let t2 = Tensor::from_literal(lit).unwrap();
+        assert_eq!(t2.dims, vec![2, 3]);
+        assert_eq!(t2.data, t.data);
+    }
+}

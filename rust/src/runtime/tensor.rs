@@ -1,0 +1,62 @@
+//! Host-side f32 tensor: the unit of exchange with the PJRT executables.
+
+use anyhow::{anyhow, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor { data, dims }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        Tensor { data: vec![0.0; dims.iter().product()], dims: dims.to_vec() }
+    }
+
+    pub fn ones(dims: &[usize]) -> Self {
+        Tensor { data: vec![1.0; dims.iter().product()], dims: dims.to_vec() }
+    }
+
+    pub fn scalar1(v: f32) -> Self {
+        Tensor { data: vec![v], dims: vec![1] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape to {:?}: {e}", self.dims))
+    }
+
+    pub fn from_literal(lit: xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+        Ok(Tensor { data, dims })
+    }
+
+    /// Mean of all elements (for quick metrics/debugging).
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn first(&self) -> f32 {
+        self.data.first().copied().unwrap_or(0.0)
+    }
+}

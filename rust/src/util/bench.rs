@@ -1,0 +1,87 @@
+//! Micro-benchmark harness substrate (criterion is not in the offline
+//! vendor set). Warmup + timed iterations, reporting mean / p50 / p95 /
+//! min. Used by rust/benches/*.rs via `harness = false`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} iters={:<5} mean={:>12?} p50={:>12?} p95={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to roughly `budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = ((budget.as_secs_f64() / once.as_secs_f64()).ceil() as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p95: samples[((iters * 95) / 100).min(iters - 1)],
+        min: samples[0],
+    };
+    println!("{}", stats.report());
+    stats
+}
+
+/// One-shot wall-clock measurement for long-running sections.
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    let el = t.elapsed();
+    println!("{:<42} once  {:>12?}", name, el);
+    (out, el)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_percentiles() {
+        let s = bench("noop", Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.p50);
+        assert!(s.p50 <= s.p95.max(s.p50));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser substrate (clap is not in the offline vendor
+//! set). Flags are `--name value` or `--name` (boolean); positionals are
+//! collected in order.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // --name=value, --name value, or bare --name (=true)
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list flag, e.g. --arch mcunet,mbv2.
+    pub fn list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&argv(&["exp", "table1", "--episodes", "5", "--quiet"]));
+        assert_eq!(a.positional, vec!["exp", "table1"]);
+        assert_eq!(a.usize("episodes", 0), 5);
+        assert!(a.bool("quiet"));
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn parses_eq_form_and_lists() {
+        let a = Args::parse(&argv(&["--arch=mcunet,mbv2", "--lr=0.01"]));
+        assert_eq!(a.list("arch", &[]), vec!["mcunet", "mbv2"]);
+        assert_eq!(a.f64("lr", 0.0), 0.01);
+        assert_eq!(a.list("datasets", &["all"]), vec!["all"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&[]));
+        assert_eq!(a.str("tier", "smoke"), "smoke");
+        assert_eq!(a.usize("steps", 10), 10);
+    }
+}

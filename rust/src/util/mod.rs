@@ -1,0 +1,9 @@
+//! Infrastructure substrates built in-house (the offline vendor set has no
+//! serde/clap/rand/tokio/criterion/proptest — see DESIGN.md).
+
+pub mod bench;
+pub mod cli;
+pub mod jsonio;
+pub mod pool;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,81 @@
+//! Scoped thread-pool substrate (tokio is not in the offline vendor set;
+//! the coordinator's parallelism needs are fork-join over episodes, which
+//! plain threads model better anyway on a CPU testbed).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `f(i)` for i in 0..n across up to `workers` threads, collecting
+/// results in index order. Panics in workers are propagated.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = Arc::new(Mutex::new(0usize));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = {
+                    let mut guard = next.lock().unwrap();
+                    if *guard >= n {
+                        return;
+                    }
+                    let i = *guard;
+                    *guard += 1;
+                    i
+                };
+                let out = f(i);
+                if tx.send((i, out)).is_err() {
+                    return;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+        slots.into_iter().map(|s| s.expect("worker dropped a slot")).collect()
+    })
+}
+
+/// Number of workers to use by default (leave one core for the OS when
+/// there are many; on the 1-core testbed this is 1, i.e. sequential).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        assert_eq!(parallel_map(3, 1, |i| i), vec![0, 1, 2]);
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn workers_capped_by_n() {
+        let out = parallel_map(2, 16, |i| i + 1);
+        assert_eq!(out, vec![1, 2]);
+    }
+}

@@ -1,0 +1,47 @@
+//! Mini property-testing substrate (proptest is not in the offline vendor
+//! set). Seeded case generation with failure reporting; coordinator
+//! invariants (selection/budget/masks/sampler) use this via `check`.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` against `cases` generated inputs; on failure, panic with the
+/// seed and case index so the case can be replayed deterministically.
+pub fn check<T, G, P>(name: &str, cases: usize, seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check("add-commutes", 64, 1, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn reports_failures() {
+        check("always-fails", 8, 2, |r| r.below(10), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,144 @@
+//! End-to-end integration over the live PJRT artifacts: fisher pass,
+//! dynamic selection, sparse fine-tuning, meta-training. These exercise
+//! the exact code path of the experiments (no mocks).
+
+use tinytrain::coordinator::{
+    self, episode_accuracy, Budgets, ChannelScheme, Criterion, Method, ModelEngine, TrainConfig,
+};
+use tinytrain::data::{domain_by_name, Sampler};
+use tinytrain::model::ParamStore;
+use tinytrain::runtime::{ArtifactStore, Runtime};
+use tinytrain::util::rng::Rng;
+
+/// One engine (one PJRT compile of the three graphs) shared by all the
+/// sub-checks below — PjRtClient is Rc-based (not Send), so instead of a
+/// per-test engine we run the checks sequentially under a single #[test].
+#[test]
+fn pipeline_end_to_end() {
+    let rt = Runtime::cpu().unwrap();
+    let store = ArtifactStore::discover(None).expect("run `make artifacts`");
+    let eng = ModelEngine::load(&rt, &store, "mcunet").unwrap();
+    fisher_pass_produces_nonnegative_channel_scores(&eng);
+    masked_step_freezes_unselected_parameters(&eng);
+    none_method_is_a_no_op_on_accuracy(&eng);
+    evaluator_matches_graph_embeddings_shape(&eng);
+    tinytrain_episode_improves_over_none_and_respects_budget(&eng);
+}
+
+fn fisher_pass_produces_nonnegative_channel_scores(eng: &ModelEngine) {
+    let params = ParamStore::init(&eng.meta, 1);
+    let domain = domain_by_name("traffic").unwrap();
+    let mut rng = Rng::new(2);
+    let ep = Sampler::new(domain.as_ref(), &eng.meta.shapes).sample(&mut rng);
+    let padded = ep.pad(&eng.meta.shapes);
+    let pseudo = ep.pseudo_query(&eng.meta.shapes, &mut rng);
+    let out = eng.fisher_pass(&params, &padded, &pseudo).unwrap();
+    assert_eq!(out.deltas.len(), eng.meta.fisher_len);
+    assert!(out.deltas.iter().all(|&d| d >= 0.0), "fisher must be >= 0");
+    assert!(out.deltas.iter().any(|&d| d > 0.0), "fisher all-zero");
+    assert!(out.loss.is_finite());
+}
+
+fn tinytrain_episode_improves_over_none_and_respects_budget(eng: &ModelEngine) {
+    // briefly meta-train so the backbone isn't random
+    let mut params = ParamStore::init(&eng.meta, 3);
+    let cfg = coordinator::PretrainConfig {
+        episodes: 6,
+        steps_per_episode: 3,
+        lr: 3e-3,
+        seed: 5,
+        log_every: 100,
+    };
+    coordinator::meta_train(eng, &mut params, &cfg, |_| {}).unwrap();
+
+    let domain = domain_by_name("traffic").unwrap();
+    let mut rng = Rng::new(11);
+    let ep = Sampler::new(domain.as_ref(), &eng.meta.shapes).sample(&mut rng);
+
+    let method = Method::TinyTrain {
+        criterion: Criterion::MultiObjective,
+        scheme: ChannelScheme::Fisher,
+        budgets: Budgets::default(),
+        ratio: 0.5,
+    };
+    let tc = TrainConfig { steps: 8, lr: 6e-3, seed: 1 };
+    let res = coordinator::run_episode(eng, &params, &method, &ep, tc).unwrap();
+
+    assert!(!res.selected_layers.is_empty(), "nothing selected");
+    assert!(
+        res.acc_after >= res.acc_before - 0.05,
+        "adaptation catastrophically hurt: {} -> {}",
+        res.acc_before,
+        res.acc_after
+    );
+    // losses decrease overall
+    let first = res.losses.first().copied().unwrap();
+    let last = res.losses.last().copied().unwrap();
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    // the analytic plan respects the 1 MB budget
+    let mem = tinytrain::accounting::backward_memory(
+        &eng.meta.scaled,
+        &res.plan,
+        tinytrain::accounting::Optimizer::Adam,
+    );
+    assert!(mem.total() <= 1.0e6, "over budget: {}", mem.total());
+}
+
+fn masked_step_freezes_unselected_parameters(eng: &ModelEngine) {
+    let params = ParamStore::init(&eng.meta, 7);
+    let domain = domain_by_name("flower").unwrap();
+    let mut rng = Rng::new(4);
+    let ep = Sampler::new(domain.as_ref(), &eng.meta.shapes).sample(&mut rng);
+    let padded = ep.pad(&eng.meta.shapes);
+    let pseudo = ep.pseudo_query(&eng.meta.shapes, &mut rng);
+
+    // mask: only the head layer
+    let mut mask = vec![0.0f32; eng.meta.total_theta];
+    let head = eng.meta.head_layer();
+    let mut head_ranges = Vec::new();
+    for e in eng.meta.layer_entries(head) {
+        mask[e.offset..e.offset + e.size].fill(1.0);
+        head_ranges.push((e.offset, e.offset + e.size));
+    }
+    let mut p = params.clone();
+    eng.train_step(&mut p, &mask, 0.01, &padded, &pseudo).unwrap();
+
+    let in_head = |i: usize| head_ranges.iter().any(|&(a, b)| i >= a && i < b);
+    let mut changed_outside = 0;
+    let mut changed_inside = 0;
+    for i in 0..eng.meta.total_theta {
+        if (p.theta[i] - params.theta[i]).abs() > 0.0 {
+            if in_head(i) {
+                changed_inside += 1;
+            } else {
+                changed_outside += 1;
+            }
+        }
+    }
+    assert_eq!(changed_outside, 0, "frozen params moved");
+    assert!(changed_inside > 0, "selected params did not move");
+}
+
+fn none_method_is_a_no_op_on_accuracy(eng: &ModelEngine) {
+    let params = ParamStore::init(&eng.meta, 9);
+    let domain = domain_by_name("dtd").unwrap();
+    let mut rng = Rng::new(8);
+    let ep = Sampler::new(domain.as_ref(), &eng.meta.shapes).sample(&mut rng);
+    let tc = TrainConfig { steps: 4, lr: 6e-3, seed: 2 };
+    let res = coordinator::run_episode(eng, &params, &Method::None, &ep, tc).unwrap();
+    assert_eq!(res.acc_before, res.acc_after);
+    assert!(res.losses.is_empty());
+}
+
+fn evaluator_matches_graph_embeddings_shape(eng: &ModelEngine) {
+    let params = ParamStore::init(&eng.meta, 5);
+    let domain = domain_by_name("omniglot").unwrap();
+    let mut rng = Rng::new(6);
+    let ep = Sampler::new(domain.as_ref(), &eng.meta.shapes).sample(&mut rng);
+    let padded = ep.pad(&eng.meta.shapes);
+    let emb = eng.embed_with(&params, eng.eval_batch(&padded)).unwrap();
+    let s = &eng.meta.shapes;
+    assert_eq!(emb.dims, vec![s.eval_batch, s.feat_dim]);
+    let acc = episode_accuracy(&emb.data, &padded, s);
+    assert!((0.0..=1.0).contains(&acc));
+}

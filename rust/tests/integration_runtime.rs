@@ -1,0 +1,70 @@
+//! Integration: PJRT runtime loads and executes the AOT artifacts.
+//! Requires `make artifacts` to have run (Makefile orders this).
+
+use tinytrain::model::{ModelMeta, ParamStore};
+use tinytrain::runtime::{ArtifactStore, Runtime, Tensor};
+
+fn store() -> ArtifactStore {
+    ArtifactStore::discover(None).expect("run `make artifacts` first")
+}
+
+#[test]
+fn kernel_smoke_executes() {
+    let rt = Runtime::cpu().unwrap();
+    let exec = rt.load(&store().kernel_smoke()).unwrap();
+    let x = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+    let y = Tensor::ones(&[2, 2]);
+    let out = exec.run(&[x, y]).unwrap();
+    assert_eq!(out.len(), 1);
+    // matmul([[1,2],[3,4]], ones) + 2 = [[5,5],[9,9]]
+    assert_eq!(out[0].data, vec![5.0, 5.0, 9.0, 9.0]);
+}
+
+#[test]
+fn meta_parses_and_is_consistent() {
+    let arts = store().model("mcunet");
+    let meta = ModelMeta::load(&arts.meta).unwrap();
+    assert_eq!(meta.arch, "mcunet");
+    assert_eq!(meta.scaled.blocks.len(), 14);
+    assert_eq!(meta.scaled.layers.len(), 43);
+    // packing is contiguous and covers total_theta
+    let mut off = 0;
+    for e in &meta.entries {
+        assert_eq!(e.offset, off, "entry {}", e.name);
+        off += e.size;
+    }
+    assert_eq!(off, meta.total_theta);
+    // fisher segments cover fisher_len and align with layer couts
+    let mut foff = 0;
+    for (seg, layer) in meta.fisher_segments.iter().zip(&meta.scaled.layers) {
+        assert_eq!(seg.offset, foff);
+        assert_eq!(seg.size, layer.cout);
+        foff += seg.size;
+    }
+    assert_eq!(foff, meta.fisher_len);
+}
+
+#[test]
+fn fwd_graph_produces_normalised_embeddings() {
+    let arts = store().model("mcunet");
+    let meta = ModelMeta::load(&arts.meta).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let exec = rt.load(&arts.fwd).unwrap();
+    let params = ParamStore::init(&meta, 42);
+    let s = &meta.shapes;
+    let mut imgs = Tensor::zeros(&[s.eval_batch, s.img, s.img, s.channels]);
+    // deterministic pseudo-input
+    for (i, v) in imgs.data.iter_mut().enumerate() {
+        *v = ((i % 17) as f32 - 8.0) / 8.0;
+    }
+    let theta = Tensor::new(params.theta.clone(), vec![meta.total_theta]);
+    let out = exec.run(&[theta, imgs]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, vec![s.eval_batch, s.feat_dim]);
+    // embeddings are unit-norm
+    for b in 0..s.eval_batch {
+        let row = &out[0].data[b * s.feat_dim..(b + 1) * s.feat_dim];
+        let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-2, "batch {b}: norm {norm}");
+    }
+}
