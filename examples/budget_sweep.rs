@@ -10,7 +10,7 @@
 //!   cargo run --release --example budget_sweep [-- --episodes N]
 
 use tinytrain::coordinator::{
-    run_episode, Budgets, ChannelScheme, Criterion, Method, ModelEngine, TrainConfig,
+    AdaptationSession, Budgets, ChannelScheme, Criterion, Method, ModelEngine, TrainConfig,
 };
 use tinytrain::data::{domain_by_name, Sampler};
 use tinytrain::metrics::Table;
@@ -51,13 +51,16 @@ fn main() -> anyhow::Result<()> {
                 budgets: Budgets { mem_bytes: mb * 1e6, compute_frac: 0.15 },
                 ratio: 0.5,
             };
+            let session = AdaptationSession::builder(&engine)
+                .method(method)
+                .config(TrainConfig { steps, lr: 6e-3, seed: 0 })
+                .build()?;
             let mut acc = 0.0;
             let mut layers = 0usize;
             for e in 0..episodes {
                 let mut rng = Rng::new(33 + e as u64);
                 let ep = sampler.sample(&mut rng);
-                let tc = TrainConfig { steps, lr: 6e-3, seed: rng.next_u64() };
-                let res = run_episode(&engine, &params, &method, &ep, tc)?;
+                let res = session.adapt_with_seed(&params, &ep, rng.next_u64())?;
                 acc += res.acc_after;
                 layers = res.selected_layers.len();
             }

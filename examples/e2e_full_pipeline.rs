@@ -14,7 +14,7 @@
 
 use tinytrain::accounting::Optimizer;
 use tinytrain::coordinator::{
-    meta_train, run_episode, search, Method, ModelEngine, PretrainConfig, TrainConfig,
+    meta_train, search, AdaptationSession, Method, ModelEngine, PretrainConfig, TrainConfig,
 };
 use tinytrain::data::{domain_by_name, Sampler};
 use tinytrain::devices::{pi_zero_2, train_cost};
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 2. deployment: cross-domain adaptation ------------------------
     println!("\n== deployment: on-device adaptation to unseen domains ==");
-    let policy = search::default_policy(&engine, 0.0);
+    let policy = search::default_policy(&engine.meta, 0.0);
     let methods = vec![
         Method::None,
         Method::LastLayer,
@@ -67,6 +67,10 @@ fn main() -> anyhow::Result<()> {
         &domains.iter().map(|d| *d).chain(["Avg."]).collect::<Vec<_>>(),
     );
     for method in &methods {
+        let session = AdaptationSession::builder(&engine)
+            .method(method.clone())
+            .config(TrainConfig { steps, lr: 6e-3, seed: 0 })
+            .build()?;
         let mut cells = Vec::new();
         let mut total = 0.0;
         for domain in domains {
@@ -76,8 +80,7 @@ fn main() -> anyhow::Result<()> {
             for e in 0..episodes {
                 let mut rng = Rng::new(100 + e as u64);
                 let ep = sampler.sample(&mut rng);
-                let tc = TrainConfig { steps, lr: 6e-3, seed: rng.next_u64() };
-                let res = run_episode(&engine, &params, method, &ep, tc)?;
+                let res = session.adapt_with_seed(&params, &ep, rng.next_u64())?;
                 acc += res.acc_after;
                 if e == 0 && !res.losses.is_empty() {
                     println!(
@@ -109,7 +112,11 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Rng::new(1);
         let ep = Sampler::new(d.as_ref(), &engine.meta.shapes).sample(&mut rng);
         let tc = TrainConfig { steps: 1, lr: 6e-3, seed: 2 };
-        let res = run_episode(&engine, &params, method, &ep, tc)?;
+        let res = AdaptationSession::builder(&engine)
+            .method(method.clone())
+            .config(tc)
+            .build()?
+            .adapt(&params, &ep)?;
         let cost = train_cost(
             &dev,
             &engine.meta.paper,

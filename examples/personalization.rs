@@ -7,7 +7,7 @@
 //!
 //!   cargo run --release --example personalization [-- --users N]
 
-use tinytrain::coordinator::{run_episode, Method, ModelEngine, TrainConfig};
+use tinytrain::coordinator::{AdaptationSession, Method, ModelEngine, TrainConfig};
 use tinytrain::data::{domain_by_name, Sampler, DOMAIN_NAMES};
 use tinytrain::model::ParamStore;
 use tinytrain::runtime::{ArtifactStore, Runtime};
@@ -25,6 +25,12 @@ fn main() -> anyhow::Result<()> {
     let base = ParamStore::load_or_init(&engine.meta, &engine.weights_path, 42);
 
     println!("simulating {n_users} users arriving at one edge device\n");
+    // One session serves every arriving user: it keeps no episode state
+    // and borrows the engine immutably.
+    let session = AdaptationSession::builder(&engine)
+        .method(Method::tinytrain_default())
+        .config(TrainConfig { steps, lr: 6e-3, seed: 0 })
+        .build()?;
     let mut rng = Rng::new(2024);
     let mut selections: Vec<Vec<usize>> = Vec::new();
     for user in 0..n_users {
@@ -32,9 +38,8 @@ fn main() -> anyhow::Result<()> {
         let domain_name = DOMAIN_NAMES[rng.below(DOMAIN_NAMES.len())];
         let domain = domain_by_name(domain_name).unwrap();
         let ep = Sampler::new(domain.as_ref(), &engine.meta.shapes).sample(&mut rng);
-        let tc = TrainConfig { steps, lr: 6e-3, seed: rng.next_u64() };
         // adaptation always starts from the deployed meta-trained weights
-        let res = run_episode(&engine, &base, &Method::tinytrain_default(), &ep, tc)?;
+        let res = session.adapt_with_seed(&base, &ep, rng.next_u64())?;
         println!(
             "user {:>2} [{:<8}] {:>2}-way: acc {:>5.1}% -> {:>5.1}%  ({} layers selected: {:?})",
             user,

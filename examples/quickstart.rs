@@ -6,7 +6,7 @@
 //!
 //! (Best with meta-trained weights: `make weights` first.)
 
-use tinytrain::coordinator::{run_episode, Method, ModelEngine, TrainConfig};
+use tinytrain::coordinator::{AdaptationSession, Backend, Method, ModelEngine, TrainConfig};
 use tinytrain::data::{domain_by_name, Sampler};
 use tinytrain::model::ParamStore;
 use tinytrain::runtime::{ArtifactStore, Runtime};
@@ -40,9 +40,13 @@ fn main() -> anyhow::Result<()> {
 
     // 4. TinyTrain: fisher pass -> multi-objective scoring -> dynamic
     //    layer/channel selection under the 1 MB / 15% budgets -> sparse
-    //    fine-tuning (Algorithm 1).
-    let cfg = TrainConfig { steps: 10, lr: 6e-3, seed: 1 };
-    let result = run_episode(&engine, &params, &Method::tinytrain_default(), &episode, cfg)?;
+    //    fine-tuning (Algorithm 1), all owned by one AdaptationSession.
+    let session = AdaptationSession::builder(&engine)
+        .method(Method::tinytrain_default())
+        .config(TrainConfig { steps: 10, lr: 6e-3, seed: 1 })
+        .backend(Backend::Auto)
+        .build()?;
+    let result = session.adapt(&params, &episode)?;
 
     println!(
         "accuracy: {:.1}% -> {:.1}%  (selection {:.2}s, fine-tuning {:.2}s)",

@@ -7,7 +7,8 @@
 use anyhow::Result;
 
 use super::engine::ModelEngine;
-use super::trainer::{run_episode, Method, StaticPolicy, TrainConfig};
+use super::session::AdaptationSession;
+use super::trainer::{Method, StaticPolicy, TrainConfig};
 use super::ChannelScheme;
 use crate::data::Episode;
 use crate::model::ParamStore;
@@ -34,7 +35,11 @@ pub fn single_layer_contribution(
     cfg: TrainConfig,
 ) -> Result<LayerContribution> {
     let method = Method::SparseUpdate(StaticPolicy { layer_ratios: vec![(layer, ratio)] });
-    let res = run_episode(engine, params, &method, episode, cfg)?;
+    let res = AdaptationSession::builder(engine)
+        .method(method)
+        .config(cfg)
+        .build()?
+        .adapt(params, episode)?;
     let info = &engine.meta.scaled.layers[layer];
     let gain = res.acc_after - res.acc_before;
     Ok(LayerContribution {
@@ -69,7 +74,11 @@ pub fn channel_scheme_comparison(
             budgets: Budgets::default(),
             ratio,
         };
-        let res = run_episode(engine, params, &method, episode, cfg)?;
+        let res = AdaptationSession::builder(engine)
+            .method(method)
+            .config(cfg)
+            .build()?
+            .adapt(params, episode)?;
         rows.push((label.to_string(), res.acc_after));
     }
     Ok(rows)

@@ -2,24 +2,51 @@
 //!
 //! Owns the compiled fwd / fisher / step executables plus the metadata,
 //! and exposes typed operations over flat tensors. Everything above this
-//! (selection, training loops, baselines) is pure rust logic.
+//! (selection, training loops, baselines) is pure rust logic — callers
+//! reach it through an `AdaptationBackend` rather than these raw ops.
 
+use std::cell::OnceCell;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::data::PaddedEpisode;
+use crate::data::{PaddedEpisode, PseudoQuery};
 use crate::model::{ModelMeta, ParamStore};
 use crate::runtime::{ArtifactStore, Exec, Runtime, Tensor};
+
+/// One lazily-compiled executable: the single place that defines the
+/// engine's lazy-compile behaviour (`OnceCell::get_or_try_init`-style —
+/// the std method is still unstable, so the fallible init lives here).
+/// Analytic experiments read only metadata and never pay compile time.
+struct LazyExec {
+    path: PathBuf,
+    cell: OnceCell<Arc<Exec>>,
+}
+
+impl LazyExec {
+    fn new(path: PathBuf) -> Self {
+        LazyExec { path, cell: OnceCell::new() }
+    }
+
+    /// Compile-on-first-use; concurrent with nothing (OnceCell is !Sync),
+    /// so a failed load simply retries on the next call.
+    fn get(&self, rt: &Runtime) -> Result<&Arc<Exec>> {
+        if let Some(e) = self.cell.get() {
+            return Ok(e);
+        }
+        let exec = rt.load(&self.path)?;
+        Ok(self.cell.get_or_init(|| exec))
+    }
+}
 
 pub struct ModelEngine {
     pub meta: ModelMeta,
     pub weights_path: std::path::PathBuf,
     rt: Runtime,
-    paths: crate::runtime::ModelArtifacts,
-    fwd: std::cell::OnceCell<Arc<Exec>>,
-    fisher: std::cell::OnceCell<Arc<Exec>>,
-    step: std::cell::OnceCell<Arc<Exec>>,
+    fwd: LazyExec,
+    fisher: LazyExec,
+    step: LazyExec,
 }
 
 /// Output of one fisher pass (paper Eq. 2 evaluated per channel).
@@ -40,23 +67,22 @@ impl ModelEngine {
             meta,
             weights_path: arts.weights.clone(),
             rt: rt.clone(),
-            paths: arts,
-            fwd: std::cell::OnceCell::new(),
-            fisher: std::cell::OnceCell::new(),
-            step: std::cell::OnceCell::new(),
+            fwd: LazyExec::new(arts.fwd),
+            fisher: LazyExec::new(arts.fisher),
+            step: LazyExec::new(arts.step),
         })
     }
 
     fn fwd_exec(&self) -> Result<&Arc<Exec>> {
-        get_or_load(&self.fwd, &self.rt, &self.paths.fwd)
+        self.fwd.get(&self.rt)
     }
 
     fn fisher_exec(&self) -> Result<&Arc<Exec>> {
-        get_or_load(&self.fisher, &self.rt, &self.paths.fisher)
+        self.fisher.get(&self.rt)
     }
 
     fn step_exec(&self) -> Result<&Arc<Exec>> {
-        get_or_load(&self.step, &self.rt, &self.paths.step)
+        self.step.get(&self.rt)
     }
 
     /// Embed an EVAL_BATCH of images: returns (B, feat_dim) embeddings.
@@ -72,7 +98,7 @@ impl ModelEngine {
         &self,
         params: &ParamStore,
         ep: &PaddedEpisode,
-        pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
+        pseudo: &PseudoQuery,
     ) -> Result<FisherOutput> {
         let s = &self.meta.shapes;
         let theta = Tensor::new(params.theta.clone(), vec![self.meta.total_theta]);
@@ -81,9 +107,9 @@ impl ModelEngine {
             Tensor::new(ep.sup_x.clone(), vec![s.max_support, s.img, s.img, s.channels]),
             Tensor::new(ep.sup_y.clone(), vec![s.max_support, s.max_ways]),
             Tensor::new(ep.sup_v.clone(), vec![s.max_support]),
-            Tensor::new(pseudo.0.clone(), vec![s.max_query, s.img, s.img, s.channels]),
-            Tensor::new(pseudo.1.clone(), vec![s.max_query, s.max_ways]),
-            Tensor::new(pseudo.2.clone(), vec![s.max_query]),
+            Tensor::new(pseudo.x.clone(), vec![s.max_query, s.img, s.img, s.channels]),
+            Tensor::new(pseudo.y.clone(), vec![s.max_query, s.max_ways]),
+            Tensor::new(pseudo.v.clone(), vec![s.max_query]),
         ];
         let out = self.fisher_exec()?.run(&inputs)?;
         Ok(FisherOutput { loss: out[0].first(), deltas: out[1].data.clone() })
@@ -96,7 +122,7 @@ impl ModelEngine {
         mask: &[f32],
         lr: f32,
         ep: &PaddedEpisode,
-        pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
+        pseudo: &PseudoQuery,
     ) -> Result<f32> {
         let s = &self.meta.shapes;
         params.t += 1;
@@ -111,9 +137,9 @@ impl ModelEngine {
             Tensor::new(ep.sup_x.clone(), vec![s.max_support, s.img, s.img, s.channels]),
             Tensor::new(ep.sup_y.clone(), vec![s.max_support, s.max_ways]),
             Tensor::new(ep.sup_v.clone(), vec![s.max_support]),
-            Tensor::new(pseudo.0.clone(), vec![s.max_query, s.img, s.img, s.channels]),
-            Tensor::new(pseudo.1.clone(), vec![s.max_query, s.max_ways]),
-            Tensor::new(pseudo.2.clone(), vec![s.max_query]),
+            Tensor::new(pseudo.x.clone(), vec![s.max_query, s.img, s.img, s.channels]),
+            Tensor::new(pseudo.y.clone(), vec![s.max_query, s.max_ways]),
+            Tensor::new(pseudo.v.clone(), vec![s.max_query]),
         ];
         let mut out = self.step_exec()?.run(&inputs)?;
         let loss = out[3].first();
@@ -139,7 +165,8 @@ impl ModelEngine {
 /// device between steps, so each step uploads only the tiny scalars and
 /// downloads only the loss. This is the L3 hot-path optimisation recorded
 /// in EXPERIMENTS.md §Perf (the host round-trip of 3x|theta| floats per
-/// step dominates otherwise).
+/// step dominates otherwise). `DeviceBackend` owns one of these per
+/// episode.
 pub struct DeviceState {
     theta: xla::PjRtBuffer,
     m: xla::PjRtBuffer,
@@ -178,7 +205,7 @@ impl ModelEngine {
     pub fn upload_episode(
         &self,
         ep: &PaddedEpisode,
-        pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
+        pseudo: &PseudoQuery,
     ) -> Result<DeviceEpisode> {
         let s = &self.meta.shapes;
         let mk = |data: &[f32], dims: Vec<usize>| {
@@ -189,9 +216,9 @@ impl ModelEngine {
                 mk(&ep.sup_x, vec![s.max_support, s.img, s.img, s.channels])?,
                 mk(&ep.sup_y, vec![s.max_support, s.max_ways])?,
                 mk(&ep.sup_v, vec![s.max_support])?,
-                mk(&pseudo.0, vec![s.max_query, s.img, s.img, s.channels])?,
-                mk(&pseudo.1, vec![s.max_query, s.max_ways])?,
-                mk(&pseudo.2, vec![s.max_query])?,
+                mk(&pseudo.x, vec![s.max_query, s.img, s.img, s.channels])?,
+                mk(&pseudo.y, vec![s.max_query, s.max_ways])?,
+                mk(&pseudo.v, vec![s.max_query])?,
             ],
         })
     }
@@ -200,14 +227,15 @@ impl ModelEngine {
     pub fn refresh_pseudo(
         &self,
         dev_ep: &mut DeviceEpisode,
-        pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
+        pseudo: &PseudoQuery,
     ) -> Result<()> {
         let s = &self.meta.shapes;
-        dev_ep.bufs[3] =
-            self.rt.to_device(&Tensor::new(pseudo.0.clone(), vec![s.max_query, s.img, s.img, s.channels]))?;
+        dev_ep.bufs[3] = self
+            .rt
+            .to_device(&Tensor::new(pseudo.x.clone(), vec![s.max_query, s.img, s.img, s.channels]))?;
         dev_ep.bufs[4] =
-            self.rt.to_device(&Tensor::new(pseudo.1.clone(), vec![s.max_query, s.max_ways]))?;
-        dev_ep.bufs[5] = self.rt.to_device(&Tensor::new(pseudo.2.clone(), vec![s.max_query]))?;
+            self.rt.to_device(&Tensor::new(pseudo.y.clone(), vec![s.max_query, s.max_ways]))?;
+        dev_ep.bufs[5] = self.rt.to_device(&Tensor::new(pseudo.v.clone(), vec![s.max_query]))?;
         Ok(())
     }
 
@@ -258,17 +286,4 @@ impl ModelEngine {
         anyhow::ensure!(!out.is_empty(), "fwd graph returned no outputs");
         self.rt.to_host(&out[0])
     }
-}
-
-fn get_or_load<'a>(
-    cell: &'a std::cell::OnceCell<Arc<Exec>>,
-    rt: &Runtime,
-    path: &std::path::Path,
-) -> Result<&'a Arc<Exec>> {
-    if let Some(e) = cell.get() {
-        return Ok(e);
-    }
-    let exec = rt.load(path)?;
-    let _ = cell.set(exec);
-    Ok(cell.get().unwrap())
 }

@@ -1,13 +1,34 @@
 //! L3 coordinator — TinyTrain's system contribution.
 //!
-//! Pipeline per deployment (paper Algorithm 1): fisher pass -> multi-
-//! objective scoring (Eq. 3) -> dynamic layer/channel selection under the
-//! device budgets -> channel-masked sparse fine-tuning -> nearest-
-//! centroid evaluation. Baselines share the same loop with different
-//! masks; the offline stage (meta-training, SparseUpdate's evolutionary
-//! search) runs through the same artifacts.
+//! The public API is the **session / backend** pair:
+//!
+//! - [`AdaptationSession`] owns the episode lifecycle of paper
+//!   Algorithm 1 — pseudo-query generation, pre-eval, dynamic selection
+//!   (fisher pass → Eq. 3 multi-objective scoring → budgeted
+//!   layer/channel selection), mask install, the sparse fine-tuning loop
+//!   with pseudo-query refresh, and the query eval — and is built
+//!   builder-style: `AdaptationSession::builder(&engine).method(..)
+//!   .config(..).backend(Backend::Auto).build()?`, then `.adapt(&params,
+//!   &episode)` (or `adapt_with_seed`) per deployment. Sessions borrow
+//!   the engine immutably and hold no episode state, so one engine
+//!   serves any number of sessions; cross-thread sharing waits only on
+//!   a `Send` runtime.
+//! - [`AdaptationBackend`] is the execution boundary underneath: four
+//!   primitives (`step`, `embed`, `fisher`, `sync` + mask/pseudo
+//!   plumbing) with three implementations — [`HostBackend`] (PJRT,
+//!   host round-trip per step), [`DeviceBackend`] (PJRT, device-resident
+//!   theta/Adam state: the measured hot path), and [`AnalyticBackend`]
+//!   (no compiled artifacts; deterministic stand-in so selection and
+//!   accounting logic tests run without PJRT).
+//!
+//! Baselines share the same session with different [`Method`] arms; the
+//! offline stage (meta-training, SparseUpdate's evolutionary search)
+//! runs through the same artifacts. The free functions
+//! `method_selection` / `run_episode` are deprecated shims kept for one
+//! release.
 
 pub mod analysis;
+pub mod backend;
 pub mod criterion;
 pub mod engine;
 pub mod evaluator;
@@ -15,12 +36,19 @@ pub mod fisher;
 pub mod pretrain;
 pub mod search;
 pub mod selection;
+pub mod session;
 pub mod trainer;
 
+pub use backend::{
+    AdaptationBackend, AnalyticBackend, Backend, DeviceBackend, HostBackend,
+};
 pub use criterion::Criterion;
 pub use engine::{FisherOutput, ModelEngine};
 pub use evaluator::episode_accuracy;
 pub use fisher::FisherReport;
 pub use pretrain::{meta_train, PretrainConfig};
 pub use selection::{Budgets, ChannelScheme, Selection};
-pub use trainer::{run_episode, EpisodeResult, Method, StaticPolicy, TrainConfig};
+pub use session::{AdaptationSession, SessionBuilder};
+#[allow(deprecated)]
+pub use trainer::run_episode;
+pub use trainer::{EpisodeResult, Method, StaticPolicy, TrainConfig};

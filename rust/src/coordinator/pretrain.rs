@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use super::engine::ModelEngine;
 use super::evaluator::episode_accuracy;
-use crate::data::{domain_by_name, Sampler};
+use crate::data::{domain_by_name, PseudoQuery, Sampler};
 use crate::model::ParamStore;
 use crate::util::rng::Rng;
 
@@ -65,7 +65,11 @@ pub fn meta_train(
         let ep = sampler.sample(&mut erng);
         let padded = ep.pad(&meta.shapes);
         // Meta-training has real query data (it's offline/source-side).
-        let query = (padded.qry_x.clone(), padded.qry_y.clone(), padded.qry_v.clone());
+        let query = PseudoQuery {
+            x: padded.qry_x.clone(),
+            y: padded.qry_y.clone(),
+            v: padded.qry_v.clone(),
+        };
         let mut last = 0.0;
         for _ in 0..cfg.steps_per_episode {
             last = engine.train_step(params, &mask, cfg.lr, &padded, &query)?;

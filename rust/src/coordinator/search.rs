@@ -12,7 +12,8 @@
 use anyhow::Result;
 
 use super::engine::ModelEngine;
-use super::trainer::{run_episode, Method, StaticPolicy, TrainConfig};
+use super::session::AdaptationSession;
+use super::trainer::{Method, StaticPolicy, TrainConfig};
 use crate::accounting::{backward_memory, Optimizer, UpdatePlan};
 use crate::data::{domain_by_name, Sampler};
 use crate::model::ParamStore;
@@ -114,15 +115,17 @@ fn fitness(
     rng: &mut Rng,
 ) -> Result<f64> {
     let policy = genome_to_policy(g);
-    let method = Method::SparseUpdate(policy);
     let domain = domain_by_name("source").unwrap();
     let sampler = Sampler::new(domain.as_ref(), &engine.meta.shapes);
+    let session = AdaptationSession::builder(engine)
+        .method(Method::SparseUpdate(policy))
+        .config(TrainConfig { steps: cfg.steps, lr: 6e-3, seed: 0 })
+        .build()?;
     let mut total = 0.0;
     for e in 0..cfg.episodes_per_eval {
         let mut erng = rng.fork(e as u64);
         let ep = sampler.sample(&mut erng);
-        let tc = TrainConfig { steps: cfg.steps, lr: 6e-3, seed: erng.next_u64() };
-        let res = run_episode(engine, params, &method, &ep, tc)?;
+        let res = session.adapt_with_seed(params, &ep, erng.next_u64())?;
         total += res.acc_after;
     }
     Ok(total / cfg.episodes_per_eval as f64)
@@ -162,9 +165,9 @@ pub fn evolutionary_search(
 /// a band of deeper layers at ratio 0.25 under a memory budget 1.6x
 /// TinyTrain's (the paper's Table-2 relation) and a backward-compute
 /// reach ~1.8x TinyTrain's fraction — roughly what MCUNetV3's released
-/// policies look like. Pass `mem_budget <= 0` to auto-derive.
-pub fn default_policy(engine: &ModelEngine, mem_budget: f64) -> StaticPolicy {
-    let meta = &engine.meta;
+/// policies look like. Pass `mem_budget <= 0` to auto-derive. Needs
+/// only metadata (no engine/PJRT) — it's pure accounting.
+pub fn default_policy(meta: &crate::model::ModelMeta, mem_budget: f64) -> StaticPolicy {
     let arch = &meta.scaled;
     let n = arch.layers.len();
     let auto = crate::coordinator::Budgets::default().resolve(meta);

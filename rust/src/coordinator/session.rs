@@ -1,0 +1,546 @@
+//! `AdaptationSession`: the coordinator's public face for on-device
+//! adaptation (paper Algorithm 1).
+//!
+//! One session binds a *method* (TinyTrain or a baseline), a *training
+//! config* and a *backend choice*; `adapt` then runs the full episode
+//! lifecycle — pseudo-query generation, pre-adaptation eval, dynamic
+//! selection (fisher pass + Eq. 3 scoring under the budgets), mask
+//! install, the sparse fine-tuning loop with periodic pseudo-query
+//! refresh, and the post-adaptation query eval — returning an
+//! [`EpisodeResult`]. Sessions borrow the engine immutably and keep no
+//! episode state of their own, so one engine can serve any number of
+//! sessions and episodes (sequentially today: the PJRT runtime is
+//! `Rc`-based and `!Send` — cross-thread `Arc<ModelEngine>` sharing
+//! lands when the runtime does, with no change to this API).
+//!
+//! ```no_run
+//! use tinytrain::coordinator::{AdaptationSession, Backend, Method, ModelEngine, TrainConfig};
+//! use tinytrain::data::{domain_by_name, Sampler};
+//! use tinytrain::model::ParamStore;
+//! use tinytrain::runtime::{ArtifactStore, Runtime};
+//! use tinytrain::util::rng::Rng;
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     let rt = Runtime::cpu()?;
+//!     let store = ArtifactStore::discover(None)?;
+//!     let engine = ModelEngine::load(&rt, &store, "mcunet")?;
+//!     let params = ParamStore::load_or_init(&engine.meta, &engine.weights_path, 42);
+//!
+//!     let session = AdaptationSession::builder(&engine)
+//!         .method(Method::tinytrain_default())
+//!         .config(TrainConfig { steps: 10, lr: 6e-3, seed: 1 })
+//!         .backend(Backend::Auto)
+//!         .build()?;
+//!
+//!     let domain = domain_by_name("traffic").unwrap();
+//!     let mut rng = Rng::new(7);
+//!     let episode = Sampler::new(domain.as_ref(), &engine.meta.shapes).sample(&mut rng);
+//!     let result = session.adapt(&params, &episode)?;
+//!     println!("{:.1}% -> {:.1}%", result.acc_before * 100.0, result.acc_after * 100.0);
+//!     Ok(())
+//! }
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{
+    AdaptationBackend, AnalyticBackend, Backend, DeviceBackend, HostBackend,
+};
+use super::engine::ModelEngine;
+use super::evaluator::episode_accuracy;
+use super::fisher::FisherReport;
+use super::trainer::{EpisodeResult, Method, TrainConfig};
+use crate::data::{Episode, PaddedEpisode, PseudoQuery};
+use crate::model::{ModelMeta, ParamStore};
+use crate::util::rng::Rng;
+
+/// Where a session gets its model from: a live engine (PJRT backends
+/// available) or bare metadata (analytic only).
+enum SessionSource<'e> {
+    Engine(&'e ModelEngine),
+    Meta(&'e ModelMeta),
+}
+
+impl SessionSource<'_> {
+    fn meta(&self) -> &ModelMeta {
+        match self {
+            SessionSource::Engine(e) => &e.meta,
+            SessionSource::Meta(m) => m,
+        }
+    }
+}
+
+/// Builder for [`AdaptationSession`]. `method` and `config` are
+/// mandatory; `backend` defaults to [`Backend::Auto`].
+pub struct SessionBuilder<'e> {
+    source: SessionSource<'e>,
+    method: Option<Method>,
+    config: Option<TrainConfig>,
+    backend: Backend,
+}
+
+impl<'e> SessionBuilder<'e> {
+    /// The on-device training method (TinyTrain or a baseline arm).
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = Some(method);
+        self
+    }
+
+    /// Fine-tuning hyper-parameters (steps, lr, seed).
+    pub fn config(mut self, config: TrainConfig) -> Self {
+        self.config = Some(config);
+        self
+    }
+
+    /// Execution backend; `Auto` picks device-resident PJRT when the
+    /// session has an engine, analytic when built from bare metadata.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Validate and assemble the session.
+    pub fn build(self) -> Result<AdaptationSession<'e>> {
+        let method = self
+            .method
+            .ok_or_else(|| anyhow!("AdaptationSession: .method(..) is required"))?;
+        let config = self
+            .config
+            .ok_or_else(|| anyhow!("AdaptationSession: .config(..) is required"))?;
+        if !config.lr.is_finite() || config.lr <= 0.0 {
+            bail!("AdaptationSession: lr must be finite and > 0, got {}", config.lr);
+        }
+        match &method {
+            Method::TinyTrain { ratio, .. } if !(*ratio > 0.0 && *ratio <= 1.0) => {
+                bail!("AdaptationSession: TinyTrain channel ratio must be in (0, 1], got {ratio}")
+            }
+            Method::AdapterDrop(frac) if !(0.0..=1.0).contains(frac) => {
+                bail!("AdaptationSession: AdapterDrop fraction must be in [0, 1], got {frac}")
+            }
+            _ => {}
+        }
+        if matches!(self.source, SessionSource::Meta(_))
+            && matches!(self.backend, Backend::Host | Backend::Device)
+        {
+            bail!(
+                "AdaptationSession: the {:?} backend needs a ModelEngine — \
+                 build with AdaptationSession::builder(&engine), or use Backend::Analytic",
+                self.backend
+            );
+        }
+        Ok(AdaptationSession { source: self.source, method, config, backend: self.backend })
+    }
+}
+
+/// A configured adaptation pipeline: method + config + backend over one
+/// model. See the module docs for the lifecycle it owns.
+pub struct AdaptationSession<'e> {
+    source: SessionSource<'e>,
+    method: Method,
+    config: TrainConfig,
+    backend: Backend,
+}
+
+impl<'e> AdaptationSession<'e> {
+    /// Start building a session over a live engine (all backends).
+    pub fn builder(engine: &'e ModelEngine) -> SessionBuilder<'e> {
+        SessionBuilder {
+            source: SessionSource::Engine(engine),
+            method: None,
+            config: None,
+            backend: Backend::Auto,
+        }
+    }
+
+    /// Start building an artifact-free session over bare metadata: only
+    /// the analytic backend is available, nothing touches PJRT.
+    pub fn analytic(meta: &'e ModelMeta) -> SessionBuilder<'e> {
+        SessionBuilder {
+            source: SessionSource::Meta(meta),
+            method: None,
+            config: None,
+            backend: Backend::Analytic,
+        }
+    }
+
+    pub fn method(&self) -> &Method {
+        &self.method
+    }
+
+    pub fn config(&self) -> TrainConfig {
+        self.config
+    }
+
+    /// `params` is consumed: every backend ends up owning exactly one
+    /// copy of the episode's mutable state (device keeps it as the
+    /// pre-step host mirror), so an episode costs a single clone.
+    fn make_backend(
+        &self,
+        params: ParamStore,
+        padded: PaddedEpisode,
+        pseudo: PseudoQuery,
+    ) -> Result<Box<dyn AdaptationBackend + 'e>> {
+        match &self.source {
+            SessionSource::Engine(engine) => {
+                let engine: &'e ModelEngine = engine;
+                match self.backend {
+                    Backend::Auto | Backend::Device => {
+                        Ok(Box::new(DeviceBackend::new(engine, params, padded, pseudo)?))
+                    }
+                    Backend::Host => {
+                        Ok(Box::new(HostBackend::new(engine, params, padded, pseudo)))
+                    }
+                    Backend::Analytic => {
+                        Ok(Box::new(AnalyticBackend::new(&engine.meta, params, padded, pseudo)))
+                    }
+                }
+            }
+            SessionSource::Meta(meta) => {
+                let meta: &'e ModelMeta = meta;
+                match self.backend {
+                    Backend::Auto | Backend::Analytic => {
+                        Ok(Box::new(AnalyticBackend::new(meta, params, padded, pseudo)))
+                    }
+                    b => Err(anyhow!("backend {b:?} needs a ModelEngine")),
+                }
+            }
+        }
+    }
+
+    /// Run one full on-device adaptation episode (Algorithm 1):
+    /// pre-eval, selection, masked fine-tuning with pseudo-query
+    /// refresh, post-eval. `base` is never mutated — adaptation always
+    /// starts from the deployed weights with a fresh optimiser.
+    pub fn adapt(&self, base: &ParamStore, episode: &Episode) -> Result<EpisodeResult> {
+        self.adapt_with_seed(base, episode, self.config.seed)
+    }
+
+    /// Like [`adapt`](Self::adapt) but with a per-episode seed, so one
+    /// session (method + config + backend) can be built once and reused
+    /// across many episodes that only differ in their randomness.
+    pub fn adapt_with_seed(
+        &self,
+        base: &ParamStore,
+        episode: &Episode,
+        seed: u64,
+    ) -> Result<EpisodeResult> {
+        let meta = self.source.meta();
+        let s = &meta.shapes;
+        let cfg = self.config;
+        let mut rng = Rng::new(seed ^ 0x5eed);
+
+        let padded = episode.pad(s);
+        let pseudo = episode.pseudo_query(s, &mut rng);
+        pseudo.validate(s).map_err(|e| anyhow!("{e}"))?;
+
+        let mut params = base.clone();
+        params.reset_optimizer();
+
+        let mut backend = self.make_backend(params, padded, pseudo)?;
+
+        // Accuracy before adaptation.
+        let emb = backend.embed()?;
+        let acc_before = episode_accuracy(&emb, backend.padded(), s);
+
+        // Selection phase: fisher pass (if the method scores with it) +
+        // Eq. 3 scoring + budgeted layer/channel selection.
+        let t0 = Instant::now();
+        let fisher = if self.method.needs_fisher() {
+            Some(FisherReport::from_flat(meta, &backend.fisher()?.deltas))
+        } else {
+            None
+        };
+        // `base.theta` equals the backend's pre-step theta (the clone
+        // only reset the optimiser moments), so selection can score
+        // weights without keeping a second ParamStore alive.
+        let (mask, plan, selected_layers) =
+            self.method.selection(meta, &base.theta, fisher.as_ref())?;
+        let selection_s = t0.elapsed().as_secs_f64();
+
+        // Sparse fine-tuning loop.
+        let t0 = Instant::now();
+        let mut losses = Vec::new();
+        if plan.any_update() {
+            backend.set_mask(&mask)?;
+            for step in 0..cfg.steps {
+                // Fresh pseudo-query augmentation every few steps.
+                if step % 4 == 0 && step > 0 {
+                    backend.refresh_pseudo(episode.pseudo_query(s, &mut rng))?;
+                }
+                losses.push(backend.step(cfg.lr)?);
+            }
+        }
+        let train_s = t0.elapsed().as_secs_f64();
+
+        let emb = backend.embed()?;
+        let acc_after = episode_accuracy(&emb, backend.padded(), s);
+
+        Ok(EpisodeResult {
+            method: self.method.label(),
+            domain: episode.domain.clone(),
+            backend: backend.name(),
+            acc_before,
+            acc_after: if matches!(self.method, Method::None) { acc_before } else { acc_after },
+            losses,
+            selection_s,
+            train_s,
+            plan,
+            selected_layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Budgets, ChannelScheme, Criterion};
+    use crate::data::Sample;
+    use crate::model::{ArchFlavor, EpisodeShapes, FisherSegment, LayerInfo, ParamEntry};
+
+    /// Two-conv synthetic architecture, fully consistent between the
+    /// layer table, the theta packing and the fisher segments — enough
+    /// for a complete analytic episode without any artifacts on disk.
+    fn tiny_meta() -> ModelMeta {
+        let layer = |name: &str, cin: usize, cout: usize| LayerInfo {
+            name: name.into(),
+            kind: "pw".into(),
+            cin,
+            cout,
+            k: 1,
+            stride: 1,
+            act: true,
+            in_hw: 4,
+            out_hw: 4,
+            block: -1,
+            weight_params: cin * cout,
+            params: cin * cout + 2 * cout,
+            macs: 4 * 4 * cin * cout,
+            act_elems: 4 * 4 * cout,
+        };
+        let entry = |name: &str, shape: Vec<usize>, offset: usize, role: &str, l: usize| {
+            let size = shape.iter().product();
+            ParamEntry {
+                name: name.into(),
+                shape,
+                offset,
+                size,
+                role: role.into(),
+                layer: l,
+                mask_axis: 0,
+            }
+        };
+        ModelMeta {
+            arch: "tiny2".into(),
+            scaled: ArchFlavor {
+                img: 4,
+                feat_dim: 4,
+                layers: vec![layer("conv0", 3, 4), layer("head", 4, 4)],
+                blocks: vec![],
+                total_params: 44,
+                total_macs: 16 * 12 + 16 * 16,
+            },
+            paper: ArchFlavor {
+                img: 4,
+                feat_dim: 4,
+                layers: vec![],
+                blocks: vec![],
+                total_params: 44,
+                total_macs: 0,
+            },
+            entries: vec![
+                entry("conv0.w", vec![1, 1, 3, 4], 0, "weight", 0),
+                entry("conv0.gamma", vec![4], 12, "gamma", 0),
+                entry("conv0.beta", vec![4], 16, "beta", 0),
+                entry("head.w", vec![1, 1, 4, 4], 20, "weight", 1),
+                entry("head.gamma", vec![4], 36, "gamma", 1),
+                entry("head.beta", vec![4], 40, "beta", 1),
+            ],
+            total_theta: 44,
+            fisher_len: 8,
+            fisher_segments: vec![
+                FisherSegment { layer: 0, name: "conv0".into(), offset: 0, size: 4 },
+                FisherSegment { layer: 1, name: "head".into(), offset: 4, size: 4 },
+            ],
+            shapes: EpisodeShapes {
+                img: 4,
+                channels: 3,
+                max_ways: 2,
+                max_support: 4,
+                max_query: 4,
+                eval_batch: 8,
+                feat_dim: 4,
+                cosine_tau: 10.0,
+            },
+        }
+    }
+
+    fn tiny_episode() -> Episode {
+        let img_len = 4 * 4 * 3;
+        let img = |v: f32| (0..img_len).map(|i| v * ((i % 5) as f32 - 2.0) / 2.0).collect();
+        let sample = |v: f32, label: usize| Sample { image: img(v), label };
+        Episode {
+            domain: "synthetic".into(),
+            ways: 2,
+            class_ids: vec![0, 1],
+            shots: vec![2, 2],
+            support: vec![sample(1.0, 0), sample(0.9, 0), sample(-1.0, 1), sample(-0.8, 1)],
+            query: vec![sample(1.1, 0), sample(0.8, 0), sample(-1.1, 1), sample(-0.9, 1)],
+        }
+    }
+
+    fn tinytrain_loose() -> Method {
+        // Budgets wide enough that the tiny arch fits (the AUTO budget
+        // is tuned for mcunet-class layer tables).
+        Method::TinyTrain {
+            criterion: Criterion::MultiObjective,
+            scheme: ChannelScheme::Fisher,
+            budgets: Budgets { mem_bytes: 1e6, compute_frac: 1.0 },
+            ratio: 0.5,
+        }
+    }
+
+    #[test]
+    fn builder_requires_method_and_config() {
+        let meta = tiny_meta();
+        let err = AdaptationSession::analytic(&meta)
+            .config(TrainConfig::default())
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains(".method("), "{err}");
+        let err = AdaptationSession::analytic(&meta)
+            .method(Method::tinytrain_default())
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains(".config("), "{err}");
+    }
+
+    #[test]
+    fn builder_validates_hyperparameters() {
+        let meta = tiny_meta();
+        let bad_lr = AdaptationSession::analytic(&meta)
+            .method(Method::LastLayer)
+            .config(TrainConfig { steps: 1, lr: -1.0, seed: 0 })
+            .build();
+        assert!(bad_lr.is_err());
+        let bad_ratio = AdaptationSession::analytic(&meta)
+            .method(Method::TinyTrain {
+                criterion: Criterion::MultiObjective,
+                scheme: ChannelScheme::Fisher,
+                budgets: Budgets::default(),
+                ratio: 0.0,
+            })
+            .config(TrainConfig::default())
+            .build();
+        assert!(bad_ratio.is_err());
+        let bad_frac = AdaptationSession::analytic(&meta)
+            .method(Method::AdapterDrop(1.5))
+            .config(TrainConfig::default())
+            .build();
+        assert!(bad_frac.is_err());
+    }
+
+    #[test]
+    fn builder_rejects_pjrt_backends_without_engine() {
+        let meta = tiny_meta();
+        for b in [Backend::Host, Backend::Device] {
+            let err = AdaptationSession::analytic(&meta)
+                .method(Method::LastLayer)
+                .config(TrainConfig::default())
+                .backend(b)
+                .build()
+                .unwrap_err();
+            assert!(err.to_string().contains("ModelEngine"), "{err}");
+        }
+    }
+
+    #[test]
+    fn analytic_full_episode_lifecycle() {
+        let meta = tiny_meta();
+        let params = ParamStore::init(&meta, 1);
+        let episode = tiny_episode();
+        let session = AdaptationSession::analytic(&meta)
+            .method(tinytrain_loose())
+            .config(TrainConfig { steps: 6, lr: 0.01, seed: 3 })
+            .build()
+            .unwrap();
+        let res = session.adapt(&params, &episode).unwrap();
+        assert_eq!(res.backend, "analytic");
+        assert_eq!(res.domain, "synthetic");
+        assert!(!res.selected_layers.is_empty(), "selection picked nothing");
+        assert!(res.plan.any_update());
+        assert_eq!(res.losses.len(), 6);
+        assert!(
+            res.losses.windows(2).all(|w| w[1] <= w[0]),
+            "analytic loss must decrease: {:?}",
+            res.losses
+        );
+        assert!((0.0..=1.0).contains(&res.acc_before));
+        assert!((0.0..=1.0).contains(&res.acc_after));
+        // deterministic: same session + inputs -> same result
+        let res2 = session.adapt(&params, &episode).unwrap();
+        assert_eq!(res.losses, res2.losses);
+        assert_eq!(res.selected_layers, res2.selected_layers);
+    }
+
+    #[test]
+    fn analytic_none_method_is_a_no_op() {
+        let meta = tiny_meta();
+        let params = ParamStore::init(&meta, 2);
+        let episode = tiny_episode();
+        let res = AdaptationSession::analytic(&meta)
+            .method(Method::None)
+            .config(TrainConfig { steps: 4, lr: 0.01, seed: 1 })
+            .build()
+            .unwrap()
+            .adapt(&params, &episode)
+            .unwrap();
+        assert_eq!(res.acc_before, res.acc_after);
+        assert!(res.losses.is_empty());
+        assert!(res.selected_layers.is_empty());
+    }
+
+    #[test]
+    fn analytic_backend_masked_step_freezes_unselected() {
+        use crate::coordinator::backend::{AdaptationBackend, AnalyticBackend};
+        let meta = tiny_meta();
+        let params = ParamStore::init(&meta, 7);
+        let episode = tiny_episode();
+        let s = &meta.shapes;
+        let mut rng = Rng::new(4);
+        let padded = episode.pad(s);
+        let pseudo = episode.pseudo_query(s, &mut rng);
+        let mut b = AnalyticBackend::new(&meta, params.clone(), padded, pseudo);
+        // mask: head layer only (offset 20..44)
+        let mut mask = vec![0.0f32; meta.total_theta];
+        mask[20..44].fill(1.0);
+        assert!(b.step(0.1).is_err(), "step before set_mask must fail");
+        b.set_mask(&mask).unwrap();
+        b.step(0.1).unwrap();
+        let after = b.sync().unwrap();
+        assert_eq!(after.theta[..20], params.theta[..20], "frozen params moved");
+        assert!(
+            after.theta[20..44] != params.theta[20..44],
+            "selected params did not move"
+        );
+    }
+
+    #[test]
+    fn analytic_fisher_matches_segment_layout() {
+        use crate::coordinator::backend::{AdaptationBackend, AnalyticBackend};
+        let meta = tiny_meta();
+        let params = ParamStore::init(&meta, 9);
+        let episode = tiny_episode();
+        let s = &meta.shapes;
+        let mut rng = Rng::new(5);
+        let mut b =
+            AnalyticBackend::new(&meta, params, episode.pad(s), episode.pseudo_query(s, &mut rng));
+        let out = b.fisher().unwrap();
+        assert_eq!(out.deltas.len(), meta.fisher_len);
+        assert!(out.deltas.iter().all(|&d| d > 0.0), "fisher must be positive");
+        let report = FisherReport::from_flat(&meta, &out.deltas);
+        assert_eq!(report.deltas.len(), 2);
+        assert_eq!(report.deltas[0].len(), 4);
+    }
+}

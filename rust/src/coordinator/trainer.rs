@@ -1,7 +1,8 @@
-//! The on-device adaptation loop (paper Algorithm 1) for TinyTrain and
-//! every baseline. One `run_episode` call = deploy to a new task:
-//! (optionally) fisher-select, build the update mask, fine-tune `steps`
-//! iterations on the support set, evaluate on the query set.
+//! Training methods (paper Sec 3.1 baselines + TinyTrain), their mask /
+//! plan builders, and the episode hyper-parameters. The adaptation loop
+//! itself (Algorithm 1) lives in [`super::session::AdaptationSession`];
+//! the free functions `method_selection` / `run_episode` remain only as
+//! deprecated shims over it.
 
 use std::time::Instant;
 
@@ -9,13 +10,11 @@ use anyhow::Result;
 
 use super::criterion::Criterion;
 use super::engine::ModelEngine;
-use super::evaluator::episode_accuracy;
 use super::fisher::FisherReport;
 use super::selection::{run_selection, Budgets, ChannelScheme, Selection};
 use crate::accounting::{Optimizer, UpdatePlan};
-use crate::data::Episode;
-use crate::model::ParamStore;
-use crate::util::rng::Rng;
+use crate::data::{Episode, PseudoQuery};
+use crate::model::{ModelMeta, ParamStore};
 
 /// On-device training methods (paper Sec 3.1 baselines + ours).
 #[derive(Debug, Clone, PartialEq)]
@@ -70,6 +69,75 @@ impl Method {
             }
         }
     }
+
+    /// Whether this method's selection phase scores with a fisher pass
+    /// (Eq. 2) — drives whether the session runs `backend.fisher()`.
+    pub fn needs_fisher(&self) -> bool {
+        matches!(
+            self,
+            Method::TinyTrain { criterion, scheme, .. }
+                if criterion.needs_fisher() || *scheme == ChannelScheme::Fisher
+        )
+    }
+
+    /// Build the update mask + analytic plan + selected layer list for
+    /// this method. Pure given its inputs: the fisher report (when
+    /// [`Method::needs_fisher`]) is computed by the caller's backend.
+    pub fn selection(
+        &self,
+        meta: &ModelMeta,
+        theta: &[f32],
+        fisher: Option<&FisherReport>,
+    ) -> Result<(Vec<f32>, UpdatePlan, Vec<usize>)> {
+        let n_layers = meta.scaled.layers.len();
+        let n_blocks = meta.scaled.blocks.len();
+        Ok(match self {
+            Method::None => (
+                vec![0.0; meta.total_theta],
+                UpdatePlan::frozen(n_layers, n_blocks),
+                vec![],
+            ),
+            Method::FullTrain => {
+                let (mask, plan) = full_train_mask(meta);
+                (mask, plan, (0..n_layers).collect())
+            }
+            Method::LastLayer => {
+                let (mask, plan) = last_layer_mask(meta);
+                (mask, plan, vec![meta.head_layer()])
+            }
+            Method::TinyTl | Method::AdapterDrop(_) => {
+                let frac = if let Method::AdapterDrop(f) = self { *f } else { 0.0 };
+                let (mask, plan) = adapter_mask(meta, frac);
+                (mask, plan, vec![meta.head_layer()])
+            }
+            Method::SparseUpdate(policy) => {
+                let (mask, plan) = static_policy_mask(meta, policy);
+                let layers = policy.layer_ratios.iter().map(|&(l, _)| l).collect();
+                (mask, plan, layers)
+            }
+            Method::TinyTrain { criterion, scheme, budgets, ratio } => {
+                anyhow::ensure!(
+                    !self.needs_fisher() || fisher.is_some(),
+                    "TinyTrain selection with {:?}/{:?} needs a fisher report",
+                    criterion,
+                    scheme
+                );
+                let sel: Selection = run_selection(
+                    meta,
+                    *criterion,
+                    fisher,
+                    theta,
+                    *budgets,
+                    *ratio,
+                    *scheme,
+                    Optimizer::Adam,
+                );
+                let plan = sel.plan(meta);
+                let mask = sel.mask(meta);
+                (mask, plan, sel.layers)
+            }
+        })
+    }
 }
 
 /// A static sparse-update policy: (layer, channel-ratio) pairs — what the
@@ -100,6 +168,8 @@ impl Default for TrainConfig {
 pub struct EpisodeResult {
     pub method: String,
     pub domain: String,
+    /// Which `AdaptationBackend` ran the episode (host/device/analytic).
+    pub backend: &'static str,
     pub acc_before: f64,
     pub acc_after: f64,
     pub losses: Vec<f32>,
@@ -114,6 +184,7 @@ pub struct EpisodeResult {
 
 /// Build the update mask + plan for a method (running the fisher pass if
 /// the method needs one). Returns (mask, plan, selected_layers, sel_time).
+#[deprecated(note = "use Method::selection (the fisher pass comes from an AdaptationBackend)")]
 pub fn method_selection(
     engine: &ModelEngine,
     method: &Method,
@@ -121,58 +192,20 @@ pub fn method_selection(
     ep: &crate::data::PaddedEpisode,
     pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
 ) -> Result<(Vec<f32>, UpdatePlan, Vec<usize>, f64)> {
-    let meta = &engine.meta;
-    let n_layers = meta.scaled.layers.len();
-    let n_blocks = meta.scaled.blocks.len();
     let t0 = Instant::now();
-
-    let out = match method {
-        Method::None => (vec![0.0; meta.total_theta], UpdatePlan::frozen(n_layers, n_blocks), vec![]),
-        Method::FullTrain => {
-            let (mask, plan) = full_train_mask(meta);
-            (mask, plan, (0..n_layers).collect())
-        }
-        Method::LastLayer => {
-            let (mask, plan) = last_layer_mask(meta);
-            (mask, plan, vec![meta.head_layer()])
-        }
-        Method::TinyTl | Method::AdapterDrop(_) => {
-            let frac = if let Method::AdapterDrop(f) = method { *f } else { 0.0 };
-            let (mask, plan) = adapter_mask(meta, frac);
-            (mask, plan, vec![meta.head_layer()])
-        }
-        Method::SparseUpdate(policy) => {
-            let (mask, plan) = static_policy_mask(meta, policy);
-            let layers = policy.layer_ratios.iter().map(|&(l, _)| l).collect();
-            (mask, plan, layers)
-        }
-        Method::TinyTrain { criterion, scheme, budgets, ratio } => {
-            let fisher = if criterion.needs_fisher() || *scheme == ChannelScheme::Fisher {
-                let out = engine.fisher_pass(params, ep, pseudo)?;
-                Some(FisherReport::from_flat(meta, &out.deltas))
-            } else {
-                None
-            };
-            let sel: Selection = run_selection(
-                meta,
-                *criterion,
-                fisher.as_ref(),
-                &params.theta,
-                *budgets,
-                *ratio,
-                *scheme,
-                Optimizer::Adam,
-            );
-            let plan = sel.plan(meta);
-            let mask = sel.mask(meta);
-            (mask, plan, sel.layers)
-        }
+    let fisher = if method.needs_fisher() {
+        let pq = PseudoQuery { x: pseudo.0.clone(), y: pseudo.1.clone(), v: pseudo.2.clone() };
+        let out = engine.fisher_pass(params, ep, &pq)?;
+        Some(FisherReport::from_flat(&engine.meta, &out.deltas))
+    } else {
+        None
     };
-    let dt = t0.elapsed().as_secs_f64();
-    Ok((out.0, out.1, out.2, dt))
+    let (mask, plan, layers) = method.selection(&engine.meta, &params.theta, fisher.as_ref())?;
+    Ok((mask, plan, layers, t0.elapsed().as_secs_f64()))
 }
 
 /// Run one full on-device adaptation episode (Algorithm 1).
+#[deprecated(note = "use AdaptationSession::builder(..).method(..).config(..).build()?.adapt(..)")]
 pub fn run_episode(
     engine: &ModelEngine,
     base_params: &ParamStore,
@@ -180,58 +213,12 @@ pub fn run_episode(
     episode: &Episode,
     cfg: TrainConfig,
 ) -> Result<EpisodeResult> {
-    let meta = &engine.meta;
-    let s = &meta.shapes;
-    let mut rng = Rng::new(cfg.seed ^ 0x5eed);
-    let padded = episode.pad(s);
-    let pseudo = episode.pseudo_query(s, &mut rng);
-
-    let mut params = base_params.clone();
-    params.reset_optimizer();
-
-    // Device-resident state: theta/m/v stay on the PJRT device across the
-    // whole episode; only scalars and the small episode tensors move
-    // (EXPERIMENTS.md §Perf).
-    let mut state = engine.upload_state(&params)?;
-    let mut dev_ep = engine.upload_episode(&padded, &pseudo)?;
-
-    // Accuracy before adaptation.
-    let emb = engine.embed_device(&state, engine.eval_batch(&padded))?;
-    let acc_before = episode_accuracy(&emb.data, &padded, s);
-
-    let (mask, plan, selected_layers, selection_s) =
-        method_selection(engine, method, &params, &padded, &pseudo)?;
-
-    let t0 = Instant::now();
-    let mut losses = Vec::new();
-    if plan.any_update() {
-        let mask_buf = engine.upload_mask(&mask)?;
-        for step in 0..cfg.steps {
-            // Fresh pseudo-query augmentation every few steps.
-            if step % 4 == 0 && step > 0 {
-                let pq = episode.pseudo_query(s, &mut rng);
-                engine.refresh_pseudo(&mut dev_ep, &pq)?;
-            }
-            let loss = engine.train_step_device(&mut state, &mask_buf, cfg.lr, &dev_ep)?;
-            losses.push(loss);
-        }
-    }
-    let train_s = t0.elapsed().as_secs_f64();
-
-    let emb = engine.embed_device(&state, engine.eval_batch(&padded))?;
-    let acc_after = episode_accuracy(&emb.data, &padded, s);
-
-    Ok(EpisodeResult {
-        method: method.label(),
-        domain: episode.domain.clone(),
-        acc_before,
-        acc_after: if matches!(method, Method::None) { acc_before } else { acc_after },
-        losses,
-        selection_s,
-        train_s,
-        plan,
-        selected_layers,
-    })
+    super::session::AdaptationSession::builder(engine)
+        .method(method.clone())
+        .config(cfg)
+        .backend(super::backend::Backend::Auto)
+        .build()?
+        .adapt(base_params, episode)
 }
 
 // ---------------------------------------------------------------------------
@@ -374,5 +361,20 @@ mod tests {
         assert_eq!(Method::None.label(), "None");
         assert_eq!(Method::AdapterDrop(0.25).label(), "AdapterDrop-25%");
         assert_eq!(Method::tinytrain_default().label(), "TinyTrain (Ours)");
+    }
+
+    #[test]
+    fn needs_fisher_only_for_fisher_scored_tinytrain() {
+        assert!(Method::tinytrain_default().needs_fisher());
+        assert!(!Method::None.needs_fisher());
+        assert!(!Method::FullTrain.needs_fisher());
+        assert!(!Method::SparseUpdate(StaticPolicy::default()).needs_fisher());
+        let l2_static = Method::TinyTrain {
+            criterion: Criterion::L2Norm,
+            scheme: ChannelScheme::L2Norm,
+            budgets: Budgets::default(),
+            ratio: 0.5,
+        };
+        assert!(!l2_static.needs_fisher());
     }
 }

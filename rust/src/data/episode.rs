@@ -32,6 +32,55 @@ pub struct Episode {
     pub query: Vec<Sample>,
 }
 
+/// Pseudo-query tensors for on-device fine-tuning (Hu et al., 2022):
+/// augmented copies of the support images, padded to the static
+/// `max_query` shape. Replaces the `(x, y, v)` tuple that used to be
+/// threaded through the engine and trainer.
+#[derive(Debug, Clone)]
+pub struct PseudoQuery {
+    /// Images, `(max_query, img, img, channels)` row-major.
+    pub x: Vec<f32>,
+    /// One-hot labels, `(max_query, max_ways)`.
+    pub y: Vec<f32>,
+    /// Validity mask, `(max_query,)` — 0 on padded rows.
+    pub v: Vec<f32>,
+}
+
+impl PseudoQuery {
+    /// Check the flat buffers against the episode shape constants. The
+    /// AOT graphs have static shapes, so a mismatch here means a crash
+    /// (or silent garbage) inside PJRT — fail early instead.
+    pub fn validate(&self, s: &EpisodeShapes) -> Result<(), String> {
+        let img_len = s.img * s.img * s.channels;
+        if self.x.len() != s.max_query * img_len {
+            return Err(format!(
+                "pseudo-query x has {} floats, expected {} ({}x{}x{}x{})",
+                self.x.len(),
+                s.max_query * img_len,
+                s.max_query,
+                s.img,
+                s.img,
+                s.channels
+            ));
+        }
+        if self.y.len() != s.max_query * s.max_ways {
+            return Err(format!(
+                "pseudo-query y has {} floats, expected {}",
+                self.y.len(),
+                s.max_query * s.max_ways
+            ));
+        }
+        if self.v.len() != s.max_query {
+            return Err(format!(
+                "pseudo-query v has {} floats, expected {}",
+                self.v.len(),
+                s.max_query
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Episode padded to the AOT graphs' static shapes.
 #[derive(Debug, Clone)]
 pub struct PaddedEpisode {
@@ -140,23 +189,25 @@ impl Episode {
     /// Pseudo-query set for fine-tuning (Hu et al., 2022): augmented
     /// copies of the *support* images — the only labelled data available
     /// on-device. Augmentations: horizontal flip, +-2px shift, noise.
-    pub fn pseudo_query(&self, s: &EpisodeShapes, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    pub fn pseudo_query(&self, s: &EpisodeShapes, rng: &mut Rng) -> PseudoQuery {
         let img_len = s.img * s.img * s.channels;
         let cap = s.max_query;
         let mut x = vec![0.0f32; cap * img_len];
         let mut y = vec![0.0f32; cap * s.max_ways];
         let mut v = vec![0.0f32; cap];
         if self.support.is_empty() {
-            return (x, y, v);
+            return PseudoQuery { x, y, v };
         }
-        for i in 0..cap.min(self.support.len().max(cap)) {
+        // Every pseudo row is filled: support images are sampled with
+        // replacement, so a short support set still yields `cap` rows.
+        for i in 0..cap {
             let src = &self.support[rng.below(self.support.len())];
             let aug = augment(&src.image, s.img, s.channels, rng);
             x[i * img_len..(i + 1) * img_len].copy_from_slice(&aug);
             y[i * s.max_ways + src.label] = 1.0;
             v[i] = 1.0;
         }
-        (x, y, v)
+        PseudoQuery { x, y, v }
     }
 }
 
@@ -261,11 +312,12 @@ mod tests {
         let d = Traffic;
         let mut rng = Rng::new(5);
         let ep = Sampler::new(&d, &s).sample(&mut rng);
-        let (_, y, v) = ep.pseudo_query(&s, &mut rng);
+        let pq = ep.pseudo_query(&s, &mut rng);
+        pq.validate(&s).unwrap();
         for i in 0..s.max_query {
-            let row = &y[i * s.max_ways..(i + 1) * s.max_ways];
+            let row = &pq.y[i * s.max_ways..(i + 1) * s.max_ways];
             let row_sum: f32 = row.iter().sum();
-            assert_eq!(row_sum, v[i]);
+            assert_eq!(row_sum, pq.v[i]);
             // labels only within sampled ways
             for (w, &val) in row.iter().enumerate() {
                 if val > 0.0 {
@@ -273,6 +325,24 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pseudo_query_validate_catches_shape_drift() {
+        let s = shapes();
+        let d = Traffic;
+        let mut rng = Rng::new(6);
+        let ep = Sampler::new(&d, &s).sample(&mut rng);
+        let mut pq = ep.pseudo_query(&s, &mut rng);
+        assert!(pq.validate(&s).is_ok());
+        pq.x.pop();
+        assert!(pq.validate(&s).unwrap_err().contains("pseudo-query x"));
+        let mut pq = ep.pseudo_query(&s, &mut rng);
+        pq.y.push(0.0);
+        assert!(pq.validate(&s).unwrap_err().contains("pseudo-query y"));
+        let mut pq = ep.pseudo_query(&s, &mut rng);
+        pq.v.clear();
+        assert!(pq.validate(&s).unwrap_err().contains("pseudo-query v"));
     }
 
     #[test]

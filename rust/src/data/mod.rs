@@ -10,5 +10,5 @@ pub mod raster;
 pub mod stats;
 
 pub use domains::{all_domains, domain_by_name, Domain, DOMAIN_NAMES};
-pub use episode::{augment, Episode, PaddedEpisode, Sampler, Sample};
+pub use episode::{augment, Episode, PaddedEpisode, PseudoQuery, Sampler, Sample};
 pub use stats::{domain_stats, mean_sd, DomainStats};

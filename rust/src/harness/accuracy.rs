@@ -6,7 +6,7 @@ use anyhow::Result;
 use super::Ctx;
 use crate::accounting::{backward_macs, backward_memory, Optimizer};
 use crate::coordinator::{
-    run_episode, Budgets, ChannelScheme, Criterion, Method, ModelEngine, TrainConfig,
+    AdaptationSession, Budgets, ChannelScheme, Criterion, Method, ModelEngine, TrainConfig,
 };
 use crate::data::{domain_by_name, Sampler};
 use crate::metrics::{aggregate, fmt_pct, Table};
@@ -24,12 +24,15 @@ pub fn eval_cell(
     let d = domain_by_name(domain).ok_or_else(|| anyhow::anyhow!("unknown domain {domain}"))?;
     let sampler = Sampler::new(d.as_ref(), &engine.meta.shapes);
     let mut rng = Rng::new(ctx.seed ^ fxhash(domain));
+    let session = AdaptationSession::builder(engine)
+        .method(method.clone())
+        .config(TrainConfig { steps: ctx.steps, lr: ctx.lr, seed: 0 })
+        .build()?;
     let mut results = Vec::new();
     for e in 0..ctx.episodes {
         let mut erng = rng.fork(e as u64);
         let ep = sampler.sample(&mut erng);
-        let tc = TrainConfig { steps: ctx.steps, lr: ctx.lr, seed: erng.next_u64() };
-        results.push(run_episode(engine, params, method, &ep, tc)?);
+        results.push(session.adapt_with_seed(params, &ep, erng.next_u64())?);
     }
     Ok(aggregate(&results))
 }
@@ -157,7 +160,11 @@ pub fn fig1(ctx: &Ctx) -> Result<()> {
                     let mut rng = Rng::new(1);
                     let ep = Sampler::new(d.as_ref(), &engine.meta.shapes).sample(&mut rng);
                     let tc = TrainConfig { steps: 1, lr: ctx.lr, seed: 3 };
-                    plan = Some(run_episode(&engine, &params, &method, &ep, tc)?.plan);
+                    let session = AdaptationSession::builder(&engine)
+                        .method(method.clone())
+                        .config(tc)
+                        .build()?;
+                    plan = Some(session.adapt(&params, &ep)?.plan);
                 }
             }
             let avg = sum / ctx.domains.len() as f64;

@@ -94,7 +94,7 @@ impl Ctx {
     /// search artifact if present, else the MCUNetV3-like default.
     pub fn sparse_policy(&self, engine: &ModelEngine) -> StaticPolicy {
         let path = self.store.dir.join(format!("sparse_policy_{}.json", engine.meta.arch));
-        search::load_policy(&path).unwrap_or_else(|_| search::default_policy(engine, 0.0))
+        search::load_policy(&path).unwrap_or_else(|_| search::default_policy(&engine.meta, 0.0))
     }
 
     /// The standard six-method comparison set (Table 1).

@@ -3,11 +3,25 @@
 //! stack (see DESIGN.md).
 //!
 //! Layer map:
-//! - L3 (this crate): on-device training coordinator — episodes, Fisher
-//!   aggregation, the multi-objective criterion, dynamic layer/channel
-//!   selection, sparse fine-tuning, baselines, accounting, device sim.
+//! - L3 (this crate): the on-device training coordinator. Its public
+//!   surface is the session/backend pair in [`coordinator`]:
+//!   `AdaptationSession` (builder-style; owns the Algorithm-1 episode
+//!   lifecycle: selection → mask → sparse fine-tuning with pseudo-query
+//!   refresh → query eval) over the `AdaptationBackend` trait, whose
+//!   impls are `HostBackend` / `DeviceBackend` (PJRT: host round-trip
+//!   vs. device-resident state — the measured hot path) and
+//!   `AnalyticBackend` (artifact-free, for selection/accounting logic
+//!   without PJRT). Around it: episodic data ([`data`]), Fisher
+//!   aggregation + the multi-objective criterion + budgeted selection
+//!   ([`coordinator`]), analytic memory/compute accounting
+//!   ([`accounting`]), device latency simulation ([`devices`]) and the
+//!   experiment harness ([`harness`]).
 //! - L2/L1 (python/compile, build-time only): JAX backbones + Pallas
-//!   kernels, AOT-lowered to the HLO artifacts `runtime` executes.
+//!   kernels, AOT-lowered to the HLO artifacts [`runtime`] executes.
+//!
+//! Tier-1 verification is `rust/ci.sh` (fmt + clippy + build + test);
+//! PJRT-dependent integration tests self-skip when the workspace is
+//! built against the stub `xla` backend in `vendor/`.
 
 pub mod accounting;
 pub mod coordinator;

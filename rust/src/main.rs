@@ -12,11 +12,12 @@
 use anyhow::{anyhow, Result};
 
 use tinytrain::coordinator::{
-    self, meta_train, search, Method, ModelEngine, PretrainConfig, TrainConfig,
+    meta_train, search, AdaptationSession, Backend, Method, ModelEngine, PretrainConfig,
+    TrainConfig,
 };
-use tinytrain::data::{domain_by_name, Sampler};
+use tinytrain::data::{domain_by_name, Episode, Sampler};
 use tinytrain::harness::{self};
-use tinytrain::model::ParamStore;
+use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::runtime::{ArtifactStore, Runtime};
 use tinytrain::util::cli::Args;
 use tinytrain::util::rng::Rng;
@@ -56,6 +57,7 @@ USAGE:
   tinytrain pretrain --arch mcunet [--episodes 60] [--steps 4] [--lr 0.003]
   tinytrain search   --arch mcunet [--population 8] [--generations 4]
   tinytrain adapt    --arch mcunet --domain traffic [--method tinytrain] [--steps 10]
+                     [--backend auto|host|device|analytic]
   tinytrain exp      <table1|table2|table3|table4|table5|table7|table8|table9|table10|
                       table11|fig1|fig3|fig4|fig5|fig6a|fig6b|all|all-analytic>
                      [--tier smoke|full|paper] [--arch a,b] [--episodes N] [--steps N]
@@ -132,31 +134,62 @@ fn run_search(args: &Args) -> Result<()> {
 
 /// One on-device adaptation episode (demo of Algorithm 1).
 fn adapt(args: &Args) -> Result<()> {
-    let (_rt, store, engine) = load_engine(args)?;
-    let params = ParamStore::load_or_init(&engine.meta, &engine.weights_path, 42);
+    let backend = parse_backend(&args.str("backend", "auto"))?;
+    let store = ArtifactStore::discover(args.opt("artifacts"))?;
+    let arch = args.str("arch", "mcunet");
     let domain_name = args.str("domain", "traffic");
     let domain =
         domain_by_name(&domain_name).ok_or_else(|| anyhow!("unknown domain {domain_name}"))?;
-    let method = parse_method(&args.str("method", "tinytrain"), &store, &engine)?;
     let mut rng = Rng::new(args.u64("seed", 1));
+    let tc = TrainConfig {
+        steps: args.usize("steps", 10),
+        lr: args.f64("lr", 6e-3) as f32,
+        seed: 0, // per-episode seed passed to adapt_with_seed below
+    };
+
+    // The analytic backend is artifact-light: it needs only the metadata
+    // JSON — no PJRT client, no compiled graphs — so don't build either.
+    if backend == Backend::Analytic {
+        let arts = store.model(&arch);
+        let meta = ModelMeta::load(&arts.meta)?;
+        let params = ParamStore::load_or_init(&meta, &arts.weights, 42);
+        let method = parse_method(&args.str("method", "tinytrain"), &store, &meta)?;
+        let ep = Sampler::new(domain.as_ref(), &meta.shapes).sample(&mut rng);
+        announce_episode(&meta.arch, &domain_name, &ep);
+        let session = AdaptationSession::analytic(&meta).method(method).config(tc).build()?;
+        return report_episode(session.adapt_with_seed(&params, &ep, rng.next_u64())?);
+    }
+
+    let rt = Runtime::cpu()?;
+    let engine = ModelEngine::load(&rt, &store, &arch)?;
+    let params = ParamStore::load_or_init(&engine.meta, &engine.weights_path, 42);
+    let method = parse_method(&args.str("method", "tinytrain"), &store, &engine.meta)?;
     let ep = Sampler::new(domain.as_ref(), &engine.meta.shapes).sample(&mut rng);
+    announce_episode(&engine.meta.arch, &domain_name, &ep);
+    let session = AdaptationSession::builder(&engine)
+        .method(method)
+        .config(tc)
+        .backend(backend)
+        .build()?;
+    report_episode(session.adapt_with_seed(&params, &ep, rng.next_u64())?)
+}
+
+fn announce_episode(arch: &str, domain_name: &str, ep: &Episode) {
     eprintln!(
         "adapting {} to {}: {} ways, {} support, {} query",
-        engine.meta.arch,
+        arch,
         domain_name,
         ep.ways,
         ep.support.len(),
         ep.query.len()
     );
-    let tc = TrainConfig {
-        steps: args.usize("steps", 10),
-        lr: args.f64("lr", 6e-3) as f32,
-        seed: rng.next_u64(),
-    };
-    let res = coordinator::run_episode(&engine, &params, &method, &ep, tc)?;
+}
+
+fn report_episode(res: tinytrain::coordinator::EpisodeResult) -> Result<()> {
     println!(
-        "method={} acc {:.1}% -> {:.1}% | selection {:.2}s train {:.2}s | layers {:?}",
+        "method={} backend={} acc {:.1}% -> {:.1}% | selection {:.2}s train {:.2}s | layers {:?}",
         res.method,
+        res.backend,
         res.acc_before * 100.0,
         res.acc_after * 100.0,
         res.selection_s,
@@ -166,16 +199,26 @@ fn adapt(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn parse_method(name: &str, store: &ArtifactStore, engine: &ModelEngine) -> Result<Method> {
+fn parse_backend(name: &str) -> Result<Backend> {
+    Ok(match name {
+        "auto" => Backend::Auto,
+        "host" => Backend::Host,
+        "device" => Backend::Device,
+        "analytic" => Backend::Analytic,
+        other => return Err(anyhow!("unknown backend '{other}'")),
+    })
+}
+
+fn parse_method(name: &str, store: &ArtifactStore, meta: &ModelMeta) -> Result<Method> {
     Ok(match name {
         "none" => Method::None,
         "fulltrain" => Method::FullTrain,
         "lastlayer" => Method::LastLayer,
         "tinytl" => Method::TinyTl,
         "sparseupdate" => {
-            let path = store.dir.join(format!("sparse_policy_{}.json", engine.meta.arch));
+            let path = store.dir.join(format!("sparse_policy_{}.json", meta.arch));
             let policy = search::load_policy(&path)
-                .unwrap_or_else(|_| search::default_policy(engine, 0.0));
+                .unwrap_or_else(|_| search::default_policy(meta, 0.0));
             Method::SparseUpdate(policy)
         }
         "tinytrain" => Method::tinytrain_default(),

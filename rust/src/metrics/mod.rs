@@ -129,6 +129,7 @@ mod tests {
         EpisodeResult {
             method: "m".into(),
             domain: "d".into(),
+            backend: "analytic",
             acc_before: 0.2,
             acc_after: acc,
             losses: vec![],

@@ -10,6 +10,14 @@ pub struct Args {
     pub flags: BTreeMap<String, String>,
 }
 
+/// A token that looks like a flag (`-x`, `--x`) rather than a value.
+/// Negative numbers (`-0.5`, `-3`, `-1e-4`) also start with `-` but are
+/// legitimate values for flags like `--lr`, so anything that parses as a
+/// number is *not* treated as a flag.
+fn looks_like_flag(tok: &str) -> bool {
+    tok.starts_with('-') && tok.parse::<f64>().is_err()
+}
+
 impl Args {
     pub fn parse(argv: &[String]) -> Args {
         let mut out = Args::default();
@@ -20,7 +28,7 @@ impl Args {
                 // --name=value, --name value, or bare --name (=true)
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                } else if i + 1 < argv.len() && !looks_like_flag(&argv[i + 1]) {
                     out.flags.insert(name.to_string(), argv[i + 1].clone());
                     i += 1;
                 } else {
@@ -110,5 +118,26 @@ mod tests {
         let a = Args::parse(&argv(&[]));
         assert_eq!(a.str("tier", "smoke"), "smoke");
         assert_eq!(a.usize("steps", 10), 10);
+    }
+
+    #[test]
+    fn negative_numeric_values_parse() {
+        let a = Args::parse(&argv(&["--lr", "-0.5", "--offset", "-3", "--eps", "-1e-4"]));
+        assert_eq!(a.f64("lr", 0.0), -0.5);
+        assert_eq!(a.f64("offset", 0.0), -3.0);
+        assert_eq!(a.f64("eps", 0.0), -1e-4);
+        // ...and via the `=` form too
+        let a = Args::parse(&argv(&["--lr=-0.5"]));
+        assert_eq!(a.f64("lr", 0.0), -0.5);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_stays_boolean() {
+        let a = Args::parse(&argv(&["--quiet", "--lr", "-0.5"]));
+        assert!(a.bool("quiet"));
+        assert_eq!(a.f64("lr", 0.0), -0.5);
+        // a single-dash non-number is a flag-ish token, not a value
+        let a = Args::parse(&argv(&["--quiet", "-v"]));
+        assert!(a.bool("quiet"));
     }
 }

@@ -8,19 +8,29 @@ use tinytrain::devices::{jetson_nano, pi_zero_2, train_cost};
 use tinytrain::harness::analytic::paper_plans;
 use tinytrain::runtime::{ArtifactStore, Runtime};
 
-fn engines() -> (Runtime, Vec<ModelEngine>) {
-    let rt = Runtime::cpu().unwrap();
-    let store = ArtifactStore::discover(None).expect("run `make artifacts`");
+/// Engines over the live artifacts, or None (self-skip when built on
+/// the stub xla backend or before `make artifacts`). The analytic
+/// tables only need metadata, but `ModelEngine::load` still goes
+/// through the artifact store.
+fn engines() -> Option<(Runtime, Vec<ModelEngine>)> {
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping: PJRT runtime unavailable (stub xla backend)");
+        return None;
+    };
+    let Ok(store) = ArtifactStore::discover(None) else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    };
     let engines = ["mcunet", "mbv2", "proxyless"]
         .iter()
         .map(|a| ModelEngine::load(&rt, &store, a).unwrap())
         .collect();
-    (rt, engines)
+    Some((rt, engines))
 }
 
 #[test]
 fn table2_shape_holds_for_all_archs() {
-    let (_rt, engines) = engines();
+    let Some((_rt, engines)) = engines() else { return };
     for engine in &engines {
         let arch = &engine.meta.paper;
         let plans = paper_plans(engine);
@@ -60,7 +70,7 @@ fn table2_shape_holds_for_all_archs() {
 
 #[test]
 fn tables9_10_latency_relations_hold() {
-    let (_rt, engines) = engines();
+    let Some((_rt, engines)) = engines() else { return };
     for engine in &engines {
         let arch = &engine.meta.paper;
         let plans = paper_plans(engine);
@@ -88,7 +98,7 @@ fn tables9_10_latency_relations_hold() {
 
 #[test]
 fn fig5_fulltrain_is_order_of_magnitude_slower() {
-    let (_rt, engines) = engines();
+    let Some((_rt, engines)) = engines() else { return };
     let engine = &engines[0];
     let arch = &engine.meta.paper;
     let plans = paper_plans(engine);
@@ -110,7 +120,7 @@ fn fig5_fulltrain_is_order_of_magnitude_slower() {
 
 #[test]
 fn table11_saved_acts_monotone_in_k() {
-    let (_rt, engines) = engines();
+    let Some((_rt, engines)) = engines() else { return };
     for engine in &engines {
         let arch = &engine.meta.paper;
         let mut prev = 0.0;

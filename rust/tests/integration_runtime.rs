@@ -4,14 +4,24 @@
 use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::runtime::{ArtifactStore, Runtime, Tensor};
 
-fn store() -> ArtifactStore {
-    ArtifactStore::discover(None).expect("run `make artifacts` first")
+/// PJRT + artifacts, or None (self-skip when built on the stub backend
+/// or before `make artifacts`).
+fn live() -> Option<(Runtime, ArtifactStore)> {
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("skipping: PJRT runtime unavailable (stub xla backend)");
+        return None;
+    };
+    let Ok(store) = ArtifactStore::discover(None) else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    };
+    Some((rt, store))
 }
 
 #[test]
 fn kernel_smoke_executes() {
-    let rt = Runtime::cpu().unwrap();
-    let exec = rt.load(&store().kernel_smoke()).unwrap();
+    let Some((rt, store)) = live() else { return };
+    let exec = rt.load(&store.kernel_smoke()).unwrap();
     let x = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
     let y = Tensor::ones(&[2, 2]);
     let out = exec.run(&[x, y]).unwrap();
@@ -22,7 +32,11 @@ fn kernel_smoke_executes() {
 
 #[test]
 fn meta_parses_and_is_consistent() {
-    let arts = store().model("mcunet");
+    let Ok(store) = ArtifactStore::discover(None) else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let arts = store.model("mcunet");
     let meta = ModelMeta::load(&arts.meta).unwrap();
     assert_eq!(meta.arch, "mcunet");
     assert_eq!(meta.scaled.blocks.len(), 14);
@@ -46,9 +60,9 @@ fn meta_parses_and_is_consistent() {
 
 #[test]
 fn fwd_graph_produces_normalised_embeddings() {
-    let arts = store().model("mcunet");
+    let Some((rt, store)) = live() else { return };
+    let arts = store.model("mcunet");
     let meta = ModelMeta::load(&arts.meta).unwrap();
-    let rt = Runtime::cpu().unwrap();
     let exec = rt.load(&arts.fwd).unwrap();
     let params = ParamStore::init(&meta, 42);
     let s = &meta.shapes;

@@ -1,0 +1,167 @@
+//! Offline stand-in for the `anyhow` crate, covering the subset this
+//! workspace uses: `Result`, `Error`, `anyhow!`, `ensure!`, `bail!` and
+//! `Context::{context, with_context}` with a `:#` chain display. The
+//! API mirrors the real crate so swapping the path dependency for the
+//! crates.io release is a no-op.
+
+use std::fmt;
+
+/// Error type: a message plus an optional boxed cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+    context: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), source: None, context: Vec::new() }
+    }
+
+    fn push_context(mut self, ctx: String) -> Error {
+        self.context.push(ctx);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Outermost context first (matches anyhow's ordering).
+        if let Some(ctx) = self.context.last() {
+            write!(f, "{ctx}")?;
+        } else {
+            write!(f, "{}", self.msg)?;
+        }
+        if f.alternate() {
+            // `{:#}` renders the whole chain inline. `msg` already holds
+            // the root cause's display, so only walk deeper sources.
+            for ctx in self.context.iter().rev().skip(1) {
+                write!(f, ": {ctx}")?;
+            }
+            if !self.context.is_empty() {
+                write!(f, ": {}", self.msg)?;
+            }
+            let mut src = self.source.as_ref().and_then(|s| s.source());
+            while let Some(s) = src {
+                write!(f, ": {s}")?;
+                src = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)), context: Vec::new() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(|| ..)` on fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.push_context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = anyhow!("top {}", 3);
+        assert_eq!(format!("{e}"), "top 3");
+        let e: Result<(), _> = Err(io_err());
+        let e = e.with_context(|| "loading weights").unwrap_err();
+        assert_eq!(format!("{e}"), "loading weights");
+        assert_eq!(format!("{e:#}"), "loading weights: gone");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(-1).unwrap_err().to_string().contains("positive"));
+        assert!(f(11).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+}

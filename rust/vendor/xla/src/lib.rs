@@ -1,0 +1,206 @@
+//! Stub of the `xla` (xla-rs) PJRT bindings used by `tinytrain::runtime`.
+//!
+//! The offline image bakes no `libxla`, so this crate keeps the workspace
+//! compiling and makes the *absence* of the runtime a recoverable error
+//! instead of a link failure:
+//!
+//! - Host-side [`Literal`] construction/reshape/readback is implemented
+//!   for real (f32 only — the only dtype the coordinator exchanges), so
+//!   `Tensor` round-trips and their tests work without PJRT.
+//! - Anything that needs a live PJRT client ([`PjRtClient::cpu`],
+//!   compilation, buffer transfer, execution) returns [`Error`] with a
+//!   `PJRT_UNAVAILABLE` message. `tinytrain` surfaces that error and the
+//!   integration tests self-skip on it; the `AnalyticBackend` episode
+//!   path never reaches this crate at all.
+//!
+//! Replacing the `xla` path dependency in `rust/Cargo.toml` with the real
+//! bindings restores the live paths without further code changes.
+
+use std::fmt;
+use std::path::Path;
+
+const PJRT_UNAVAILABLE: &str =
+    "PJRT unavailable: built against the bundled xla stub (no libxla in this environment)";
+
+/// Error type mirroring xla-rs's (Display + std::error::Error).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(PJRT_UNAVAILABLE.to_string()))
+}
+
+/// Marker for element types the stub can materialise host-side.
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// Host-side dense f32 literal (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Shape of a (non-tuple) literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Flatten a tuple literal. The stub never produces tuples (they only
+    /// come back from executions, which require PJRT).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+}
+
+/// Device-resident buffer handle. Never constructed by the stub.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle. Never constructed by the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle: every constructor reports the stub.
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// Computation wrapper (proto -> compilable form).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT unavailable"));
+    }
+}
