@@ -1,21 +1,302 @@
-//! `cargo bench` — hot-path microbenchmarks over the live PJRT
-//! executables (the L3 §Perf targets in DESIGN.md): embedding forward,
-//! fisher pass, masked train step, plus the pure-rust episode evaluator
-//! and mask construction. Records the numbers EXPERIMENTS.md §Perf cites.
+//! `cargo bench --bench bench_hotpath [-- smoke]` — hot-path benchmarks.
+//!
+//! Two sections:
+//!
+//! 1. **Pure-rust hot path** (always runs, stub backend included):
+//!    before/after microbenches of the O(n²)→O(n log n) selection
+//!    overhaul — greedy layer selection, evolutionary-search
+//!    feasibility, mask build/materialise, the analytic masked step and
+//!    the parallel episode grid — on the synthetic architecture. The
+//!    "before" arms re-implement the seed's full-recompute/dense logic
+//!    verbatim, and each pair is asserted to produce identical results
+//!    before being timed. Numbers land in `BENCH_hotpath.json` at the
+//!    repo root (the perf trajectory artefact cited by README/ROADMAP).
+//!
+//! 2. **PJRT hot path** (skips on the vendored stub): the compiled
+//!    embed / fisher / train-step executables, as before.
+//!
+//! `-- smoke` shrinks the timing budgets for CI.
 
+use std::path::Path;
 use std::time::Duration;
 
-use tinytrain::coordinator::{episode_accuracy, ModelEngine};
+use tinytrain::accounting::{backward_macs, backward_memory, CostLedger, Optimizer, UpdatePlan};
+use tinytrain::coordinator::backend::{AdaptationBackend, AnalyticBackend};
+use tinytrain::coordinator::selection::select_layers;
+use tinytrain::coordinator::{episode_accuracy, Budgets, Method, ModelEngine, Selection};
 use tinytrain::data::{domain_by_name, Sampler};
-use tinytrain::model::ParamStore;
+use tinytrain::harness::parallel::{accuracy_grid, GridConfig};
+use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::runtime::{ArtifactStore, Runtime};
 use tinytrain::util::bench::bench;
+use tinytrain::util::jsonio::{num, obj, s, Json};
+use tinytrain::util::pool::default_workers;
 use tinytrain::util::rng::Rng;
 
-fn main() {
-    let budget = Duration::from_secs(3);
+/// The seed's greedy selection: full `backward_memory`/`backward_macs`
+/// recomputation per candidate layer (the O(n²) "before" arm).
+fn reference_select_layers(
+    meta: &ModelMeta,
+    scores: &[f64],
+    budgets: Budgets,
+    ratio: f64,
+) -> Vec<usize> {
+    let budgets = budgets.resolve(meta);
+    let arch = &meta.scaled;
+    let n = arch.layers.len();
+    let full_bwd = {
+        let mut p = UpdatePlan::full(n, arch.blocks.len());
+        p.batch = 1;
+        backward_macs(arch, &p).total()
+    };
+    let compute_budget = full_bwd * budgets.compute_frac;
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut plan = UpdatePlan::frozen(n, arch.blocks.len());
+    let mut selected = Vec::new();
+    for &l in &order {
+        plan.layer_ratio[l] = ratio;
+        let mem = backward_memory(arch, &plan, Optimizer::Adam).total();
+        let macs = backward_macs(arch, &plan).total();
+        if mem <= budgets.mem_bytes && macs <= compute_budget {
+            selected.push(l);
+        } else {
+            plan.layer_ratio[l] = 0.0;
+        }
+    }
+    selected
+}
+
+/// The seed's per-genome feasibility: plan build + full memory recompute.
+fn reference_feasible(meta: &ModelMeta, genome: &[usize], budget: f64) -> bool {
+    const RATIO_CHOICES: [f64; 5] = [0.0, 0.125, 0.25, 0.5, 1.0];
+    let arch = &meta.scaled;
+    let mut plan = UpdatePlan::frozen(arch.layers.len(), arch.blocks.len());
+    for (l, &r) in genome.iter().enumerate() {
+        plan.layer_ratio[l] = RATIO_CHOICES[r];
+    }
+    backward_memory(arch, &plan, Optimizer::Adam).total() <= budget
+}
+
+/// The seed's dense selection-mask build (modular channel rule over a
+/// freshly allocated theta-length vector).
+fn reference_selection_mask(meta: &ModelMeta, sel: &Selection) -> Vec<f32> {
+    let mut mask = vec![0.0f32; meta.total_theta];
+    for (i, &l) in sel.layers.iter().enumerate() {
+        let mut on = vec![false; meta.scaled.layers[l].cout];
+        for &c in &sel.channels[i] {
+            on[c] = true;
+        }
+        for e in meta.layer_entries(l) {
+            let cout = *e.shape.last().unwrap();
+            let seg = &mut mask[e.offset..e.offset + e.size];
+            for (j, v) in seg.iter_mut().enumerate() {
+                if on[j % cout] {
+                    *v = 1.0;
+                }
+            }
+        }
+    }
+    mask
+}
+
+fn speedup_entry(name: &str, before_s: f64, after_s: f64) -> (String, Json) {
+    let section = obj(vec![
+        ("before_us", num(before_s * 1e6)),
+        ("after_us", num(after_s * 1e6)),
+        ("speedup", num(before_s / after_s.max(1e-12))),
+    ]);
+    (name.to_string(), section)
+}
+
+fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
+    let budget = Duration::from_millis(if smoke { 40 } else { 400 });
+    let meta = ModelMeta::synthetic(12);
+    let n = meta.scaled.layers.len();
+    println!("-- pure-rust hot path (synthetic arch: {} layers, theta={}) --", n, meta.total_theta);
+    let mut sections: Vec<(String, Json)> = vec![
+        ("arch".into(), s(&meta.arch)),
+        ("layers".into(), num(n as f64)),
+        ("total_theta".into(), num(meta.total_theta as f64)),
+    ];
+
+    // --- greedy layer selection -----------------------------------------
+    let mut rng = Rng::new(11);
+    let scores: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+    let budgets = Budgets::default();
+    assert_eq!(
+        reference_select_layers(&meta, &scores, budgets, 0.5),
+        select_layers(&meta, &scores, budgets, 0.5, Optimizer::Adam),
+        "ledger selection diverged from the full-recompute reference"
+    );
+    let before = bench("select_layers: full recompute (before)", budget, || {
+        std::hint::black_box(reference_select_layers(&meta, &scores, budgets, 0.5).len());
+    });
+    let after = bench("select_layers: CostLedger (after)", budget, || {
+        std::hint::black_box(select_layers(&meta, &scores, budgets, 0.5, Optimizer::Adam).len());
+    });
+    sections.push(speedup_entry("select_layers", before.mean_secs(), after.mean_secs()));
+
+    // --- evolutionary-search feasibility --------------------------------
+    let genomes: Vec<Vec<usize>> = (0..64)
+        .map(|_| (0..n).map(|_| if rng.bool(0.75) { 0 } else { 1 + rng.below(4) }).collect())
+        .collect();
+    let search_budget = {
+        let auto = budgets.resolve(&meta);
+        let peak = tinytrain::accounting::activation_peak_bytes(&meta.scaled);
+        peak + 1.6 * (auto.mem_bytes - peak)
+    };
+    fn ledger_feasible(ledger: &mut CostLedger<'_>, g: &[usize], budget: f64) -> bool {
+        const RATIO_CHOICES: [f64; 5] = [0.0, 0.125, 0.25, 0.5, 1.0];
+        for (l, &r) in g.iter().enumerate() {
+            if r > 0 {
+                ledger.set_ratio(l, RATIO_CHOICES[r]);
+            }
+        }
+        let ok = ledger.memory_total() <= budget;
+        for (l, &r) in g.iter().enumerate() {
+            if r > 0 {
+                ledger.set_ratio(l, 0.0);
+            }
+        }
+        ok
+    }
+    let mut ledger = CostLedger::new(&meta.scaled, Optimizer::Adam);
+    for g in &genomes {
+        assert_eq!(
+            reference_feasible(&meta, g, search_budget),
+            ledger_feasible(&mut ledger, g, search_budget),
+            "ledger feasibility diverged on {g:?}"
+        );
+    }
+    let before = bench("search feasibility: full recompute x64 (before)", budget, || {
+        let ok = genomes.iter().filter(|g| reference_feasible(&meta, g, search_budget)).count();
+        std::hint::black_box(ok);
+    });
+    let after = bench("search feasibility: CostLedger deltas x64 (after)", budget, || {
+        let ok = genomes
+            .iter()
+            .filter(|g| ledger_feasible(&mut ledger, g, search_budget))
+            .count();
+        std::hint::black_box(ok);
+    });
+    sections.push(speedup_entry("search_feasibility", before.mean_secs(), after.mean_secs()));
+
+    // --- selection mask: build + materialise ----------------------------
+    // Deepest third of the layers at every-other channel — the striding
+    // worst case for the run representation.
+    let sel = {
+        let layers: Vec<usize> = (2 * n / 3..n).collect();
+        let channels: Vec<Vec<usize>> = layers
+            .iter()
+            .map(|&l| (0..meta.scaled.layers[l].cout).step_by(2).collect())
+            .collect();
+        Selection { layers, channels, ratio: 0.5, scores: vec![] }
+    };
+    assert_eq!(
+        reference_selection_mask(&meta, &sel),
+        sel.mask(&meta).dense(),
+        "segment mask diverged from the dense reference"
+    );
+    let before = bench("selection mask: dense build (before)", budget, || {
+        std::hint::black_box(reference_selection_mask(&meta, &sel).len());
+    });
+    let after = bench("selection mask: segment build (after)", budget, || {
+        std::hint::black_box(sel.mask(&meta).nnz());
+    });
+    sections.push(speedup_entry("mask_build", before.mean_secs(), after.mean_secs()));
+    let mask = sel.mask(&meta);
+    let materialise = bench("selection mask: one-time dense materialise", budget, || {
+        std::hint::black_box(mask.dense().len());
+    });
+    sections.push(("mask_materialise_us".into(), num(materialise.mean_secs() * 1e6)));
+
+    // --- analytic masked step: dense scan vs segment runs ---------------
+    let params = ParamStore::init(&meta, 1);
+    let domain = domain_by_name("traffic").unwrap();
+    let mut erng = Rng::new(5);
+    let ep = Sampler::new(domain.as_ref(), &meta.shapes).sample(&mut erng);
+    let padded = ep.pad(&meta.shapes);
+    let pseudo = ep.pseudo_query(&meta.shapes, &mut erng);
+    let dense = mask.dense();
+    let mut theta = params.theta.clone();
+    let before = bench("analytic step: dense mask scan (before)", budget, || {
+        for (p, &m) in theta.iter_mut().zip(dense.iter()) {
+            if m > 0.0 {
+                *p -= 1e-3 * m * 0.1 * *p;
+            }
+        }
+        std::hint::black_box(theta[0]);
+    });
+    let mut backend = AnalyticBackend::new(&meta, params.clone(), padded.clone(), pseudo);
+    backend.set_mask(&mask).unwrap();
+    let after = bench("analytic step: segment runs (after)", budget, || {
+        std::hint::black_box(backend.step(1e-3).unwrap());
+    });
+    sections.push(speedup_entry("analytic_step", before.mean_secs(), after.mean_secs()));
+
+    // --- pure-rust episode evaluator (unchanged baseline, kept for the
+    //     trajectory) -----------------------------------------------------
+    let emb = backend.embed().unwrap();
+    let eval = bench("evaluator: prototypes + cosine top-1", budget, || {
+        std::hint::black_box(episode_accuracy(&emb, &padded, &meta.shapes));
+    });
+    sections.push(("episode_eval_us".into(), num(eval.mean_secs() * 1e6)));
+
+    // --- parallel episode grid ------------------------------------------
+    let episodes = if smoke { 2 } else { 6 };
+    let methods = vec![Method::LastLayer, Method::tinytrain_default()];
+    let domains: Vec<String> = ["traffic", "cub"].iter().map(|d| d.to_string()).collect();
+    let serial_cfg = GridConfig { episodes, steps: 6, lr: 6e-3, seed: 7, workers: 1 };
+    let workers = default_workers();
+    let par_cfg = GridConfig { workers, ..serial_cfg.clone() };
+    let t0 = std::time::Instant::now();
+    let serial = accuracy_grid(&meta, &params, &methods, &domains, &serial_cfg).unwrap();
+    let serial_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let parallel = accuracy_grid(&meta, &params, &methods, &domains, &par_cfg).unwrap();
+    let parallel_s = t0.elapsed().as_secs_f64();
+    for (srow, prow) in serial.iter().zip(&parallel) {
+        for (sc, pc) in srow.iter().zip(prow) {
+            assert_eq!(sc.mean_acc, pc.mean_acc, "parallel grid diverged from serial");
+        }
+    }
+    println!(
+        "episode grid: {} episodes serial {serial_s:.3}s | {workers} workers {parallel_s:.3}s",
+        methods.len() * domains.len() * episodes
+    );
+    sections.push((
+        "episode_grid".into(),
+        obj(vec![
+            ("episodes", num((methods.len() * domains.len() * episodes) as f64)),
+            ("serial_s", num(serial_s)),
+            ("workers", num(workers as f64)),
+            ("parallel_s", num(parallel_s)),
+            ("speedup", num(serial_s / parallel_s.max(1e-12))),
+        ]),
+    ));
+    sections
+}
+
+fn write_report(smoke: bool, sections: Vec<(String, Json)>) {
+    let fields: Vec<(&str, Json)> =
+        sections.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let report = obj(vec![
+        ("bench", s("hotpath")),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+        ("sections", obj(fields)),
+    ]);
+    // repo root: <manifest>/..
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_hotpath.json");
+    match std::fs::write(&path, report.to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("bench_hotpath: could not write {}: {e}", path.display()),
+    }
+}
+
+fn pjrt_section(budget: Duration) {
     let Ok(rt) = Runtime::cpu() else {
-        eprintln!("bench_hotpath: PJRT runtime unavailable (stub xla backend) — skipping");
+        eprintln!("bench_hotpath: PJRT runtime unavailable (stub xla backend) — section skipped");
         return;
     };
     let store = ArtifactStore::discover(None).expect("run `make artifacts`");
@@ -35,13 +316,13 @@ fn main() {
         meta.shapes.eval_batch
     );
     // warm-up: compile outside the timed regions
-    let emb = engine.embed_with(&params, engine.eval_batch(&padded)).unwrap();
+    engine.embed_with(&params, engine.eval_batch(&padded)).unwrap();
     engine.fisher_pass(&params, &padded, &pseudo).unwrap();
     engine
         .train_step(&mut params.clone(), &mask, 1e-3, &padded, &pseudo)
         .unwrap();
 
-    bench("fwd: embed 80 images", budget, || {
+    bench("fwd: embed eval batch", budget, || {
         std::hint::black_box(
             engine.embed_with(&params, engine.eval_batch(&padded)).unwrap().data[0],
         );
@@ -64,20 +345,16 @@ fn main() {
             engine.train_step_device(&mut state, &mask_buf, 1e-3, &dev_ep).unwrap(),
         );
     });
-    bench("fwd: embed 80 images (device theta)", budget, || {
+    bench("fwd: embed eval batch (device theta)", budget, || {
         std::hint::black_box(
             engine.embed_device(&state, engine.eval_batch(&padded)).unwrap().data[0],
         );
     });
+}
 
-    println!("-- pure-rust episode path --");
-    bench("evaluator: prototypes + cosine top-1", Duration::from_millis(300), || {
-        std::hint::black_box(episode_accuracy(&emb.data, &padded, &meta.shapes));
-    });
-    bench("episode: sample + pad + pseudo-query", Duration::from_millis(500), || {
-        let mut r = Rng::new(9);
-        let e = Sampler::new(domain.as_ref(), &meta.shapes).sample(&mut r);
-        let p = e.pad(&meta.shapes);
-        std::hint::black_box((p.sup_x[0], e.pseudo_query(&meta.shapes, &mut r).x[0]));
-    });
+fn main() {
+    let smoke = std::env::args().any(|a| a == "smoke" || a == "--smoke");
+    let sections = pure_rust_section(smoke);
+    write_report(smoke, sections);
+    pjrt_section(Duration::from_secs(if smoke { 1 } else { 3 }));
 }

@@ -83,7 +83,7 @@ fn main() {
             ChannelScheme::Fisher,
             Optimizer::Adam,
         );
-        std::hint::black_box(sel.mask(meta).len());
+        std::hint::black_box(sel.mask(meta).nnz());
     });
     bench("selection: L2-norm criterion (no fisher)", budget, || {
         let sel = run_selection(

@@ -25,4 +25,7 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== bench_hotpath smoke (pure-rust; writes ../BENCH_hotpath.json) =="
+cargo bench --bench bench_hotpath -- smoke
+
 echo "ci.sh: all green"

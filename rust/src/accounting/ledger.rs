@@ -1,0 +1,282 @@
+//! Incremental cost ledger: price a plan once, then re-price per-layer
+//! ratio changes in O(log n) instead of re-walking the whole layer table.
+//!
+//! Every hot selection path (greedy layer selection, the SparseUpdate
+//! evolutionary search's feasibility test, the default-policy sweep)
+//! evaluates long sequences of plans that differ from their predecessor
+//! in a single layer. Full `backward_memory` / `backward_macs` calls are
+//! O(layers + blocks) each — including an O(layers) inference-peak scan —
+//! which made those paths O(n²). The ledger exploits the structure of the
+//! cost model instead:
+//!
+//! - updated-parameter bytes and dW MACs are *additive* over layers, so a
+//!   ratio change is one multiply-add;
+//! - saved-input activation bytes are additive over the set of updated
+//!   layers;
+//! - the dX chain depends only on the *earliest* updated index, kept in a
+//!   `BTreeSet` with precomputed MAC suffix sums;
+//! - the inference activation peak is plan-independent and priced once.
+//!
+//! Scope: batch-1, adapter-free plans — exactly what the selection and
+//! search paths construct. Whole-backbone methods (FullTrain / TinyTL,
+//! batch 100, adapters) keep using the full `backward_memory` walk; they
+//! are priced once per table, never inside a loop.
+
+use std::collections::BTreeSet;
+
+use super::{backward_macs, backward_memory, Optimizer, UpdatePlan, BYTES_F32};
+use crate::model::ArchFlavor;
+
+/// Incremental pricing of batch-1, adapter-free update plans.
+///
+/// Invariant: `memory_total()` / `macs_total()` equal
+/// `backward_memory(arch, plan, opt).total()` /
+/// `backward_macs(arch, plan).total()` for the plan described by the
+/// current ratios (up to f64 summation-order rounding; see the property
+/// tests in `tests/hotpath.rs`).
+#[derive(Debug, Clone)]
+pub struct CostLedger<'a> {
+    arch: &'a ArchFlavor,
+    opt: Optimizer,
+    ratios: Vec<f64>,
+    /// Layers with a nonzero ratio; `first()` is the earliest updated
+    /// index driving the dX chain.
+    updated: BTreeSet<usize>,
+    /// (B1) Σ params_l · r_l · 4 over updated layers.
+    updated_bytes: f64,
+    /// (B4) Σ input-activation bytes over updated layers.
+    saved_input_bytes: f64,
+    /// Σ macs_l · r_l over updated layers.
+    dw_macs: f64,
+    /// Plan-independent inference activation peak (F2), priced once.
+    peak: f64,
+    /// `suffix_macs[i]` = Σ_{l ≥ i} macs_l; the dX chain of earliest
+    /// updated index `e` costs `suffix_macs[e + 1]`.
+    suffix_macs: Vec<f64>,
+}
+
+impl<'a> CostLedger<'a> {
+    /// A ledger over the frozen (all-zero) plan. O(n) setup.
+    pub fn new(arch: &'a ArchFlavor, opt: Optimizer) -> Self {
+        let n = arch.layers.len();
+        let mut suffix_macs = vec![0.0; n + 1];
+        for l in (0..n).rev() {
+            suffix_macs[l] = suffix_macs[l + 1] + arch.layers[l].macs as f64;
+        }
+        CostLedger {
+            arch,
+            opt,
+            ratios: vec![0.0; n],
+            updated: BTreeSet::new(),
+            updated_bytes: 0.0,
+            saved_input_bytes: 0.0,
+            dw_macs: 0.0,
+            peak: super::activation_peak_bytes(arch),
+            suffix_macs,
+        }
+    }
+
+    /// Seed the ledger from an existing plan (must be batch-1 and
+    /// adapter-free — the regime the ledger prices).
+    pub fn from_plan(arch: &'a ArchFlavor, plan: &UpdatePlan, opt: Optimizer) -> Self {
+        debug_assert_eq!(plan.batch, 1, "CostLedger prices batch-1 plans");
+        debug_assert!(plan.adapters.iter().all(|&a| !a), "CostLedger prices adapter-free plans");
+        let mut ledger = Self::new(arch, opt);
+        for (l, &r) in plan.layer_ratio.iter().enumerate() {
+            ledger.set_ratio(l, r);
+        }
+        ledger
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.ratios.len()
+    }
+
+    pub fn ratio(&self, layer: usize) -> f64 {
+        self.ratios[layer]
+    }
+
+    /// The plan-independent inference activation peak (bytes).
+    pub fn activation_peak(&self) -> f64 {
+        self.peak
+    }
+
+    /// Change one layer's channel ratio. O(log n).
+    pub fn set_ratio(&mut self, layer: usize, ratio: f64) {
+        let old = self.ratios[layer];
+        if old == ratio {
+            return;
+        }
+        let info = &self.arch.layers[layer];
+        self.updated_bytes += info.params as f64 * BYTES_F32 * (ratio - old);
+        self.dw_macs += info.macs as f64 * (ratio - old);
+        if old > 0.0 && ratio <= 0.0 {
+            self.saved_input_bytes -= (info.in_hw * info.in_hw * info.cin) as f64 * BYTES_F32;
+            self.updated.remove(&layer);
+        } else if old <= 0.0 && ratio > 0.0 {
+            self.saved_input_bytes += (info.in_hw * info.in_hw * info.cin) as f64 * BYTES_F32;
+            self.updated.insert(layer);
+        }
+        self.ratios[layer] = ratio;
+    }
+
+    /// Reset every ratio to zero (back to the frozen plan). O(u log n).
+    pub fn clear(&mut self) {
+        let updated: Vec<usize> = self.updated.iter().copied().collect();
+        for l in updated {
+            self.set_ratio(l, 0.0);
+        }
+    }
+
+    /// Backward-pass memory of the current plan, matching
+    /// `backward_memory(..).total()` for the batch-1 sparse regime.
+    pub fn memory_total(&self) -> f64 {
+        let state = self.updated_bytes * (1.0 + self.opt.state_factor());
+        let activations = if self.updated.is_empty() {
+            0.0
+        } else {
+            // Saved inputs overlap the inference buffer when they fit
+            // (Appendix F.1): the cost is max(peak, saved).
+            self.peak.max(self.saved_input_bytes)
+        };
+        state + activations
+    }
+
+    /// Backward-pass MACs of the current plan, matching
+    /// `backward_macs(..).total()`.
+    pub fn macs_total(&self) -> f64 {
+        match self.updated.first() {
+            None => 0.0,
+            Some(&earliest) => self.suffix_macs[earliest + 1] + self.dw_macs,
+        }
+    }
+
+    /// FullTrain's backward MACs at batch 1 (dX from layer 0 + dW of
+    /// every layer) — the reference the compute budget is a fraction of.
+    /// Plan-independent; priced from the suffix sums without touching
+    /// the ledger state.
+    pub fn full_backward_macs(&self) -> f64 {
+        self.suffix_macs[1] + self.suffix_macs[0]
+    }
+
+    /// Materialise the current ratios as an `UpdatePlan`.
+    pub fn plan(&self) -> UpdatePlan {
+        UpdatePlan {
+            layer_ratio: self.ratios.clone(),
+            adapters: vec![false; self.arch.blocks.len()],
+            batch: 1,
+        }
+    }
+
+    /// Full-recompute cross-check (tests / debug assertions).
+    pub fn recompute(&self) -> (f64, f64) {
+        let plan = self.plan();
+        (
+            backward_memory(self.arch, &plan, self.opt).total(),
+            backward_macs(self.arch, &plan).total(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelMeta;
+    use crate::util::rng::Rng;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn matches_full_recompute_over_random_walk() {
+        let meta = ModelMeta::synthetic(5);
+        let arch = &meta.scaled;
+        let n = arch.layers.len();
+        let choices = [0.0, 0.125, 0.25, 0.5, 1.0];
+        let mut ledger = CostLedger::new(arch, Optimizer::Adam);
+        let mut rng = Rng::new(17);
+        for _ in 0..200 {
+            ledger.set_ratio(rng.below(n), choices[rng.below(choices.len())]);
+            let (mem, macs) = ledger.recompute();
+            assert!(
+                close(ledger.memory_total(), mem),
+                "memory {} != recompute {}",
+                ledger.memory_total(),
+                mem
+            );
+            assert!(
+                close(ledger.macs_total(), macs),
+                "macs {} != recompute {}",
+                ledger.macs_total(),
+                macs
+            );
+        }
+    }
+
+    #[test]
+    fn frozen_ledger_costs_nothing() {
+        let meta = ModelMeta::synthetic(3);
+        let ledger = CostLedger::new(&meta.scaled, Optimizer::Adam);
+        assert_eq!(ledger.memory_total(), 0.0);
+        assert_eq!(ledger.macs_total(), 0.0);
+    }
+
+    #[test]
+    fn clear_returns_to_frozen() {
+        let meta = ModelMeta::synthetic(4);
+        let mut ledger = CostLedger::new(&meta.scaled, Optimizer::Sgd);
+        let n = ledger.layer_count();
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            ledger.set_ratio(rng.below(n), 0.5);
+        }
+        assert!(ledger.memory_total() > 0.0);
+        ledger.clear();
+        assert_eq!(ledger.macs_total(), 0.0);
+        assert!(ledger.memory_total().abs() < 1e-6);
+        assert!((0..n).all(|l| ledger.ratio(l) == 0.0));
+    }
+
+    #[test]
+    fn from_plan_seeds_ratios() {
+        let meta = ModelMeta::synthetic(3);
+        let arch = &meta.scaled;
+        let n = arch.layers.len();
+        let mut plan = UpdatePlan::frozen(n, arch.blocks.len());
+        plan.layer_ratio[n - 1] = 0.5;
+        plan.layer_ratio[1] = 0.25;
+        let ledger = CostLedger::from_plan(arch, &plan, Optimizer::Adam);
+        let (mem, macs) = ledger.recompute();
+        assert!(close(ledger.memory_total(), mem));
+        assert!(close(ledger.macs_total(), macs));
+        assert_eq!(ledger.ratio(1), 0.25);
+    }
+
+    #[test]
+    fn full_backward_macs_matches_full_plan() {
+        let meta = ModelMeta::synthetic(4);
+        let arch = &meta.scaled;
+        let ledger = CostLedger::new(arch, Optimizer::Adam);
+        let mut full = UpdatePlan::full(arch.layers.len(), arch.blocks.len());
+        full.batch = 1;
+        let want = backward_macs(arch, &full).total();
+        assert!(close(ledger.full_backward_macs(), want));
+    }
+
+    #[test]
+    fn earliest_updated_drives_dx() {
+        let meta = ModelMeta::synthetic(4);
+        let arch = &meta.scaled;
+        let n = arch.layers.len();
+        let mut ledger = CostLedger::new(arch, Optimizer::Adam);
+        ledger.set_ratio(n - 1, 1.0);
+        let shallow = ledger.macs_total();
+        ledger.set_ratio(0, 0.125);
+        let deep = ledger.macs_total();
+        assert!(deep > shallow, "deeper earliest layer must add dX chain");
+        // removing the deep layer restores the shallow dX chain
+        ledger.set_ratio(0, 0.0);
+        assert!(close(ledger.macs_total(), shallow));
+    }
+}

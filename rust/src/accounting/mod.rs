@@ -12,11 +12,17 @@
 //! prices both the runnable `scaled` flavour (driving the selection
 //! budgets at run time) and the `paper` flavour (regenerating the paper's
 //! absolute numbers).
+//!
+//! Hot selection paths (greedy layer selection, the SparseUpdate search)
+//! price long chains of single-layer plan edits through [`CostLedger`],
+//! which applies O(log n) deltas instead of re-walking the layer table.
 
 mod compute;
+mod ledger;
 mod memory;
 
 pub use compute::{backward_macs, forward_macs, BackwardCompute};
+pub use ledger::CostLedger;
 pub use memory::{
     activation_peak_bytes, backward_memory, saved_acts_last_k_blocks, MemoryBreakdown,
 };

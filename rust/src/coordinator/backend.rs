@@ -23,6 +23,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use super::criterion::channel_l2_norms;
 use super::engine::{DeviceEpisode, DeviceState, FisherOutput, ModelEngine};
+use super::mask::UpdateMask;
 use crate::data::{PaddedEpisode, PseudoQuery};
 use crate::model::{ModelMeta, ParamStore};
 
@@ -42,13 +43,13 @@ pub enum Backend {
 }
 
 /// Shared mask validation: the AOT step graph indexes the flat theta,
-/// so a wrong-length mask is undefined behaviour there — every backend
+/// so a wrong-extent mask is undefined behaviour there — every backend
 /// rejects it up front through this one check.
-fn check_mask(meta: &ModelMeta, mask: &[f32]) -> Result<()> {
+fn check_mask(meta: &ModelMeta, mask: &UpdateMask) -> Result<()> {
     ensure!(
-        mask.len() == meta.total_theta,
-        "mask has {} entries, theta has {}",
-        mask.len(),
+        mask.total() == meta.total_theta,
+        "mask extent is {}, theta has {}",
+        mask.total(),
         meta.total_theta
     );
     Ok(())
@@ -68,9 +69,10 @@ pub trait AdaptationBackend {
     /// labels/validity from here for evaluation).
     fn padded(&self) -> &PaddedEpisode;
 
-    /// Install the update mask (parameter extent, 1.0 = trainable) used
-    /// by subsequent `step` calls.
-    fn set_mask(&mut self, mask: &[f32]) -> Result<()>;
+    /// Install the segment update mask used by subsequent `step` calls.
+    /// PJRT backends materialise/upload the dense f32 form exactly once
+    /// here; the analytic backend steps the runs directly.
+    fn set_mask(&mut self, mask: &UpdateMask) -> Result<()>;
 
     /// One masked optimiser step on the support/pseudo-query loss;
     /// returns the loss.
@@ -99,6 +101,8 @@ pub trait AdaptationBackend {
 pub struct HostBackend<'e> {
     engine: &'e ModelEngine,
     params: ParamStore,
+    /// Dense mask, materialised once per `set_mask` (the step graph's
+    /// input format).
     mask: Option<Vec<f32>>,
     padded: PaddedEpisode,
     pseudo: PseudoQuery,
@@ -124,9 +128,9 @@ impl AdaptationBackend for HostBackend<'_> {
         &self.padded
     }
 
-    fn set_mask(&mut self, mask: &[f32]) -> Result<()> {
+    fn set_mask(&mut self, mask: &UpdateMask) -> Result<()> {
         check_mask(&self.engine.meta, mask)?;
-        self.mask = Some(mask.to_vec());
+        self.mask = Some(mask.dense());
         Ok(())
     }
 
@@ -197,9 +201,10 @@ impl AdaptationBackend for DeviceBackend<'_> {
         &self.padded
     }
 
-    fn set_mask(&mut self, mask: &[f32]) -> Result<()> {
+    fn set_mask(&mut self, mask: &UpdateMask) -> Result<()> {
         check_mask(&self.engine.meta, mask)?;
-        self.mask = Some(self.engine.upload_mask(mask)?);
+        // One dense materialisation per episode, straight into the upload.
+        self.mask = Some(self.engine.upload_mask(&mask.dense())?);
         Ok(())
     }
 
@@ -250,7 +255,9 @@ impl AdaptationBackend for DeviceBackend<'_> {
 pub struct AnalyticBackend<'m> {
     meta: &'m ModelMeta,
     params: ParamStore,
-    mask: Option<Vec<f32>>,
+    /// Segment mask kept sparse: steps touch only the masked runs, never
+    /// a dense theta-length vector.
+    mask: Option<UpdateMask>,
     padded: PaddedEpisode,
     pseudo: PseudoQuery,
     steps_taken: u64,
@@ -306,9 +313,9 @@ impl AdaptationBackend for AnalyticBackend<'_> {
         &self.padded
     }
 
-    fn set_mask(&mut self, mask: &[f32]) -> Result<()> {
+    fn set_mask(&mut self, mask: &UpdateMask) -> Result<()> {
         check_mask(self.meta, mask)?;
-        self.mask = Some(mask.to_vec());
+        self.mask = Some(mask.clone());
         Ok(())
     }
 
@@ -316,11 +323,12 @@ impl AdaptationBackend for AnalyticBackend<'_> {
         let mask = self.mask.as_ref().ok_or_else(|| anyhow!("set_mask before step"))?;
         self.params.t += 1;
         self.steps_taken += 1;
-        // Masked shrink step: only masked parameters move (the invariant
-        // the real step graph guarantees and tests rely on).
-        for (p, &m) in self.params.theta.iter_mut().zip(mask.iter()) {
-            if m > 0.0 {
-                *p -= lr * m * 0.1 * *p;
+        // Masked shrink step over the masked segments only — the sparse
+        // analogue of the dense scan, with the same per-parameter update
+        // (so frozen parameters provably never move).
+        for &(off, len) in mask.runs() {
+            for p in &mut self.params.theta[off..off + len] {
+                *p -= lr * 0.1 * *p;
             }
         }
         // Deterministic decreasing loss, mildly shaped by the pseudo

@@ -1,0 +1,241 @@
+//! Segment-based update masks.
+//!
+//! The step graphs consume a dense f32 mask over the flat theta, but
+//! every mask the coordinator builds is *structured*: whole entries
+//! (LastLayer, adapters), periodic channel patterns inside entries
+//! (TinyTrain / SparseUpdate channel subsets), or the complement of a few
+//! entries (FullTrain). [`UpdateMask`] keeps that structure as sorted,
+//! disjoint `(offset, len)` runs plus the per-layer channel sets that
+//! produced them, so:
+//!
+//! - building a mask never allocates or scans `total_theta` floats;
+//! - the analytic backend steps only the masked segments;
+//! - the dense f32 vector is materialised exactly once, at the PJRT
+//!   upload boundary ([`UpdateMask::dense`]).
+
+use anyhow::{ensure, Result};
+
+/// A sparse 0/1 parameter-extent mask: sorted disjoint runs over
+/// `[0, total)`, with the per-layer selected channel sets retained for
+/// introspection (empty for whole-entry masks).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct UpdateMask {
+    total: usize,
+    runs: Vec<(usize, usize)>,
+    channels: Vec<(usize, Vec<usize>)>,
+}
+
+impl UpdateMask {
+    /// The all-zero mask over a parameter extent.
+    pub fn empty(total: usize) -> UpdateMask {
+        UpdateMask { total, runs: Vec::new(), channels: Vec::new() }
+    }
+
+    pub fn builder(total: usize) -> UpdateMaskBuilder {
+        UpdateMaskBuilder { total, runs: Vec::new(), channels: Vec::new() }
+    }
+
+    /// Parameter extent the mask covers (must equal `meta.total_theta`).
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// The sorted, disjoint, non-adjacent `(offset, len)` runs of ones.
+    pub fn runs(&self) -> &[(usize, usize)] {
+        &self.runs
+    }
+
+    /// Per-layer selected channel sets, for masks built from channel
+    /// subsets (TinyTrain / SparseUpdate); empty otherwise.
+    pub fn layer_channels(&self) -> &[(usize, Vec<usize>)] {
+        &self.channels
+    }
+
+    /// Number of trainable parameters (ones in the dense mask).
+    pub fn nnz(&self) -> usize {
+        self.runs.iter().map(|&(_, len)| len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// Whether flat index `i` is trainable. O(log runs).
+    pub fn covers(&self, i: usize) -> bool {
+        match self.runs.binary_search_by(|&(off, _)| off.cmp(&i)) {
+            Ok(_) => true,
+            Err(0) => false,
+            Err(pos) => {
+                let (off, len) = self.runs[pos - 1];
+                i < off + len
+            }
+        }
+    }
+
+    /// Materialise the dense f32 mask the AOT step graph consumes. This
+    /// is the *only* place a `total_theta`-sized mask vector is built —
+    /// call it once per episode at the PJRT upload boundary.
+    pub fn dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.total];
+        for &(off, len) in &self.runs {
+            out[off..off + len].fill(1.0);
+        }
+        out
+    }
+}
+
+/// Accumulates runs in any order; `build` sorts, merges and validates.
+#[derive(Debug)]
+pub struct UpdateMaskBuilder {
+    total: usize,
+    runs: Vec<(usize, usize)>,
+    channels: Vec<(usize, Vec<usize>)>,
+}
+
+impl UpdateMaskBuilder {
+    /// Mark `[offset, offset + len)` trainable.
+    pub fn add_run(&mut self, offset: usize, len: usize) {
+        if len > 0 {
+            self.runs.push((offset, len));
+        }
+    }
+
+    /// Mark a whole param entry trainable.
+    pub fn add_entry(&mut self, offset: usize, size: usize) {
+        self.add_run(offset, size);
+    }
+
+    /// Mark an entry trainable under a periodic channel pattern: flat
+    /// index `j` (within the entry) is trainable iff `on[j % on.len()]`.
+    /// This is the layout rule for cout-innermost weights and per-channel
+    /// affine params alike.
+    pub fn add_entry_channels(&mut self, offset: usize, size: usize, on: &[bool]) {
+        let period = on.len();
+        debug_assert!(period > 0, "empty channel pattern");
+        debug_assert_eq!(size % period, 0, "entry size {size} not a multiple of {period}");
+        // Merge the pattern into contiguous channel spans once, then
+        // stamp the spans per period.
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        let mut c = 0;
+        while c < period {
+            if on[c] {
+                let start = c;
+                while c < period && on[c] {
+                    c += 1;
+                }
+                spans.push((start, c - start));
+            } else {
+                c += 1;
+            }
+        }
+        if spans.len() == 1 && spans[0] == (0, period) {
+            self.add_run(offset, size);
+            return;
+        }
+        for row in 0..size / period {
+            let base = offset + row * period;
+            for &(start, len) in &spans {
+                self.add_run(base + start, len);
+            }
+        }
+    }
+
+    /// Record the channel set selected for `layer` (introspection only —
+    /// does not add runs).
+    pub fn note_layer_channels(&mut self, layer: usize, mut channels: Vec<usize>) {
+        channels.sort_unstable();
+        self.channels.push((layer, channels));
+    }
+
+    /// Sort, coalesce overlapping/adjacent runs, validate bounds.
+    pub fn build(mut self) -> Result<UpdateMask> {
+        self.runs.sort_unstable();
+        let mut merged: Vec<(usize, usize)> = Vec::with_capacity(self.runs.len());
+        for (off, len) in self.runs {
+            match merged.last_mut() {
+                Some((moff, mlen)) if off <= *moff + *mlen => {
+                    *mlen = (*mlen).max(off + len - *moff);
+                }
+                _ => merged.push((off, len)),
+            }
+        }
+        if let Some(&(off, len)) = merged.last() {
+            ensure!(
+                off + len <= self.total,
+                "mask run [{off}, {}) exceeds parameter extent {}",
+                off + len,
+                self.total
+            );
+        }
+        Ok(UpdateMask { total: self.total, runs: merged, channels: self.channels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_merges_and_sorts() {
+        let mut b = UpdateMask::builder(100);
+        b.add_run(40, 10);
+        b.add_run(0, 5);
+        b.add_run(5, 5); // adjacent to the first — must coalesce
+        b.add_run(45, 10); // overlaps the 40..50 run
+        let m = b.build().unwrap();
+        assert_eq!(m.runs(), &[(0, 10), (40, 15)]);
+        assert_eq!(m.nnz(), 25);
+        assert!(m.covers(0) && m.covers(9) && !m.covers(10));
+        assert!(m.covers(44) && m.covers(54) && !m.covers(55));
+    }
+
+    #[test]
+    fn out_of_bounds_run_rejected() {
+        let mut b = UpdateMask::builder(10);
+        b.add_run(8, 4);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn periodic_channels_match_modular_rule() {
+        // entry of 3 rows x 4 channels, channels {1, 2} selected
+        let on = [false, true, true, false];
+        let mut b = UpdateMask::builder(20);
+        b.add_entry_channels(4, 12, &on);
+        let m = b.build().unwrap();
+        let dense = m.dense();
+        for (j, &v) in dense.iter().enumerate() {
+            let expect = (4..16).contains(&j) && on[(j - 4) % 4];
+            assert_eq!(v > 0.0, expect, "index {j}");
+        }
+        assert_eq!(m.nnz(), 6);
+    }
+
+    #[test]
+    fn full_pattern_collapses_to_one_run() {
+        let mut b = UpdateMask::builder(12);
+        b.add_entry_channels(0, 12, &[true, true, true]);
+        let m = b.build().unwrap();
+        assert_eq!(m.runs(), &[(0, 12)]);
+    }
+
+    #[test]
+    fn empty_mask_and_dense_roundtrip() {
+        let m = UpdateMask::empty(7);
+        assert!(m.is_empty());
+        assert_eq!(m.dense(), vec![0.0f32; 7]);
+        let mut b = UpdateMask::builder(7);
+        b.add_run(2, 3);
+        let m = b.build().unwrap();
+        assert_eq!(m.dense(), vec![0.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn layer_channels_are_sorted() {
+        let mut b = UpdateMask::builder(4);
+        b.add_run(0, 1);
+        b.note_layer_channels(3, vec![2, 0, 1]);
+        let m = b.build().unwrap();
+        assert_eq!(m.layer_channels(), &[(3, vec![0, 1, 2])]);
+    }
+}

@@ -23,9 +23,12 @@
 //!
 //! Baselines share the same session with different [`Method`] arms; the
 //! offline stage (meta-training, SparseUpdate's evolutionary search)
-//! runs through the same artifacts. The free functions
-//! `method_selection` / `run_episode` are deprecated shims kept for one
-//! release.
+//! runs through the same artifacts. Masks are segment-based
+//! [`UpdateMask`]s end to end — `AdaptationBackend::set_mask` takes one,
+//! and the dense f32 vector the AOT graphs consume is materialised once
+//! per episode at the PJRT upload boundary. (The deprecated
+//! `method_selection` / `run_episode` shims were removed with this
+//! signature change; use [`Method::selection`] and [`AdaptationSession`].)
 
 pub mod analysis;
 pub mod backend;
@@ -33,6 +36,7 @@ pub mod criterion;
 pub mod engine;
 pub mod evaluator;
 pub mod fisher;
+pub mod mask;
 pub mod pretrain;
 pub mod search;
 pub mod selection;
@@ -46,9 +50,8 @@ pub use criterion::Criterion;
 pub use engine::{FisherOutput, ModelEngine};
 pub use evaluator::episode_accuracy;
 pub use fisher::FisherReport;
+pub use mask::{UpdateMask, UpdateMaskBuilder};
 pub use pretrain::{meta_train, PretrainConfig};
 pub use selection::{Budgets, ChannelScheme, Selection};
 pub use session::{AdaptationSession, SessionBuilder};
-#[allow(deprecated)]
-pub use trainer::run_episode;
 pub use trainer::{EpisodeResult, Method, StaticPolicy, TrainConfig};

@@ -9,14 +9,14 @@
 //! access to the target data — exactly the paper's criticism of the
 //! approach), constrained by the same memory budget TinyTrain gets.
 
-use anyhow::Result;
+use anyhow::{anyhow, ensure, Result};
 
 use super::engine::ModelEngine;
 use super::session::AdaptationSession;
 use super::trainer::{Method, StaticPolicy, TrainConfig};
-use crate::accounting::{backward_memory, Optimizer, UpdatePlan};
+use crate::accounting::{CostLedger, Optimizer};
 use crate::data::{domain_by_name, Sampler};
-use crate::model::ParamStore;
+use crate::model::{ModelMeta, ParamStore};
 use crate::util::rng::Rng;
 
 pub const RATIO_CHOICES: [f64; 5] = [0.0, 0.125, 0.25, 0.5, 1.0];
@@ -57,53 +57,140 @@ fn genome_to_policy(g: &Genome) -> StaticPolicy {
     }
 }
 
-fn resolve_budget(engine: &ModelEngine, budget: f64) -> f64 {
+/// Resolve the search memory budget. Called once per search / policy
+/// derivation — never inside the per-genome feasibility path (the
+/// re-resolution per candidate was a measured hot spot).
+fn resolve_budget(meta: &ModelMeta, budget: f64) -> f64 {
     if budget > 0.0 {
         return budget;
     }
-    let arch = &engine.meta.scaled;
-    let auto = crate::coordinator::Budgets::default().resolve(&engine.meta);
+    let arch = &meta.scaled;
+    let auto = crate::coordinator::Budgets::default().resolve(meta);
     let peak = crate::accounting::activation_peak_bytes(arch);
     peak + 1.6 * (auto.mem_bytes - peak)
 }
 
-fn feasible(engine: &ModelEngine, g: &Genome, budget: f64) -> bool {
-    let budget = resolve_budget(engine, budget);
-    let arch = &engine.meta.scaled;
-    let mut plan = UpdatePlan::frozen(arch.layers.len(), arch.blocks.len());
-    for (l, &r) in g.iter().enumerate() {
-        plan.layer_ratio[l] = RATIO_CHOICES[r];
-    }
-    backward_memory(arch, &plan, Optimizer::Adam).total() <= budget
+/// Incremental feasibility oracle: one [`CostLedger`] reused across every
+/// genome evaluation of a search. Applying/reverting a genome costs
+/// O(nonzero genes · log n) and a mutation O(flipped genes · log n),
+/// versus the former full O(layers) re-pricing (plus a redundant budget
+/// re-resolution) per candidate.
+struct FeasibilityOracle<'a> {
+    ledger: CostLedger<'a>,
+    budget: f64,
 }
 
-fn random_feasible(engine: &ModelEngine, rng: &mut Rng, budget: f64) -> Genome {
-    let n = engine.meta.scaled.layers.len();
-    loop {
+impl<'a> FeasibilityOracle<'a> {
+    fn new(meta: &'a ModelMeta, budget: f64) -> Self {
+        FeasibilityOracle { ledger: CostLedger::new(&meta.scaled, Optimizer::Adam), budget }
+    }
+
+    fn within_budget(&self) -> bool {
+        self.ledger.memory_total() <= self.budget
+    }
+
+    /// Apply a genome's nonzero genes on top of the frozen ledger.
+    fn apply(&mut self, g: &Genome) {
+        for (l, &r) in g.iter().enumerate() {
+            if r > 0 {
+                self.ledger.set_ratio(l, RATIO_CHOICES[r]);
+            }
+        }
+    }
+
+    /// Undo [`Self::apply`] of the same genome.
+    fn revert(&mut self, g: &Genome) {
+        for (l, &r) in g.iter().enumerate() {
+            if r > 0 {
+                self.ledger.set_ratio(l, 0.0);
+            }
+        }
+    }
+
+    /// Whole-genome feasibility (used for fresh random genomes).
+    fn feasible(&mut self, g: &Genome) -> bool {
+        self.apply(g);
+        let ok = self.within_budget();
+        self.revert(g);
+        ok
+    }
+}
+
+/// Draws are bounded: a budget that admits no nonzero genome used to spin
+/// this sampler forever.
+const RANDOM_FEASIBLE_ATTEMPTS: usize = 256;
+
+fn random_feasible(oracle: &mut FeasibilityOracle<'_>, rng: &mut Rng) -> Result<Genome> {
+    let n = oracle.ledger.layer_count();
+    ensure!(n > 0, "architecture has no layers to search over");
+    for _ in 0..RANDOM_FEASIBLE_ATTEMPTS {
         // bias towards sparse genomes so feasibility is reachable
         let g: Genome = (0..n)
             .map(|_| if rng.bool(0.75) { 0 } else { rng.int_range(1, RATIO_CHOICES.len() - 1) })
             .collect();
-        if g.iter().any(|&r| r > 0) && feasible(engine, &g, budget) {
-            return g;
+        if g.iter().any(|&r| r > 0) && oracle.feasible(&g) {
+            return Ok(g);
         }
     }
+    // The random draws all failed: fall back to the cheapest possible
+    // nonzero genome (one layer at the minimum ratio). If even that is
+    // over budget, no nonzero genome exists — report it instead of
+    // looping forever.
+    let (mut best_cost, mut best_layer) = (f64::INFINITY, 0usize);
+    for l in 0..n {
+        oracle.ledger.set_ratio(l, RATIO_CHOICES[1]);
+        let cost = oracle.ledger.memory_total();
+        oracle.ledger.set_ratio(l, 0.0);
+        if cost < best_cost {
+            best_cost = cost;
+            best_layer = l;
+        }
+    }
+    if best_cost <= oracle.budget {
+        let mut g = vec![0; n];
+        g[best_layer] = 1;
+        return Ok(g);
+    }
+    Err(anyhow!(
+        "memory budget {:.0} B admits no nonzero genome: the cheapest single-layer \
+         update (layer {best_layer} at ratio {}) already needs {best_cost:.0} B — \
+         raise the search mem_budget",
+        oracle.budget,
+        RATIO_CHOICES[1]
+    ))
 }
 
-fn mutate(engine: &ModelEngine, g: &Genome, rng: &mut Rng, budget: f64) -> Genome {
+/// Mutate `g` into a feasible child. The parent is applied to the ledger
+/// once; each candidate then costs only its flipped genes (applied and
+/// reverted as deltas), so 20 attempts stay O(flips), not O(20 · layers).
+fn mutate(oracle: &mut FeasibilityOracle<'_>, g: &Genome, rng: &mut Rng) -> Genome {
     let n = g.len();
+    oracle.apply(g);
+    let mut found = None;
     for _ in 0..20 {
         let mut child = g.clone();
+        // (index, gene value before this flip) — reverted in reverse
+        // order so duplicate indices restore correctly.
+        let mut flipped: Vec<(usize, usize)> = Vec::new();
         let flips = rng.int_range(1, 3);
         for _ in 0..flips {
             let i = rng.below(n);
-            child[i] = rng.below(RATIO_CHOICES.len());
+            let v = rng.below(RATIO_CHOICES.len());
+            flipped.push((i, child[i]));
+            child[i] = v;
+            oracle.ledger.set_ratio(i, RATIO_CHOICES[v]);
         }
-        if child.iter().any(|&r| r > 0) && feasible(engine, &child, budget) {
-            return child;
+        let ok = child.iter().any(|&r| r > 0) && oracle.within_budget();
+        for &(i, prev) in flipped.iter().rev() {
+            oracle.ledger.set_ratio(i, RATIO_CHOICES[prev]);
+        }
+        if ok {
+            found = Some(child);
+            break;
         }
     }
-    g.clone()
+    oracle.revert(g);
+    found.unwrap_or_else(|| g.clone())
 }
 
 /// Fitness: mean post-adaptation accuracy on held-out source episodes.
@@ -138,10 +225,13 @@ pub fn evolutionary_search(
     cfg: &SearchConfig,
 ) -> Result<(StaticPolicy, f64)> {
     let mut rng = Rng::new(cfg.seed);
-    let budget = resolve_budget(engine, cfg.mem_budget);
+    // Budget resolution and cost-model setup happen exactly once; every
+    // genome evaluated below is priced by O(changed genes) ledger deltas.
+    let budget = resolve_budget(&engine.meta, cfg.mem_budget);
+    let mut oracle = FeasibilityOracle::new(&engine.meta, budget);
     let mut pop: Vec<(Genome, f64)> = Vec::new();
     for _ in 0..cfg.population {
-        let g = random_feasible(engine, &mut rng, budget);
+        let g = random_feasible(&mut oracle, &mut rng)?;
         let f = fitness(engine, params, &g, cfg, &mut rng)?;
         pop.push((g, f));
     }
@@ -151,7 +241,7 @@ pub fn evolutionary_search(
         let parents = pop.clone();
         while pop.len() < cfg.population {
             let p = &parents[rng.below(parents.len())].0;
-            let child = mutate(engine, p, &mut rng, budget);
+            let child = mutate(&mut oracle, p, &mut rng);
             let f = fitness(engine, params, &child, cfg, &mut rng)?;
             pop.push((child, f));
         }
@@ -171,26 +261,14 @@ pub fn default_policy(meta: &crate::model::ModelMeta, mem_budget: f64) -> Static
     let arch = &meta.scaled;
     let n = arch.layers.len();
     let auto = crate::coordinator::Budgets::default().resolve(meta);
-    let budget = if mem_budget > 0.0 {
-        mem_budget
-    } else {
-        let peak = crate::accounting::activation_peak_bytes(arch);
-        peak + 1.6 * (auto.mem_bytes - peak)
-    };
-    let full_bwd = {
-        let mut p = UpdatePlan::full(n, arch.blocks.len());
-        p.batch = 1;
-        crate::accounting::backward_macs(arch, &p).total()
-    };
-    let compute_cap = full_bwd * auto.compute_frac * 1.8;
-    let mut plan = UpdatePlan::frozen(n, arch.blocks.len());
+    let budget = resolve_budget(meta, mem_budget);
+    let mut ledger = CostLedger::new(arch, Optimizer::Adam);
+    let compute_cap = ledger.full_backward_macs() * auto.compute_frac * 1.8;
     let mut ratios = Vec::new();
     for l in (0..n).rev() {
-        plan.layer_ratio[l] = 0.25;
-        let over_mem = backward_memory(arch, &plan, Optimizer::Adam).total() > budget;
-        let over_macs = crate::accounting::backward_macs(arch, &plan).total() > compute_cap;
-        if over_mem || over_macs {
-            plan.layer_ratio[l] = 0.0;
+        ledger.set_ratio(l, 0.25);
+        if ledger.memory_total() > budget || ledger.macs_total() > compute_cap {
+            ledger.set_ratio(l, 0.0);
             break;
         }
         ratios.push((l, 0.25));
@@ -228,4 +306,100 @@ pub fn load_policy(path: &std::path::Path) -> Result<StaticPolicy> {
         })
         .collect();
     Ok(StaticPolicy { layer_ratios: ratios })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accounting::{backward_memory, UpdatePlan};
+
+    fn genome_plan(meta: &ModelMeta, g: &Genome) -> UpdatePlan {
+        let arch = &meta.scaled;
+        let mut plan = UpdatePlan::frozen(arch.layers.len(), arch.blocks.len());
+        for (l, &r) in g.iter().enumerate() {
+            plan.layer_ratio[l] = RATIO_CHOICES[r];
+        }
+        plan
+    }
+
+    #[test]
+    fn oracle_matches_full_recompute() {
+        let meta = ModelMeta::synthetic(5);
+        let budget = resolve_budget(&meta, 0.0);
+        let mut oracle = FeasibilityOracle::new(&meta, budget);
+        let n = meta.scaled.layers.len();
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let g: Genome = (0..n)
+                .map(|_| if rng.bool(0.6) { 0 } else { rng.below(RATIO_CHOICES.len()) })
+                .collect();
+            let fast = oracle.feasible(&g);
+            let full = backward_memory(&meta.scaled, &genome_plan(&meta, &g), Optimizer::Adam);
+            let slow = full.total() <= budget;
+            assert_eq!(fast, slow, "oracle disagrees with full recompute on {g:?}");
+            // the oracle must leave the ledger frozen between genomes
+            assert_eq!(oracle.ledger.macs_total(), 0.0);
+        }
+    }
+
+    #[test]
+    fn random_feasible_errors_on_impossible_budget() {
+        let meta = ModelMeta::synthetic(3);
+        let mut oracle = FeasibilityOracle::new(&meta, 1.0); // 1 byte: nothing fits
+        let mut rng = Rng::new(4);
+        let err = random_feasible(&mut oracle, &mut rng).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("admits no nonzero genome"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn random_feasible_falls_back_to_cheapest_layer() {
+        let meta = ModelMeta::synthetic(3);
+        // Budget just above the cheapest single-layer update: random
+        // draws essentially never fit, the bounded fallback must.
+        let mut probe = FeasibilityOracle::new(&meta, f64::INFINITY);
+        let n = meta.scaled.layers.len();
+        let cheapest = (0..n)
+            .map(|l| {
+                probe.ledger.set_ratio(l, RATIO_CHOICES[1]);
+                let c = probe.ledger.memory_total();
+                probe.ledger.set_ratio(l, 0.0);
+                c
+            })
+            .fold(f64::INFINITY, f64::min);
+        let mut oracle = FeasibilityOracle::new(&meta, cheapest * 1.001);
+        let mut rng = Rng::new(8);
+        let g = random_feasible(&mut oracle, &mut rng).unwrap();
+        assert!(g.iter().any(|&r| r > 0));
+        assert!(oracle.feasible(&g));
+    }
+
+    #[test]
+    fn mutate_returns_feasible_and_restores_ledger() {
+        let meta = ModelMeta::synthetic(4);
+        let budget = resolve_budget(&meta, 0.0);
+        let mut oracle = FeasibilityOracle::new(&meta, budget);
+        let mut rng = Rng::new(21);
+        let parent = random_feasible(&mut oracle, &mut rng).unwrap();
+        for _ in 0..20 {
+            let child = mutate(&mut oracle, &parent, &mut rng);
+            assert!(child.iter().any(|&r| r > 0));
+            assert!(oracle.feasible(&child), "infeasible child {child:?}");
+            assert_eq!(oracle.ledger.macs_total(), 0.0, "ledger not reverted");
+        }
+    }
+
+    #[test]
+    fn default_policy_fits_its_budget() {
+        let meta = ModelMeta::synthetic(6);
+        let policy = default_policy(&meta, 0.0);
+        assert!(!policy.layer_ratios.is_empty(), "default policy selected nothing");
+        let budget = resolve_budget(&meta, 0.0);
+        let mut plan = UpdatePlan::frozen(meta.scaled.layers.len(), meta.scaled.blocks.len());
+        for &(l, r) in &policy.layer_ratios {
+            plan.layer_ratio[l] = r;
+        }
+        let mem = backward_memory(&meta.scaled, &plan, Optimizer::Adam).total();
+        assert!(mem <= budget * (1.0 + 1e-9), "policy memory {mem} over budget {budget}");
+    }
 }

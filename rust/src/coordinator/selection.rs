@@ -7,12 +7,13 @@
 //! Random / L2-Norm scheme for the ablation baselines).
 //!
 //! The resulting `Selection` materialises as (a) an `UpdatePlan` for the
-//! analytic accounting and (b) a parameter-extent f32 mask for the AOT
-//! train-step graph.
+//! analytic accounting and (b) a segment-based [`UpdateMask`] for the
+//! training backends (densified once at the PJRT upload boundary).
 
 use super::criterion::{channel_l2_norms, layer_scores, weight_l2_norms, Criterion};
 use super::fisher::FisherReport;
-use crate::accounting::{backward_macs, backward_memory, Optimizer, UpdatePlan};
+use super::mask::UpdateMask;
+use crate::accounting::{CostLedger, Optimizer, UpdatePlan};
 use crate::model::ModelMeta;
 use crate::util::rng::Rng;
 
@@ -90,29 +91,26 @@ impl Selection {
         plan
     }
 
-    /// The parameter-extent mask for the AOT step graph: weights masked
-    /// along their output-channel axis, affine params per channel.
-    pub fn mask(&self, meta: &ModelMeta) -> Vec<f32> {
-        let mut mask = vec![0.0f32; meta.total_theta];
+    /// The update mask for the training backends: weights masked along
+    /// their output-channel axis, affine params per channel. Runs are
+    /// built per segment — no dense `total_theta` vector is touched here
+    /// (that happens once, at the PJRT upload boundary).
+    pub fn mask(&self, meta: &ModelMeta) -> UpdateMask {
+        let mut b = UpdateMask::builder(meta.total_theta);
         for (i, &l) in self.layers.iter().enumerate() {
             let mut on = vec![false; meta.scaled.layers[l].cout];
             for &c in &self.channels[i] {
                 on[c] = true;
             }
             for e in meta.layer_entries(l) {
-                let cout = *e.shape.last().unwrap();
-                debug_assert_eq!(cout, on.len(), "{}", e.name);
-                let seg = &mut mask[e.offset..e.offset + e.size];
-                for (j, v) in seg.iter_mut().enumerate() {
-                    // cout is the innermost axis for weights; gamma/beta
-                    // are 1-D per-channel, same modular rule applies.
-                    if on[j % cout] {
-                        *v = 1.0;
-                    }
-                }
+                // cout is the innermost axis for weights; gamma/beta are
+                // 1-D per-channel, same modular rule applies.
+                debug_assert_eq!(*e.shape.last().unwrap(), on.len(), "{}", e.name);
+                b.add_entry_channels(e.offset, e.size, &on);
             }
+            b.note_layer_channels(l, self.channels[i].clone());
         }
-        mask
+        b.build().expect("selection mask within parameter extent")
     }
 }
 
@@ -120,6 +118,9 @@ impl Selection {
 ///
 /// `ratio` is the channel fraction each selected layer will train (the
 /// cost model prices layers at this ratio; channel choice happens after).
+/// Each candidate is priced by an O(log n) [`CostLedger`] delta — adding
+/// a layer and, on rejection, removing it again — so the greedy sweep is
+/// O(n log n) overall instead of the former full-recompute O(n²).
 pub fn select_layers(
     meta: &ModelMeta,
     scores: &[f64],
@@ -130,26 +131,19 @@ pub fn select_layers(
     let budgets = budgets.resolve(meta);
     let arch = &meta.scaled;
     let n = arch.layers.len();
-    let full_bwd = {
-        let mut p = UpdatePlan::full(n, arch.blocks.len());
-        p.batch = 1;
-        backward_macs(arch, &p).total()
-    };
-    let compute_budget = full_bwd * budgets.compute_frac;
+    let mut ledger = CostLedger::new(arch, opt);
+    let compute_budget = ledger.full_backward_macs() * budgets.compute_frac;
 
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
 
-    let mut plan = UpdatePlan::frozen(n, arch.blocks.len());
     let mut selected = Vec::new();
     for &l in &order {
-        plan.layer_ratio[l] = ratio;
-        let mem = backward_memory(arch, &plan, opt).total();
-        let macs = backward_macs(arch, &plan).total();
-        if mem <= budgets.mem_bytes && macs <= compute_budget {
+        ledger.set_ratio(l, ratio);
+        if ledger.memory_total() <= budgets.mem_bytes && ledger.macs_total() <= compute_budget {
             selected.push(l);
         } else {
-            plan.layer_ratio[l] = 0.0;
+            ledger.set_ratio(l, 0.0);
         }
     }
     selected
@@ -217,6 +211,7 @@ pub fn run_selection(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accounting::{backward_macs, backward_memory};
     use crate::util::prop::check;
 
     fn load_meta() -> Option<ModelMeta> {
@@ -277,12 +272,12 @@ mod tests {
         };
         let mask = sel.mask(&meta);
         // only entries of the head layer are set
-        let on: f32 = mask.iter().sum();
         let expected: usize = meta
             .layer_entries(l)
             .map(|e| e.size / e.shape.last().unwrap() * 2)
             .sum();
-        assert_eq!(on as usize, expected);
+        assert_eq!(mask.nnz(), expected);
+        assert_eq!(mask.dense().iter().filter(|&&v| v > 0.0).count(), expected);
         // plan ratio matches 2/cout
         let plan = sel.plan(&meta);
         assert!((plan.layer_ratio[l] - 2.0 / cout as f64).abs() < 1e-9);

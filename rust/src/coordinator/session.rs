@@ -513,8 +513,9 @@ mod tests {
         let pseudo = episode.pseudo_query(s, &mut rng);
         let mut b = AnalyticBackend::new(&meta, params.clone(), padded, pseudo);
         // mask: head layer only (offset 20..44)
-        let mut mask = vec![0.0f32; meta.total_theta];
-        mask[20..44].fill(1.0);
+        let mut mb = crate::coordinator::UpdateMask::builder(meta.total_theta);
+        mb.add_run(20, 24);
+        let mask = mb.build().unwrap();
         assert!(b.step(0.1).is_err(), "step before set_mask must fail");
         b.set_mask(&mask).unwrap();
         b.step(0.1).unwrap();

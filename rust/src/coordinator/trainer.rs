@@ -1,20 +1,17 @@
 //! Training methods (paper Sec 3.1 baselines + TinyTrain), their mask /
 //! plan builders, and the episode hyper-parameters. The adaptation loop
-//! itself (Algorithm 1) lives in [`super::session::AdaptationSession`];
-//! the free functions `method_selection` / `run_episode` remain only as
-//! deprecated shims over it.
-
-use std::time::Instant;
+//! itself (Algorithm 1) lives in [`super::session::AdaptationSession`].
+//! All mask builders produce segment-based [`UpdateMask`]s — the dense
+//! f32 vector exists only at the PJRT upload boundary.
 
 use anyhow::Result;
 
 use super::criterion::Criterion;
-use super::engine::ModelEngine;
 use super::fisher::FisherReport;
+use super::mask::UpdateMask;
 use super::selection::{run_selection, Budgets, ChannelScheme, Selection};
 use crate::accounting::{Optimizer, UpdatePlan};
-use crate::data::{Episode, PseudoQuery};
-use crate::model::{ModelMeta, ParamStore};
+use crate::model::ModelMeta;
 
 /// On-device training methods (paper Sec 3.1 baselines + ours).
 #[derive(Debug, Clone, PartialEq)]
@@ -88,12 +85,12 @@ impl Method {
         meta: &ModelMeta,
         theta: &[f32],
         fisher: Option<&FisherReport>,
-    ) -> Result<(Vec<f32>, UpdatePlan, Vec<usize>)> {
+    ) -> Result<(UpdateMask, UpdatePlan, Vec<usize>)> {
         let n_layers = meta.scaled.layers.len();
         let n_blocks = meta.scaled.blocks.len();
         Ok(match self {
             Method::None => (
-                vec![0.0; meta.total_theta],
+                UpdateMask::empty(meta.total_theta),
                 UpdatePlan::frozen(n_layers, n_blocks),
                 vec![],
             ),
@@ -182,86 +179,66 @@ pub struct EpisodeResult {
     pub selected_layers: Vec<usize>,
 }
 
-/// Build the update mask + plan for a method (running the fisher pass if
-/// the method needs one). Returns (mask, plan, selected_layers, sel_time).
-#[deprecated(note = "use Method::selection (the fisher pass comes from an AdaptationBackend)")]
-pub fn method_selection(
-    engine: &ModelEngine,
-    method: &Method,
-    params: &ParamStore,
-    ep: &crate::data::PaddedEpisode,
-    pseudo: &(Vec<f32>, Vec<f32>, Vec<f32>),
-) -> Result<(Vec<f32>, UpdatePlan, Vec<usize>, f64)> {
-    let t0 = Instant::now();
-    let fisher = if method.needs_fisher() {
-        let pq = PseudoQuery { x: pseudo.0.clone(), y: pseudo.1.clone(), v: pseudo.2.clone() };
-        let out = engine.fisher_pass(params, ep, &pq)?;
-        Some(FisherReport::from_flat(&engine.meta, &out.deltas))
-    } else {
-        None
-    };
-    let (mask, plan, layers) = method.selection(&engine.meta, &params.theta, fisher.as_ref())?;
-    Ok((mask, plan, layers, t0.elapsed().as_secs_f64()))
-}
-
-/// Run one full on-device adaptation episode (Algorithm 1).
-#[deprecated(note = "use AdaptationSession::builder(..).method(..).config(..).build()?.adapt(..)")]
-pub fn run_episode(
-    engine: &ModelEngine,
-    base_params: &ParamStore,
-    method: &Method,
-    episode: &Episode,
-    cfg: TrainConfig,
-) -> Result<EpisodeResult> {
-    super::session::AdaptationSession::builder(engine)
-        .method(method.clone())
-        .config(cfg)
-        .backend(super::backend::Backend::Auto)
-        .build()?
-        .adapt(base_params, episode)
-}
-
 // ---------------------------------------------------------------------------
 // Pure mask builders (unit-testable without a runtime).
 // ---------------------------------------------------------------------------
 
 /// FullTrain: every backbone parameter; adapters stay frozen (they don't
 /// exist in the paper's FullTrain baseline; zero-init keeps them inert).
-pub fn full_train_mask(meta: &crate::model::ModelMeta) -> (Vec<f32>, UpdatePlan) {
-    let mut mask = vec![1.0f32; meta.total_theta];
-    for e in meta.entries.iter().filter(|e| e.role.starts_with("adapter")) {
-        mask[e.offset..e.offset + e.size].fill(0.0);
+/// Built as the run-complement of the adapter entries, so the mask costs
+/// O(adapters) regardless of `total_theta`.
+pub fn full_train_mask(meta: &crate::model::ModelMeta) -> (UpdateMask, UpdatePlan) {
+    let mut adapters: Vec<(usize, usize)> = meta
+        .entries
+        .iter()
+        .filter(|e| e.role.starts_with("adapter"))
+        .map(|e| (e.offset, e.size))
+        .collect();
+    adapters.sort_unstable();
+    let mut b = UpdateMask::builder(meta.total_theta);
+    let mut cursor = 0usize;
+    for (off, size) in adapters {
+        if off > cursor {
+            b.add_run(cursor, off - cursor);
+        }
+        cursor = cursor.max(off + size);
     }
+    if meta.total_theta > cursor {
+        b.add_run(cursor, meta.total_theta - cursor);
+    }
+    let mask = b.build().expect("full-train mask within parameter extent");
     let mut plan = UpdatePlan::full(meta.scaled.layers.len(), meta.scaled.blocks.len());
     plan.batch = 100;
     (mask, plan)
 }
 
 /// LastLayer: the head conv only.
-pub fn last_layer_mask(meta: &crate::model::ModelMeta) -> (Vec<f32>, UpdatePlan) {
+pub fn last_layer_mask(meta: &crate::model::ModelMeta) -> (UpdateMask, UpdatePlan) {
     let l = meta.head_layer();
-    let mut mask = vec![0.0f32; meta.total_theta];
+    let mut b = UpdateMask::builder(meta.total_theta);
     for e in meta.layer_entries(l) {
-        mask[e.offset..e.offset + e.size].fill(1.0);
+        b.add_entry(e.offset, e.size);
     }
+    let mask = b.build().expect("last-layer mask within parameter extent");
     (mask, UpdatePlan::last_layer(meta.scaled.layers.len(), meta.scaled.blocks.len()))
 }
 
 /// TinyTL / AdapterDrop-frac: lite-residual adapters of blocks
 /// [frac*n_blocks, n_blocks) plus the head.
-pub fn adapter_mask(meta: &crate::model::ModelMeta, frac: f64) -> (Vec<f32>, UpdatePlan) {
+pub fn adapter_mask(meta: &crate::model::ModelMeta, frac: f64) -> (UpdateMask, UpdatePlan) {
     let n_blocks = meta.scaled.blocks.len();
     let dropped = ((n_blocks as f64) * frac).round() as usize;
-    let mut mask = vec![0.0f32; meta.total_theta];
-    for b in dropped..n_blocks {
-        for e in meta.adapter_entries(b) {
-            mask[e.offset..e.offset + e.size].fill(1.0);
+    let mut b = UpdateMask::builder(meta.total_theta);
+    for block in dropped..n_blocks {
+        for e in meta.adapter_entries(block) {
+            b.add_entry(e.offset, e.size);
         }
     }
     let head = meta.head_layer();
     for e in meta.layer_entries(head) {
-        mask[e.offset..e.offset + e.size].fill(1.0);
+        b.add_entry(e.offset, e.size);
     }
+    let mask = b.build().expect("adapter mask within parameter extent");
     let mut plan = UpdatePlan::adapter_drop(meta.scaled.layers.len(), n_blocks, frac);
     plan.layer_ratio[head] = 1.0;
     (mask, plan)
@@ -272,23 +249,22 @@ pub fn adapter_mask(meta: &crate::model::ModelMeta, frac: f64) -> (Vec<f32>, Upd
 pub fn static_policy_mask(
     meta: &crate::model::ModelMeta,
     policy: &StaticPolicy,
-) -> (Vec<f32>, UpdatePlan) {
-    let mut mask = vec![0.0f32; meta.total_theta];
+) -> (UpdateMask, UpdatePlan) {
+    let mut b = UpdateMask::builder(meta.total_theta);
     let mut plan = UpdatePlan::frozen(meta.scaled.layers.len(), meta.scaled.blocks.len());
     for &(l, ratio) in &policy.layer_ratios {
         plan.layer_ratio[l] = ratio;
         let cout = meta.scaled.layers[l].cout;
         let k = ((cout as f64 * ratio).ceil() as usize).clamp(1, cout);
         for e in meta.layer_entries(l) {
+            // the first-k rule applies per entry period (innermost axis)
             let co = *e.shape.last().unwrap();
-            let seg = &mut mask[e.offset..e.offset + e.size];
-            for (j, v) in seg.iter_mut().enumerate() {
-                if j % co < k {
-                    *v = 1.0;
-                }
-            }
+            let on: Vec<bool> = (0..co).map(|c| c < k).collect();
+            b.add_entry_channels(e.offset, e.size, &on);
         }
+        b.note_layer_channels(l, (0..k.min(cout)).collect());
     }
+    let mask = b.build().expect("static-policy mask within parameter extent");
     (mask, plan)
 }
 
@@ -307,8 +283,7 @@ mod tests {
         let Some(meta) = meta() else { return };
         let (mask, plan) = full_train_mask(&meta);
         for e in &meta.entries {
-            let on = mask[e.offset] > 0.0;
-            assert_eq!(on, !e.role.starts_with("adapter"), "{}", e.name);
+            assert_eq!(mask.covers(e.offset), !e.role.starts_with("adapter"), "{}", e.name);
         }
         assert_eq!(plan.batch, 100);
         assert!(plan.layer_ratio.iter().all(|&r| r == 1.0));
@@ -320,7 +295,7 @@ mod tests {
         let (mask, plan) = last_layer_mask(&meta);
         let head = meta.head_layer();
         let expected: usize = meta.layer_entries(head).map(|e| e.size).sum();
-        assert_eq!(mask.iter().filter(|&&v| v > 0.0).count(), expected);
+        assert_eq!(mask.nnz(), expected);
         assert_eq!(plan.earliest_updated(), Some(head));
     }
 
@@ -329,12 +304,11 @@ mod tests {
         let Some(meta) = meta() else { return };
         let (m_full, _) = adapter_mask(&meta, 0.0);
         let (m_half, _) = adapter_mask(&meta, 0.5);
-        let on = |m: &[f32]| m.iter().filter(|&&v| v > 0.0).count();
-        assert!(on(&m_half) < on(&m_full));
+        assert!(m_half.nnz() < m_full.nnz());
         // first block's adapter must be off at 50% drop
         let first = meta.adapter_entries(0).next().unwrap();
-        assert_eq!(m_half[first.offset], 0.0);
-        assert!(m_full[first.offset] > 0.0);
+        assert!(!m_half.covers(first.offset));
+        assert!(m_full.covers(first.offset));
     }
 
     #[test]
@@ -350,7 +324,8 @@ mod tests {
             .layer_entries(head)
             .find(|e| e.role == "gamma")
             .unwrap();
-        let seg = &mask[gamma.offset..gamma.offset + gamma.size];
+        let dense = mask.dense();
+        let seg = &dense[gamma.offset..gamma.offset + gamma.size];
         assert!(seg[..k].iter().all(|&v| v == 1.0));
         assert!(seg[k..].iter().all(|&v| v == 0.0));
         assert!((plan.layer_ratio[head] - 0.25).abs() < 1e-12);

@@ -3,6 +3,7 @@
 
 use anyhow::Result;
 
+use super::parallel::{cell_seed, episode_streams};
 use super::Ctx;
 use crate::accounting::{backward_macs, backward_memory, Optimizer};
 use crate::coordinator::{
@@ -14,6 +15,9 @@ use crate::model::ParamStore;
 use crate::util::rng::Rng;
 
 /// Mean accuracy of `method` on `domain` over ctx.episodes episodes.
+/// Engine-backed cells run serially (the PJRT runtime is `!Sync`) but
+/// consume the same pre-forked episode streams as the parallel analytic
+/// grid (`harness::parallel`), so both paths see identical episodes.
 pub fn eval_cell(
     ctx: &Ctx,
     engine: &ModelEngine,
@@ -23,22 +27,16 @@ pub fn eval_cell(
 ) -> Result<crate::metrics::CellStats> {
     let d = domain_by_name(domain).ok_or_else(|| anyhow::anyhow!("unknown domain {domain}"))?;
     let sampler = Sampler::new(d.as_ref(), &engine.meta.shapes);
-    let mut rng = Rng::new(ctx.seed ^ fxhash(domain));
     let session = AdaptationSession::builder(engine)
         .method(method.clone())
         .config(TrainConfig { steps: ctx.steps, lr: ctx.lr, seed: 0 })
         .build()?;
     let mut results = Vec::new();
-    for e in 0..ctx.episodes {
-        let mut erng = rng.fork(e as u64);
+    for mut erng in episode_streams(cell_seed(ctx.seed, domain), ctx.episodes) {
         let ep = sampler.sample(&mut erng);
         results.push(session.adapt_with_seed(params, &ep, erng.next_u64())?);
     }
     Ok(aggregate(&results))
-}
-
-fn fxhash(s: &str) -> u64 {
-    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
 }
 
 /// Table 1 (main accuracy grid) / Table 6 (extended baselines).

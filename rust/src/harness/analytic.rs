@@ -7,7 +7,7 @@ use anyhow::Result;
 
 use super::Ctx;
 use crate::accounting::{
-    backward_macs, backward_memory, saved_acts_last_k_blocks, Optimizer, UpdatePlan,
+    backward_macs, backward_memory, saved_acts_last_k_blocks, CostLedger, Optimizer, UpdatePlan,
 };
 use crate::coordinator::ModelEngine;
 use crate::metrics::{fmt_kb, fmt_m, fmt_mb, fmt_ratio, Table};
@@ -30,14 +30,11 @@ pub fn paper_plans(engine: &ModelEngine) -> Vec<(String, UpdatePlan)> {
     let sparse_budget = peak + 0.80e6;
 
     // TinyTrain: greedy under the 1 MB / 15% budgets, preferring cheap
-    // late layers (multi-objective shape), ratio 0.5.
-    let mut tiny = UpdatePlan::frozen(n, nb);
-    {
-        let full_bwd = {
-            let mut p = UpdatePlan::full(n, nb);
-            p.batch = 1;
-            backward_macs(arch, &p).total()
-        };
+    // late layers (multi-objective shape), ratio 0.5. Each candidate is
+    // priced by a CostLedger delta, not a full table walk.
+    let tiny = {
+        let mut ledger = CostLedger::new(arch, Optimizer::Adam);
+        let full_bwd = ledger.full_backward_macs();
         // score ~ 1/(params*macs) — the resource side of Eq. 3.
         let max_p = arch.layers.iter().map(|l| l.params).max().unwrap() as f64;
         let max_m = arch.layers.iter().map(|l| l.macs).max().unwrap() as f64;
@@ -48,14 +45,13 @@ pub fn paper_plans(engine: &ModelEngine) -> Vec<(String, UpdatePlan)> {
             sb.partial_cmp(&sa).unwrap()
         });
         for &l in &order {
-            tiny.layer_ratio[l] = 0.5;
-            let mem = backward_memory(arch, &tiny, Optimizer::Adam).total();
-            let macs = backward_macs(arch, &tiny).total();
-            if mem > tiny_budget || macs > full_bwd * 0.15 {
-                tiny.layer_ratio[l] = 0.0;
+            ledger.set_ratio(l, 0.5);
+            if ledger.memory_total() > tiny_budget || ledger.macs_total() > full_bwd * 0.15 {
+                ledger.set_ratio(l, 0.0);
             }
         }
-    }
+        ledger.plan()
+    };
 
     // SparseUpdate: static offline-searched policy. MCUNetV3's released
     // policies update a contiguous band of deeper layers at low channel
@@ -63,22 +59,23 @@ pub fn paper_plans(engine: &ModelEngine) -> Vec<(String, UpdatePlan)> {
     // the paper's Table 2 shows SparseUpdate at 1.5-1.8x TinyTrain's
     // backward compute despite comparable memory. We grow the band
     // downward (ratio 1/8) until memory or that compute relation binds.
-    let mut sparse = UpdatePlan::frozen(n, nb);
-    {
+    let sparse = {
         let tiny_macs = backward_macs(arch, &tiny).total();
+        let mut ledger = CostLedger::new(arch, Optimizer::Adam);
         for l in (0..n).rev() {
-            sparse.layer_ratio[l] = 0.125;
-            if backward_memory(arch, &sparse, Optimizer::Adam).total() > sparse_budget {
+            ledger.set_ratio(l, 0.125);
+            if ledger.memory_total() > sparse_budget {
                 // too fat for the remaining budget: the searched policies
                 // simply skip such layers and keep reaching deeper
-                sparse.layer_ratio[l] = 0.0;
+                ledger.set_ratio(l, 0.0);
                 continue;
             }
-            if backward_macs(arch, &sparse).total() > 1.8 * tiny_macs {
+            if ledger.macs_total() > 1.8 * tiny_macs {
                 break;
             }
         }
-    }
+        ledger.plan()
+    };
 
     vec![
         ("FullTrain".into(), UpdatePlan::full(n, nb)),

@@ -10,6 +10,7 @@ pub mod accuracy;
 pub mod analytic;
 pub mod figures;
 pub mod latency;
+pub mod parallel;
 pub mod sampler_stats;
 
 use std::path::PathBuf;

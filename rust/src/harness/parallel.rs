@@ -1,0 +1,174 @@
+//! Parallel episode-cell evaluation.
+//!
+//! The harness's unit of work is one (method × domain × episode) cell.
+//! The serial path evaluated those cells one after another; this module
+//! fans the flattened cell list out across a scoped thread pool
+//! (`util::pool::parallel_map`) with a per-item `AdaptationSession` —
+//! sessions are cheap (validation only) and borrow the model immutably,
+//! so any number can run concurrently against one `ModelMeta`.
+//!
+//! Determinism contract: every episode's RNG stream is forked from its
+//! cell RNG *serially, before the fan-out*, and each worker owns its
+//! fork. Results are therefore bit-identical for any worker count — a
+//! `workers == 1` run *is* the serial path, and the engine-backed serial
+//! harness (`accuracy::eval_cell`) consumes the same streams, so the two
+//! paths agree episode for episode.
+//!
+//! Scope: the parallel grid runs on the analytic backend (built from
+//! bare `ModelMeta`). The PJRT runtime is `Rc`-based and `!Sync`, so
+//! engine-backed cells stay serial until the runtime is `Send`
+//! (ROADMAP); the seeding contract here is what guarantees the two
+//! produce comparable tables.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{AdaptationSession, EpisodeResult, Method, TrainConfig};
+use crate::data::{domain_by_name, Sampler};
+use crate::metrics::{aggregate, CellStats};
+use crate::model::{ModelMeta, ParamStore};
+use crate::util::pool::{default_workers, parallel_map};
+use crate::util::rng::Rng;
+
+/// Knobs of one parallel grid evaluation.
+#[derive(Debug, Clone)]
+pub struct GridConfig {
+    pub episodes: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub workers: usize,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig { episodes: 4, steps: 8, lr: 6e-3, seed: 7, workers: default_workers() }
+    }
+}
+
+/// FNV-1a — the stable string hash behind per-domain cell seeds.
+pub(crate) fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// The RNG seed of one (run seed, domain) cell — shared by the serial
+/// engine-backed harness and the parallel analytic grid so their
+/// episode streams coincide.
+pub fn cell_seed(seed: u64, domain: &str) -> u64 {
+    seed ^ fxhash(domain)
+}
+
+/// One independent RNG stream per episode, forked serially from the cell
+/// seed. Fork order is fixed up front, which is what makes the fan-out
+/// worker-count-invariant.
+pub fn episode_streams(cell: u64, episodes: usize) -> Vec<Rng> {
+    let mut rng = Rng::new(cell);
+    (0..episodes).map(|e| rng.fork(e as u64)).collect()
+}
+
+/// Evaluate one episode on the analytic backend with its own stream:
+/// sample, adapt, return the result. This is the closure body every
+/// worker runs; errors are stringified so results stay `Send` without
+/// assumptions about the error type.
+fn run_episode_analytic(
+    meta: &ModelMeta,
+    params: &ParamStore,
+    method: &Method,
+    domain: &str,
+    tc: TrainConfig,
+    stream: &Rng,
+) -> Result<EpisodeResult, String> {
+    let d = domain_by_name(domain).ok_or_else(|| format!("unknown domain {domain}"))?;
+    let session = AdaptationSession::analytic(meta)
+        .method(method.clone())
+        .config(tc)
+        .build()
+        .map_err(|e| e.to_string())?;
+    let mut erng = stream.clone();
+    let ep = Sampler::new(d.as_ref(), &meta.shapes).sample(&mut erng);
+    session.adapt_with_seed(params, &ep, erng.next_u64()).map_err(|e| e.to_string())
+}
+
+/// Mean accuracy of `method` on `domain` over `cfg.episodes` analytic
+/// episodes, fanned out over `cfg.workers` threads.
+pub fn eval_cell_analytic(
+    meta: &ModelMeta,
+    params: &ParamStore,
+    method: &Method,
+    domain: &str,
+    cfg: &GridConfig,
+) -> Result<CellStats> {
+    let streams = episode_streams(cell_seed(cfg.seed, domain), cfg.episodes);
+    let tc = TrainConfig { steps: cfg.steps, lr: cfg.lr, seed: 0 };
+    let results = parallel_map(cfg.episodes, cfg.workers, |e| {
+        run_episode_analytic(meta, params, method, domain, tc, &streams[e])
+    });
+    let results: Vec<EpisodeResult> =
+        results.into_iter().collect::<Result<_, String>>().map_err(|e| anyhow!(e))?;
+    Ok(aggregate(&results))
+}
+
+/// The full (method × domain) accuracy grid on the analytic backend.
+/// All episodes of all cells form one flat work list, so threads stay
+/// busy across cell boundaries; returns `stats[method][domain]`.
+pub fn accuracy_grid(
+    meta: &ModelMeta,
+    params: &ParamStore,
+    methods: &[Method],
+    domains: &[String],
+    cfg: &GridConfig,
+) -> Result<Vec<Vec<CellStats>>> {
+    // (method, domain, stream) triples in deterministic cell order.
+    let mut items: Vec<(&Method, &str, Rng)> = Vec::new();
+    for method in methods {
+        for domain in domains {
+            for stream in episode_streams(cell_seed(cfg.seed, domain), cfg.episodes) {
+                items.push((method, domain.as_str(), stream));
+            }
+        }
+    }
+    let tc = TrainConfig { steps: cfg.steps, lr: cfg.lr, seed: 0 };
+    let results = parallel_map(items.len(), cfg.workers, |i| {
+        let (method, domain, stream) = &items[i];
+        run_episode_analytic(meta, params, method, domain, tc, stream)
+    });
+    let mut flat = results.into_iter();
+    let mut grid = Vec::with_capacity(methods.len());
+    for _ in methods {
+        let mut row = Vec::with_capacity(domains.len());
+        for _ in domains {
+            let cell: Vec<EpisodeResult> = flat
+                .by_ref()
+                .take(cfg.episodes)
+                .collect::<Result<_, String>>()
+                .map_err(|e| anyhow!(e))?;
+            row.push(aggregate(&cell));
+        }
+        grid.push(row);
+    }
+    Ok(grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episode_streams_are_worker_invariant_by_construction() {
+        let a = episode_streams(42, 5);
+        let b = episode_streams(42, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.clone().next_u64(), y.clone().next_u64());
+        }
+        // longer runs extend, never reshuffle, the prefix
+        let c = episode_streams(42, 8);
+        for (x, y) in a.iter().zip(&c) {
+            assert_eq!(x.clone().next_u64(), y.clone().next_u64());
+        }
+    }
+
+    #[test]
+    fn cell_seed_is_domain_stable() {
+        assert_eq!(cell_seed(7, "traffic"), cell_seed(7, "traffic"));
+        assert_ne!(cell_seed(7, "traffic"), cell_seed(7, "omniglot"));
+    }
+}

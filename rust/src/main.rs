@@ -4,6 +4,7 @@
 //!   pretrain  --arch <a> [--episodes N] [--steps N] [--lr X]   offline meta-training
 //!   search    --arch <a> [--population N] [--generations N]    SparseUpdate ES (offline)
 //!   adapt     --arch <a> --domain <d> [--method M] [--steps N] one on-device adaptation
+//!   grid      [--arch a] [--episodes N] [--workers K]          parallel analytic grid
 //!   exp       <table1|table2|...|fig6b|all|all-analytic> [...] regenerate paper artefacts
 //!   info      [--arch a,b,c]                                   artifact + arch summary
 //!
@@ -16,10 +17,12 @@ use tinytrain::coordinator::{
     TrainConfig,
 };
 use tinytrain::data::{domain_by_name, Episode, Sampler};
-use tinytrain::harness::{self};
+use tinytrain::harness::{self, parallel};
+use tinytrain::metrics::{fmt_pct, Table};
 use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::runtime::{ArtifactStore, Runtime};
 use tinytrain::util::cli::Args;
+use tinytrain::util::pool::default_workers;
 use tinytrain::util::rng::Rng;
 
 fn main() {
@@ -35,6 +38,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("pretrain") => pretrain(args),
         Some("search") => run_search(args),
         Some("adapt") => adapt(args),
+        Some("grid") => grid(args),
         Some("exp") => {
             let id = args
                 .positional
@@ -58,6 +62,8 @@ USAGE:
   tinytrain search   --arch mcunet [--population 8] [--generations 4]
   tinytrain adapt    --arch mcunet --domain traffic [--method tinytrain] [--steps 10]
                      [--backend auto|host|device|analytic]
+  tinytrain grid     [--arch mcunet] [--episodes 4] [--steps 8] [--workers N]
+                     [--domains a,b] [--seed S]   (analytic backend, no PJRT needed)
   tinytrain exp      <table1|table2|table3|table4|table5|table7|table8|table9|table10|
                       table11|fig1|fig3|fig4|fig5|fig6a|fig6b|all|all-analytic>
                      [--tier smoke|full|paper] [--arch a,b] [--episodes N] [--steps N]
@@ -172,6 +178,78 @@ fn adapt(args: &Args) -> Result<()> {
         .backend(backend)
         .build()?;
     report_episode(session.adapt_with_seed(&params, &ep, rng.next_u64())?)
+}
+
+/// Parallel analytic accuracy grid: (method × domain × episode) cells
+/// fanned out across a scoped thread pool with per-thread sessions —
+/// the multi-tenant serving shape, runnable without PJRT. Falls back to
+/// the synthetic architecture when no artifacts are deployed, so the
+/// command works in any checkout.
+fn grid(args: &Args) -> Result<()> {
+    let arch = args.str("arch", "mcunet");
+    let (meta, params) = match ArtifactStore::discover(args.opt("artifacts")) {
+        Ok(store) => {
+            let arts = store.model(&arch);
+            let meta = ModelMeta::load(&arts.meta)?;
+            let params = ParamStore::load_or_init(&meta, &arts.weights, 42);
+            (meta, params)
+        }
+        Err(_) => {
+            eprintln!("[grid] no artifacts found — using the synthetic 8-block arch");
+            let meta = ModelMeta::synthetic(8);
+            let params = ParamStore::init(&meta, 42);
+            (meta, params)
+        }
+    };
+    let cfg = parallel::GridConfig {
+        episodes: args.usize("episodes", 4),
+        steps: args.usize("steps", 8),
+        lr: args.f64("lr", 6e-3) as f32,
+        seed: args.u64("seed", 7),
+        workers: args.usize("workers", default_workers()),
+    };
+    let domains = args.list("domains", &tinytrain::data::DOMAIN_NAMES);
+    let methods = vec![
+        Method::None,
+        Method::LastLayer,
+        Method::SparseUpdate(search::default_policy(&meta, 0.0)),
+        Method::tinytrain_default(),
+    ];
+    eprintln!(
+        "[grid] {}: {} methods x {} domains x {} episodes on {} workers (analytic backend)",
+        meta.arch,
+        methods.len(),
+        domains.len(),
+        cfg.episodes,
+        cfg.workers
+    );
+    let t0 = std::time::Instant::now();
+    let stats = parallel::accuracy_grid(&meta, &params, &methods, &domains, &cfg)?;
+    let mut cols: Vec<&str> = domains.iter().map(|s| s.as_str()).collect();
+    cols.push("Avg.");
+    let mut table = Table::new(
+        &format!(
+            "Parallel analytic grid — {} ({} episodes x {} steps, {} workers)",
+            meta.arch,
+            cfg.episodes,
+            cfg.steps,
+            cfg.workers
+        ),
+        &cols,
+    );
+    for (method, row) in methods.iter().zip(&stats) {
+        let mut cells: Vec<String> = row.iter().map(|c| fmt_pct(c.mean_acc)).collect();
+        let avg = row.iter().map(|c| c.mean_acc).sum::<f64>() / row.len().max(1) as f64;
+        cells.push(fmt_pct(avg));
+        table.row(&method.label(), cells);
+    }
+    println!("{}", table.to_markdown());
+    eprintln!(
+        "[grid] {} episodes in {:.2}s wall",
+        methods.len() * domains.len() * cfg.episodes,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
 }
 
 fn announce_episode(arch: &str, domain_name: &str, ep: &Episode) {

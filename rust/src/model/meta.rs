@@ -200,6 +200,151 @@ impl ModelMeta {
         })
     }
 
+    /// Fully consistent synthetic metadata — the layer table, theta
+    /// packing, fisher segments and episode shapes all agree — for
+    /// benches and PJRT-free tests that need more than a toy two-layer
+    /// arch. Topology is mcunet-like: stem + `n_blocks` inverted-residual
+    /// blocks (pw-expand / dw / pw-project, widths growing with depth,
+    /// the deeper half at reduced resolution) + head. No adapters, so
+    /// TinyTL-family masks degrade to head-only on this meta.
+    pub fn synthetic(n_blocks: usize) -> ModelMeta {
+        let img = 16usize;
+        let channels = 3usize;
+        let feat_dim = 16usize;
+
+        struct Builder {
+            layers: Vec<LayerInfo>,
+            entries: Vec<ParamEntry>,
+            fisher_segments: Vec<FisherSegment>,
+            offset: usize,
+            fisher_off: usize,
+        }
+        impl Builder {
+            /// Push one conv layer plus its weight/gamma/beta entries and
+            /// fisher segment; returns the layer index.
+            #[allow(clippy::too_many_arguments)]
+            fn layer(
+                &mut self,
+                name: &str,
+                kind: &str,
+                cin: usize,
+                cout: usize,
+                k: usize,
+                hw: usize,
+                block: i64,
+            ) -> usize {
+                let idx = self.layers.len();
+                let depthwise = kind == "dw";
+                let weight_params = if depthwise { k * k * cout } else { k * k * cin * cout };
+                let macs = hw * hw * cout * k * k * if depthwise { 1 } else { cin };
+                self.layers.push(LayerInfo {
+                    name: name.into(),
+                    kind: kind.into(),
+                    cin,
+                    cout,
+                    k,
+                    stride: 1,
+                    act: true,
+                    in_hw: hw,
+                    out_hw: hw,
+                    block,
+                    weight_params,
+                    params: weight_params + 2 * cout,
+                    macs,
+                    act_elems: hw * hw * cout,
+                });
+                let w_shape = if depthwise { vec![k, k, 1, cout] } else { vec![k, k, cin, cout] };
+                for (role, shape) in
+                    [("weight", w_shape), ("gamma", vec![cout]), ("beta", vec![cout])]
+                {
+                    let size: usize = shape.iter().product();
+                    let mask_axis = shape.len() - 1;
+                    self.entries.push(ParamEntry {
+                        name: format!("{name}.{role}"),
+                        shape,
+                        offset: self.offset,
+                        size,
+                        role: role.into(),
+                        layer: idx,
+                        mask_axis,
+                    });
+                    self.offset += size;
+                }
+                self.fisher_segments.push(FisherSegment {
+                    layer: idx,
+                    name: name.into(),
+                    offset: self.fisher_off,
+                    size: cout,
+                });
+                self.fisher_off += cout;
+                idx
+            }
+        }
+
+        let mut b = Builder {
+            layers: Vec::new(),
+            entries: Vec::new(),
+            fisher_segments: Vec::new(),
+            offset: 0,
+            fisher_off: 0,
+        };
+        b.layer("stem", "stem", channels, 8, 3, img, -1);
+        let mut blocks = Vec::new();
+        let mut cin = 8usize;
+        for bi in 0..n_blocks {
+            let cout = 8 + 4 * bi;
+            let hidden = cin * 2;
+            let hw = if bi < n_blocks / 2 { img } else { img / 2 };
+            let e = b.layer(&format!("b{bi}.expand"), "pw", cin, hidden, 1, hw, bi as i64);
+            let d = b.layer(&format!("b{bi}.dw"), "dw", hidden, hidden, 3, hw, bi as i64);
+            let p = b.layer(&format!("b{bi}.project"), "pw", hidden, cout, 1, hw, bi as i64);
+            blocks.push(BlockInfo {
+                idx: bi,
+                cin,
+                cout,
+                expand: 2,
+                k: 3,
+                stride: 1,
+                in_hw: hw,
+                out_hw: hw,
+                skip: cin == cout,
+                conv_ids: vec![e, d, p],
+            });
+            cin = cout;
+        }
+        b.layer("head", "head", cin, feat_dim, 1, img / 2, -1);
+
+        let total_params: usize = b.layers.iter().map(|l| l.params).sum();
+        let total_macs: usize = b.layers.iter().map(|l| l.macs).sum();
+        let flavor = ArchFlavor {
+            img,
+            feat_dim,
+            layers: b.layers,
+            blocks,
+            total_params,
+            total_macs,
+        };
+        ModelMeta {
+            arch: format!("synthetic{n_blocks}"),
+            scaled: flavor.clone(),
+            paper: flavor,
+            entries: b.entries,
+            total_theta: b.offset,
+            fisher_len: b.fisher_off,
+            fisher_segments: b.fisher_segments,
+            shapes: EpisodeShapes {
+                img,
+                channels,
+                max_ways: 4,
+                max_support: 8,
+                max_query: 8,
+                eval_batch: 16,
+                feat_dim,
+                cosine_tau: 10.0,
+            },
+        }
+    }
+
     /// Param entries belonging to conv layer `layer` (not adapters).
     pub fn layer_entries(&self, layer: usize) -> impl Iterator<Item = &ParamEntry> {
         self.entries
@@ -217,5 +362,45 @@ impl ModelMeta {
     /// Index of the head layer (the `LastLayer` baseline's target).
     pub fn head_layer(&self) -> usize {
         self.scaled.layers.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_meta_is_self_consistent() {
+        let meta = ModelMeta::synthetic(4);
+        assert_eq!(meta.scaled.layers.len(), 2 + 3 * 4);
+        assert_eq!(meta.scaled.blocks.len(), 4);
+        // entries tile theta contiguously
+        let mut cursor = 0;
+        for e in &meta.entries {
+            assert_eq!(e.offset, cursor, "{} not contiguous", e.name);
+            assert_eq!(e.size, e.shape.iter().product::<usize>());
+            cursor += e.size;
+        }
+        assert_eq!(cursor, meta.total_theta);
+        // fisher segments: one per layer, sized cout, contiguous
+        assert_eq!(meta.fisher_segments.len(), meta.scaled.layers.len());
+        let mut fcur = 0;
+        for (l, seg) in meta.fisher_segments.iter().enumerate() {
+            assert_eq!(seg.layer, l);
+            assert_eq!(seg.offset, fcur);
+            assert_eq!(seg.size, meta.scaled.layers[l].cout);
+            fcur += seg.size;
+        }
+        assert_eq!(fcur, meta.fisher_len);
+        // episode shapes agree with the eval-batch convention
+        let s = &meta.shapes;
+        assert_eq!(s.eval_batch, s.max_support + s.max_query);
+        assert_eq!(s.img, meta.scaled.img);
+        // block conv ids point at in-range layers of that block
+        for b in &meta.scaled.blocks {
+            for &ci in &b.conv_ids {
+                assert_eq!(meta.scaled.layers[ci].block, b.idx as i64);
+            }
+        }
     }
 }

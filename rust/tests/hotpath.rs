@@ -1,0 +1,393 @@
+//! Hot-path equivalence and determinism tests — pure rust, no PJRT, run
+//! on every backend (stub included):
+//!
+//! - `CostLedger` deltas match full `backward_memory`/`backward_macs`
+//!   recomputation over random edit walks (property test);
+//! - every `Method`'s segment `UpdateMask` materialises bit-identically
+//!   to the seed's dense mask builders (reference implementations kept
+//!   verbatim below);
+//! - the parallel episode harness produces identical accuracy tables to
+//!   the serial path for a fixed seed, at any worker count.
+
+use tinytrain::accounting::{backward_macs, backward_memory, CostLedger, Optimizer, UpdatePlan};
+use tinytrain::coordinator::{
+    Budgets, ChannelScheme, Criterion, FisherReport, Method, Selection, StaticPolicy,
+};
+use tinytrain::harness::parallel::{accuracy_grid, eval_cell_analytic, GridConfig};
+use tinytrain::model::{ModelMeta, ParamStore};
+use tinytrain::util::prop::check;
+
+const RATIOS: [f64; 5] = [0.0, 0.125, 0.25, 0.5, 1.0];
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0)
+}
+
+// ---------------------------------------------------------------------------
+// CostLedger vs full recomputation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ledger_matches_full_recomputation_property() {
+    let meta = ModelMeta::synthetic(7);
+    let arch = &meta.scaled;
+    let n = arch.layers.len();
+    check(
+        "ledger-vs-recompute",
+        25,
+        31,
+        |r| {
+            // a random edit walk: (layer, ratio-choice) pairs
+            let len = r.int_range(1, 40);
+            (0..len).map(|_| (r.below(n), r.below(RATIOS.len()))).collect::<Vec<_>>()
+        },
+        |walk| {
+            let mut ledger = CostLedger::new(arch, Optimizer::Adam);
+            let mut plan = UpdatePlan::frozen(n, arch.blocks.len());
+            for &(l, c) in walk {
+                ledger.set_ratio(l, RATIOS[c]);
+                plan.layer_ratio[l] = RATIOS[c];
+                let mem = backward_memory(arch, &plan, Optimizer::Adam).total();
+                let macs = backward_macs(arch, &plan).total();
+                if !close(ledger.memory_total(), mem) {
+                    return Err(format!(
+                        "memory: ledger {} vs recompute {mem}",
+                        ledger.memory_total()
+                    ));
+                }
+                if !close(ledger.macs_total(), macs) {
+                    return Err(format!(
+                        "macs: ledger {} vs recompute {macs}",
+                        ledger.macs_total()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ledger_selection_agrees_with_recompute_selection() {
+    // The greedy selection decisions (not just the totals) must agree
+    // with a full-recompute reference over random score vectors.
+    let meta = ModelMeta::synthetic(6);
+    let n = meta.scaled.layers.len();
+    check(
+        "ledger-selection",
+        20,
+        17,
+        |r| {
+            let scores: Vec<f64> = (0..n).map(|_| r.uniform()).collect();
+            let mem = r.range(10_000.0, 1e7);
+            let frac = r.range(0.05, 0.9);
+            (scores, mem, frac)
+        },
+        |(scores, mem, frac)| {
+            let budgets = Budgets { mem_bytes: *mem, compute_frac: *frac };
+            let fast = tinytrain::coordinator::selection::select_layers(
+                &meta,
+                scores,
+                budgets,
+                0.5,
+                Optimizer::Adam,
+            );
+            // reference: the seed's full-recompute greedy
+            let arch = &meta.scaled;
+            let full_bwd = {
+                let mut p = UpdatePlan::full(n, arch.blocks.len());
+                p.batch = 1;
+                backward_macs(arch, &p).total()
+            };
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            let mut plan = UpdatePlan::frozen(n, arch.blocks.len());
+            let mut slow = Vec::new();
+            for &l in &order {
+                plan.layer_ratio[l] = 0.5;
+                let m = backward_memory(arch, &plan, Optimizer::Adam).total();
+                let c = backward_macs(arch, &plan).total();
+                if m <= *mem && c <= full_bwd * frac {
+                    slow.push(l);
+                } else {
+                    plan.layer_ratio[l] = 0.0;
+                }
+            }
+            if fast != slow {
+                return Err(format!("ledger picked {fast:?}, reference picked {slow:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Segment masks vs the seed's dense builders
+// ---------------------------------------------------------------------------
+
+/// Seed reference: FullTrain (all ones, adapters zeroed).
+fn dense_full_train(meta: &ModelMeta) -> Vec<f32> {
+    let mut mask = vec![1.0f32; meta.total_theta];
+    for e in meta.entries.iter().filter(|e| e.role.starts_with("adapter")) {
+        mask[e.offset..e.offset + e.size].fill(0.0);
+    }
+    mask
+}
+
+/// Seed reference: LastLayer (head entries filled).
+fn dense_last_layer(meta: &ModelMeta) -> Vec<f32> {
+    let mut mask = vec![0.0f32; meta.total_theta];
+    for e in meta.layer_entries(meta.head_layer()) {
+        mask[e.offset..e.offset + e.size].fill(1.0);
+    }
+    mask
+}
+
+/// Seed reference: TinyTL / AdapterDrop (kept adapters + head).
+fn dense_adapter(meta: &ModelMeta, frac: f64) -> Vec<f32> {
+    let n_blocks = meta.scaled.blocks.len();
+    let dropped = ((n_blocks as f64) * frac).round() as usize;
+    let mut mask = vec![0.0f32; meta.total_theta];
+    for b in dropped..n_blocks {
+        for e in meta.adapter_entries(b) {
+            mask[e.offset..e.offset + e.size].fill(1.0);
+        }
+    }
+    for e in meta.layer_entries(meta.head_layer()) {
+        mask[e.offset..e.offset + e.size].fill(1.0);
+    }
+    mask
+}
+
+/// Seed reference: SparseUpdate (first-k channels per entry period).
+fn dense_static_policy(meta: &ModelMeta, policy: &StaticPolicy) -> Vec<f32> {
+    let mut mask = vec![0.0f32; meta.total_theta];
+    for &(l, ratio) in &policy.layer_ratios {
+        let cout = meta.scaled.layers[l].cout;
+        let k = ((cout as f64 * ratio).ceil() as usize).clamp(1, cout);
+        for e in meta.layer_entries(l) {
+            let co = *e.shape.last().unwrap();
+            let seg = &mut mask[e.offset..e.offset + e.size];
+            for (j, v) in seg.iter_mut().enumerate() {
+                if j % co < k {
+                    *v = 1.0;
+                }
+            }
+        }
+    }
+    mask
+}
+
+/// Seed reference: dynamic selection (modular channel rule).
+fn dense_selection(meta: &ModelMeta, sel: &Selection) -> Vec<f32> {
+    let mut mask = vec![0.0f32; meta.total_theta];
+    for (i, &l) in sel.layers.iter().enumerate() {
+        let mut on = vec![false; meta.scaled.layers[l].cout];
+        for &c in &sel.channels[i] {
+            on[c] = true;
+        }
+        for e in meta.layer_entries(l) {
+            let cout = *e.shape.last().unwrap();
+            let seg = &mut mask[e.offset..e.offset + e.size];
+            for (j, v) in seg.iter_mut().enumerate() {
+                if on[j % cout] {
+                    *v = 1.0;
+                }
+            }
+        }
+    }
+    mask
+}
+
+/// A fisher report shaped like the analytic backend's output.
+fn synthetic_fisher(meta: &ModelMeta) -> FisherReport {
+    FisherReport {
+        deltas: meta
+            .scaled
+            .layers
+            .iter()
+            .map(|l| (0..l.cout).map(|c| 0.1 + c as f32 * 0.01).collect())
+            .collect(),
+        potentials: meta.scaled.layers.iter().map(|l| l.cout as f64).collect(),
+    }
+}
+
+#[test]
+fn method_masks_materialise_identically_to_dense_references() {
+    let meta = ModelMeta::synthetic(5);
+    let theta = vec![0.3f32; meta.total_theta];
+    let fisher = synthetic_fisher(&meta);
+    let policy = StaticPolicy {
+        layer_ratios: vec![(2, 0.25), (5, 0.5), (meta.head_layer(), 1.0)],
+    };
+    let methods: Vec<(Method, Vec<f32>)> = vec![
+        (Method::None, vec![0.0; meta.total_theta]),
+        (Method::FullTrain, dense_full_train(&meta)),
+        (Method::LastLayer, dense_last_layer(&meta)),
+        (Method::TinyTl, dense_adapter(&meta, 0.0)),
+        (Method::AdapterDrop(0.5), dense_adapter(&meta, 0.5)),
+        (Method::SparseUpdate(policy.clone()), dense_static_policy(&meta, &policy)),
+    ];
+    for (method, reference) in methods {
+        let (mask, plan, _) = method.selection(&meta, &theta, Some(&fisher)).unwrap();
+        assert_eq!(mask.dense(), reference, "{} mask diverged", method.label());
+        assert_eq!(mask.nnz(), reference.iter().filter(|&&v| v > 0.0).count());
+        assert_eq!(plan.any_update(), !mask.is_empty(), "{}", method.label());
+    }
+    // TinyTrain (budgeted dynamic selection): compare against the dense
+    // reference of whatever selection it made.
+    let method = Method::TinyTrain {
+        criterion: Criterion::MultiObjective,
+        scheme: ChannelScheme::Fisher,
+        budgets: Budgets { mem_bytes: 1e7, compute_frac: 1.0 },
+        ratio: 0.5,
+    };
+    let (mask, _, layers) = method.selection(&meta, &theta, Some(&fisher)).unwrap();
+    assert!(!layers.is_empty(), "TinyTrain selected nothing under loose budgets");
+    let channels: Vec<(usize, Vec<usize>)> = mask.layer_channels().to_vec();
+    let sel = Selection {
+        layers: channels.iter().map(|&(l, _)| l).collect(),
+        channels: channels.into_iter().map(|(_, c)| c).collect(),
+        ratio: 0.5,
+        scores: vec![],
+    };
+    assert_eq!(mask.dense(), dense_selection(&meta, &sel), "TinyTrain mask diverged");
+}
+
+#[test]
+fn random_channel_selections_materialise_identically() {
+    let meta = ModelMeta::synthetic(5);
+    let n = meta.scaled.layers.len();
+    check(
+        "selection-mask-dense",
+        20,
+        23,
+        |r| {
+            let picks = r.int_range(1, n.min(6));
+            let mut layers = r.choose_k(n, picks);
+            layers.sort_unstable();
+            let channels: Vec<Vec<usize>> = layers
+                .iter()
+                .map(|&l| {
+                    let cout = meta.scaled.layers[l].cout;
+                    let k = r.int_range(1, cout);
+                    r.choose_k(cout, k)
+                })
+                .collect();
+            (layers, channels)
+        },
+        |(layers, channels)| {
+            let sel = Selection {
+                layers: layers.clone(),
+                channels: channels.clone(),
+                ratio: 0.5,
+                scores: vec![],
+            };
+            let mask = sel.mask(&meta);
+            if mask.dense() != dense_selection(&meta, &sel) {
+                return Err("segment mask != dense reference".into());
+            }
+            // runs are sorted, disjoint and non-adjacent
+            let mut prev_end = 0usize;
+            for &(off, len) in mask.runs() {
+                if len == 0 || (prev_end > 0 && off <= prev_end) {
+                    return Err(format!("malformed run ({off}, {len})"));
+                }
+                prev_end = off + len;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Parallel harness determinism
+// ---------------------------------------------------------------------------
+
+fn grid_methods(meta: &ModelMeta) -> Vec<Method> {
+    vec![
+        Method::LastLayer,
+        Method::SparseUpdate(tinytrain::coordinator::search::default_policy(meta, 0.0)),
+        Method::TinyTrain {
+            criterion: Criterion::MultiObjective,
+            scheme: ChannelScheme::Fisher,
+            budgets: Budgets { mem_bytes: 1e7, compute_frac: 1.0 },
+            ratio: 0.5,
+        },
+    ]
+}
+
+#[test]
+fn parallel_grid_is_bit_identical_to_serial() {
+    let meta = ModelMeta::synthetic(4);
+    let params = ParamStore::init(&meta, 42);
+    let methods = grid_methods(&meta);
+    let domains: Vec<String> = ["traffic", "omniglot"].iter().map(|d| d.to_string()).collect();
+    let serial_cfg = GridConfig { episodes: 3, steps: 5, lr: 6e-3, seed: 11, workers: 1 };
+    let serial = accuracy_grid(&meta, &params, &methods, &domains, &serial_cfg).unwrap();
+    for workers in [2, 4, 8] {
+        let cfg = GridConfig { workers, ..serial_cfg.clone() };
+        let par = accuracy_grid(&meta, &params, &methods, &domains, &cfg).unwrap();
+        for (mi, (srow, prow)) in serial.iter().zip(&par).enumerate() {
+            for (di, (sc, pc)) in srow.iter().zip(prow).enumerate() {
+                assert_eq!(sc.mean_acc, pc.mean_acc, "acc ({mi},{di}) x{workers} workers");
+                assert_eq!(sc.ci95, pc.ci95, "ci ({mi},{di}) x{workers} workers");
+                assert_eq!(sc.n, pc.n);
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_cells_match_standalone_cell_eval() {
+    // Flattening the grid must not change any cell relative to
+    // evaluating that cell alone.
+    let meta = ModelMeta::synthetic(4);
+    let params = ParamStore::init(&meta, 7);
+    let methods = grid_methods(&meta);
+    let domains: Vec<String> = ["cub", "dtd"].iter().map(|d| d.to_string()).collect();
+    let cfg = GridConfig { episodes: 2, steps: 4, lr: 6e-3, seed: 3, workers: 4 };
+    let grid = accuracy_grid(&meta, &params, &methods, &domains, &cfg).unwrap();
+    for (mi, method) in methods.iter().enumerate() {
+        for (di, domain) in domains.iter().enumerate() {
+            let cell = eval_cell_analytic(&meta, &params, method, domain, &cfg).unwrap();
+            assert_eq!(cell.mean_acc, grid[mi][di].mean_acc, "cell ({mi},{di})");
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_are_deterministic() {
+    let meta = ModelMeta::synthetic(3);
+    let params = ParamStore::init(&meta, 1);
+    let methods = vec![Method::LastLayer];
+    let domains: Vec<String> = vec!["flower".to_string()];
+    let cfg = GridConfig { episodes: 4, steps: 6, lr: 6e-3, seed: 99, workers: 3 };
+    let a = accuracy_grid(&meta, &params, &methods, &domains, &cfg).unwrap();
+    let b = accuracy_grid(&meta, &params, &methods, &domains, &cfg).unwrap();
+    assert_eq!(a[0][0].mean_acc, b[0][0].mean_acc);
+    assert_eq!(a[0][0].ci95, b[0][0].ci95);
+    // a different seed must actually change the episode streams
+    use tinytrain::harness::parallel::{cell_seed, episode_streams};
+    let s1 = episode_streams(cell_seed(99, "flower"), 1);
+    let s2 = episode_streams(cell_seed(100, "flower"), 1);
+    assert_ne!(s1[0].clone().next_u64(), s2[0].clone().next_u64());
+}
+
+// ---------------------------------------------------------------------------
+// Ratio sweep: ledger prices ratio edits, not only on/off flips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ledger_handles_ratio_to_ratio_edits() {
+    let meta = ModelMeta::synthetic(4);
+    let arch = &meta.scaled;
+    let mut ledger = CostLedger::new(arch, Optimizer::Sgd);
+    let l = arch.layers.len() / 2;
+    for &r in &[0.125, 1.0, 0.25, 0.5, 0.25, 0.0, 0.5] {
+        ledger.set_ratio(l, r);
+        let (mem, macs) = ledger.recompute();
+        assert!(close(ledger.memory_total(), mem), "at ratio {r}");
+        assert!(close(ledger.macs_total(), macs), "at ratio {r}");
+    }
+}
