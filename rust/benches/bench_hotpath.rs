@@ -3,14 +3,19 @@
 //! Two sections:
 //!
 //! 1. **Pure-rust hot path** (always runs, stub backend included):
-//!    before/after microbenches of the O(n²)→O(n log n) selection
-//!    overhaul — greedy layer selection, evolutionary-search
-//!    feasibility, mask build/materialise, the analytic masked step and
-//!    the parallel episode grid — on the synthetic architecture. The
-//!    "before" arms re-implement the seed's full-recompute/dense logic
-//!    verbatim, and each pair is asserted to produce identical results
-//!    before being timed. Numbers land in `BENCH_hotpath.json` at the
-//!    repo root (the perf trajectory artefact cited by README/ROADMAP).
+//!    before/after microbenches of the selection overhaul (greedy layer
+//!    selection, evolutionary-search feasibility, mask
+//!    build/materialise, the analytic masked step, the parallel episode
+//!    grid) and of the episode-pipeline overhaul (`episode_pipeline`:
+//!    cached renders + pooled tensors vs re-render + fresh allocations;
+//!    `incremental_embed`: masked-delta re-embedding vs the seed's dense
+//!    per-pixel re-embed) — on the synthetic architecture. The "before"
+//!    arms re-implement the seed's full-recompute/dense logic verbatim,
+//!    and each pair is asserted equivalent (bit-identical where the op
+//!    is order-preserving, tight numeric tolerance for the delta-summed
+//!    embeddings) before being timed. Numbers land in
+//!    `BENCH_hotpath.json` at the repo root (the perf trajectory
+//!    artefact cited by README/ROADMAP).
 //!
 //! 2. **PJRT hot path** (skips on the vendored stub): the compiled
 //!    embed / fisher / train-step executables, as before.
@@ -23,10 +28,14 @@ use std::time::Duration;
 use tinytrain::accounting::{backward_macs, backward_memory, CostLedger, Optimizer, UpdatePlan};
 use tinytrain::coordinator::backend::{AdaptationBackend, AnalyticBackend};
 use tinytrain::coordinator::selection::select_layers;
-use tinytrain::coordinator::{episode_accuracy, Budgets, Method, ModelEngine, Selection};
-use tinytrain::data::{domain_by_name, Sampler};
-use tinytrain::harness::parallel::{accuracy_grid, GridConfig};
-use tinytrain::model::{ModelMeta, ParamStore};
+use tinytrain::coordinator::{
+    episode_accuracy, Budgets, Method, ModelEngine, Selection, UpdateMask,
+};
+use tinytrain::data::{
+    augment, domain_by_name, Episode, PaddedEpisode, RenderCache, Sample, Sampler,
+};
+use tinytrain::harness::parallel::{accuracy_grid, cell_seed, episode_streams, GridConfig};
+use tinytrain::model::{EpisodeShapes, ModelMeta, ParamStore};
 use tinytrain::runtime::{ArtifactStore, Runtime};
 use tinytrain::util::bench::bench;
 use tinytrain::util::jsonio::{num, obj, s, Json};
@@ -98,6 +107,100 @@ fn reference_selection_mask(meta: &ModelMeta, sel: &Selection) -> Vec<f32> {
         }
     }
     mask
+}
+
+/// The seed's `Episode::pad`: a fresh zeroed `Vec` per tensor.
+#[allow(clippy::type_complexity)]
+fn reference_pad(
+    ep: &Episode,
+    s: &EpisodeShapes,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let img_len = s.img * s.img * s.channels;
+    let pack = |samples: &[Sample], cap: usize| {
+        let mut x = vec![0.0f32; cap * img_len];
+        let mut y = vec![0.0f32; cap * s.max_ways];
+        let mut v = vec![0.0f32; cap];
+        for (i, smp) in samples.iter().take(cap).enumerate() {
+            x[i * img_len..(i + 1) * img_len].copy_from_slice(&smp.image);
+            y[i * s.max_ways + smp.label] = 1.0;
+            v[i] = 1.0;
+        }
+        (x, y, v)
+    };
+    let (sx, sy, sv) = pack(&ep.support, s.max_support);
+    let (qx, qy, qv) = pack(&ep.query, s.max_query);
+    (sx, sy, sv, qx, qy, qv)
+}
+
+/// The seed's `Episode::pseudo_query`: fresh vecs plus one augment
+/// allocation per pseudo row.
+fn reference_pseudo(
+    ep: &Episode,
+    s: &EpisodeShapes,
+    rng: &mut Rng,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let img_len = s.img * s.img * s.channels;
+    let cap = s.max_query;
+    let mut x = vec![0.0f32; cap * img_len];
+    let mut y = vec![0.0f32; cap * s.max_ways];
+    let mut v = vec![0.0f32; cap];
+    if ep.support.is_empty() {
+        return (x, y, v);
+    }
+    for i in 0..cap {
+        let src = &ep.support[rng.below(ep.support.len())];
+        let aug = augment(&src.image, s.img, s.channels, rng);
+        x[i * img_len..(i + 1) * img_len].copy_from_slice(&aug);
+        y[i * s.max_ways + src.label] = 1.0;
+        v[i] = 1.0;
+    }
+    (x, y, v)
+}
+
+/// The seed's analytic embedding: per-pixel hash into theta, a fresh
+/// row buffer per image, full recompute per call.
+fn reference_embed(meta: &ModelMeta, theta: &[f32], padded: &PaddedEpisode) -> Vec<f32> {
+    let s = &meta.shapes;
+    let img_len = s.img * s.img * s.channels;
+    let proj_weight = |i: usize| -> f32 {
+        if theta.is_empty() {
+            return 1.0;
+        }
+        let h = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
+        theta[(h % theta.len() as u64) as usize] + 0.05
+    };
+    let mut out = Vec::with_capacity(s.eval_batch * s.feat_dim);
+    let mut embed_images = |images: &[f32], out: &mut Vec<f32>| {
+        let n = images.len() / img_len.max(1);
+        for b in 0..n {
+            let img = &images[b * img_len..(b + 1) * img_len];
+            let mut row = vec![0.0f32; s.feat_dim];
+            for (i, &x) in img.iter().enumerate() {
+                row[i % s.feat_dim] += x * proj_weight(i);
+            }
+            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+            for v in &mut row {
+                *v /= norm;
+            }
+            out.extend_from_slice(&row);
+        }
+    };
+    embed_images(&padded.sup_x, &mut out);
+    embed_images(&padded.qry_x, &mut out);
+    out
+}
+
+/// The analytic masked step applied to a dense theta (reference arm).
+fn step_dense(theta: &mut [f32], runs: &[(usize, usize)], lr: f32) {
+    for &(off, len) in runs {
+        for p in &mut theta[off..off + len] {
+            *p -= lr * 0.1 * *p;
+        }
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
 }
 
 fn speedup_entry(name: &str, before_s: f64, after_s: f64) -> (String, Json) {
@@ -228,7 +331,7 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
         }
         std::hint::black_box(theta[0]);
     });
-    let mut backend = AnalyticBackend::new(&meta, params.clone(), padded.clone(), pseudo);
+    let mut backend = AnalyticBackend::new(&meta, &params, padded.clone(), pseudo.clone());
     backend.set_mask(&mask).unwrap();
     let after = bench("analytic step: segment runs (after)", budget, || {
         std::hint::black_box(backend.step(1e-3).unwrap());
@@ -243,11 +346,113 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
     });
     sections.push(("episode_eval_us".into(), num(eval.mean_secs() * 1e6)));
 
+    // --- episode pipeline: cached renders + pooled tensors ---------------
+    // Before: the seed's data path — rasterize every image, allocate
+    // fresh zeroed tensors for pad/pseudo. After: the same streams
+    // through the render cache and the thread-local scratch arena.
+    // Replaying fixed streams is exactly what the grid does (every
+    // method re-runs the same per-cell episode streams).
+    let streams = episode_streams(cell_seed(7, "traffic"), 4);
+    let pipeline_cache = RenderCache::new(4, 4096);
+    let uncached = Sampler::new(domain.as_ref(), &meta.shapes).with_cache(None);
+    let cached = Sampler::new(domain.as_ref(), &meta.shapes).with_cache(Some(&pipeline_cache));
+    for stream in &streams {
+        let mut r_a = stream.clone();
+        let ep_a = uncached.sample(&mut r_a);
+        let (sx, sy, sv, qx, qy, qv) = reference_pad(&ep_a, &meta.shapes);
+        let (px, py, pv) = reference_pseudo(&ep_a, &meta.shapes, &mut r_a);
+        let mut r_b = stream.clone();
+        let ep_b = cached.sample(&mut r_b);
+        let p = ep_b.pad(&meta.shapes);
+        let q = ep_b.pseudo_query(&meta.shapes, &mut r_b);
+        assert_eq!(r_a.state(), r_b.state(), "cache shifted the episode stream");
+        assert!(
+            p.sup_x[..] == sx[..] && p.sup_y[..] == sy[..] && p.sup_v[..] == sv[..],
+            "pooled pad diverged from the dense reference (support)"
+        );
+        assert!(
+            p.qry_x[..] == qx[..] && p.qry_y[..] == qy[..] && p.qry_v[..] == qv[..],
+            "pooled pad diverged from the dense reference (query)"
+        );
+        assert!(
+            q.x[..] == px[..] && q.y[..] == py[..] && q.v[..] == pv[..],
+            "pooled pseudo-query diverged from the dense reference"
+        );
+    }
+    let before = bench("episode pipeline: re-render + fresh tensors (before)", budget, || {
+        for stream in &streams {
+            let mut r = stream.clone();
+            let ep = uncached.sample(&mut r);
+            let p = reference_pad(&ep, &meta.shapes);
+            let q = reference_pseudo(&ep, &meta.shapes, &mut r);
+            std::hint::black_box((p.0.len(), q.0.len()));
+        }
+    });
+    let after = bench("episode pipeline: render cache + arenas (after)", budget, || {
+        for stream in &streams {
+            let mut r = stream.clone();
+            let ep = cached.sample(&mut r);
+            let p = ep.pad(&meta.shapes);
+            let q = ep.pseudo_query(&meta.shapes, &mut r);
+            std::hint::black_box((p.sup_x.len(), q.x.len()));
+        }
+    });
+    sections.push(speedup_entry("episode_pipeline", before.mean_secs(), after.mean_secs()));
+
+    // --- incremental masked re-embedding ---------------------------------
+    // Before: masked step + the seed's dense per-pixel re-embed. After:
+    // masked step whose deltas land directly in the cached pre-norm
+    // rows, plus a normalise-only embed. Mask: the head layer (the
+    // LastLayer shape — small against theta, the regime the scatter
+    // table targets).
+    let head_mask = {
+        let mut b = UpdateMask::builder(meta.total_theta);
+        for e in meta.layer_entries(meta.head_layer()) {
+            b.add_entry(e.offset, e.size);
+        }
+        b.build().unwrap()
+    };
+    let mut ref_theta = params.theta.clone();
+    let mut inc = AnalyticBackend::new(&meta, &params, padded.clone(), pseudo.clone());
+    // pre-adaptation eval builds the embed state, as in the session flow
+    let pre = inc.embed().unwrap();
+    assert_eq!(pre, reference_embed(&meta, &ref_theta, &padded), "pre-step embed diverged");
+    inc.set_mask(&head_mask).unwrap();
+    let (affected, incremental) = inc.embed_plan().unwrap();
+    assert!(incremental, "head mask must take the incremental path (affected={affected})");
+    let lr = 1e-3f32;
+    for step in 0..6 {
+        inc.step(lr).unwrap();
+        step_dense(&mut ref_theta, head_mask.runs(), lr);
+        let fast = inc.embed().unwrap();
+        let slow = reference_embed(&meta, &ref_theta, &padded);
+        let max_diff = max_abs_diff(&fast, &slow);
+        assert!(
+            max_diff < 1e-4,
+            "incremental embed diverged from dense recompute at step {step}: {max_diff}"
+        );
+        assert_eq!(
+            episode_accuracy(&fast, &padded, &meta.shapes),
+            episode_accuracy(&slow, &padded, &meta.shapes),
+            "incremental embed changed episode accuracy at step {step}"
+        );
+    }
+    let before = bench("masked step + dense re-embed (before)", budget, || {
+        step_dense(&mut ref_theta, head_mask.runs(), lr);
+        std::hint::black_box(reference_embed(&meta, &ref_theta, &padded).len());
+    });
+    let after = bench("masked step + incremental re-embed (after)", budget, || {
+        inc.step(lr).unwrap();
+        std::hint::black_box(inc.embed().unwrap().len());
+    });
+    sections.push(speedup_entry("incremental_embed", before.mean_secs(), after.mean_secs()));
+
     // --- parallel episode grid ------------------------------------------
     let episodes = if smoke { 2 } else { 6 };
     let methods = vec![Method::LastLayer, Method::tinytrain_default()];
     let domains: Vec<String> = ["traffic", "cub"].iter().map(|d| d.to_string()).collect();
-    let serial_cfg = GridConfig { episodes, steps: 6, lr: 6e-3, seed: 7, workers: 1 };
+    let serial_cfg =
+        GridConfig { episodes, steps: 6, lr: 6e-3, seed: 7, workers: 1, render_cache: true };
     let workers = default_workers();
     let par_cfg = GridConfig { workers, ..serial_cfg.clone() };
     let t0 = std::time::Instant::now();

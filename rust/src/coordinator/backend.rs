@@ -15,9 +15,18 @@
 //!   mask semantics, decreasing loss), so selection and accounting logic
 //!   is exercisable end-to-end without PJRT.
 //!
-//! A backend is created per episode and owns the episode's mutable state;
-//! it borrows the `ModelEngine` immutably, so many episodes can adapt
-//! concurrently against one engine.
+//! A backend is created per episode over a *borrowed* base `ParamStore`;
+//! the PJRT backends take an owned per-episode working copy, while the
+//! analytic backend is **copy-on-write**: it snapshots only the masked
+//! theta segments (`O(nnz)`, never `O(total_theta)`), and its `sync`
+//! hands back a masked-delta [`SyncedParams`] instead of a full clone.
+//!
+//! The analytic embedding is linear in theta, which the backend exploits
+//! for **incremental masked re-embedding**: a per-episode pixel→theta
+//! scatter table lets a masked `step` update the cached pre-norm
+//! embedding rows by applying deltas only for theta indices inside the
+//! mask's runs — `O(changed weights)` instead of `O(pixels × batch)` —
+//! with a dense rebuild fallback when the mask is too wide to pay off.
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -42,6 +51,47 @@ pub enum Backend {
     Analytic,
 }
 
+/// What `sync` hands back: either a full owned store (the PJRT backends
+/// materialise one anyway) or the masked-delta form — base theta plus
+/// the updated segments — so an analytic episode never copies unchanged
+/// parameters.
+#[derive(Debug, Clone)]
+pub enum SyncedParams {
+    Full(ParamStore),
+    /// `segments` are `(offset, values)` runs over the base theta,
+    /// applied in order (a later segment wins on overlap — only
+    /// possible when an episode was re-masked mid-flight); `t` is the
+    /// step counter the episode reached.
+    Sparse { t: u64, segments: Vec<(usize, Vec<f32>)> },
+}
+
+impl SyncedParams {
+    /// How many floats this sync actually carries (the copy-on-write
+    /// win is observable: sparse syncs carry `nnz`, not `total_theta`).
+    pub fn updated_floats(&self) -> usize {
+        match self {
+            SyncedParams::Full(p) => p.theta.len(),
+            SyncedParams::Sparse { segments, .. } => segments.iter().map(|(_, s)| s.len()).sum(),
+        }
+    }
+
+    /// Resolve into a standalone `ParamStore` (sparse deltas are patched
+    /// over a copy of `base`; a full store ignores `base`).
+    pub fn materialize(self, base: &ParamStore) -> ParamStore {
+        match self {
+            SyncedParams::Full(p) => p,
+            SyncedParams::Sparse { t, segments } => {
+                let mut p = base.adapted_copy();
+                p.t = t;
+                for (off, seg) in segments {
+                    p.theta[off..off + seg.len()].copy_from_slice(&seg);
+                }
+                p
+            }
+        }
+    }
+}
+
 /// Shared mask validation: the AOT step graph indexes the flat theta,
 /// so a wrong-extent mask is undefined behaviour there — every backend
 /// rejects it up front through this one check.
@@ -59,8 +109,8 @@ fn check_mask(meta: &ModelMeta, mask: &UpdateMask) -> Result<()> {
 ///
 /// Contract: `set_mask` must be called before the first `step`; `embed`
 /// and `fisher` always reflect the current (possibly stepped) weights;
-/// `sync` flushes whatever representation the backend keeps back into a
-/// host `ParamStore`.
+/// `sync` flushes whatever representation the backend keeps into a
+/// [`SyncedParams`] (full or masked-delta).
 pub trait AdaptationBackend {
     /// Backend label for results/telemetry.
     fn name(&self) -> &'static str;
@@ -71,7 +121,7 @@ pub trait AdaptationBackend {
 
     /// Install the segment update mask used by subsequent `step` calls.
     /// PJRT backends materialise/upload the dense f32 form exactly once
-    /// here; the analytic backend steps the runs directly.
+    /// here; the analytic backend snapshots the masked segments.
     fn set_mask(&mut self, mask: &UpdateMask) -> Result<()>;
 
     /// One masked optimiser step on the support/pseudo-query loss;
@@ -88,8 +138,8 @@ pub trait AdaptationBackend {
     /// Replace the pseudo-query tensors (fresh augmentation mid-episode).
     fn refresh_pseudo(&mut self, pseudo: PseudoQuery) -> Result<()>;
 
-    /// Flush the backend's training state into a host `ParamStore`.
-    fn sync(&mut self) -> Result<ParamStore>;
+    /// Flush the backend's training state; see [`SyncedParams`].
+    fn sync(&mut self) -> Result<SyncedParams>;
 }
 
 // ---------------------------------------------------------------------------
@@ -153,8 +203,8 @@ impl AdaptationBackend for HostBackend<'_> {
         Ok(())
     }
 
-    fn sync(&mut self) -> Result<ParamStore> {
-        Ok(self.params.clone())
+    fn sync(&mut self) -> Result<SyncedParams> {
+        Ok(SyncedParams::Full(self.params.clone()))
     }
 }
 
@@ -236,14 +286,45 @@ impl AdaptationBackend for DeviceBackend<'_> {
         Ok(())
     }
 
-    fn sync(&mut self) -> Result<ParamStore> {
-        self.engine.download_state(&self.state)
+    fn sync(&mut self) -> Result<SyncedParams> {
+        Ok(SyncedParams::Full(self.engine.download_state(&self.state)?))
     }
 }
 
 // ---------------------------------------------------------------------------
 // Analytic backend (no PJRT)
 // ---------------------------------------------------------------------------
+
+/// A masked step multiplies each selected weight once; an episode runs
+/// roughly this many steps. Incremental re-embedding pays when the total
+/// delta work (`steps × affected pixels`) stays below one dense rebuild
+/// (`all pixels`), so the gate is `affected × BUDGET ≤ img_len`.
+const INCREMENTAL_STEP_BUDGET: usize = 8;
+
+/// Per-episode embedding state of the analytic backend.
+///
+/// The analytic embedding of image `x` is linear in theta:
+/// `raw[f] = Σ_i x[i] · (theta[bucket(i)] + 0.05)` over pixels `i` with
+/// lane `i % feat_dim == f`, followed by L2 normalisation. Everything
+/// theta-dependent is therefore expressible through two per-episode
+/// tables — the per-pixel projection weight `proj[i]` and the inverse
+/// pixel→theta scatter `buckets` — and a masked step only has to touch
+/// the pixels whose bucket lies inside the mask's runs.
+struct EmbedState {
+    /// `theta[bucket(i)] + 0.05` per flat pixel, maintained on step.
+    proj: Vec<f32>,
+    /// Pixels grouped by theta bucket, sorted by bucket index.
+    buckets: Vec<(u32, Vec<u32>)>,
+    /// Pre-normalisation embedding rows, `(eval_batch, feat_dim)`.
+    raw: Vec<f32>,
+    /// `raw` lags `proj` (wide-mask steps skip the per-image deltas and
+    /// the next `embed` rebuilds densely from `proj`).
+    dirty: bool,
+    /// Whether per-step raw deltas pay off for the current mask.
+    incremental: bool,
+    /// Pixels whose bucket falls inside the current mask.
+    affected_pixels: usize,
+}
 
 /// Artifact-free backend: a deterministic host-side model of the four
 /// primitives. It is *not* a neural network — embeddings come from a
@@ -252,54 +333,187 @@ impl AdaptationBackend for DeviceBackend<'_> {
 /// backends have (output shapes, fisher segment layout, masked-update
 /// semantics, loss monotonicity), which is exactly what selection and
 /// accounting logic needs to be testable without compiled graphs.
+///
+/// Theta is copy-on-write against the borrowed base store: `set_mask`
+/// snapshots the masked segments into an overlay and steps mutate only
+/// the overlay, so an episode's working-set cost is `O(mask nnz)`.
 pub struct AnalyticBackend<'m> {
     meta: &'m ModelMeta,
-    params: ParamStore,
+    base: &'m ParamStore,
     /// Segment mask kept sparse: steps touch only the masked runs, never
     /// a dense theta-length vector.
     mask: Option<UpdateMask>,
+    /// Updated values of the masked runs, parallel to `mask.runs()`.
+    overlay: Vec<Vec<f32>>,
+    /// Segments stepped under *previous* masks this episode (oldest
+    /// first). Empty unless `set_mask` is called more than once — reads
+    /// prefer the live overlay, then the latest retired segment, so
+    /// re-masking never reverts stepped weights (matching the PJRT
+    /// backends, which mutate a dense per-episode store).
+    retired: Vec<(usize, Vec<f32>)>,
     padded: PaddedEpisode,
     pseudo: PseudoQuery,
     steps_taken: u64,
+    t: u64,
+    embed: Option<EmbedState>,
 }
 
 impl<'m> AnalyticBackend<'m> {
     pub fn new(
         meta: &'m ModelMeta,
-        params: ParamStore,
+        base: &'m ParamStore,
         padded: PaddedEpisode,
         pseudo: PseudoQuery,
     ) -> Self {
-        AnalyticBackend { meta, params, mask: None, padded, pseudo, steps_taken: 0 }
-    }
-
-    /// Theta-seeded projection weight for flat pixel `i` (cheap integer
-    /// hash into theta, so trained weights move the embeddings).
-    fn proj_weight(&self, i: usize) -> f32 {
-        if self.params.theta.is_empty() {
-            return 1.0;
+        AnalyticBackend {
+            meta,
+            base,
+            mask: None,
+            overlay: Vec::new(),
+            retired: Vec::new(),
+            padded,
+            pseudo,
+            steps_taken: 0,
+            t: 0,
+            embed: None,
         }
-        let h = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
-        let w = self.params.theta[(h % self.params.theta.len() as u64) as usize];
-        // Keep a constant floor so all-zero thetas still embed the image.
-        w + 0.05
     }
 
-    fn embed_images(&self, images: &[f32], out: &mut Vec<f32>) {
+    /// Theta bucket of flat pixel `i` (cheap integer hash into theta, so
+    /// trained weights move the embeddings). Must stay in lock-step with
+    /// the dense reference arm in `bench_hotpath`.
+    #[inline]
+    fn bucket_of(i: usize, theta_len: usize) -> usize {
+        let h = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
+        (h % theta_len as u64) as usize
+    }
+
+    /// Current value of theta index `t`: live overlay, else the most
+    /// recently retired segment covering it, else base.
+    fn theta_at(&self, t: usize) -> f32 {
+        if let Some(mask) = &self.mask {
+            if !self.overlay.is_empty() {
+                let runs = mask.runs();
+                let ri = match runs.binary_search_by(|&(off, _)| off.cmp(&t)) {
+                    Ok(i) => Some(i),
+                    Err(0) => None,
+                    Err(p) => {
+                        let (off, len) = runs[p - 1];
+                        (t < off + len).then_some(p - 1)
+                    }
+                };
+                if let Some(ri) = ri {
+                    return self.overlay[ri][t - runs[ri].0];
+                }
+            }
+        }
+        for (off, seg) in self.retired.iter().rev() {
+            if t >= *off && t < off + seg.len() {
+                return seg[t - off];
+            }
+        }
+        self.base.theta[t]
+    }
+
+    /// Full composed theta (base, then retired segments oldest-first,
+    /// then the live overlay). Only the rare post-step `fisher` path
+    /// pays this copy.
+    fn composed_theta(&self) -> Vec<f32> {
+        let mut th = self.base.theta.clone();
+        for (off, seg) in &self.retired {
+            th[*off..off + seg.len()].copy_from_slice(seg);
+        }
+        if let Some(mask) = &self.mask {
+            for (seg, &(off, _)) in self.overlay.iter().zip(mask.runs()) {
+                th[off..off + seg.len()].copy_from_slice(seg);
+            }
+        }
+        th
+    }
+
+    /// Build the per-episode embed state from the *current* theta view.
+    fn ensure_embed(&mut self) {
+        if self.embed.is_some() {
+            return;
+        }
         let s = &self.meta.shapes;
+        debug_assert_eq!(s.eval_batch, s.max_support + s.max_query, "eval batch layout");
         let img_len = s.img * s.img * s.channels;
-        let n = images.len() / img_len.max(1);
-        for b in 0..n {
-            let img = &images[b * img_len..(b + 1) * img_len];
-            let mut row = vec![0.0f32; s.feat_dim];
-            for (i, &x) in img.iter().enumerate() {
-                row[i % s.feat_dim] += x * self.proj_weight(i);
+        let theta_len = self.base.theta.len();
+        let mut proj = vec![1.0f32; img_len];
+        let mut buckets: Vec<(u32, Vec<u32>)> = Vec::new();
+        if theta_len > 0 {
+            let mut pairs: Vec<(u32, u32)> = (0..img_len)
+                .map(|i| (Self::bucket_of(i, theta_len) as u32, i as u32))
+                .collect();
+            for &(t, i) in &pairs {
+                // Keep a constant floor so all-zero thetas still embed
+                // the image (seed behaviour, preserved bit-for-bit).
+                proj[i as usize] = self.theta_at(t as usize) + 0.05;
             }
-            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
-            for v in &mut row {
-                *v /= norm;
+            pairs.sort_unstable();
+            for (t, i) in pairs {
+                match buckets.last_mut() {
+                    Some((bt, pixels)) if *bt == t => pixels.push(i),
+                    _ => buckets.push((t, vec![i])),
+                }
             }
-            out.extend_from_slice(&row);
+        }
+        let mut raw = vec![0.0f32; s.eval_batch * s.feat_dim];
+        let sup_rows = s.max_support * s.feat_dim;
+        accumulate_rows(&self.padded.sup_x, img_len, &proj, s.feat_dim, &mut raw[..sup_rows]);
+        accumulate_rows(&self.padded.qry_x, img_len, &proj, s.feat_dim, &mut raw[sup_rows..]);
+        self.embed = Some(EmbedState {
+            proj,
+            buckets,
+            raw,
+            dirty: false,
+            incremental: false,
+            affected_pixels: 0,
+        });
+        self.refresh_embed_plan();
+    }
+
+    /// Re-derive the incremental-vs-dense decision for the current mask.
+    fn refresh_embed_plan(&mut self) {
+        let Some(st) = self.embed.as_mut() else { return };
+        let img_len = st.proj.len();
+        let mut affected = 0usize;
+        if let Some(mask) = &self.mask {
+            for &(off, len) in mask.runs() {
+                let lo = st.buckets.partition_point(|&(t, _)| (t as usize) < off);
+                for (t, pixels) in &st.buckets[lo..] {
+                    if *t as usize >= off + len {
+                        break;
+                    }
+                    affected += pixels.len();
+                }
+            }
+        }
+        st.affected_pixels = affected;
+        st.incremental = self.mask.is_some() && affected * INCREMENTAL_STEP_BUDGET <= img_len;
+    }
+
+    /// `(affected_pixels, incremental)` of the current embed plan, once
+    /// both a mask and an embed state exist (introspection for benches
+    /// and tests).
+    pub fn embed_plan(&self) -> Option<(usize, bool)> {
+        self.embed.as_ref().map(|st| (st.affected_pixels, st.incremental))
+    }
+}
+
+/// Accumulate pre-norm embedding rows: `raw[b][j] += x[b][c·F + j] ·
+/// proj[c·F + j]` in ascending pixel order (bit-identical to the seed's
+/// per-pixel `row[i % F] += x·w(i)` scan, with the hash hoisted out).
+fn accumulate_rows(images: &[f32], img_len: usize, proj: &[f32], feat_dim: usize, raw: &mut [f32]) {
+    if img_len == 0 {
+        return;
+    }
+    for (img, row) in images.chunks_exact(img_len).zip(raw.chunks_exact_mut(feat_dim)) {
+        for (chunk, pchunk) in img.chunks(feat_dim).zip(proj.chunks(feat_dim)) {
+            for ((r, &x), &p) in row.iter_mut().zip(chunk).zip(pchunk) {
+                *r += x * p;
+            }
         }
     }
 }
@@ -315,33 +529,111 @@ impl AdaptationBackend for AnalyticBackend<'_> {
 
     fn set_mask(&mut self, mask: &UpdateMask) -> Result<()> {
         check_mask(self.meta, mask)?;
+        // Copy-on-write snapshot of the masked segments only (reads go
+        // through `theta_at`, so the snapshot sees every value stepped
+        // so far this episode).
+        let overlay: Vec<Vec<f32>> = mask
+            .runs()
+            .iter()
+            .map(|&(off, len)| (off..off + len).map(|t| self.theta_at(t)).collect())
+            .collect();
+        // Re-masking mid-episode: retire the previous overlay so its
+        // stepped values stay visible to reads and `sync`.
+        if let (Some(old), false) = (&self.mask, self.overlay.is_empty()) {
+            let runs = old.runs().to_vec();
+            for (&(off, _), seg) in runs.iter().zip(self.overlay.drain(..)) {
+                self.retired.push((off, seg));
+            }
+        }
         self.mask = Some(mask.clone());
+        self.overlay = overlay;
+        self.refresh_embed_plan();
         Ok(())
     }
 
     fn step(&mut self, lr: f32) -> Result<f32> {
-        let mask = self.mask.as_ref().ok_or_else(|| anyhow!("set_mask before step"))?;
-        self.params.t += 1;
-        self.steps_taken += 1;
+        let Self { mask, overlay, embed, padded, pseudo, meta, steps_taken, t, .. } = self;
+        let mask = mask.as_ref().ok_or_else(|| anyhow!("set_mask before step"))?;
+        *t += 1;
+        *steps_taken += 1;
+        let decay = lr * 0.1;
+        let s = &meta.shapes;
+        let img_len = s.img * s.img * s.channels;
         // Masked shrink step over the masked segments only — the sparse
         // analogue of the dense scan, with the same per-parameter update
-        // (so frozen parameters provably never move).
-        for &(off, len) in mask.runs() {
-            for p in &mut self.params.theta[off..off + len] {
-                *p -= lr * 0.1 * *p;
+        // (so frozen parameters provably never move). When embed state
+        // exists, the projection table follows along, and in incremental
+        // mode the cached raw rows absorb the exact per-weight deltas.
+        for (run_i, &(off, len)) in mask.runs().iter().enumerate() {
+            let seg = &mut overlay[run_i];
+            if let Some(st) = embed.as_mut() {
+                let mut bi = st.buckets.partition_point(|&(bt, _)| (bt as usize) < off);
+                for (j, p) in seg.iter_mut().enumerate() {
+                    let old = *p;
+                    let new = old - decay * old;
+                    *p = new;
+                    if bi < st.buckets.len() && st.buckets[bi].0 as usize == off + j {
+                        let pixels = &st.buckets[bi].1;
+                        for &pix in pixels {
+                            st.proj[pix as usize] = new + 0.05;
+                        }
+                        let delta = new - old;
+                        if st.incremental && delta != 0.0 {
+                            for &pix in pixels {
+                                let pix = pix as usize;
+                                let lane = pix % s.feat_dim;
+                                for b in 0..s.max_support {
+                                    let x = padded.sup_x[b * img_len + pix];
+                                    if x != 0.0 {
+                                        st.raw[b * s.feat_dim + lane] += x * delta;
+                                    }
+                                }
+                                for q in 0..s.max_query {
+                                    let x = padded.qry_x[q * img_len + pix];
+                                    if x != 0.0 {
+                                        st.raw[(s.max_support + q) * s.feat_dim + lane] +=
+                                            x * delta;
+                                    }
+                                }
+                            }
+                        }
+                        bi += 1;
+                    }
+                }
+                if !st.incremental {
+                    st.dirty = true;
+                }
+            } else {
+                for p in seg.iter_mut() {
+                    *p -= decay * *p;
+                }
             }
         }
         // Deterministic decreasing loss, mildly shaped by the pseudo
         // labels so different episodes don't return identical curves.
-        let bias = self.pseudo.v.iter().sum::<f32>() / self.pseudo.v.len().max(1) as f32;
-        Ok((1.5 + 0.5 * bias) / (1.0 + 0.25 * self.steps_taken as f32))
+        let bias = pseudo.v.iter().sum::<f32>() / pseudo.v.len().max(1) as f32;
+        Ok((1.5 + 0.5 * bias) / (1.0 + 0.25 * *steps_taken as f32))
     }
 
     fn embed(&mut self) -> Result<Vec<f32>> {
-        let s = &self.meta.shapes;
+        self.ensure_embed();
+        let meta = self.meta;
+        let s = &meta.shapes;
+        let img_len = s.img * s.img * s.channels;
+        let Self { embed, padded, .. } = self;
+        let st = embed.as_mut().expect("ensure_embed");
+        if st.dirty {
+            st.raw.fill(0.0);
+            let sup_rows = s.max_support * s.feat_dim;
+            accumulate_rows(&padded.sup_x, img_len, &st.proj, s.feat_dim, &mut st.raw[..sup_rows]);
+            accumulate_rows(&padded.qry_x, img_len, &st.proj, s.feat_dim, &mut st.raw[sup_rows..]);
+            st.dirty = false;
+        }
         let mut out = Vec::with_capacity(s.eval_batch * s.feat_dim);
-        self.embed_images(&self.padded.sup_x, &mut out);
-        self.embed_images(&self.padded.qry_x, &mut out);
+        for row in st.raw.chunks(s.feat_dim) {
+            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+            out.extend(row.iter().map(|v| v / norm));
+        }
         ensure!(
             out.len() == s.eval_batch * s.feat_dim,
             "analytic embed produced {} floats, expected {}",
@@ -354,7 +646,13 @@ impl AdaptationBackend for AnalyticBackend<'_> {
     fn fisher(&mut self) -> Result<FisherOutput> {
         // Per-channel weight energy as the information proxy: positive,
         // laid out exactly like the real fisher output's segment table.
-        let l2 = channel_l2_norms(self.meta, &self.params.theta);
+        // Pre-step (the session's selection phase) this reads the base
+        // theta directly — no copy; only a post-step fisher composes.
+        let l2 = if self.steps_taken == 0 {
+            channel_l2_norms(self.meta, &self.base.theta)
+        } else {
+            channel_l2_norms(self.meta, &self.composed_theta())
+        };
         let mut deltas = vec![0.0f32; self.meta.fisher_len];
         for seg in &self.meta.fisher_segments {
             for c in 0..seg.size {
@@ -370,7 +668,15 @@ impl AdaptationBackend for AnalyticBackend<'_> {
         Ok(())
     }
 
-    fn sync(&mut self) -> Result<ParamStore> {
-        Ok(self.params.clone())
+    fn sync(&mut self) -> Result<SyncedParams> {
+        // Retired segments first, live overlay last — `materialize`
+        // applies them in order, so the newest value of an index wins.
+        let mut segments: Vec<(usize, Vec<f32>)> = self.retired.clone();
+        if let Some(mask) = &self.mask {
+            for (&(off, _), seg) in mask.runs().iter().zip(&self.overlay) {
+                segments.push((off, seg.clone()));
+            }
+        }
+        Ok(SyncedParams::Sparse { t: self.t, segments })
     }
 }

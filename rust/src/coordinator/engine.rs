@@ -104,12 +104,12 @@ impl ModelEngine {
         let theta = Tensor::new(params.theta.clone(), vec![self.meta.total_theta]);
         let inputs = vec![
             theta,
-            Tensor::new(ep.sup_x.clone(), vec![s.max_support, s.img, s.img, s.channels]),
-            Tensor::new(ep.sup_y.clone(), vec![s.max_support, s.max_ways]),
-            Tensor::new(ep.sup_v.clone(), vec![s.max_support]),
-            Tensor::new(pseudo.x.clone(), vec![s.max_query, s.img, s.img, s.channels]),
-            Tensor::new(pseudo.y.clone(), vec![s.max_query, s.max_ways]),
-            Tensor::new(pseudo.v.clone(), vec![s.max_query]),
+            Tensor::new(ep.sup_x.to_vec(), vec![s.max_support, s.img, s.img, s.channels]),
+            Tensor::new(ep.sup_y.to_vec(), vec![s.max_support, s.max_ways]),
+            Tensor::new(ep.sup_v.to_vec(), vec![s.max_support]),
+            Tensor::new(pseudo.x.to_vec(), vec![s.max_query, s.img, s.img, s.channels]),
+            Tensor::new(pseudo.y.to_vec(), vec![s.max_query, s.max_ways]),
+            Tensor::new(pseudo.v.to_vec(), vec![s.max_query]),
         ];
         let out = self.fisher_exec()?.run(&inputs)?;
         Ok(FisherOutput { loss: out[0].first(), deltas: out[1].data.clone() })
@@ -134,12 +134,12 @@ impl ModelEngine {
             Tensor::scalar1(params.t as f32),
             Tensor::new(mask.to_vec(), vec![p]),
             Tensor::scalar1(lr),
-            Tensor::new(ep.sup_x.clone(), vec![s.max_support, s.img, s.img, s.channels]),
-            Tensor::new(ep.sup_y.clone(), vec![s.max_support, s.max_ways]),
-            Tensor::new(ep.sup_v.clone(), vec![s.max_support]),
-            Tensor::new(pseudo.x.clone(), vec![s.max_query, s.img, s.img, s.channels]),
-            Tensor::new(pseudo.y.clone(), vec![s.max_query, s.max_ways]),
-            Tensor::new(pseudo.v.clone(), vec![s.max_query]),
+            Tensor::new(ep.sup_x.to_vec(), vec![s.max_support, s.img, s.img, s.channels]),
+            Tensor::new(ep.sup_y.to_vec(), vec![s.max_support, s.max_ways]),
+            Tensor::new(ep.sup_v.to_vec(), vec![s.max_support]),
+            Tensor::new(pseudo.x.to_vec(), vec![s.max_query, s.img, s.img, s.channels]),
+            Tensor::new(pseudo.y.to_vec(), vec![s.max_query, s.max_ways]),
+            Tensor::new(pseudo.v.to_vec(), vec![s.max_query]),
         ];
         let mut out = self.step_exec()?.run(&inputs)?;
         let loss = out[3].first();
@@ -230,12 +230,13 @@ impl ModelEngine {
         pseudo: &PseudoQuery,
     ) -> Result<()> {
         let s = &self.meta.shapes;
-        dev_ep.bufs[3] = self
-            .rt
-            .to_device(&Tensor::new(pseudo.x.clone(), vec![s.max_query, s.img, s.img, s.channels]))?;
+        dev_ep.bufs[3] = self.rt.to_device(&Tensor::new(
+            pseudo.x.to_vec(),
+            vec![s.max_query, s.img, s.img, s.channels],
+        ))?;
         dev_ep.bufs[4] =
-            self.rt.to_device(&Tensor::new(pseudo.y.clone(), vec![s.max_query, s.max_ways]))?;
-        dev_ep.bufs[5] = self.rt.to_device(&Tensor::new(pseudo.v.clone(), vec![s.max_query]))?;
+            self.rt.to_device(&Tensor::new(pseudo.y.to_vec(), vec![s.max_query, s.max_ways]))?;
+        dev_ep.bufs[5] = self.rt.to_device(&Tensor::new(pseudo.v.to_vec(), vec![s.max_query]))?;
         Ok(())
     }
 

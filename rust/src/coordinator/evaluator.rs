@@ -23,10 +23,12 @@ pub fn prototypes(
         if sup_v[i] == 0.0 {
             continue;
         }
-        let way = sup_y[i * w..(i + 1) * w]
-            .iter()
-            .position(|&v| v > 0.5)
-            .unwrap_or(0);
+        // A valid row whose one-hot decodes to nothing carries no label
+        // information — skip it rather than silently bucketing it into
+        // way 0 (which used to drag every prototype toward such rows).
+        let Some(way) = sup_y[i * w..(i + 1) * w].iter().position(|&v| v > 0.5) else {
+            continue;
+        };
         counts[way] += 1.0;
         for j in 0..f {
             proto[way * f + j] += emb[i * f + j];
@@ -81,10 +83,12 @@ pub fn accuracy(
                 best = way;
             }
         }
-        let label = qry_y[i * w..(i + 1) * w]
-            .iter()
-            .position(|&v| v > 0.5)
-            .unwrap_or(usize::MAX);
+        // Same rule as `prototypes`: a valid-but-unlabelled row cannot
+        // be scored either way — exclude it from the denominator instead
+        // of counting it as a guaranteed miss via a sentinel label.
+        let Some(label) = qry_y[i * w..(i + 1) * w].iter().position(|&v| v > 0.5) else {
+            continue;
+        };
         total += 1.0;
         if best == label {
             correct += 1.0;
@@ -166,6 +170,53 @@ mod tests {
         // way 0 prototype is exactly the first embedding (normalised)
         assert!((proto[0] - 1.0).abs() < 1e-6);
         assert!(proto[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn unlabelled_valid_rows_are_skipped() {
+        let s = shapes();
+        // support: one clean way-0 row, one *valid but unlabelled* row
+        // pointing away from it — the unlabelled row must not pollute
+        // the way-0 prototype.
+        let sup_emb = vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let sup_y = vec![
+            1.0, 0.0, 0.0, //
+            0.0, 0.0, 0.0, // valid row, no one-hot label
+            0.0, 0.0, 0.0, //
+            0.0, 0.0, 0.0,
+        ];
+        let sup_v = vec![1.0, 1.0, 0.0, 0.0];
+        let (proto, valid) = prototypes(&sup_emb, &sup_y, &sup_v, &s);
+        assert!(valid[0] && !valid[1] && !valid[2]);
+        assert!((proto[0] - 1.0).abs() < 1e-6, "unlabelled row leaked into way 0");
+        assert!(proto[1].abs() < 1e-6);
+
+        // queries: one labelled hit plus one valid-but-unlabelled row;
+        // the latter must not enter the denominator.
+        let qry_emb = vec![1.0, 0.0, 0.2, 0.8, 0.0, 0.0, 0.0, 0.0];
+        let qry_y = vec![
+            1.0, 0.0, 0.0, //
+            0.0, 0.0, 0.0, // valid row, no label
+            0.0, 0.0, 0.0, //
+            0.0, 0.0, 0.0,
+        ];
+        let qry_v = vec![1.0, 1.0, 0.0, 0.0];
+        let acc = accuracy(&qry_emb, &qry_y, &qry_v, &proto, &valid, &s);
+        assert_eq!(acc, 1.0, "unlabelled valid row must be excluded, not scored wrong");
+    }
+
+    #[test]
+    fn all_rows_unlabelled_scores_zero_not_nan() {
+        let s = shapes();
+        let sup_emb = vec![1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let sup_y = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let sup_v = vec![1.0, 1.0, 0.0, 0.0];
+        let (proto, valid) = prototypes(&sup_emb, &sup_y, &sup_v, &s);
+        let qry_y = vec![0.0; 12];
+        let qry_v = vec![1.0; 4];
+        let acc = accuracy(&sup_emb, &qry_y, &qry_v, &proto, &valid, &s);
+        assert_eq!(acc, 0.0);
+        assert!(acc.is_finite());
     }
 
     #[test]

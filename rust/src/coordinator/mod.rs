@@ -44,7 +44,7 @@ pub mod session;
 pub mod trainer;
 
 pub use backend::{
-    AdaptationBackend, AnalyticBackend, Backend, DeviceBackend, HostBackend,
+    AdaptationBackend, AnalyticBackend, Backend, DeviceBackend, HostBackend, SyncedParams,
 };
 pub use criterion::Criterion;
 pub use engine::{FisherOutput, ModelEngine};

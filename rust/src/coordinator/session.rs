@@ -173,27 +173,34 @@ impl<'e> AdaptationSession<'e> {
         self.config
     }
 
-    /// `params` is consumed: every backend ends up owning exactly one
-    /// copy of the episode's mutable state (device keeps it as the
-    /// pre-step host mirror), so an episode costs a single clone.
-    fn make_backend(
-        &self,
-        params: ParamStore,
+    /// `base` is only borrowed: the PJRT backends take their own
+    /// per-episode working copy (`ParamStore::adapted_copy` — device
+    /// keeps it as the pre-step host mirror), while the analytic backend
+    /// is copy-on-write and snapshots nothing until a mask is set.
+    fn make_backend<'s>(
+        &'s self,
+        base: &'s ParamStore,
         padded: PaddedEpisode,
         pseudo: PseudoQuery,
-    ) -> Result<Box<dyn AdaptationBackend + 'e>> {
+    ) -> Result<Box<dyn AdaptationBackend + 's>> {
         match &self.source {
             SessionSource::Engine(engine) => {
                 let engine: &'e ModelEngine = engine;
                 match self.backend {
-                    Backend::Auto | Backend::Device => {
-                        Ok(Box::new(DeviceBackend::new(engine, params, padded, pseudo)?))
-                    }
-                    Backend::Host => {
-                        Ok(Box::new(HostBackend::new(engine, params, padded, pseudo)))
-                    }
+                    Backend::Auto | Backend::Device => Ok(Box::new(DeviceBackend::new(
+                        engine,
+                        base.adapted_copy(),
+                        padded,
+                        pseudo,
+                    )?)),
+                    Backend::Host => Ok(Box::new(HostBackend::new(
+                        engine,
+                        base.adapted_copy(),
+                        padded,
+                        pseudo,
+                    ))),
                     Backend::Analytic => {
-                        Ok(Box::new(AnalyticBackend::new(&engine.meta, params, padded, pseudo)))
+                        Ok(Box::new(AnalyticBackend::new(&engine.meta, base, padded, pseudo)))
                     }
                 }
             }
@@ -201,7 +208,7 @@ impl<'e> AdaptationSession<'e> {
                 let meta: &'e ModelMeta = meta;
                 match self.backend {
                     Backend::Auto | Backend::Analytic => {
-                        Ok(Box::new(AnalyticBackend::new(meta, params, padded, pseudo)))
+                        Ok(Box::new(AnalyticBackend::new(meta, base, padded, pseudo)))
                     }
                     b => Err(anyhow!("backend {b:?} needs a ModelEngine")),
                 }
@@ -235,10 +242,7 @@ impl<'e> AdaptationSession<'e> {
         let pseudo = episode.pseudo_query(s, &mut rng);
         pseudo.validate(s).map_err(|e| anyhow!("{e}"))?;
 
-        let mut params = base.clone();
-        params.reset_optimizer();
-
-        let mut backend = self.make_backend(params, padded, pseudo)?;
+        let mut backend = self.make_backend(base, padded, pseudo)?;
 
         // Accuracy before adaptation.
         let emb = backend.embed()?;
@@ -252,9 +256,10 @@ impl<'e> AdaptationSession<'e> {
         } else {
             None
         };
-        // `base.theta` equals the backend's pre-step theta (the clone
-        // only reset the optimiser moments), so selection can score
-        // weights without keeping a second ParamStore alive.
+        // `base.theta` equals the backend's pre-step theta (working
+        // copies only reset the optimiser moments; the analytic backend
+        // reads `base` directly), so selection can score weights without
+        // keeping a second ParamStore alive.
         let (mask, plan, selected_layers) =
             self.method.selection(meta, &base.theta, fisher.as_ref())?;
         let selection_s = t0.elapsed().as_secs_f64();
@@ -511,7 +516,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let padded = episode.pad(s);
         let pseudo = episode.pseudo_query(s, &mut rng);
-        let mut b = AnalyticBackend::new(&meta, params.clone(), padded, pseudo);
+        let mut b = AnalyticBackend::new(&meta, &params, padded, pseudo);
         // mask: head layer only (offset 20..44)
         let mut mb = crate::coordinator::UpdateMask::builder(meta.total_theta);
         mb.add_run(20, 24);
@@ -519,12 +524,16 @@ mod tests {
         assert!(b.step(0.1).is_err(), "step before set_mask must fail");
         b.set_mask(&mask).unwrap();
         b.step(0.1).unwrap();
-        let after = b.sync().unwrap();
+        let synced = b.sync().unwrap();
+        // copy-on-write: the sync carries only the masked segment
+        assert_eq!(synced.updated_floats(), 24, "sparse sync must carry nnz floats");
+        let after = synced.materialize(&params);
         assert_eq!(after.theta[..20], params.theta[..20], "frozen params moved");
         assert!(
             after.theta[20..44] != params.theta[20..44],
             "selected params did not move"
         );
+        assert_eq!(after.t, 1);
     }
 
     #[test]
@@ -536,7 +545,7 @@ mod tests {
         let s = &meta.shapes;
         let mut rng = Rng::new(5);
         let mut b =
-            AnalyticBackend::new(&meta, params, episode.pad(s), episode.pseudo_query(s, &mut rng));
+            AnalyticBackend::new(&meta, &params, episode.pad(s), episode.pseudo_query(s, &mut rng));
         let out = b.fisher().unwrap();
         assert_eq!(out.deltas.len(), meta.fisher_len);
         assert!(out.deltas.iter().all(|&d| d > 0.0), "fisher must be positive");

@@ -1,0 +1,206 @@
+//! Shared render cache for the procedural domains.
+//!
+//! Every (method × domain × episode) grid cell replays the *same*
+//! pre-forked episode RNG streams (`harness::parallel`), so with M
+//! methods each image used to be rasterized M times; repeated table
+//! runs (serial-vs-parallel comparisons, figure sweeps) re-render
+//! everything again. Rasterization is by far the most expensive part of
+//! episode construction (value noise + scanline fills per pixel), so the
+//! cache keys a render on exactly what determines its output:
+//!
+//!   (domain, class, resolution, RNG stream position)
+//!
+//! `Domain::render` is a pure function of that tuple — class identity
+//! comes from `class_rng(class)` and all sample jitter from the caller's
+//! stream — so a hit can return the stored tensor *and* fast-forward the
+//! caller's RNG to the exact position the skipped render would have left
+//! it at. That makes caching invisible to determinism: tables are
+//! bit-identical with the cache on or off, at any worker count, because
+//! every downstream draw sees an unchanged stream.
+//!
+//! Images are stored as `Arc<[f32]>` and shared with the episodes that
+//! use them, so a hit costs one pointer clone, not a tensor copy.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::domains::Domain;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct RenderKey {
+    /// FNV-1a of the domain name (domains are stateless unit structs;
+    /// the name plus `seed()` is their whole identity).
+    domain: u64,
+    class: u32,
+    img: u32,
+    /// RNG stream position going into the render.
+    state: u64,
+}
+
+#[derive(Debug, Clone)]
+struct RenderEntry {
+    image: Arc<[f32]>,
+    /// Stream position after the render — restored into the caller's
+    /// RNG on a hit so the stream advances exactly as if it rendered.
+    state_out: u64,
+}
+
+/// Cache hit/miss counters plus the current entry count.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RenderCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// Sharded, bounded, thread-safe render cache. See the module docs for
+/// the key contract. Shards keep lock hold times short under the
+/// parallel episode harness; when a shard reaches its capacity it is
+/// cleared wholesale (entries are cheap to regenerate and correctness
+/// never depends on residency).
+pub struct RenderCache {
+    shards: Vec<Mutex<HashMap<RenderKey, RenderEntry>>>,
+    shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl RenderCache {
+    /// `shards` is rounded up to a power of two; `shard_cap` bounds the
+    /// entries per shard (total memory ≈ shards × cap × image bytes).
+    pub fn new(shards: usize, shard_cap: usize) -> RenderCache {
+        let n = shards.max(1).next_power_of_two();
+        RenderCache {
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            shard_cap: shard_cap.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache the samplers use by default: 8 shards ×
+    /// 4096 entries (≈ 100 MB ceiling at the testbed's 16×16 RGB —
+    /// 3 KB/entry — and 4× that at 32×32; in practice a grid run keeps
+    /// a few hundred entries resident).
+    pub fn global() -> &'static RenderCache {
+        static GLOBAL: OnceLock<RenderCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| RenderCache::new(8, 4096))
+    }
+
+    /// Render `class` at `img`×`img` through the cache. Must behave
+    /// exactly like `domain.render(class, rng, img)` — including the
+    /// caller-visible RNG advancement — whether it hits or misses.
+    pub fn render(
+        &self,
+        domain: &dyn Domain,
+        class: usize,
+        rng: &mut Rng,
+        img: usize,
+    ) -> Arc<[f32]> {
+        let key = RenderKey {
+            domain: fnv1a(domain.name()),
+            class: class as u32,
+            img: img as u32,
+            state: rng.state(),
+        };
+        let shard = &self.shards[self.shard_of(&key)];
+        if let Some(entry) = shard.lock().unwrap().get(&key) {
+            let entry = entry.clone();
+            *rng = Rng::from_state(entry.state_out);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return entry.image;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let image: Arc<[f32]> = domain.render(class, rng, img).into();
+        let entry = RenderEntry { image: Arc::clone(&image), state_out: rng.state() };
+        let mut map = shard.lock().unwrap();
+        if map.len() >= self.shard_cap {
+            map.clear();
+        }
+        map.insert(key, entry);
+        image
+    }
+
+    pub fn stats(&self) -> RenderCacheStats {
+        RenderCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.shards.iter().map(|s| s.lock().unwrap().len()).sum(),
+        }
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+
+    fn shard_of(&self, key: &RenderKey) -> usize {
+        // SplitMix64 finalizer over the mixed key fields.
+        let mut z = key.state ^ key.domain ^ (((key.class as u64) << 32) | key.img as u64);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        (z ^ (z >> 31)) as usize & (self.shards.len() - 1)
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::domains::{Omniglot, Traffic};
+
+    #[test]
+    fn hit_matches_uncached_render_and_stream_position() {
+        let cache = RenderCache::new(2, 64);
+        let d = Traffic;
+        for seed in [1u64, 2, 3] {
+            // uncached reference
+            let mut r_ref = Rng::new(seed);
+            let img_ref = d.render(5, &mut r_ref, 16);
+            // miss, then hit, from identical stream positions
+            let mut r_miss = Rng::new(seed);
+            let img_miss = cache.render(&d, 5, &mut r_miss, 16);
+            let mut r_hit = Rng::new(seed);
+            let img_hit = cache.render(&d, 5, &mut r_hit, 16);
+            assert_eq!(&img_miss[..], &img_ref[..]);
+            assert_eq!(&img_hit[..], &img_ref[..]);
+            assert_eq!(r_miss.state(), r_ref.state(), "miss must advance like a render");
+            assert_eq!(r_hit.state(), r_ref.state(), "hit must advance like a render");
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (3, 3));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cache = RenderCache::new(1, 64);
+        let a = cache.render(&Traffic, 0, &mut Rng::new(7), 16);
+        let b = cache.render(&Omniglot, 0, &mut Rng::new(7), 16);
+        let c = cache.render(&Traffic, 1, &mut Rng::new(7), 16);
+        let d = cache.render(&Traffic, 0, &mut Rng::new(8), 16);
+        assert_ne!(&a[..], &b[..], "domain must be part of the key");
+        assert_ne!(&a[..], &c[..], "class must be part of the key");
+        assert_ne!(&a[..], &d[..], "rng state must be part of the key");
+    }
+
+    #[test]
+    fn capacity_is_bounded() {
+        let cache = RenderCache::new(1, 8);
+        let d = Traffic;
+        for i in 0..50u64 {
+            cache.render(&d, 0, &mut Rng::new(i), 16);
+        }
+        assert!(cache.stats().entries <= 8, "{:?}", cache.stats());
+        // still correct after evictions
+        let mut r_ref = Rng::new(3);
+        let reference = d.render(0, &mut r_ref, 16);
+        let mut r = Rng::new(3);
+        assert_eq!(&cache.render(&d, 0, &mut r, 16)[..], &reference[..]);
+    }
+}

@@ -38,6 +38,13 @@ use crate::util::rng::Rng;
 /// randomness must derive from `class_rng(class)` so that the class
 /// identity is stable across samples, while per-sample jitter comes from
 /// the caller's `rng`.
+///
+/// Purity contract: `render` must be a pure function of `(class, rng
+/// position, img)` — no interior state, no randomness outside the
+/// passed stream. The shared [`RenderCache`](crate::data::RenderCache)
+/// relies on this to replay cached tensors with stream-exact RNG
+/// restoration; an impure implementation would silently break the
+/// grid's bit-determinism when cached.
 pub trait Domain: Send + Sync {
     fn name(&self) -> &'static str;
     /// Number of classes in the meta-test split.

@@ -9,16 +9,28 @@
 //!      class keeps >= 1 shot (realistically imbalanced, Table 5).
 //!   3. query: class-balanced, min(10, MAX_QUERY / ways) per class
 //!      (paper: 10 per class).
+//!
+//! Hot-path notes (README "Hot-path design"): images come out of the
+//! shared [`RenderCache`] as `Arc<[f32]>` (one pointer clone per reuse,
+//! stream-exact determinism), and every padded/pseudo tensor is a pooled
+//! [`PoolBuf`] from the thread-local scratch arena — the steady-state
+//! episode loop allocates no tensor-sized buffers.
 
+use std::sync::Arc;
+
+use super::cache::RenderCache;
 use super::domains::Domain;
 use crate::model::EpisodeShapes;
+use crate::util::pool::{take_zeroed, PoolBuf};
 use crate::util::rng::Rng;
 
-/// One sampled image with its episode-local label.
+/// One sampled image with its episode-local label. The image is shared
+/// with the render cache (and any other episode that drew the same
+/// render), so cloning a `Sample` never copies pixels.
 #[derive(Debug, Clone)]
 pub struct Sample {
-    pub image: Vec<f32>, // IMG*IMG*3, NHWC [-1,1]
-    pub label: usize,    // way index in [0, ways)
+    pub image: Arc<[f32]>, // IMG*IMG*3, NHWC [-1,1]
+    pub label: usize,      // way index in [0, ways)
 }
 
 /// A fully materialised episode (unpadded).
@@ -39,11 +51,11 @@ pub struct Episode {
 #[derive(Debug, Clone)]
 pub struct PseudoQuery {
     /// Images, `(max_query, img, img, channels)` row-major.
-    pub x: Vec<f32>,
+    pub x: PoolBuf,
     /// One-hot labels, `(max_query, max_ways)`.
-    pub y: Vec<f32>,
+    pub y: PoolBuf,
     /// Validity mask, `(max_query,)` — 0 on padded rows.
-    pub v: Vec<f32>,
+    pub v: PoolBuf,
 }
 
 impl PseudoQuery {
@@ -81,15 +93,17 @@ impl PseudoQuery {
     }
 }
 
-/// Episode padded to the AOT graphs' static shapes.
+/// Episode padded to the AOT graphs' static shapes. Tensor fields are
+/// pooled buffers (deref to `[f32]`) so padding an episode is
+/// allocation-free once the thread's arena is warm.
 #[derive(Debug, Clone)]
 pub struct PaddedEpisode {
-    pub sup_x: Vec<f32>,
-    pub sup_y: Vec<f32>,
-    pub sup_v: Vec<f32>,
-    pub qry_x: Vec<f32>,
-    pub qry_y: Vec<f32>,
-    pub qry_v: Vec<f32>,
+    pub sup_x: PoolBuf,
+    pub sup_y: PoolBuf,
+    pub sup_v: PoolBuf,
+    pub qry_x: PoolBuf,
+    pub qry_y: PoolBuf,
+    pub qry_v: PoolBuf,
     pub n_support: usize,
     pub n_query: usize,
     pub ways: usize,
@@ -99,11 +113,29 @@ pub struct Sampler<'a> {
     pub domain: &'a dyn Domain,
     pub shapes: &'a EpisodeShapes,
     pub min_ways: usize,
+    /// Render cache consulted per sample; `None` rasterizes every image.
+    cache: Option<&'a RenderCache>,
 }
 
 impl<'a> Sampler<'a> {
+    /// A sampler over the process-wide [`RenderCache::global`].
     pub fn new(domain: &'a dyn Domain, shapes: &'a EpisodeShapes) -> Self {
-        Sampler { domain, shapes, min_ways: 3 }
+        Sampler { domain, shapes, min_ways: 3, cache: Some(RenderCache::global()) }
+    }
+
+    /// Override the render cache (`None` disables caching — every image
+    /// is rasterized). Output is bit-identical either way; this knob
+    /// exists for benchmarks and the determinism tests.
+    pub fn with_cache(mut self, cache: Option<&'a RenderCache>) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng) -> Arc<[f32]> {
+        match self.cache {
+            Some(c) => c.render(self.domain, class, rng, self.shapes.img),
+            None => self.domain.render(class, rng, self.shapes.img).into(),
+        }
     }
 
     pub fn sample(&self, rng: &mut Rng) -> Episode {
@@ -137,10 +169,10 @@ impl<'a> Sampler<'a> {
         let mut query = Vec::new();
         for (w, &cls) in class_ids.iter().enumerate() {
             for _ in 0..shots[w] {
-                support.push(Sample { image: self.domain.render(cls, rng, s.img), label: w });
+                support.push(Sample { image: self.render(cls, rng), label: w });
             }
             for _ in 0..q_per_class {
-                query.push(Sample { image: self.domain.render(cls, rng, s.img), label: w });
+                query.push(Sample { image: self.render(cls, rng), label: w });
             }
         }
         rng.shuffle(&mut support);
@@ -161,9 +193,9 @@ impl Episode {
     pub fn pad(&self, s: &EpisodeShapes) -> PaddedEpisode {
         let img_len = s.img * s.img * s.channels;
         let pack = |samples: &[Sample], cap: usize| {
-            let mut x = vec![0.0f32; cap * img_len];
-            let mut y = vec![0.0f32; cap * s.max_ways];
-            let mut v = vec![0.0f32; cap];
+            let mut x = take_zeroed(cap * img_len);
+            let mut y = take_zeroed(cap * s.max_ways);
+            let mut v = take_zeroed(cap);
             for (i, smp) in samples.iter().take(cap).enumerate() {
                 x[i * img_len..(i + 1) * img_len].copy_from_slice(&smp.image);
                 y[i * s.max_ways + smp.label] = 1.0;
@@ -188,13 +220,15 @@ impl Episode {
 
     /// Pseudo-query set for fine-tuning (Hu et al., 2022): augmented
     /// copies of the *support* images — the only labelled data available
-    /// on-device. Augmentations: horizontal flip, +-2px shift, noise.
+    /// on-device. Augmentations: horizontal flip, +-2px shift, noise,
+    /// written straight into the pooled destination rows (no per-image
+    /// staging buffer).
     pub fn pseudo_query(&self, s: &EpisodeShapes, rng: &mut Rng) -> PseudoQuery {
         let img_len = s.img * s.img * s.channels;
         let cap = s.max_query;
-        let mut x = vec![0.0f32; cap * img_len];
-        let mut y = vec![0.0f32; cap * s.max_ways];
-        let mut v = vec![0.0f32; cap];
+        let mut x = take_zeroed(cap * img_len);
+        let mut y = take_zeroed(cap * s.max_ways);
+        let mut v = take_zeroed(cap);
         if self.support.is_empty() {
             return PseudoQuery { x, y, v };
         }
@@ -202,8 +236,8 @@ impl Episode {
         // replacement, so a short support set still yields `cap` rows.
         for i in 0..cap {
             let src = &self.support[rng.below(self.support.len())];
-            let aug = augment(&src.image, s.img, s.channels, rng);
-            x[i * img_len..(i + 1) * img_len].copy_from_slice(&aug);
+            let row = &mut x[i * img_len..(i + 1) * img_len];
+            augment_into(&src.image, s.img, s.channels, rng, row);
             y[i * s.max_ways + src.label] = 1.0;
             v[i] = 1.0;
         }
@@ -211,13 +245,14 @@ impl Episode {
     }
 }
 
-/// Light augmentation on a flat NHWC image.
-pub fn augment(img: &[f32], size: usize, channels: usize, rng: &mut Rng) -> Vec<f32> {
+/// Light augmentation on a flat NHWC image, written into `out`
+/// (`out.len() == img.len()`; every element is overwritten).
+pub fn augment_into(img: &[f32], size: usize, channels: usize, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(img.len(), out.len());
     let flip = rng.bool(0.5);
     let dx = rng.int_range(0, 4) as i32 - 2;
     let dy = rng.int_range(0, 4) as i32 - 2;
     let noise_amp = 0.05f32;
-    let mut out = vec![0.0f32; img.len()];
     for y in 0..size {
         for x in 0..size {
             let sx0 = if flip { size as i32 - 1 - x as i32 } else { x as i32 } + dx;
@@ -231,6 +266,12 @@ pub fn augment(img: &[f32], size: usize, channels: usize, rng: &mut Rng) -> Vec<
             }
         }
     }
+}
+
+/// Allocating wrapper around [`augment_into`].
+pub fn augment(img: &[f32], size: usize, channels: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0.0f32; img.len()];
+    augment_into(img, size, channels, rng, &mut out);
     out
 }
 
@@ -307,6 +348,34 @@ mod tests {
     }
 
     #[test]
+    fn cached_and_uncached_sampling_agree() {
+        let s = shapes();
+        let d = Traffic;
+        for seed in [3u64, 8, 21] {
+            let mut r_off = Rng::new(seed);
+            let off = Sampler::new(&d, &s).with_cache(None).sample(&mut r_off);
+            let cache = RenderCache::new(2, 256);
+            let mut r_on = Rng::new(seed);
+            let on = Sampler::new(&d, &s).with_cache(Some(&cache)).sample(&mut r_on);
+            // replay the same stream again: all renders hit
+            let mut r_hit = Rng::new(seed);
+            let hit = Sampler::new(&d, &s).with_cache(Some(&cache)).sample(&mut r_hit);
+            assert!(cache.stats().hits > 0);
+            for (a, b) in [(&off, &on), (&off, &hit)] {
+                assert_eq!(a.ways, b.ways);
+                assert_eq!(a.class_ids, b.class_ids);
+                assert_eq!(a.support.len(), b.support.len());
+                for (x, y) in a.support.iter().zip(&b.support) {
+                    assert_eq!(x.label, y.label);
+                    assert_eq!(&x.image[..], &y.image[..]);
+                }
+            }
+            assert_eq!(r_off.state(), r_on.state(), "cache must not shift the stream");
+            assert_eq!(r_off.state(), r_hit.state(), "hits must not shift the stream");
+        }
+    }
+
+    #[test]
     fn pseudo_query_labels_come_from_support() {
         let s = shapes();
         let d = Traffic;
@@ -335,13 +404,17 @@ mod tests {
         let ep = Sampler::new(&d, &s).sample(&mut rng);
         let mut pq = ep.pseudo_query(&s, &mut rng);
         assert!(pq.validate(&s).is_ok());
-        pq.x.pop();
+        let mut short = pq.x.to_vec();
+        short.pop();
+        pq.x = short.into();
         assert!(pq.validate(&s).unwrap_err().contains("pseudo-query x"));
         let mut pq = ep.pseudo_query(&s, &mut rng);
-        pq.y.push(0.0);
+        let mut long = pq.y.to_vec();
+        long.push(0.0);
+        pq.y = long.into();
         assert!(pq.validate(&s).unwrap_err().contains("pseudo-query y"));
         let mut pq = ep.pseudo_query(&s, &mut rng);
-        pq.v.clear();
+        pq.v = Vec::new().into();
         assert!(pq.validate(&s).unwrap_err().contains("pseudo-query v"));
     }
 
@@ -352,5 +425,11 @@ mod tests {
         let out = augment(&img, 16, 3, &mut rng);
         assert_eq!(out.len(), img.len());
         assert!(out.iter().all(|v| (-1.0..=1.0).contains(v)));
+        // in-place form consumes the identical rng stream
+        let mut rng2 = Rng::new(9);
+        let mut out2 = vec![9.0f32; img.len()];
+        augment_into(&img, 16, 3, &mut rng2, &mut out2);
+        assert_eq!(out, out2);
+        assert_eq!(rng.state(), rng2.state());
     }
 }

@@ -4,11 +4,13 @@
 //! generators whose cross-domain statistics exercise the same CDFSL
 //! behaviour (DESIGN.md "Substitutions").
 
+pub mod cache;
 pub mod domains;
 pub mod episode;
 pub mod raster;
 pub mod stats;
 
+pub use cache::{RenderCache, RenderCacheStats};
 pub use domains::{all_domains, domain_by_name, Domain, DOMAIN_NAMES};
-pub use episode::{augment, Episode, PaddedEpisode, PseudoQuery, Sampler, Sample};
+pub use episode::{augment, augment_into, Episode, PaddedEpisode, PseudoQuery, Sampler, Sample};
 pub use stats::{domain_stats, mean_sd, DomainStats};

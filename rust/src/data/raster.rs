@@ -98,9 +98,11 @@ impl Canvas {
         }
         let ymin = pts.iter().map(|p| p.1).fold(f32::MAX, f32::min).floor() as i32;
         let ymax = pts.iter().map(|p| p.1).fold(f32::MIN, f32::max).ceil() as i32;
+        // One crossing buffer for the whole fill (reused across scanlines).
+        let mut xs: Vec<f32> = Vec::with_capacity(pts.len());
         for y in ymin..=ymax {
             let fy = y as f32 + 0.5;
-            let mut xs: Vec<f32> = Vec::new();
+            xs.clear();
             for i in 0..pts.len() {
                 let (x1, y1) = pts[i];
                 let (x2, y2) = pts[(i + 1) % pts.len()];

@@ -63,7 +63,8 @@ USAGE:
   tinytrain adapt    --arch mcunet --domain traffic [--method tinytrain] [--steps 10]
                      [--backend auto|host|device|analytic]
   tinytrain grid     [--arch mcunet] [--episodes 4] [--steps 8] [--workers N]
-                     [--domains a,b] [--seed S]   (analytic backend, no PJRT needed)
+                     [--domains a,b] [--seed S] [--no-render-cache]
+                     (analytic backend, no PJRT needed)
   tinytrain exp      <table1|table2|table3|table4|table5|table7|table8|table9|table10|
                       table11|fig1|fig3|fig4|fig5|fig6a|fig6b|all|all-analytic>
                      [--tier smoke|full|paper] [--arch a,b] [--episodes N] [--steps N]
@@ -207,6 +208,9 @@ fn grid(args: &Args) -> Result<()> {
         lr: args.f64("lr", 6e-3) as f32,
         seed: args.u64("seed", 7),
         workers: args.usize("workers", default_workers()),
+        // Output is bit-identical with the cache on or off; the flag
+        // exists for A/B timing runs.
+        render_cache: !args.bool("no-render-cache"),
     };
     let domains = args.list("domains", &tinytrain::data::DOMAIN_NAMES);
     let methods = vec![

@@ -55,6 +55,15 @@ impl ParamStore {
         self.t = 0;
     }
 
+    /// The per-episode working copy a backend starts from: cloned theta,
+    /// zeroed optimiser moments (adaptation always begins with a fresh
+    /// optimiser — cheaper than clone + `reset_optimizer`, which copies
+    /// the moments only to overwrite them).
+    pub fn adapted_copy(&self) -> ParamStore {
+        let n = self.theta.len();
+        ParamStore { theta: self.theta.clone(), m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
     /// Save theta to a little-endian binary file (moments are transient).
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut bytes = Vec::with_capacity(8 + self.theta.len() * 4);

@@ -1,9 +1,159 @@
 //! Scoped thread-pool substrate (tokio is not in the offline vendor set;
 //! the coordinator's parallelism needs are fork-join over episodes, which
-//! plain threads model better anyway on a CPU testbed).
+//! plain threads model better anyway on a CPU testbed) plus the
+//! thread-local **tensor scratch arena** behind [`PoolBuf`].
+//!
+//! The episode loop used to allocate fresh multi-KB zeroed vectors for
+//! every `pad`/`pseudo_query` tensor of every episode. [`take_zeroed`]
+//! hands out recycled buffers instead: each thread keeps a small
+//! free-list keyed by exact length, a dropped [`PoolBuf`] returns its
+//! storage there, and the steady-state episode loop performs **zero
+//! heap allocations** for tensor-sized buffers. The pool is
+//! thread-local on purpose — it composes with `parallel_map` without
+//! any locking (each worker thread owns its arena), and a buffer that
+//! migrates threads simply retires into the destination thread's arena.
 
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+
+/// Per-length free-lists are individually capped, and the arena as a
+/// whole stops retaining once it holds this many floats (16 MB).
+const MAX_PER_CLASS: usize = 16;
+const MAX_HELD_FLOATS: usize = 1 << 22;
+
+#[derive(Default)]
+struct TensorArena {
+    by_len: HashMap<usize, Vec<Vec<f32>>>,
+    held_floats: usize,
+    takes: u64,
+    reuses: u64,
+}
+
+thread_local! {
+    static TENSOR_ARENA: RefCell<TensorArena> = RefCell::new(TensorArena::default());
+}
+
+/// A pooled `f32` tensor buffer: behaves like a boxed `[f32]` and
+/// returns its storage to the current thread's arena on drop. Cloning
+/// draws a fresh pooled buffer and copies into it.
+pub struct PoolBuf {
+    buf: Vec<f32>,
+}
+
+impl PoolBuf {
+    /// Copy the contents out into a plain `Vec` (for boundaries that
+    /// need owned `Vec<f32>`, e.g. PJRT tensor construction).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.buf.clone()
+    }
+}
+
+/// A zeroed pooled buffer of exactly `len` floats. Reuses a same-length
+/// buffer from the thread's arena when one is available (zeroing in
+/// place), allocating only on a cold arena.
+pub fn take_zeroed(len: usize) -> PoolBuf {
+    let recycled = TENSOR_ARENA
+        .try_with(|a| {
+            let mut a = a.borrow_mut();
+            a.takes += 1;
+            let buf = a.by_len.get_mut(&len).and_then(Vec::pop);
+            if let Some(b) = &buf {
+                a.held_floats -= b.len();
+                a.reuses += 1;
+            }
+            buf
+        })
+        .ok()
+        .flatten();
+    match recycled {
+        Some(mut buf) => {
+            buf.fill(0.0);
+            PoolBuf { buf }
+        }
+        None => PoolBuf { buf: vec![0.0; len] },
+    }
+}
+
+/// `(takes, reuses)` counters of the current thread's arena — the
+/// zero-alloc property is testable as `reuses == takes` over a warm
+/// steady-state window.
+pub fn arena_stats() -> (u64, u64) {
+    TENSOR_ARENA
+        .try_with(|a| {
+            let a = a.borrow();
+            (a.takes, a.reuses)
+        })
+        .unwrap_or((0, 0))
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        if buf.is_empty() {
+            return;
+        }
+        // try_with: during thread teardown the TLS slot may already be
+        // gone — then the buffer just deallocates normally.
+        let _ = TENSOR_ARENA.try_with(|a| {
+            let mut a = a.borrow_mut();
+            if a.held_floats + buf.len() <= MAX_HELD_FLOATS {
+                let class = a.by_len.entry(buf.len()).or_default();
+                if class.len() < MAX_PER_CLASS {
+                    a.held_floats += buf.len();
+                    class.push(buf);
+                }
+            }
+        });
+    }
+}
+
+impl Deref for PoolBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl DerefMut for PoolBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl AsRef<[f32]> for PoolBuf {
+    fn as_ref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl Clone for PoolBuf {
+    fn clone(&self) -> Self {
+        let mut out = take_zeroed(self.buf.len());
+        out.buf.copy_from_slice(&self.buf);
+        out
+    }
+}
+
+impl From<Vec<f32>> for PoolBuf {
+    fn from(buf: Vec<f32>) -> Self {
+        PoolBuf { buf }
+    }
+}
+
+impl std::fmt::Debug for PoolBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PoolBuf(len={})", self.buf.len())
+    }
+}
+
+impl PartialEq for PoolBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self.buf == other.buf
+    }
+}
 
 /// Run `f(i)` for i in 0..n across up to `workers` threads, collecting
 /// results in index order. Panics in workers are propagated.
@@ -77,5 +227,47 @@ mod tests {
     fn workers_capped_by_n() {
         let out = parallel_map(2, 16, |i| i + 1);
         assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn pool_buf_recycles_storage() {
+        let len = 4096usize;
+        let first = take_zeroed(len);
+        let ptr = first.as_ptr();
+        drop(first);
+        let second = take_zeroed(len);
+        assert_eq!(second.as_ptr(), ptr, "same-length take must reuse the dropped buffer");
+        assert!(second.iter().all(|&v| v == 0.0), "recycled buffer must be re-zeroed");
+        // a different length does not steal the recycled buffer
+        drop(second);
+        let other = take_zeroed(len / 2);
+        assert_ne!(other.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn pool_buf_clone_and_vec_roundtrip() {
+        let mut a = take_zeroed(8);
+        a[3] = 2.5;
+        let b = a.clone();
+        assert_eq!(&a[..], &b[..]);
+        let v = a.to_vec();
+        assert_eq!(v[3], 2.5);
+        let c: PoolBuf = v.into();
+        assert_eq!(&c[..], &b[..]);
+    }
+
+    #[test]
+    fn arena_reuses_in_steady_state() {
+        // warm
+        for _ in 0..3 {
+            drop(take_zeroed(1234));
+        }
+        let (takes0, reuses0) = arena_stats();
+        for _ in 0..10 {
+            drop(take_zeroed(1234));
+        }
+        let (takes1, reuses1) = arena_stats();
+        assert_eq!(takes1 - takes0, 10);
+        assert_eq!(reuses1 - reuses0, 10, "steady state must be allocation-free");
     }
 }

@@ -16,6 +16,21 @@ impl Rng {
         Rng { state: seed.wrapping_add(0x9e3779b97f4a7c15) }
     }
 
+    /// The raw stream position. Together with [`Rng::from_state`] this
+    /// lets a caller snapshot and restore a stream exactly — the render
+    /// cache keys on it so a cache hit can advance the stream precisely
+    /// as the skipped render would have.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a stream at an exact position captured with
+    /// [`Rng::state`]. Unlike [`Rng::new`], no seed scrambling is
+    /// applied: `Rng::from_state(r.state())` continues `r`'s stream.
+    pub fn from_state(state: u64) -> Self {
+        Rng { state }
+    }
+
     /// Derive an independent stream (for per-task / per-domain splits).
     pub fn fork(&mut self, tag: u64) -> Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0xbf58476d1ce4e5b9))
@@ -151,6 +166,18 @@ mod tests {
             sorted.dedup();
             assert_eq!(sorted.len(), k, "duplicates in {v:?}");
         }
+    }
+
+    #[test]
+    fn state_snapshot_restores_exact_stream() {
+        let mut r = Rng::new(9);
+        r.next_u64();
+        let snap = r.state();
+        let ahead: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+        let mut restored = Rng::from_state(snap);
+        let replay: Vec<u64> = (0..8).map(|_| restored.next_u64()).collect();
+        assert_eq!(ahead, replay);
+        assert_eq!(r.state(), restored.state());
     }
 
     #[test]

@@ -7,15 +7,24 @@
 //!   to the seed's dense mask builders (reference implementations kept
 //!   verbatim below);
 //! - the parallel episode harness produces identical accuracy tables to
-//!   the serial path for a fixed seed, at any worker count.
+//!   the serial path for a fixed seed, at any worker count;
+//! - the analytic backend's incremental masked re-embedding matches a
+//!   dense recompute for random masks/step counts (property test), and
+//!   its sparse copy-on-write sync materialises the exact stepped theta;
+//! - the render cache is determinism-preserving: identical tables with
+//!   the cache on or off, at 1 or N workers, and replayed streams end at
+//!   identical RNG positions.
 
 use tinytrain::accounting::{backward_macs, backward_memory, CostLedger, Optimizer, UpdatePlan};
+use tinytrain::coordinator::backend::{AdaptationBackend, AnalyticBackend};
 use tinytrain::coordinator::{
-    Budgets, ChannelScheme, Criterion, FisherReport, Method, Selection, StaticPolicy,
+    Budgets, ChannelScheme, Criterion, FisherReport, Method, Selection, StaticPolicy, UpdateMask,
 };
+use tinytrain::data::{domain_by_name, PaddedEpisode, RenderCache, Sampler};
 use tinytrain::harness::parallel::{accuracy_grid, eval_cell_analytic, GridConfig};
 use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::util::prop::check;
+use tinytrain::util::rng::Rng;
 
 const RATIOS: [f64; 5] = [0.0, 0.125, 0.25, 0.5, 1.0];
 
@@ -323,7 +332,8 @@ fn parallel_grid_is_bit_identical_to_serial() {
     let params = ParamStore::init(&meta, 42);
     let methods = grid_methods(&meta);
     let domains: Vec<String> = ["traffic", "omniglot"].iter().map(|d| d.to_string()).collect();
-    let serial_cfg = GridConfig { episodes: 3, steps: 5, lr: 6e-3, seed: 11, workers: 1 };
+    let serial_cfg =
+        GridConfig { episodes: 3, steps: 5, lr: 6e-3, seed: 11, workers: 1, render_cache: true };
     let serial = accuracy_grid(&meta, &params, &methods, &domains, &serial_cfg).unwrap();
     for workers in [2, 4, 8] {
         let cfg = GridConfig { workers, ..serial_cfg.clone() };
@@ -346,7 +356,8 @@ fn grid_cells_match_standalone_cell_eval() {
     let params = ParamStore::init(&meta, 7);
     let methods = grid_methods(&meta);
     let domains: Vec<String> = ["cub", "dtd"].iter().map(|d| d.to_string()).collect();
-    let cfg = GridConfig { episodes: 2, steps: 4, lr: 6e-3, seed: 3, workers: 4 };
+    let cfg =
+        GridConfig { episodes: 2, steps: 4, lr: 6e-3, seed: 3, workers: 4, render_cache: true };
     let grid = accuracy_grid(&meta, &params, &methods, &domains, &cfg).unwrap();
     for (mi, method) in methods.iter().enumerate() {
         for (di, domain) in domains.iter().enumerate() {
@@ -362,7 +373,8 @@ fn repeated_runs_are_deterministic() {
     let params = ParamStore::init(&meta, 1);
     let methods = vec![Method::LastLayer];
     let domains: Vec<String> = vec!["flower".to_string()];
-    let cfg = GridConfig { episodes: 4, steps: 6, lr: 6e-3, seed: 99, workers: 3 };
+    let cfg =
+        GridConfig { episodes: 4, steps: 6, lr: 6e-3, seed: 99, workers: 3, render_cache: true };
     let a = accuracy_grid(&meta, &params, &methods, &domains, &cfg).unwrap();
     let b = accuracy_grid(&meta, &params, &methods, &domains, &cfg).unwrap();
     assert_eq!(a[0][0].mean_acc, b[0][0].mean_acc);
@@ -372,6 +384,270 @@ fn repeated_runs_are_deterministic() {
     let s1 = episode_streams(cell_seed(99, "flower"), 1);
     let s2 = episode_streams(cell_seed(100, "flower"), 1);
     assert_ne!(s1[0].clone().next_u64(), s2[0].clone().next_u64());
+}
+
+// ---------------------------------------------------------------------------
+// Incremental masked re-embedding vs dense recompute
+// ---------------------------------------------------------------------------
+
+/// The seed's analytic embedding: per-pixel hash into theta, fresh row
+/// per image, full recompute (kept verbatim as the reference arm).
+fn reference_embed(meta: &ModelMeta, theta: &[f32], padded: &PaddedEpisode) -> Vec<f32> {
+    let s = &meta.shapes;
+    let img_len = s.img * s.img * s.channels;
+    let proj_weight = |i: usize| -> f32 {
+        if theta.is_empty() {
+            return 1.0;
+        }
+        let h = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
+        theta[(h % theta.len() as u64) as usize] + 0.05
+    };
+    let mut out = Vec::with_capacity(s.eval_batch * s.feat_dim);
+    for images in [&padded.sup_x, &padded.qry_x] {
+        let n = images.len() / img_len.max(1);
+        for b in 0..n {
+            let img = &images[b * img_len..(b + 1) * img_len];
+            let mut row = vec![0.0f32; s.feat_dim];
+            for (i, &x) in img.iter().enumerate() {
+                row[i % s.feat_dim] += x * proj_weight(i);
+            }
+            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+            out.extend(row.iter().map(|v| v / norm));
+        }
+    }
+    out
+}
+
+/// The analytic masked step on a dense theta (reference arm).
+fn step_dense(theta: &mut [f32], runs: &[(usize, usize)], lr: f32) {
+    for &(off, len) in runs {
+        for p in &mut theta[off..off + len] {
+            *p -= lr * 0.1 * *p;
+        }
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn incremental_embed_matches_dense_recompute_property() {
+    let meta = ModelMeta::synthetic(5);
+    let params = ParamStore::init(&meta, 3);
+    let s = meta.shapes.clone();
+    let d = domain_by_name("traffic").unwrap();
+    let mut erng = Rng::new(17);
+    let ep = Sampler::new(d.as_ref(), &s).sample(&mut erng);
+    let padded = ep.pad(&s);
+    let pseudo = ep.pseudo_query(&s, &mut erng);
+    let total = meta.total_theta;
+    check(
+        "incremental-embed",
+        25,
+        41,
+        |r| {
+            // random masks across the gate: occasionally the full theta
+            // (dense-rebuild mode), otherwise a few random runs
+            let mut b = UpdateMask::builder(total);
+            if r.bool(0.2) {
+                b.add_run(0, total);
+            } else {
+                for _ in 0..r.int_range(1, 6) {
+                    let off = r.below(total);
+                    let len = r.int_range(1, (total - off).min(512));
+                    b.add_run(off, len);
+                }
+            }
+            (b.build().unwrap(), r.int_range(1, 9), (1e-3 + r.uniform() * 5e-3) as f32)
+        },
+        |(mask, steps, lr)| {
+            let mut backend = AnalyticBackend::new(&meta, &params, padded.clone(), pseudo.clone());
+            // pre-adaptation embed (builds the scatter table) must be
+            // bit-identical to the seed's dense scan
+            let pre = backend.embed().map_err(|e| e.to_string())?;
+            if pre != reference_embed(&meta, &params.theta, &padded) {
+                return Err("pre-step embed not bit-identical to the dense scan".into());
+            }
+            backend.set_mask(mask).map_err(|e| e.to_string())?;
+            let mut theta = params.theta.clone();
+            for _ in 0..*steps {
+                backend.step(*lr).map_err(|e| e.to_string())?;
+                step_dense(&mut theta, mask.runs(), *lr);
+            }
+            let post = backend.embed().map_err(|e| e.to_string())?;
+            let post_ref = reference_embed(&meta, &theta, &padded);
+            let max_diff = max_abs_diff(&post, &post_ref);
+            if max_diff > 1e-4 {
+                return Err(format!(
+                    "post-step embed diverged by {max_diff} (nnz={}, steps={steps})",
+                    mask.nnz()
+                ));
+            }
+            // the sparse sync materialises the exact stepped theta
+            let synced = backend.sync().map_err(|e| e.to_string())?;
+            if synced.updated_floats() != mask.nnz() {
+                return Err(format!(
+                    "sync carried {} floats, mask nnz is {}",
+                    synced.updated_floats(),
+                    mask.nnz()
+                ));
+            }
+            if synced.materialize(&params).theta != theta {
+                return Err("sparse sync diverged from the dense step".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn re_masking_mid_episode_keeps_previously_stepped_values() {
+    // The PJRT backends mutate a dense per-episode store, so weights
+    // stepped under an earlier mask survive a mask change; the analytic
+    // copy-on-write overlay must match (retired-segment mechanism).
+    let meta = ModelMeta::synthetic(5);
+    let params = ParamStore::init(&meta, 8);
+    let s = meta.shapes.clone();
+    let d = domain_by_name("traffic").unwrap();
+    let mut erng = Rng::new(33);
+    let ep = Sampler::new(d.as_ref(), &s).sample(&mut erng);
+    let padded = ep.pad(&s);
+    let pseudo = ep.pseudo_query(&s, &mut erng);
+
+    let mask_a = {
+        let mut b = UpdateMask::builder(meta.total_theta);
+        b.add_run(0, 64);
+        b.build().unwrap()
+    };
+    let mask_b = {
+        let mut b = UpdateMask::builder(meta.total_theta);
+        b.add_run(1000, 32);
+        b.build().unwrap()
+    };
+    let mut backend = AnalyticBackend::new(&meta, &params, padded.clone(), pseudo.clone());
+    backend.embed().unwrap();
+    backend.set_mask(&mask_a).unwrap();
+    backend.step(1e-2).unwrap();
+    backend.step(1e-2).unwrap();
+    backend.set_mask(&mask_b).unwrap();
+    backend.step(1e-2).unwrap();
+
+    let mut theta = params.theta.clone();
+    step_dense(&mut theta, mask_a.runs(), 1e-2);
+    step_dense(&mut theta, mask_a.runs(), 1e-2);
+    step_dense(&mut theta, mask_b.runs(), 1e-2);
+
+    let synced = backend.sync().unwrap().materialize(&params);
+    assert_eq!(synced.theta, theta, "re-masking must not revert stepped weights");
+    let post = backend.embed().unwrap();
+    let post_ref = reference_embed(&meta, &theta, &padded);
+    let max_diff = max_abs_diff(&post, &post_ref);
+    assert!(max_diff < 1e-4, "embed after re-mask diverged by {max_diff}");
+}
+
+#[test]
+fn embed_plan_picks_incremental_for_narrow_masks_and_dense_for_wide() {
+    let meta = ModelMeta::synthetic(5);
+    let params = ParamStore::init(&meta, 4);
+    let s = meta.shapes.clone();
+    let d = domain_by_name("cub").unwrap();
+    let mut erng = Rng::new(9);
+    let ep = Sampler::new(d.as_ref(), &s).sample(&mut erng);
+    let padded = ep.pad(&s);
+    let pseudo = ep.pseudo_query(&s, &mut erng);
+
+    let narrow = {
+        let mut b = UpdateMask::builder(meta.total_theta);
+        for e in meta.layer_entries(meta.head_layer()) {
+            b.add_entry(e.offset, e.size);
+        }
+        b.build().unwrap()
+    };
+    let wide = {
+        let mut b = UpdateMask::builder(meta.total_theta);
+        b.add_run(0, meta.total_theta);
+        b.build().unwrap()
+    };
+    for (mask, expect_incremental) in [(&narrow, true), (&wide, false)] {
+        let mut backend = AnalyticBackend::new(&meta, &params, padded.clone(), pseudo.clone());
+        backend.embed().unwrap();
+        backend.set_mask(mask).unwrap();
+        let (affected, incremental) = backend.embed_plan().unwrap();
+        assert_eq!(incremental, expect_incremental, "nnz={} affected={affected}", mask.nnz());
+        // both modes must still agree with the dense recompute
+        let mut theta = params.theta.clone();
+        for _ in 0..4 {
+            backend.step(2e-3).unwrap();
+            step_dense(&mut theta, mask.runs(), 2e-3);
+        }
+        let post = backend.embed().unwrap();
+        let post_ref = reference_embed(&meta, &theta, &padded);
+        let max_diff = max_abs_diff(&post, &post_ref);
+        assert!(max_diff < 1e-4, "mode {incremental}: diverged by {max_diff}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Render cache determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grid_identical_with_render_cache_on_off_and_any_workers() {
+    let meta = ModelMeta::synthetic(4);
+    let params = ParamStore::init(&meta, 5);
+    let methods = grid_methods(&meta);
+    let domains: Vec<String> = ["traffic", "qdraw"].iter().map(|d| d.to_string()).collect();
+    let base = GridConfig {
+        episodes: 2,
+        steps: 4,
+        lr: 6e-3,
+        seed: 13,
+        workers: 1,
+        render_cache: false,
+    };
+    let reference = accuracy_grid(&meta, &params, &methods, &domains, &base).unwrap();
+    for (workers, render_cache) in [(1, true), (4, true), (4, false)] {
+        let cfg = GridConfig { workers, render_cache, ..base.clone() };
+        let got = accuracy_grid(&meta, &params, &methods, &domains, &cfg).unwrap();
+        for (mi, (rrow, grow)) in reference.iter().zip(&got).enumerate() {
+            for (di, (rc, gc)) in rrow.iter().zip(grow).enumerate() {
+                let ctx = format!("cell ({mi},{di}) cache={render_cache} x{workers}");
+                assert_eq!(rc.mean_acc, gc.mean_acc, "{ctx}");
+                assert_eq!(rc.ci95, gc.ci95, "{ctx}");
+                assert_eq!(rc.n, gc.n);
+            }
+        }
+    }
+}
+
+#[test]
+fn render_cache_replay_is_stream_exact() {
+    let meta = ModelMeta::synthetic(3);
+    let s = &meta.shapes;
+    let d = domain_by_name("flower").unwrap();
+    let cache = RenderCache::new(2, 1024);
+    let sample_with = |cache: Option<&RenderCache>, seed: u64| {
+        let mut rng = Rng::new(seed);
+        let ep = Sampler::new(d.as_ref(), s).with_cache(cache).sample(&mut rng);
+        (ep, rng.state())
+    };
+    for seed in [1u64, 2, 3] {
+        let (ep_off, state_off) = sample_with(None, seed);
+        let (ep_cold, state_cold) = sample_with(Some(&cache), seed);
+        let (ep_warm, state_warm) = sample_with(Some(&cache), seed);
+        assert_eq!(state_off, state_cold);
+        assert_eq!(state_off, state_warm);
+        for (a, b) in ep_off.support.iter().zip(&ep_cold.support) {
+            assert_eq!(&a.image[..], &b.image[..]);
+        }
+        for (a, b) in ep_off.query.iter().zip(&ep_warm.query) {
+            assert_eq!(&a.image[..], &b.image[..]);
+            assert_eq!(a.label, b.label);
+        }
+    }
+    let stats = cache.stats();
+    assert!(stats.hits > 0, "warm replay must hit: {stats:?}");
 }
 
 // ---------------------------------------------------------------------------
