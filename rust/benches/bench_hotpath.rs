@@ -13,7 +13,11 @@
 //!    arms re-implement the seed's full-recompute/dense logic verbatim,
 //!    and each pair is asserted equivalent (bit-identical where the op
 //!    is order-preserving, tight numeric tolerance for the delta-summed
-//!    embeddings) before being timed. Numbers land in
+//!    embeddings) before being timed. The `serve` section replays a
+//!    multi-tenant (tenants × domains × episodes) trace through the
+//!    adaptation service against its sequential-per-tenant reference
+//!    arm — asserted bit-identical (episode results *and* final tenant
+//!    deltas) before the arms are timed. Numbers land in
 //!    `BENCH_hotpath.json` at the repo root (the perf trajectory
 //!    artefact cited by README/ROADMAP).
 //!
@@ -23,6 +27,7 @@
 //! `-- smoke` shrinks the timing budgets for CI.
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 use tinytrain::accounting::{backward_macs, backward_memory, CostLedger, Optimizer, UpdatePlan};
@@ -37,6 +42,7 @@ use tinytrain::data::{
 use tinytrain::harness::parallel::{accuracy_grid, cell_seed, episode_streams, GridConfig};
 use tinytrain::model::{EpisodeShapes, ModelMeta, ParamStore};
 use tinytrain::runtime::{ArtifactStore, Runtime};
+use tinytrain::serve::{self, LoopMode, ServeConfig, TenantStore, TraceConfig};
 use tinytrain::util::bench::bench;
 use tinytrain::util::jsonio::{num, obj, s, Json};
 use tinytrain::util::pool::default_workers;
@@ -478,6 +484,74 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
             ("workers", num(workers as f64)),
             ("parallel_s", num(parallel_s)),
             ("speedup", num(serial_s / parallel_s.max(1e-12))),
+        ]),
+    ));
+
+    // --- multi-tenant serve: worker pool vs sequential reference --------
+    // Same trace through both arms; the reference arm replays it in
+    // strict order on one thread. An untimed pass first asserts the two
+    // bit-identical (results *and* final per-tenant deltas) and warms
+    // the shared render cache, so the timed arms see equal steady state.
+    let trace_cfg = TraceConfig {
+        tenants: 8,
+        domains: ["traffic", "cub"].iter().map(|d| d.to_string()).collect(),
+        episodes: if smoke { 2 } else { 4 },
+        seed: 7,
+        // Loose budgets so dynamic selection does real work on the
+        // synthetic arch (AUTO targets mcunet-class layer tables).
+        method: Method::TinyTrain {
+            criterion: tinytrain::coordinator::Criterion::MultiObjective,
+            scheme: tinytrain::coordinator::ChannelScheme::Fisher,
+            budgets: Budgets { mem_bytes: 1e7, compute_frac: 1.0 },
+            ratio: 0.5,
+        },
+        steps: 6,
+        lr: 6e-3,
+    };
+    let trace = serve::synthetic_trace(&trace_cfg);
+    let base = Arc::new(params.clone());
+    let scfg =
+        ServeConfig { workers: default_workers(), queue_capacity: 64, render_cache: true };
+    let check_seq = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let check_ref = serve::sequential_replay(&meta, &check_seq, &trace, true);
+    let check_par_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let check_par = serve::replay(&meta, &check_par_store, &scfg, &trace, LoopMode::Open)
+        .expect("serve replay");
+    serve::check_equivalent(&check_ref.completions, &check_par.completions)
+        .expect("serve arm diverged from the sequential reference");
+    for t in 0..trace_cfg.tenants {
+        let name = serve::tenant_name(t);
+        assert_eq!(
+            check_seq.delta(&name),
+            check_par_store.delta(&name),
+            "tenant {name}: final delta diverged from the reference arm"
+        );
+    }
+    let seq_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let seq = serve::sequential_replay(&meta, &seq_store, &trace, true);
+    let par_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let par = serve::replay(&meta, &par_store, &scfg, &trace, LoopMode::Open)
+        .expect("serve replay");
+    println!(
+        "serve: {} requests ({} tenants) sequential {:.3}s | {} workers {:.3}s p95={:.0}us",
+        trace.len(),
+        trace_cfg.tenants,
+        seq.wall_s,
+        par.workers,
+        par.wall_s,
+        par.total.p95_us
+    );
+    sections.push((
+        "serve".into(),
+        obj(vec![
+            ("requests", num(trace.len() as f64)),
+            ("tenants", num(trace_cfg.tenants as f64)),
+            ("workers", num(par.workers as f64)),
+            ("before_us", num(seq.wall_s * 1e6)),
+            ("after_us", num(par.wall_s * 1e6)),
+            ("speedup", num(seq.wall_s / par.wall_s.max(1e-12))),
+            ("throughput_rps", num(par.throughput_rps)),
+            ("p95_us", num(par.total.p95_us)),
         ]),
     ));
     sections

@@ -1,0 +1,70 @@
+#!/usr/bin/env bash
+# CI bench-regression guard (non-required job; see .github/workflows/ci.yml).
+#
+# Compares the freshly written BENCH_hotpath.json (produced by the
+# bench_hotpath smoke tier — run `rust/ci.sh` or
+# `cargo bench --bench bench_hotpath -- smoke` first) against the copy
+# committed at HEAD, and fails when any section's `speedup` regressed by
+# more than 25%. Sections present in only one of the two files are
+# reported but never fail the check (new benches land before their
+# baseline is committed). Timing noise is why this job is advisory:
+# shared CI runners jitter far more than a laptop, so the guard flags
+# rather than blocks.
+#
+# Usage: ci_bench_check.sh [threshold]   (default 0.25)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+THRESHOLD="${1:-0.25}"
+FRESH="BENCH_hotpath.json"
+
+if [ ! -f "$FRESH" ]; then
+    echo "ci_bench_check: $FRESH not found — run rust/ci.sh (or the bench smoke tier) first" >&2
+    exit 1
+fi
+
+if ! BASELINE_JSON=$(git show "HEAD:BENCH_hotpath.json" 2>/dev/null); then
+    echo "ci_bench_check: no committed BENCH_hotpath.json at HEAD — nothing to compare, skipping"
+    exit 0
+fi
+
+BASELINE_JSON="$BASELINE_JSON" FRESH_PATH="$FRESH" THRESHOLD="$THRESHOLD" python3 - <<'EOF'
+import json
+import os
+import sys
+
+threshold = float(os.environ["THRESHOLD"])
+baseline = json.loads(os.environ["BASELINE_JSON"])
+with open(os.environ["FRESH_PATH"]) as f:
+    fresh = json.load(f)
+
+def speedups(report):
+    out = {}
+    for name, section in report.get("sections", {}).items():
+        if isinstance(section, dict) and "speedup" in section:
+            out[name] = float(section["speedup"])
+    return out
+
+base, new = speedups(baseline), speedups(fresh)
+failures = []
+for name in sorted(base.keys() | new.keys()):
+    if name not in base:
+        print(f"  {name:<20} new section (no baseline) — fresh speedup {new[name]:.2f}x")
+        continue
+    if name not in new:
+        print(f"  {name:<20} missing from fresh report (baseline {base[name]:.2f}x)")
+        continue
+    ratio = new[name] / base[name] if base[name] > 0 else 1.0
+    mark = "OK "
+    if ratio < 1.0 - threshold:
+        mark = "REG"
+        failures.append(name)
+    print(f"  {name:<20} {mark} baseline {base[name]:8.2f}x -> fresh {new[name]:8.2f}x "
+          f"({(ratio - 1.0) * 100:+.1f}%)")
+
+if failures:
+    print(f"ci_bench_check: speedup regressed >{threshold:.0%} in: {', '.join(failures)}",
+          file=sys.stderr)
+    sys.exit(1)
+print(f"ci_bench_check: no section regressed >{threshold:.0%}")
+EOF

@@ -46,7 +46,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use super::backend::{
-    AdaptationBackend, AnalyticBackend, Backend, DeviceBackend, HostBackend,
+    AdaptationBackend, AnalyticBackend, Backend, DeviceBackend, HostBackend, SyncedParams,
 };
 use super::engine::ModelEngine;
 use super::evaluator::episode_accuracy;
@@ -233,6 +233,36 @@ impl<'e> AdaptationSession<'e> {
         episode: &Episode,
         seed: u64,
     ) -> Result<EpisodeResult> {
+        Ok(self.run_episode(base, episode, seed, false)?.0)
+    }
+
+    /// Like [`adapt_with_seed`](Self::adapt_with_seed), but additionally
+    /// flushes the backend's adapted weights as a [`SyncedParams`]
+    /// (masked-delta on the analytic backend). This is the serving-tier
+    /// entry point: `serve::TenantStore` absorbs the returned delta as
+    /// the tenant's overlay over the shared base, so personalisation
+    /// costs `O(mask nnz)` per tenant, never a full parameter copy.
+    pub fn adapt_and_sync(
+        &self,
+        base: &ParamStore,
+        episode: &Episode,
+        seed: u64,
+    ) -> Result<(EpisodeResult, SyncedParams)> {
+        let (result, synced) = self.run_episode(base, episode, seed, true)?;
+        Ok((result, synced.expect("run_episode(sync=true) returns a sync")))
+    }
+
+    /// The full Algorithm-1 episode; `sync` additionally flushes the
+    /// backend's adapted weights (skipped otherwise — a host/device
+    /// sync downloads the full store, which plain evaluation never
+    /// needs).
+    fn run_episode(
+        &self,
+        base: &ParamStore,
+        episode: &Episode,
+        seed: u64,
+        sync: bool,
+    ) -> Result<(EpisodeResult, Option<SyncedParams>)> {
         let meta = self.source.meta();
         let s = &meta.shapes;
         let cfg = self.config;
@@ -281,19 +311,23 @@ impl<'e> AdaptationSession<'e> {
 
         let emb = backend.embed()?;
         let acc_after = episode_accuracy(&emb, backend.padded(), s);
+        let synced = if sync { Some(backend.sync()?) } else { None };
 
-        Ok(EpisodeResult {
-            method: self.method.label(),
-            domain: episode.domain.clone(),
-            backend: backend.name(),
-            acc_before,
-            acc_after: if matches!(self.method, Method::None) { acc_before } else { acc_after },
-            losses,
-            selection_s,
-            train_s,
-            plan,
-            selected_layers,
-        })
+        Ok((
+            EpisodeResult {
+                method: self.method.label(),
+                domain: episode.domain.clone(),
+                backend: backend.name(),
+                acc_before,
+                acc_after: if matches!(self.method, Method::None) { acc_before } else { acc_after },
+                losses,
+                selection_s,
+                train_s,
+                plan,
+                selected_layers,
+            },
+            synced,
+        ))
     }
 }
 
@@ -487,6 +521,39 @@ mod tests {
         let res2 = session.adapt(&params, &episode).unwrap();
         assert_eq!(res.losses, res2.losses);
         assert_eq!(res.selected_layers, res2.selected_layers);
+    }
+
+    #[test]
+    fn adapt_and_sync_returns_the_masked_delta() {
+        let meta = tiny_meta();
+        let params = ParamStore::init(&meta, 1);
+        let episode = tiny_episode();
+        let session = AdaptationSession::analytic(&meta)
+            .method(tinytrain_loose())
+            .config(TrainConfig { steps: 4, lr: 0.01, seed: 3 })
+            .build()
+            .unwrap();
+        let (res, synced) = session.adapt_and_sync(&params, &episode, 3).unwrap();
+        // the sync carries only what the mask touched...
+        assert!(res.plan.any_update());
+        let nnz = synced.updated_floats();
+        assert!(nnz > 0 && nnz < meta.total_theta, "sync must be sparse, got {nnz}");
+        // ...and matches what a plain adapt computed
+        let res2 = session.adapt(&params, &episode).unwrap();
+        assert_eq!(res.losses, res2.losses);
+        assert_eq!(res.acc_after, res2.acc_after);
+        // materialising equals base outside the delta
+        let after = synced.materialize(&params);
+        assert_ne!(after.theta, params.theta);
+        // no-update methods sync an empty delta
+        let (_, synced) = AdaptationSession::analytic(&meta)
+            .method(Method::None)
+            .config(TrainConfig { steps: 4, lr: 0.01, seed: 1 })
+            .build()
+            .unwrap()
+            .adapt_and_sync(&params, &episode, 1)
+            .unwrap();
+        assert_eq!(synced.updated_floats(), 0);
     }
 
     #[test]

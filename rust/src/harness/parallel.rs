@@ -70,16 +70,29 @@ pub(crate) fn fxhash(s: &str) -> u64 {
     s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
 }
 
-/// The RNG seed of one (run seed, domain) cell — shared by the serial
-/// engine-backed harness and the parallel analytic grid so their
-/// episode streams coincide.
+/// Fold a label into a run seed: the cell seed of `(seed, label)` is
+/// `seed ^ fxhash(label)`. This is the repo's *one* seed-derivation
+/// rule — a pure function of its inputs, so any consumer that agrees on
+/// the labels agrees on the streams. Consumers today: the serial
+/// engine-backed harness and the parallel analytic grid (label =
+/// domain name, so their episode streams coincide), and the serving
+/// tier's trace generator (re-exported as `serve::replay::cell_seed`;
+/// label = tenant name, then domain name — nested application, not a
+/// copy-pasted variant). The label is hashed (FNV-1a), not truncated:
+/// any distinct label yields an independent cell.
 pub fn cell_seed(seed: u64, domain: &str) -> u64 {
     seed ^ fxhash(domain)
 }
 
-/// One independent RNG stream per episode, forked serially from the cell
-/// seed. Fork order is fixed up front, which is what makes the fan-out
-/// worker-count-invariant.
+/// One independent RNG stream per episode, forked *serially* from the
+/// cell seed before any fan-out. Fork order is fixed up front, which is
+/// what makes every consumer worker-count-invariant: a worker owns a
+/// pre-forked stream, never a position in some shared stream. The
+/// prefix is stable — `episode_streams(cell, n)` is a prefix of
+/// `episode_streams(cell, m)` for `n <= m`, so growing a run extends
+/// rather than reshuffles it (tested below). Shared by the grid
+/// harness and, re-exported as `serve::replay::episode_streams`, by
+/// serving-trace generation.
 pub fn episode_streams(cell: u64, episodes: usize) -> Vec<Rng> {
     let mut rng = Rng::new(cell);
     (0..episodes).map(|e| rng.fork(e as u64)).collect()

@@ -14,8 +14,10 @@
 //!   without PJRT). Around it: episodic data ([`data`]), Fisher
 //!   aggregation + the multi-objective criterion + budgeted selection
 //!   ([`coordinator`]), analytic memory/compute accounting
-//!   ([`accounting`]), device latency simulation ([`devices`]) and the
-//!   experiment harness ([`harness`]).
+//!   ([`accounting`]), device latency simulation ([`devices`]), the
+//!   experiment harness ([`harness`]) and the multi-tenant serving tier
+//!   ([`serve`]: shared-base + per-tenant masked-delta overlays behind
+//!   a fair bounded work queue — `tinytrain serve`).
 //! - L2/L1 (python/compile, build-time only): JAX backbones + Pallas
 //!   kernels, AOT-lowered to the HLO artifacts [`runtime`] executes.
 //!
@@ -31,4 +33,5 @@ pub mod harness;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod util;

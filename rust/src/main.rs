@@ -5,10 +5,13 @@
 //!   search    --arch <a> [--population N] [--generations N]    SparseUpdate ES (offline)
 //!   adapt     --arch <a> --domain <d> [--method M] [--steps N] one on-device adaptation
 //!   grid      [--arch a] [--episodes N] [--workers K]          parallel analytic grid
+//!   serve     [--tenants N] [--workers K] [--mode open|closed] multi-tenant service replay
 //!   exp       <table1|table2|...|fig6b|all|all-analytic> [...] regenerate paper artefacts
 //!   info      [--arch a,b,c]                                   artifact + arch summary
 //!
 //! Run with no args for this help. See DESIGN.md for the experiment index.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -18,9 +21,10 @@ use tinytrain::coordinator::{
 };
 use tinytrain::data::{domain_by_name, Episode, Sampler};
 use tinytrain::harness::{self, parallel};
-use tinytrain::metrics::{fmt_pct, Table};
+use tinytrain::metrics::{fmt_kb, fmt_pct, fmt_us, Table};
 use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::runtime::{ArtifactStore, Runtime};
+use tinytrain::serve;
 use tinytrain::util::cli::Args;
 use tinytrain::util::pool::default_workers;
 use tinytrain::util::rng::Rng;
@@ -39,6 +43,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("search") => run_search(args),
         Some("adapt") => adapt(args),
         Some("grid") => grid(args),
+        Some("serve") => serve(args),
         Some("exp") => {
             let id = args
                 .positional
@@ -65,6 +70,12 @@ USAGE:
   tinytrain grid     [--arch mcunet] [--episodes 4] [--steps 8] [--workers N]
                      [--domains a,b] [--seed S] [--no-render-cache]
                      (analytic backend, no PJRT needed)
+  tinytrain serve    [--arch mcunet] [--tenants 8] [--domains a,b] [--episodes 4]
+                     [--workers N] [--queue-cap 64] [--mode open|closed]
+                     [--method M] [--steps 6] [--delta-budget-kb KB] [--seed S]
+                     (multi-tenant adaptation service: replays a synthetic
+                      trace, reports throughput + latency percentiles, asserts
+                      bit-identity against the sequential reference arm)
   tinytrain exp      <table1|table2|table3|table4|table5|table7|table8|table9|table10|
                       table11|fig1|fig3|fig4|fig5|fig6a|fig6b|all|all-analytic>
                      [--tier smoke|full|paper] [--arch a,b] [--episodes N] [--steps N]
@@ -160,7 +171,7 @@ fn adapt(args: &Args) -> Result<()> {
         let arts = store.model(&arch);
         let meta = ModelMeta::load(&arts.meta)?;
         let params = ParamStore::load_or_init(&meta, &arts.weights, 42);
-        let method = parse_method(&args.str("method", "tinytrain"), &store, &meta)?;
+        let method = parse_method(&args.str("method", "tinytrain"), Some(&store), &meta)?;
         let ep = Sampler::new(domain.as_ref(), &meta.shapes).sample(&mut rng);
         announce_episode(&meta.arch, &domain_name, &ep);
         let session = AdaptationSession::analytic(&meta).method(method).config(tc).build()?;
@@ -170,7 +181,7 @@ fn adapt(args: &Args) -> Result<()> {
     let rt = Runtime::cpu()?;
     let engine = ModelEngine::load(&rt, &store, &arch)?;
     let params = ParamStore::load_or_init(&engine.meta, &engine.weights_path, 42);
-    let method = parse_method(&args.str("method", "tinytrain"), &store, &engine.meta)?;
+    let method = parse_method(&args.str("method", "tinytrain"), Some(&store), &engine.meta)?;
     let ep = Sampler::new(domain.as_ref(), &engine.meta.shapes).sample(&mut rng);
     announce_episode(&engine.meta.arch, &domain_name, &ep);
     let session = AdaptationSession::builder(&engine)
@@ -187,21 +198,7 @@ fn adapt(args: &Args) -> Result<()> {
 /// the synthetic architecture when no artifacts are deployed, so the
 /// command works in any checkout.
 fn grid(args: &Args) -> Result<()> {
-    let arch = args.str("arch", "mcunet");
-    let (meta, params) = match ArtifactStore::discover(args.opt("artifacts")) {
-        Ok(store) => {
-            let arts = store.model(&arch);
-            let meta = ModelMeta::load(&arts.meta)?;
-            let params = ParamStore::load_or_init(&meta, &arts.weights, 42);
-            (meta, params)
-        }
-        Err(_) => {
-            eprintln!("[grid] no artifacts found — using the synthetic 8-block arch");
-            let meta = ModelMeta::synthetic(8);
-            let params = ParamStore::init(&meta, 42);
-            (meta, params)
-        }
-    };
+    let (meta, params) = analytic_model(args, "grid")?;
     let cfg = parallel::GridConfig {
         episodes: args.usize("episodes", 4),
         steps: args.usize("steps", 8),
@@ -256,6 +253,134 @@ fn grid(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Metadata + weights for the artifact-light analytic commands:
+/// deployed artifacts when present, the synthetic 8-block arch
+/// otherwise — so `grid` and `serve` run in any checkout.
+fn analytic_model(args: &Args, tag: &str) -> Result<(ModelMeta, ParamStore)> {
+    let arch = args.str("arch", "mcunet");
+    match ArtifactStore::discover(args.opt("artifacts")) {
+        Ok(store) => {
+            let arts = store.model(&arch);
+            let meta = ModelMeta::load(&arts.meta)?;
+            let params = ParamStore::load_or_init(&meta, &arts.weights, 42);
+            Ok((meta, params))
+        }
+        Err(_) => {
+            eprintln!("[{tag}] no artifacts found — using the synthetic 8-block arch");
+            let meta = ModelMeta::synthetic(8);
+            let params = ParamStore::init(&meta, 42);
+            Ok((meta, params))
+        }
+    }
+}
+
+/// Multi-tenant adaptation service replay: fan a synthetic
+/// (tenants × domains × episodes) trace over the worker pool, report
+/// throughput and latency percentiles, and check the results
+/// bit-identical against the sequential-per-tenant reference arm.
+fn serve(args: &Args) -> Result<()> {
+    let (meta, params) = analytic_model(args, "serve")?;
+    let trace_cfg = serve::TraceConfig {
+        tenants: args.usize("tenants", 8),
+        domains: args.list("domains", &["traffic", "cub"]),
+        episodes: args.usize("episodes", 4),
+        seed: args.u64("seed", 7),
+        method: parse_method(&args.str("method", "tinytrain"), None, &meta)?,
+        steps: args.usize("steps", 6),
+        lr: args.f64("lr", 6e-3) as f32,
+    };
+    let cfg = serve::ServeConfig {
+        workers: args.usize("workers", default_workers()),
+        queue_capacity: args.usize("queue-cap", 64),
+        render_cache: !args.bool("no-render-cache"),
+    };
+    let mode = serve::LoopMode::parse(&args.str("mode", "open"))?;
+    // Bit-identical replay needs eviction-free stores; a finite budget
+    // is for capacity experiments, where the check is skipped.
+    let budget = match args.opt("delta-budget-kb") {
+        Some(_) => args.f64("delta-budget-kb", f64::INFINITY) * 1e3,
+        None => f64::INFINITY,
+    };
+    let trace = serve::synthetic_trace(&trace_cfg);
+    eprintln!(
+        "[serve] {}: {} tenants x {} domains x {} episodes = {} requests, {} workers, {} loop",
+        meta.arch,
+        trace_cfg.tenants,
+        trace_cfg.domains.len(),
+        trace_cfg.episodes,
+        trace.len(),
+        cfg.workers,
+        args.str("mode", "open"),
+    );
+    let base = Arc::new(params);
+
+    // Untimed warm pass first: whichever timed arm ran first would
+    // otherwise pay the shared render cache's cold misses for both,
+    // biasing the reported scaling (the bench de-biases the same way).
+    if cfg.render_cache {
+        let warm = serve::TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        serve::sequential_replay(&meta, &warm, &trace, true);
+    }
+
+    let seq_store = serve::TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let seq = serve::sequential_replay(&meta, &seq_store, &trace, cfg.render_cache);
+    let store = serve::TenantStore::new(Arc::clone(&base), budget);
+    let par = serve::replay(&meta, &store, &cfg, &trace, mode)?;
+
+    if budget.is_infinite() {
+        serve::check_equivalent(&seq.completions, &par.completions)?;
+        for t in 0..trace_cfg.tenants {
+            let name = serve::tenant_name(t);
+            if seq_store.delta(&name) != store.delta(&name) {
+                return Err(anyhow!("tenant {name}: final delta diverged from reference"));
+            }
+        }
+        eprintln!("[serve] reference check: bit-identical to the sequential arm");
+    } else {
+        eprintln!(
+            "[serve] finite delta budget ({}): skipping the bit-identity check \
+             (LRU eviction timing depends on cross-tenant interleaving)",
+            fmt_kb(budget)
+        );
+    }
+
+    let mut table = Table::new(
+        &format!(
+            "Adaptation service — {} ({} requests, {} loop)",
+            meta.arch,
+            trace.len(),
+            args.str("mode", "open")
+        ),
+        &["wall s", "req/s", "p50", "p95", "p99", "errors"],
+    );
+    let arms = [("sequential x1".to_string(), &seq), (format!("service x{}", par.workers), &par)];
+    for (label, r) in &arms {
+        table.row(
+            label,
+            vec![
+                format!("{:.3}", r.wall_s),
+                format!("{:.1}", r.throughput_rps),
+                fmt_us(r.total.p50_us),
+                fmt_us(r.total.p95_us),
+                fmt_us(r.total.p99_us),
+                format!("{}", r.errors),
+            ],
+        );
+    }
+    println!("{}", table.to_markdown());
+    let stats = store.stats();
+    eprintln!(
+        "[serve] throughput {:.2}x over sequential | store: {} tenants, {} in deltas, \
+         {} absorbs, {} evictions",
+        par.throughput_rps / seq.throughput_rps.max(1e-12),
+        stats.tenants,
+        fmt_kb(stats.delta_bytes),
+        stats.absorbs,
+        stats.evictions
+    );
+    Ok(())
+}
+
 fn announce_episode(arch: &str, domain_name: &str, ep: &Episode) {
     eprintln!(
         "adapting {} to {}: {} ways, {} support, {} query",
@@ -291,16 +416,21 @@ fn parse_backend(name: &str) -> Result<Backend> {
     })
 }
 
-fn parse_method(name: &str, store: &ArtifactStore, meta: &ModelMeta) -> Result<Method> {
+/// `store` feeds the SparseUpdate policy lookup; without one (the
+/// artifact-free `serve` path) the derived default policy is used.
+fn parse_method(name: &str, store: Option<&ArtifactStore>, meta: &ModelMeta) -> Result<Method> {
     Ok(match name {
         "none" => Method::None,
         "fulltrain" => Method::FullTrain,
         "lastlayer" => Method::LastLayer,
         "tinytl" => Method::TinyTl,
         "sparseupdate" => {
-            let path = store.dir.join(format!("sparse_policy_{}.json", meta.arch));
-            let policy = search::load_policy(&path)
-                .unwrap_or_else(|_| search::default_policy(meta, 0.0));
+            let policy = store
+                .and_then(|s| {
+                    let path = s.dir.join(format!("sparse_policy_{}.json", meta.arch));
+                    search::load_policy(&path).ok()
+                })
+                .unwrap_or_else(|| search::default_policy(meta, 0.0));
             Method::SparseUpdate(policy)
         }
         "tinytrain" => Method::tinytrain_default(),

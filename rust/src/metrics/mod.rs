@@ -1,5 +1,6 @@
 //! Experiment metrics: episode-result aggregation, confidence intervals,
-//! and table renderers (markdown + TSV) for the experiment harness.
+//! latency percentiles for the serving tier, and table renderers
+//! (markdown + TSV) for the experiment harness.
 
 use crate::coordinator::EpisodeResult;
 use crate::data::mean_sd;
@@ -24,6 +25,61 @@ pub fn aggregate(results: &[EpisodeResult]) -> CellStats {
         ci95: 1.96 * sd / (n as f64).sqrt(),
         mean_selection_s: results.iter().map(|r| r.selection_s).sum::<f64>() / n as f64,
         mean_train_s: results.iter().map(|r| r.train_s).sum::<f64>() / n as f64,
+    }
+}
+
+/// Latency distribution of one serving arm, in microseconds. Built by
+/// [`LatencyStats::from_us`]; consumed by `tinytrain serve`'s report and
+/// the `serve` section of `BENCH_hotpath.json`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl LatencyStats {
+    /// Summarise raw microsecond samples (order irrelevant; empty input
+    /// yields the zero stats).
+    pub fn from_us(mut samples: Vec<f64>) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("latency samples must not be NaN"));
+        let n = samples.len();
+        LatencyStats {
+            n,
+            mean_us: samples.iter().sum::<f64>() / n as f64,
+            p50_us: percentile(&samples, 0.50),
+            p95_us: percentile(&samples, 0.95),
+            p99_us: percentile(&samples, 0.99),
+            max_us: samples[n - 1],
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice; `q` in
+/// [0, 1]. Empty input yields 0.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Human-readable duration from microseconds (`870 us`, `12.4 ms`,
+/// `1.25 s`).
+pub fn fmt_us(us: f64) -> String {
+    if us >= 1e6 {
+        format!("{:.2} s", us / 1e6)
+    } else if us >= 1e3 {
+        format!("{:.1} ms", us / 1e3)
+    } else {
+        format!("{us:.0} us")
     }
 }
 
@@ -167,5 +223,31 @@ mod tests {
         assert_eq!(fmt_m(6_510_000.0), "6.51M");
         assert_eq!(fmt_pct(0.693), "69.3");
         assert_eq!(fmt_ratio(1013.0), "1013x");
+        assert_eq!(fmt_us(870.0), "870 us");
+        assert_eq!(fmt_us(12_400.0), "12.4 ms");
+        assert_eq!(fmt_us(1_250_000.0), "1.25 s");
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        // small samples: p99 of 4 samples is the max
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.99), 4.0);
+    }
+
+    #[test]
+    fn latency_stats_from_unsorted_samples() {
+        let s = LatencyStats::from_us(vec![30.0, 10.0, 20.0, 40.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean_us, 25.0);
+        assert_eq!(s.p50_us, 20.0);
+        assert_eq!(s.max_us, 40.0);
+        assert_eq!(LatencyStats::from_us(vec![]), LatencyStats::default());
     }
 }

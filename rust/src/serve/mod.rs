@@ -1,0 +1,62 @@
+//! Multi-tenant adaptation serving tier (`tinytrain serve`).
+//!
+//! TinyTrain's deployment premise is many independent users adapting
+//! one shared backbone with tiny per-user sparse deltas. This module is
+//! the serving side of that premise, layered on the same
+//! session/backend seam as everything else:
+//!
+//! ```text
+//!            submit/try_submit            pop (round-robin, ≤1
+//!   clients ───────────────────┐          in flight per tenant)
+//!                              v               │
+//!                      ┌──────────────┐        v
+//!                      │ TenantQueue  │   ┌─────────┐ per-request
+//!                      │ bounded MPMC │──>│ worker 0 │ AdaptationSession
+//!                      │ per-tenant   │──>│ worker 1 │ (analytic; PJRT
+//!                      │ FIFO lanes   │──>│   ...    │ when Send)
+//!                      └──────────────┘   └────┬────┘
+//!                                              │ adapt_and_sync
+//!                              ┌───────────────┘   = masked delta
+//!                              v
+//!                      ┌──────────────────────────────┐
+//!                      │ TenantStore                  │
+//!                      │ Arc<ParamStore> shared base  │
+//!                      │ + per-tenant delta overlays  │
+//!                      │   (LRU byte budget)          │
+//!                      └──────────────────────────────┘
+//! ```
+//!
+//! - [`queue`]: the bounded MPMC [`TenantQueue`] — backpressure,
+//!   round-robin fairness across tenants, at-most-one-in-flight per
+//!   tenant (which is also what makes replays order-deterministic).
+//! - [`tenant`]: the [`TenantStore`] — one shared base `ParamStore`,
+//!   per-tenant composed masked-delta overlays, LRU byte budget.
+//! - [`service`]: the [`AdaptationService`] — scoped worker pool,
+//!   `submit -> Ticket`, `poll`/`join`/`join_all`.
+//! - [`replay`]: synthetic (tenants × domains × episodes) traces,
+//!   open/closed-loop replay with throughput + latency percentiles, the
+//!   sequential reference arm and the bit-identity checker.
+//!
+//! Determinism: every request stream is forked before the fan-out (the
+//! `harness::parallel` pattern, shared via [`replay::cell_seed`] /
+//! [`replay::episode_streams`]), so a trace replayed at 1 or N workers
+//! produces bit-identical episode results and tenant deltas —
+//! `rust/tests/serve.rs` and the `serve` section of `bench_hotpath`
+//! assert it.
+//!
+//! [`TenantQueue`]: queue::TenantQueue
+//! [`TenantStore`]: tenant::TenantStore
+//! [`AdaptationService`]: service::AdaptationService
+
+pub mod queue;
+pub mod replay;
+pub mod service;
+pub mod tenant;
+
+pub use queue::{Lease, TenantQueue, TryPushError};
+pub use replay::{
+    check_equivalent, replay, sequential_replay, synthetic_trace, tenant_name, LoopMode,
+    ReplayReport, TraceConfig,
+};
+pub use service::{AdaptRequest, AdaptationService, Completion, ServeConfig, Ticket};
+pub use tenant::{TenantStore, TenantStoreStats};

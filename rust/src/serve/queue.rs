@@ -1,0 +1,322 @@
+//! Bounded MPMC work queue with per-tenant lanes.
+//!
+//! The serving tier's scheduling problem is not plain FIFO: requests
+//! from many tenants share one worker pool, and two properties must
+//! hold at any worker count —
+//!
+//! - **fairness**: a tenant that floods the queue must not starve the
+//!   others, so `pop` round-robins across tenant lanes rather than
+//!   draining arrival order;
+//! - **per-tenant order**: a tenant's episodes compose (each adapts the
+//!   delta the previous one left in the [`TenantStore`]), so at most one
+//!   request per tenant may be in flight. `pop` hands out a [`Lease`]
+//!   that marks the lane busy; the worker calls [`Lease::complete`]
+//!   *after* committing the tenant's delta, which is what makes replays
+//!   bit-identical regardless of how many workers race over the queue —
+//!   cross-tenant interleaving varies, per-tenant history never does.
+//!
+//! Capacity is bounded: `push` blocks when the queue is full
+//! (backpressure for closed-loop callers), `try_push` returns the item
+//! back (load shedding for open-loop callers). Everything is
+//! `Mutex`+`Condvar` — the offline vendor set has no crossbeam, and the
+//! protected state is a few `VecDeque`s, far from contention-bound.
+//!
+//! [`TenantStore`]: super::tenant::TenantStore
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a non-blocking [`TenantQueue::try_push`] bounced; the item is
+/// handed back so the caller can retry, reroute, or drop it knowingly.
+#[derive(Debug)]
+pub enum TryPushError<T> {
+    /// The queue is at capacity (backpressure).
+    Full(T),
+    /// The queue was closed; no further work is accepted.
+    Closed(T),
+}
+
+struct Lane<T> {
+    tenant: String,
+    items: VecDeque<T>,
+    /// A popped-but-not-completed request exists for this tenant.
+    busy: bool,
+}
+
+struct Inner<T> {
+    /// Lanes in first-seen tenant order (the round-robin universe).
+    lanes: Vec<Lane<T>>,
+    /// Total queued items across all lanes.
+    len: usize,
+    /// Next lane the round-robin scan starts from.
+    cursor: usize,
+    closed: bool,
+}
+
+impl<T> Inner<T> {
+    fn lane_index(&mut self, tenant: &str) -> usize {
+        match self.lanes.iter().position(|l| l.tenant == tenant) {
+            Some(i) => i,
+            None => {
+                self.lanes.push(Lane {
+                    tenant: tenant.to_string(),
+                    items: VecDeque::new(),
+                    busy: false,
+                });
+                self.lanes.len() - 1
+            }
+        }
+    }
+
+    /// Pick the next poppable lane: round-robin from `cursor`, skipping
+    /// empty lanes and lanes with a request in flight.
+    fn pick(&mut self) -> Option<usize> {
+        let n = self.lanes.len();
+        for k in 0..n {
+            let i = (self.cursor + k) % n;
+            if !self.lanes[i].busy && !self.lanes[i].items.is_empty() {
+                self.cursor = (i + 1) % n;
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+/// Bounded multi-producer multi-consumer queue with per-tenant FIFO
+/// lanes, round-robin fairness and at-most-one-in-flight per tenant.
+/// See the module docs for the scheduling contract.
+pub struct TenantQueue<T> {
+    inner: Mutex<Inner<T>>,
+    /// Signalled when an item arrives, a lane frees up, or the queue
+    /// closes (poppers wait here).
+    not_empty: Condvar,
+    /// Signalled when an item leaves the queue (pushers wait here).
+    not_full: Condvar,
+    capacity: usize,
+}
+
+/// Receipt for a popped item: the lane stays busy (no other worker can
+/// pop the same tenant) until [`Lease::complete`] — or drop, so a
+/// panicking worker cannot wedge its tenant's lane forever.
+pub struct Lease<'q, T> {
+    queue: &'q TenantQueue<T>,
+    lane: usize,
+    completed: bool,
+}
+
+impl<T> Lease<'_, T> {
+    /// Tenant this lease serializes.
+    pub fn tenant(&self) -> String {
+        self.queue.inner.lock().unwrap().lanes[self.lane].tenant.clone()
+    }
+
+    /// Release the tenant's lane. Call only after the request's effects
+    /// (the tenant-store delta) are committed — the next request for
+    /// this tenant becomes poppable the moment this returns.
+    pub fn complete(mut self) {
+        self.release();
+    }
+
+    fn release(&mut self) {
+        if !self.completed {
+            self.completed = true;
+            let mut g = self.queue.inner.lock().unwrap();
+            g.lanes[self.lane].busy = false;
+            drop(g);
+            self.queue.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Lease<'_, T> {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+impl<T> TenantQueue<T> {
+    /// An open queue holding at most `capacity` items (min 1).
+    pub fn new(capacity: usize) -> TenantQueue<T> {
+        TenantQueue {
+            inner: Mutex::new(Inner {
+                lanes: Vec::new(),
+                len: 0,
+                cursor: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items currently queued (not counting leased-out ones).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue for `tenant`, blocking while the queue is full. Returns
+    /// the item back if the queue is (or gets) closed while waiting.
+    pub fn push(&self, tenant: &str, item: T) -> Result<(), TryPushError<T>> {
+        let g = self.inner.lock().unwrap();
+        let mut g = self
+            .not_full
+            .wait_while(g, |i| i.len >= self.capacity && !i.closed)
+            .unwrap();
+        if g.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        let lane = g.lane_index(tenant);
+        g.lanes[lane].items.push_back(item);
+        g.len += 1;
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking enqueue: `Err(Full)` at capacity, `Err(Closed)`
+    /// after [`close`](Self::close); the item rides back in the error.
+    pub fn try_push(&self, tenant: &str, item: T) -> Result<(), TryPushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        if g.len >= self.capacity {
+            return Err(TryPushError::Full(item));
+        }
+        let lane = g.lane_index(tenant);
+        g.lanes[lane].items.push_back(item);
+        g.len += 1;
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue the next item under the fairness rules, blocking until
+    /// one is available. `None` once the queue is closed *and* drained
+    /// (a closed queue still serves out its backlog).
+    pub fn pop(&self) -> Option<(Lease<'_, T>, T)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(lane) = g.pick() {
+                let item = g.lanes[lane].items.pop_front().expect("picked lane is non-empty");
+                g.lanes[lane].busy = true;
+                g.len -= 1;
+                drop(g);
+                self.not_full.notify_one();
+                return Some((Lease { queue: self, lane, completed: false }, item));
+            }
+            if g.closed && g.len == 0 {
+                return None;
+            }
+            // Either empty, or every backlogged lane has a request in
+            // flight — wait for a push, a completion, or close.
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Stop accepting work. Queued items still drain through `pop`;
+    /// blocked pushers and idle poppers wake immediately.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_a_tenant_round_robin_across() {
+        let q = TenantQueue::new(16);
+        for i in 0..3 {
+            q.push("a", ("a", i)).unwrap();
+        }
+        q.push("b", ("b", 0)).unwrap();
+        // Lane order is first-seen: a, b, a, b-exhausted -> a ...
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            let (lease, item) = q.pop().unwrap();
+            order.push(item);
+            lease.complete();
+        }
+        assert_eq!(order, vec![("a", 0), ("b", 0), ("a", 1), ("a", 2)]);
+    }
+
+    #[test]
+    fn busy_lane_is_skipped_until_complete() {
+        let q = TenantQueue::new(16);
+        q.push("a", 1).unwrap();
+        q.push("a", 2).unwrap();
+        q.push("b", 9).unwrap();
+        let (lease_a, first) = q.pop().unwrap();
+        assert_eq!(first, 1);
+        // "a" is in flight: the only poppable item is b's.
+        let (lease_b, second) = q.pop().unwrap();
+        assert_eq!(second, 9);
+        lease_b.complete();
+        lease_a.complete();
+        let (lease, third) = q.pop().unwrap();
+        assert_eq!(third, 2);
+        lease.complete();
+    }
+
+    #[test]
+    fn try_push_bounces_at_capacity_and_after_close() {
+        let q = TenantQueue::new(2);
+        q.try_push("a", 1).unwrap();
+        q.try_push("b", 2).unwrap();
+        match q.try_push("a", 3) {
+            Err(TryPushError::Full(item)) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        let (lease, _) = q.pop().unwrap();
+        lease.complete();
+        q.try_push("a", 3).unwrap();
+        q.close();
+        match q.try_push("a", 4) {
+            Err(TryPushError::Closed(item)) => assert_eq!(item, 4),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_drains_backlog_then_ends() {
+        let q = TenantQueue::new(4);
+        q.push("a", 1).unwrap();
+        q.push("b", 2).unwrap();
+        q.close();
+        let (l1, v1) = q.pop().unwrap();
+        l1.complete();
+        let (l2, v2) = q.pop().unwrap();
+        l2.complete();
+        assert_eq!(v1 + v2, 3);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn dropped_lease_frees_the_lane() {
+        let q = TenantQueue::new(4);
+        q.push("a", 1).unwrap();
+        q.push("a", 2).unwrap();
+        {
+            let (_lease, v) = q.pop().unwrap();
+            assert_eq!(v, 1);
+            // lease dropped without complete() — must not wedge lane a
+        }
+        let (lease, v) = q.pop().unwrap();
+        assert_eq!(v, 2);
+        lease.complete();
+    }
+}

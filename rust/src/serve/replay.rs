@@ -1,0 +1,331 @@
+//! Synthetic request traces + the replay driver (`tinytrain serve`).
+//!
+//! A trace is (tenants × domains × episodes) [`AdaptRequest`]s whose
+//! RNG streams are all forked **before** anything runs, from the same
+//! two primitives the grid harness uses — [`cell_seed`] and
+//! [`episode_streams`], re-exported here so the serving tier and the
+//! harness share one seeding story instead of copy-pasting seed
+//! derivation. A tenant's cell seed is
+//! `cell_seed(cell_seed(seed, tenant), domain)`, i.e. the tenant name
+//! is just one more label folded into the domain-seed rule, and every
+//! (tenant, domain) pair gets the standard serially-forked episode
+//! streams. Requests are therefore pure values: replaying a trace
+//! through [`replay`] (any worker count, open or closed loop) or
+//! [`sequential_replay`] gives bit-identical adaptation outcomes —
+//! [`check_equivalent`] asserts exactly that, and the `serve` bench
+//! section keeps the sequential arm as its asserted-equivalent
+//! baseline.
+//!
+//! Loop modes shape *load*, not results: [`LoopMode::Open`] submits the
+//! whole trace as fast as backpressure admits (stresses the queue;
+//! latency percentiles include queueing), [`LoopMode::Closed`] keeps at
+//! most one request in flight per tenant (the on-device reality: a user
+//! adapts, then uses the model for a while).
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+pub use crate::harness::parallel::{cell_seed, episode_streams};
+
+use super::service::{run_request, AdaptRequest, AdaptationService, Completion, ServeConfig};
+use super::tenant::TenantStore;
+use crate::coordinator::Method;
+use crate::metrics::LatencyStats;
+use crate::model::ModelMeta;
+
+/// How the replay driver offers the trace to the service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopMode {
+    /// Submit everything up front; backpressure is the only brake.
+    Open,
+    /// At most one outstanding request per tenant.
+    Closed,
+}
+
+impl LoopMode {
+    pub fn parse(name: &str) -> Result<LoopMode> {
+        match name {
+            "open" => Ok(LoopMode::Open),
+            "closed" => Ok(LoopMode::Closed),
+            other => bail!("unknown loop mode '{other}' (expected open|closed)"),
+        }
+    }
+}
+
+/// Shape of one synthetic trace.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub tenants: usize,
+    pub domains: Vec<String>,
+    /// Episodes per (tenant, domain) cell.
+    pub episodes: usize,
+    pub seed: u64,
+    pub method: Method,
+    pub steps: usize,
+    pub lr: f32,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            tenants: 8,
+            domains: vec!["traffic".into(), "cub".into()],
+            episodes: 4,
+            seed: 7,
+            method: Method::tinytrain_default(),
+            steps: 6,
+            lr: 6e-3,
+        }
+    }
+}
+
+/// Canonical tenant label of index `i` in a synthetic trace.
+pub fn tenant_name(i: usize) -> String {
+    format!("tenant{i:03}")
+}
+
+/// Generate the trace. Arrival order is round-robin across tenants
+/// (episode-major, then domain, then tenant), so an open-loop replay
+/// exercises cross-tenant interleaving while each tenant's own
+/// requests stay in episode order — the order [`TenantQueue`]
+/// serializes per tenant.
+///
+/// [`TenantQueue`]: super::queue::TenantQueue
+pub fn synthetic_trace(cfg: &TraceConfig) -> Vec<AdaptRequest> {
+    // All streams are forked serially, up front — the worker-count
+    // invariance of the replay rests on this, exactly as in the grid.
+    let mut streams = Vec::with_capacity(cfg.tenants);
+    for t in 0..cfg.tenants {
+        let tenant_seed = cell_seed(cfg.seed, &tenant_name(t));
+        let per_domain: Vec<_> = cfg
+            .domains
+            .iter()
+            .map(|d| episode_streams(cell_seed(tenant_seed, d), cfg.episodes))
+            .collect();
+        streams.push(per_domain);
+    }
+    let mut trace = Vec::with_capacity(cfg.tenants * cfg.domains.len() * cfg.episodes);
+    for e in 0..cfg.episodes {
+        for (di, domain) in cfg.domains.iter().enumerate() {
+            for (t, per_domain) in streams.iter().enumerate() {
+                trace.push(AdaptRequest {
+                    tenant: tenant_name(t),
+                    domain: domain.clone(),
+                    method: cfg.method.clone(),
+                    steps: cfg.steps,
+                    lr: cfg.lr,
+                    stream: per_domain[di][e].clone(),
+                });
+            }
+        }
+    }
+    trace
+}
+
+/// What one replay arm measured.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub requests: usize,
+    pub workers: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub errors: usize,
+    /// Submission-to-pickup latency.
+    pub queue: LatencyStats,
+    /// Pickup-to-commit latency.
+    pub service: LatencyStats,
+    /// Submission-to-commit latency.
+    pub total: LatencyStats,
+    /// Per-request outcomes in ticket (= submission) order.
+    pub completions: Vec<Completion>,
+}
+
+fn summarize(completions: Vec<Completion>, wall_s: f64, workers: usize) -> ReplayReport {
+    let requests = completions.len();
+    ReplayReport {
+        requests,
+        workers,
+        wall_s,
+        throughput_rps: requests as f64 / wall_s.max(1e-12),
+        errors: completions.iter().filter(|c| c.result.is_err()).count(),
+        queue: LatencyStats::from_us(completions.iter().map(|c| c.queue_us).collect()),
+        service: LatencyStats::from_us(completions.iter().map(|c| c.service_us).collect()),
+        total: LatencyStats::from_us(
+            completions.iter().map(|c| c.queue_us + c.service_us).collect(),
+        ),
+        completions,
+    }
+}
+
+/// Replay `trace` through a live [`AdaptationService`] and measure it.
+/// Tenant deltas accumulate in `tenants` — hand each arm a fresh store
+/// when comparing arms.
+pub fn replay(
+    meta: &ModelMeta,
+    tenants: &TenantStore,
+    cfg: &ServeConfig,
+    trace: &[AdaptRequest],
+    mode: LoopMode,
+) -> Result<ReplayReport> {
+    let t0 = Instant::now();
+    let completions = AdaptationService::run(meta, tenants, cfg, |svc| match mode {
+        LoopMode::Open => {
+            for req in trace {
+                svc.submit(req.clone())?;
+            }
+            Ok(svc.join_all())
+        }
+        LoopMode::Closed => closed_loop(svc, trace),
+    })?;
+    Ok(summarize(completions, t0.elapsed().as_secs_f64(), cfg.workers.max(1)))
+}
+
+/// Closed-loop driver: join a tenant's previous ticket before
+/// submitting its next request; tenants advance in rotation.
+fn closed_loop(svc: &AdaptationService, trace: &[AdaptRequest]) -> Result<Vec<Completion>> {
+    let mut index: HashMap<&str, usize> = HashMap::new();
+    let mut backlog: Vec<VecDeque<&AdaptRequest>> = Vec::new();
+    for req in trace {
+        let i = *index.entry(req.tenant.as_str()).or_insert_with(|| {
+            backlog.push(VecDeque::new());
+            backlog.len() - 1
+        });
+        backlog[i].push_back(req);
+    }
+    let mut pending = vec![None; backlog.len()];
+    let mut out = Vec::with_capacity(trace.len());
+    loop {
+        let mut submitted = false;
+        for (lane, queue) in backlog.iter_mut().enumerate() {
+            if let Some(ticket) = pending[lane].take() {
+                out.push(svc.join(ticket));
+            }
+            if let Some(req) = queue.pop_front() {
+                pending[lane] = Some(svc.submit(req.clone())?);
+                submitted = true;
+            }
+        }
+        if !submitted && pending.iter().all(Option::is_none) {
+            break;
+        }
+    }
+    out.sort_by_key(|c| c.ticket);
+    Ok(out)
+}
+
+/// The sequential reference arm: the same per-request execution
+/// ([`run_request`]) in strict trace order on the caller's thread — no
+/// queue, no workers. This is the baseline the service's scaling is
+/// measured (and asserted equivalent) against.
+pub fn sequential_replay(
+    meta: &ModelMeta,
+    tenants: &TenantStore,
+    trace: &[AdaptRequest],
+    render_cache: bool,
+) -> ReplayReport {
+    let t0 = Instant::now();
+    let mut completions = Vec::with_capacity(trace.len());
+    for (ticket, req) in trace.iter().enumerate() {
+        let picked = Instant::now();
+        let result = match run_request(meta, tenants, req, render_cache) {
+            Ok((res, synced)) => {
+                tenants.absorb(&req.tenant, synced);
+                Ok(res)
+            }
+            Err(e) => Err(e),
+        };
+        completions.push(Completion {
+            ticket,
+            tenant: req.tenant.clone(),
+            domain: req.domain.clone(),
+            result,
+            queue_us: 0.0,
+            service_us: picked.elapsed().as_secs_f64() * 1e6,
+        });
+    }
+    summarize(completions, t0.elapsed().as_secs_f64(), 1)
+}
+
+/// Assert two replay arms produced bit-identical adaptation outcomes
+/// (timings excluded — those are the measurement, not the result).
+pub fn check_equivalent(a: &[Completion], b: &[Completion]) -> Result<()> {
+    ensure!(a.len() == b.len(), "completion counts differ: {} vs {}", a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        let at = format!("ticket {} ({} x {})", x.ticket, x.tenant, x.domain);
+        ensure!(x.ticket == y.ticket, "{at}: ticket order diverged (vs {})", y.ticket);
+        ensure!(x.tenant == y.tenant && x.domain == y.domain, "{at}: request identity diverged");
+        match (&x.result, &y.result) {
+            (Ok(rx), Ok(ry)) => {
+                ensure!(
+                    rx.acc_before == ry.acc_before && rx.acc_after == ry.acc_after,
+                    "{at}: accuracy diverged ({}/{} vs {}/{})",
+                    rx.acc_before,
+                    rx.acc_after,
+                    ry.acc_before,
+                    ry.acc_after
+                );
+                ensure!(rx.losses == ry.losses, "{at}: loss curves diverged");
+                ensure!(
+                    rx.selected_layers == ry.selected_layers,
+                    "{at}: selections diverged"
+                );
+            }
+            (Err(ex), Err(ey)) => ensure!(ex == ey, "{at}: errors diverged"),
+            _ => bail!("{at}: one arm failed where the other succeeded"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> TraceConfig {
+        TraceConfig {
+            tenants: 3,
+            domains: vec!["traffic".into()],
+            episodes: 2,
+            ..TraceConfig::default()
+        }
+    }
+
+    #[test]
+    fn trace_shape_and_per_tenant_order() {
+        let cfg = tiny_cfg();
+        let trace = synthetic_trace(&cfg);
+        assert_eq!(trace.len(), 3 * 2);
+        // per tenant, episodes arrive in order; tenants interleave
+        let mine: Vec<_> = trace.iter().filter(|r| r.tenant == tenant_name(1)).collect();
+        assert_eq!(mine.len(), 2);
+        assert_eq!(trace[0].tenant, tenant_name(0));
+        assert_eq!(trace[1].tenant, tenant_name(1));
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_seed_sensitive() {
+        let cfg = tiny_cfg();
+        let a = synthetic_trace(&cfg);
+        let b = synthetic_trace(&cfg);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.stream.clone().next_u64(), y.stream.clone().next_u64());
+        }
+        let c = synthetic_trace(&TraceConfig { seed: 8, ..tiny_cfg() });
+        assert_ne!(
+            a[0].stream.clone().next_u64(),
+            c[0].stream.clone().next_u64(),
+            "different seeds must fork different streams"
+        );
+        // tenants get distinct streams for the same domain/episode
+        assert_ne!(a[0].stream.clone().next_u64(), a[1].stream.clone().next_u64());
+    }
+
+    #[test]
+    fn loop_mode_parses() {
+        assert_eq!(LoopMode::parse("open").unwrap(), LoopMode::Open);
+        assert_eq!(LoopMode::parse("closed").unwrap(), LoopMode::Closed);
+        assert!(LoopMode::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! `AdaptationService`: a multi-tenant adaptation server over
+//! [`AdaptationSession`].
+//!
+//! Shape: a bounded [`TenantQueue`] feeds a scoped worker pool; each
+//! worker runs one request end to end — materialise the tenant's
+//! parameters from the [`TenantStore`], build a per-request analytic
+//! session, sample the episode from the request's own pre-forked RNG
+//! stream (the `harness::parallel` seeding pattern — see
+//! [`super::replay`]), adapt, and commit the masked delta back to the
+//! store *before* releasing the tenant's queue lane. Determinism
+//! contract: request outcomes depend only on (tenant's prior delta,
+//! request stream), the queue serializes each tenant's requests in
+//! submission order, and every stream is forked before any fan-out —
+//! so a trace replays **bit-identically at any worker count** (given an
+//! unbounded tenant-store budget; LRU eviction timing is the one thing
+//! cross-tenant interleaving may shift).
+//!
+//! The pool uses `std::thread::scope`, so the service lives inside
+//! [`AdaptationService::run`]'s closure: submit with
+//! [`submit`](AdaptationService::submit) (blocking backpressure) or
+//! [`try_submit`](AdaptationService::try_submit) (load shedding), then
+//! [`poll`](AdaptationService::poll) /
+//! [`join`](AdaptationService::join) /
+//! [`join_all`](AdaptationService::join_all) tickets. When the closure
+//! returns, the queue closes, workers drain the backlog and the scope
+//! joins them.
+//!
+//! The execution seam stays [`AdaptationBackend`] via the per-request
+//! `AdaptationSession`: workers currently build analytic sessions from
+//! bare `ModelMeta`, and PJRT-backed workers slot in once the runtime
+//! is `Send` (ROADMAP), with no change to the queue/store contracts.
+//!
+//! [`AdaptationSession`]: crate::coordinator::AdaptationSession
+//! [`AdaptationBackend`]: crate::coordinator::AdaptationBackend
+//! [`TenantQueue`]: super::queue::TenantQueue
+//! [`TenantStore`]: super::tenant::TenantStore
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::queue::{TenantQueue, TryPushError};
+use super::tenant::TenantStore;
+use crate::coordinator::{AdaptationSession, EpisodeResult, Method, SyncedParams, TrainConfig};
+use crate::data::{domain_by_name, RenderCache, Sampler};
+use crate::model::ModelMeta;
+use crate::util::pool::default_workers;
+use crate::util::rng::Rng;
+
+/// One adaptation request: which tenant adapts to which domain, with
+/// which method/hyper-parameters, driven by which pre-forked RNG
+/// stream. Streams come from [`super::replay::episode_streams`] so the
+/// request is a pure value — replaying it anywhere gives the same
+/// episode.
+#[derive(Debug, Clone)]
+pub struct AdaptRequest {
+    pub tenant: String,
+    pub domain: String,
+    pub method: Method,
+    pub steps: usize,
+    pub lr: f32,
+    pub stream: Rng,
+}
+
+/// Handle to one submitted request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket(pub usize);
+
+/// Terminal record of one request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub ticket: usize,
+    pub tenant: String,
+    pub domain: String,
+    /// The episode outcome, or the failure stringified (errors must not
+    /// poison the worker pool).
+    pub result: Result<EpisodeResult, String>,
+    /// Time spent queued before a worker picked the request up.
+    pub queue_us: f64,
+    /// Time from pickup to delta commit.
+    pub service_us: f64,
+}
+
+/// Knobs of one service run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    /// Route renders through the shared [`RenderCache`] (bit-identical
+    /// either way; tenants replaying overlapping domains stop
+    /// re-rasterizing).
+    pub render_cache: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: default_workers(), queue_capacity: 64, render_cache: true }
+    }
+}
+
+struct Job {
+    ticket: usize,
+    req: AdaptRequest,
+    enqueued: Instant,
+}
+
+/// Closes the queue when the driver closure unwinds or returns, so
+/// workers always see end-of-work and the scope can join them.
+struct CloseGuard<'q>(&'q TenantQueue<Job>);
+
+impl Drop for CloseGuard<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// The running service (only reachable inside
+/// [`AdaptationService::run`]'s driver closure). See the module docs.
+pub struct AdaptationService {
+    queue: TenantQueue<Job>,
+    slots: Mutex<BTreeMap<usize, Option<Completion>>>,
+    next_ticket: Mutex<usize>,
+    done: Condvar,
+    render_cache: bool,
+}
+
+impl AdaptationService {
+    /// Spin up `cfg.workers` analytic workers over `meta`/`tenants`,
+    /// hand the live service to `driver`, then drain and join. The
+    /// driver's return value passes through.
+    pub fn run<R>(
+        meta: &ModelMeta,
+        tenants: &TenantStore,
+        cfg: &ServeConfig,
+        driver: impl FnOnce(&AdaptationService) -> Result<R>,
+    ) -> Result<R> {
+        let svc = AdaptationService {
+            queue: TenantQueue::new(cfg.queue_capacity),
+            slots: Mutex::new(BTreeMap::new()),
+            next_ticket: Mutex::new(0),
+            done: Condvar::new(),
+            render_cache: cfg.render_cache,
+        };
+        let workers = cfg.workers.max(1);
+        std::thread::scope(|scope| {
+            let svc = &svc;
+            for _ in 0..workers {
+                scope.spawn(move || svc.worker_loop(meta, tenants));
+            }
+            let _close = CloseGuard(&svc.queue);
+            driver(svc)
+        })
+    }
+
+    /// Enqueue a request, blocking while the queue is at capacity
+    /// (backpressure). Errors only if the service is shutting down.
+    pub fn submit(&self, req: AdaptRequest) -> Result<Ticket> {
+        let ticket = self.allocate();
+        let tenant = req.tenant.clone();
+        let job = Job { ticket, req, enqueued: Instant::now() };
+        match self.queue.push(&tenant, job) {
+            Ok(()) => Ok(Ticket(ticket)),
+            Err(_) => {
+                self.retire(ticket);
+                Err(anyhow!("AdaptationService: queue closed"))
+            }
+        }
+    }
+
+    /// Non-blocking submit: `Ok(None)` when the queue is full (the
+    /// request is shed — open-loop callers count these), error when the
+    /// service is shutting down.
+    pub fn try_submit(&self, req: AdaptRequest) -> Result<Option<Ticket>> {
+        let ticket = self.allocate();
+        let tenant = req.tenant.clone();
+        let job = Job { ticket, req, enqueued: Instant::now() };
+        match self.queue.try_push(&tenant, job) {
+            Ok(()) => Ok(Some(Ticket(ticket))),
+            Err(TryPushError::Full(_)) => {
+                self.retire(ticket);
+                Ok(None)
+            }
+            Err(TryPushError::Closed(_)) => {
+                self.retire(ticket);
+                Err(anyhow!("AdaptationService: queue closed"))
+            }
+        }
+    }
+
+    /// The completion for `ticket`, if it finished.
+    pub fn poll(&self, ticket: Ticket) -> Option<Completion> {
+        self.slots.lock().unwrap().get(&ticket.0).and_then(|slot| slot.clone())
+    }
+
+    /// Block until `ticket` completes.
+    pub fn join(&self, ticket: Ticket) -> Completion {
+        let g = self.slots.lock().unwrap();
+        let g = self
+            .done
+            .wait_while(g, |slots| !matches!(slots.get(&ticket.0), Some(Some(_))))
+            .unwrap();
+        g[&ticket.0].clone().expect("wait_while guarantees completion")
+    }
+
+    /// Block until every submitted ticket completes; returns the
+    /// completions in ticket (= submission) order.
+    pub fn join_all(&self) -> Vec<Completion> {
+        let g = self.slots.lock().unwrap();
+        let g = self
+            .done
+            .wait_while(g, |slots| slots.values().any(|slot| slot.is_none()))
+            .unwrap();
+        g.values().map(|slot| slot.clone().expect("all complete")).collect()
+    }
+
+    /// Submitted-but-unfinished request count.
+    pub fn pending(&self) -> usize {
+        self.slots.lock().unwrap().values().filter(|slot| slot.is_none()).count()
+    }
+
+    fn allocate(&self) -> usize {
+        let mut next = self.next_ticket.lock().unwrap();
+        let ticket = *next;
+        *next += 1;
+        self.slots.lock().unwrap().insert(ticket, None);
+        ticket
+    }
+
+    fn retire(&self, ticket: usize) {
+        self.slots.lock().unwrap().remove(&ticket);
+    }
+
+    fn finish(&self, completion: Completion) {
+        self.slots.lock().unwrap().insert(completion.ticket, Some(completion));
+        self.done.notify_all();
+    }
+
+    fn worker_loop(&self, meta: &ModelMeta, tenants: &TenantStore) {
+        while let Some((lease, job)) = self.queue.pop() {
+            let picked = Instant::now();
+            let queue_us = picked.duration_since(job.enqueued).as_secs_f64() * 1e6;
+            let outcome = run_request(meta, tenants, &job.req, self.render_cache);
+            let result = match outcome {
+                Ok((res, synced)) => {
+                    // Commit before releasing the lane: the tenant's
+                    // next request must see this delta.
+                    tenants.absorb(&job.req.tenant, synced);
+                    Ok(res)
+                }
+                Err(e) => Err(e),
+            };
+            lease.complete();
+            self.finish(Completion {
+                ticket: job.ticket,
+                tenant: job.req.tenant,
+                domain: job.req.domain,
+                result,
+                queue_us,
+                service_us: picked.elapsed().as_secs_f64() * 1e6,
+            });
+        }
+    }
+}
+
+/// Execute one request against the tenant's current parameters and
+/// return the outcome plus the masked delta to commit. Pure with
+/// respect to the service: the sequential reference arm
+/// ([`super::replay::sequential_replay`]) calls exactly this, which is
+/// what makes "parallel equals sequential" a meaningful assertion.
+pub fn run_request(
+    meta: &ModelMeta,
+    tenants: &TenantStore,
+    req: &AdaptRequest,
+    render_cache: bool,
+) -> Result<(EpisodeResult, SyncedParams), String> {
+    let domain =
+        domain_by_name(&req.domain).ok_or_else(|| format!("unknown domain {}", req.domain))?;
+    let params = tenants.params_for(&req.tenant);
+    let session = AdaptationSession::analytic(meta)
+        .method(req.method.clone())
+        .config(TrainConfig { steps: req.steps, lr: req.lr, seed: 0 })
+        .build()
+        .map_err(|e| e.to_string())?;
+    let mut erng = req.stream.clone();
+    let cache = render_cache.then(RenderCache::global);
+    let episode = Sampler::new(domain.as_ref(), &meta.shapes).with_cache(cache).sample(&mut erng);
+    session.adapt_and_sync(&params, &episode, erng.next_u64()).map_err(|e| e.to_string())
+}

@@ -1,0 +1,438 @@
+//! Per-tenant parameter state over one shared base model.
+//!
+//! TinyTrain's serving premise is MCUNet-style: the pre-trained backbone
+//! is deployed once (flash-resident, shared by everyone) and each user
+//! owns only the tiny sparse delta their on-device adaptation produced.
+//! [`TenantStore`] is that artifact's host: one shared `Arc<ParamStore>`
+//! base plus, per tenant, the composed masked-delta overlay that
+//! [`AdaptationBackend::sync`] hands back as [`SyncedParams`].
+//!
+//! Operations:
+//! - [`params_for`](TenantStore::params_for) materialises a working
+//!   store for one episode (base copy + overlay patch — the analytic
+//!   backend is copy-on-write on top of it, so the episode's own
+//!   working set stays `O(mask nnz)`);
+//! - [`absorb`](TenantStore::absorb) composes a fresh episode delta
+//!   into the tenant's overlay (newest value of an index wins, runs are
+//!   re-coalesced);
+//! - overlays live under an **LRU byte budget** priced at
+//!   [`accounting::BYTES_F32`] per stored float: absorbing past the
+//!   budget evicts least-recently-used tenants back to the shared base
+//!   (their personalisation is reconstructible by re-adaptation — the
+//!   overlay is serving state, not ground truth).
+//!
+//! All methods take `&self` and are safe to call from any worker
+//! thread; the queue's per-tenant serialization (see
+//! [`super::queue`]) is what keeps one tenant's episodes composing in
+//! trace order.
+//!
+//! [`AdaptationBackend::sync`]: crate::coordinator::AdaptationBackend::sync
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::accounting::BYTES_F32;
+use crate::coordinator::SyncedParams;
+use crate::model::ParamStore;
+
+/// One tenant's composed overlay: sorted disjoint `(offset, values)`
+/// runs over the base theta, plus bookkeeping.
+#[derive(Debug, Clone)]
+struct TenantDelta {
+    segments: Vec<(usize, Vec<f32>)>,
+    /// Cumulative optimiser steps absorbed across episodes.
+    steps: u64,
+    /// Logical-clock timestamp of the last touch (LRU ordering).
+    last_used: u64,
+}
+
+impl TenantDelta {
+    fn floats(&self) -> usize {
+        self.segments.iter().map(|(_, s)| s.len()).sum()
+    }
+}
+
+/// Observability counters for the store (see [`TenantStore::stats`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantStoreStats {
+    /// Tenants currently holding an overlay.
+    pub tenants: usize,
+    /// Bytes held across all overlays (floats × `BYTES_F32`).
+    pub delta_bytes: f64,
+    /// Deltas absorbed since construction.
+    pub absorbs: u64,
+    /// Tenants evicted to fit the byte budget since construction.
+    pub evictions: u64,
+}
+
+struct Tenants {
+    map: HashMap<String, TenantDelta>,
+    clock: u64,
+    delta_bytes: f64,
+    absorbs: u64,
+    evictions: u64,
+}
+
+/// Shared base weights + per-tenant masked-delta overlays with an LRU
+/// byte budget. See the module docs.
+pub struct TenantStore {
+    base: Arc<ParamStore>,
+    inner: Mutex<Tenants>,
+    budget_bytes: f64,
+}
+
+impl TenantStore {
+    /// A store over `base` whose overlays may hold at most
+    /// `budget_bytes` (use `f64::INFINITY` for an unbounded store —
+    /// required for bit-identical trace replay, where eviction timing
+    /// must not depend on cross-tenant interleaving).
+    pub fn new(base: Arc<ParamStore>, budget_bytes: f64) -> TenantStore {
+        TenantStore {
+            base,
+            inner: Mutex::new(Tenants {
+                map: HashMap::new(),
+                clock: 0,
+                delta_bytes: 0.0,
+                absorbs: 0,
+                evictions: 0,
+            }),
+            budget_bytes,
+        }
+    }
+
+    /// The shared base weights every tenant starts from.
+    pub fn base(&self) -> &Arc<ParamStore> {
+        &self.base
+    }
+
+    /// Working parameters for one of `tenant`'s episodes: a fresh copy
+    /// of the base with the tenant's overlay patched in (and the
+    /// optimiser moments zeroed — adaptation always starts clean).
+    /// Touches the tenant's LRU timestamp.
+    ///
+    /// Costs one `O(total_theta)` base copy plus the zeroed moments —
+    /// the full `ParamStore` contract, which the PJRT upload path
+    /// requires; only the overlay patch itself is `O(delta nnz)`. What
+    /// stays `O(nnz)` per tenant is the *retained* state: overlays,
+    /// never whole stores.
+    pub fn params_for(&self, tenant: &str) -> ParamStore {
+        let mut params = self.base.adapted_copy();
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let now = g.clock;
+        if let Some(delta) = g.map.get_mut(tenant) {
+            delta.last_used = now;
+            params.t = delta.steps;
+            for (off, seg) in &delta.segments {
+                params.theta[*off..off + seg.len()].copy_from_slice(seg);
+            }
+        }
+        params
+    }
+
+    /// Compose one episode's synced delta into `tenant`'s overlay, then
+    /// enforce the byte budget (evicting least-recently-used tenants —
+    /// possibly this one, if a single overlay exceeds the whole budget).
+    pub fn absorb(&self, tenant: &str, synced: SyncedParams) {
+        let (fresh, steps) = match synced {
+            SyncedParams::Sparse { t, segments } => (segments, t),
+            // PJRT backends sync the full store; diff against the base
+            // so the overlay stays masked-delta-sized.
+            SyncedParams::Full(p) => (diff_segments(&self.base.theta, &p.theta), p.t),
+        };
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        g.absorbs += 1;
+        let now = g.clock;
+        if fresh.is_empty() && !g.map.contains_key(tenant) {
+            return; // a no-op episode on a base-only tenant stores nothing
+        }
+        let entry = g.map.entry(tenant.to_string()).or_insert_with(|| TenantDelta {
+            segments: Vec::new(),
+            steps: 0,
+            last_used: now,
+        });
+        let before = entry.floats();
+        entry.segments = compose_segments(&entry.segments, &fresh);
+        entry.steps += steps;
+        entry.last_used = now;
+        let after = entry.floats();
+        g.delta_bytes += (after as f64 - before as f64) * BYTES_F32;
+        while g.delta_bytes > self.budget_bytes && !g.map.is_empty() {
+            let lru = g
+                .map
+                .iter()
+                .min_by_key(|(_, d)| d.last_used)
+                .map(|(name, _)| name.clone())
+                .expect("non-empty map");
+            let evicted = g.map.remove(&lru).expect("lru key exists");
+            g.delta_bytes -= evicted.floats() as f64 * BYTES_F32;
+            g.evictions += 1;
+        }
+    }
+
+    /// Drop `tenant`'s overlay (it falls back to the shared base).
+    pub fn evict(&self, tenant: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.map.remove(tenant) {
+            Some(delta) => {
+                g.delta_bytes -= delta.floats() as f64 * BYTES_F32;
+                g.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The tenant's current overlay runs, if any (clones — for tests,
+    /// replay equivalence checks and state export).
+    pub fn delta(&self, tenant: &str) -> Option<Vec<(usize, Vec<f32>)>> {
+        self.inner.lock().unwrap().map.get(tenant).map(|d| d.segments.clone())
+    }
+
+    pub fn stats(&self) -> TenantStoreStats {
+        let g = self.inner.lock().unwrap();
+        TenantStoreStats {
+            tenants: g.map.len(),
+            delta_bytes: g.delta_bytes,
+            absorbs: g.absorbs,
+            evictions: g.evictions,
+        }
+    }
+}
+
+/// Merge two run lists over the same extent; where they overlap, `new`
+/// wins (it was produced by an episode that started from `old` already
+/// applied). `old` must be in the store's invariant form (sorted,
+/// disjoint — every composed overlay is); `new` may overlap itself
+/// (mid-episode re-masking), later segments winning. Output runs are
+/// sorted, disjoint and coalesced.
+///
+/// Cost is `O(old floats + new nnz)`: only the episode-sized `new` goes
+/// through a map, the accumulated overlay is swept linearly. This runs
+/// under the store mutex every commit, so a long-lived tenant's large
+/// overlay must not pay a per-float tree rebuild.
+fn compose_segments(
+    old: &[(usize, Vec<f32>)],
+    new: &[(usize, Vec<f32>)],
+) -> Vec<(usize, Vec<f32>)> {
+    // Normalise `new` onto itself (later wins) into sorted disjoint runs.
+    let mut flat: BTreeMap<usize, f32> = BTreeMap::new();
+    for (off, seg) in new {
+        for (j, &v) in seg.iter().enumerate() {
+            flat.insert(off + j, v);
+        }
+    }
+    let mut new_runs: Vec<(usize, Vec<f32>)> = Vec::new();
+    for (i, v) in flat {
+        match new_runs.last_mut() {
+            Some((off, seg)) if *off + seg.len() == i => seg.push(v),
+            _ => new_runs.push((i, vec![v])),
+        }
+    }
+    // The parts of `old` not covered by `new`, in one linear sweep.
+    let mut pieces: Vec<(usize, Vec<f32>)> = Vec::new();
+    let mut ni = 0;
+    for (off, seg) in old {
+        let end = off + seg.len();
+        let mut start = *off;
+        while start < end {
+            while ni < new_runs.len() && new_runs[ni].0 + new_runs[ni].1.len() <= start {
+                ni += 1;
+            }
+            match new_runs.get(ni) {
+                Some((noff, nseg)) if *noff < end => {
+                    if *noff > start {
+                        pieces.push((start, seg[start - off..noff - off].to_vec()));
+                    }
+                    start = (noff + nseg.len()).max(start);
+                }
+                _ => {
+                    pieces.push((start, seg[start - off..end - off].to_vec()));
+                    start = end;
+                }
+            }
+        }
+    }
+    // Merge the two sorted, mutually disjoint lists, coalescing
+    // adjacency as we go.
+    let mut merged: Vec<(usize, Vec<f32>)> = Vec::with_capacity(pieces.len() + new_runs.len());
+    let mut pit = pieces.into_iter().peekable();
+    let mut nit = new_runs.into_iter().peekable();
+    loop {
+        let from_pieces = match (pit.peek(), nit.peek()) {
+            (Some(p), Some(n)) => p.0 < n.0,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => break,
+        };
+        let (off, seg) = if from_pieces {
+            pit.next().expect("peeked")
+        } else {
+            nit.next().expect("peeked")
+        };
+        match merged.last_mut() {
+            Some((moff, mseg)) if *moff + mseg.len() == off => mseg.extend(seg),
+            _ => merged.push((off, seg)),
+        }
+    }
+    merged
+}
+
+/// The sparse difference of `full` against `base` as coalesced runs
+/// (bit-exact float comparison: the point is to store only what an
+/// episode actually moved).
+fn diff_segments(base: &[f32], full: &[f32]) -> Vec<(usize, Vec<f32>)> {
+    let mut out: Vec<(usize, Vec<f32>)> = Vec::new();
+    for (i, (&b, &f)) in base.iter().zip(full).enumerate() {
+        if b.to_bits() != f.to_bits() {
+            match out.last_mut() {
+                Some((off, seg)) if *off + seg.len() == i => seg.push(f),
+                _ => out.push((i, vec![f])),
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelMeta;
+
+    fn base() -> Arc<ParamStore> {
+        Arc::new(ParamStore::init(&ModelMeta::synthetic(2), 42))
+    }
+
+    fn sparse(t: u64, segments: Vec<(usize, Vec<f32>)>) -> SyncedParams {
+        SyncedParams::Sparse { t, segments }
+    }
+
+    #[test]
+    fn compose_newest_wins_and_coalesces() {
+        let old = vec![(0, vec![1.0, 2.0]), (10, vec![5.0])];
+        let new = vec![(1, vec![9.0, 9.5]), (11, vec![6.0])];
+        let merged = compose_segments(&old, &new);
+        assert_eq!(
+            merged,
+            vec![(0, vec![1.0, 9.0, 9.5]), (10, vec![5.0, 6.0])]
+        );
+        // a new run swallowing old runs entirely, plus a tail piece
+        let old = vec![(2, vec![1.0, 1.0]), (6, vec![2.0, 2.0, 2.0])];
+        let new = vec![(0, vec![7.0; 8])];
+        assert_eq!(compose_segments(&old, &new), vec![(0, vec![7.0; 8]), (8, vec![2.0])]);
+    }
+
+    #[test]
+    fn compose_matches_dense_reference_on_random_runs() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(3);
+        for _ in 0..300 {
+            // old: sorted disjoint (the store invariant)
+            let mut old: Vec<(usize, Vec<f32>)> = Vec::new();
+            let mut pos = 0usize;
+            while pos < 56 && r.bool(0.7) {
+                pos += r.below(5);
+                let len = 1 + r.below(6);
+                if pos + len > 64 {
+                    break;
+                }
+                old.push((pos, (0..len).map(|_| r.uniform() as f32).collect()));
+                pos += len;
+            }
+            // new: may self-overlap (re-masking), later wins
+            let mut new: Vec<(usize, Vec<f32>)> = Vec::new();
+            for _ in 0..r.below(6) {
+                let off = r.below(56);
+                let len = 1 + r.below(8).min(63 - off);
+                new.push((off, (0..len).map(|_| r.uniform() as f32).collect()));
+            }
+            // dense reference
+            let mut dense: Vec<Option<f32>> = vec![None; 64];
+            for (off, seg) in old.iter().chain(&new) {
+                for (j, &v) in seg.iter().enumerate() {
+                    dense[off + j] = Some(v);
+                }
+            }
+            let mut want: Vec<(usize, Vec<f32>)> = Vec::new();
+            for (i, v) in dense.into_iter().enumerate() {
+                if let Some(v) = v {
+                    match want.last_mut() {
+                        Some((off, seg)) if *off + seg.len() == i => seg.push(v),
+                        _ => want.push((i, vec![v])),
+                    }
+                }
+            }
+            assert_eq!(compose_segments(&old, &new), want, "old={old:?} new={new:?}");
+        }
+    }
+
+    #[test]
+    fn absorb_then_params_for_round_trips() {
+        let base = base();
+        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        store.absorb("alice", sparse(3, vec![(4, vec![0.25, -0.5])]));
+        let p = store.params_for("alice");
+        assert_eq!(p.theta[4], 0.25);
+        assert_eq!(p.theta[5], -0.5);
+        assert_eq!(p.theta[0], base.theta[0]);
+        assert_eq!(p.t, 3);
+        // an untouched tenant sees the pristine base
+        let q = store.params_for("bob");
+        assert_eq!(q.theta, base.theta);
+        assert_eq!(q.t, 0);
+    }
+
+    #[test]
+    fn full_sync_is_diffed_against_base() {
+        let base = base();
+        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        let mut adapted = base.adapted_copy();
+        adapted.theta[7] += 1.0;
+        adapted.theta[8] += 1.0;
+        adapted.t = 5;
+        store.absorb("carol", SyncedParams::Full(adapted));
+        let delta = store.delta("carol").unwrap();
+        assert_eq!(delta.len(), 1);
+        assert_eq!(delta[0].0, 7);
+        assert_eq!(delta[0].1.len(), 2);
+    }
+
+    #[test]
+    fn lru_eviction_respects_the_byte_budget() {
+        let base = base();
+        // budget: two 4-float overlays exactly
+        let store = TenantStore::new(base, 8.0 * BYTES_F32);
+        store.absorb("a", sparse(1, vec![(0, vec![1.0; 4])]));
+        store.absorb("b", sparse(1, vec![(8, vec![2.0; 4])]));
+        assert_eq!(store.stats().tenants, 2);
+        // touch "a" so "b" is the LRU victim
+        store.params_for("a");
+        store.absorb("c", sparse(1, vec![(16, vec![3.0; 4])]));
+        let stats = store.stats();
+        assert_eq!(stats.tenants, 2);
+        assert_eq!(stats.evictions, 1);
+        assert!(store.delta("b").is_none(), "LRU tenant must be evicted");
+        assert!(store.delta("a").is_some());
+        assert!(store.delta("c").is_some());
+        assert!(stats.delta_bytes <= 8.0 * BYTES_F32);
+    }
+
+    #[test]
+    fn noop_sync_on_fresh_tenant_stores_nothing() {
+        let store = TenantStore::new(base(), f64::INFINITY);
+        store.absorb("idle", sparse(0, vec![]));
+        assert_eq!(store.stats().tenants, 0);
+        assert!(store.delta("idle").is_none());
+    }
+
+    #[test]
+    fn explicit_evict_falls_back_to_base() {
+        let base = base();
+        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        store.absorb("d", sparse(2, vec![(0, vec![9.0])]));
+        assert!(store.evict("d"));
+        assert!(!store.evict("d"));
+        assert_eq!(store.params_for("d").theta, base.theta);
+    }
+}
