@@ -1,13 +1,18 @@
 #!/usr/bin/env bash
 # Tier-1 verification for the rust workspace (wired into README/ROADMAP):
 #   fmt -> clippy (warnings are errors) -> release build -> tests
-#   -> bench_hotpath smoke (writes ../BENCH_hotpath.json).
+#   -> no_std feature matrix (build + clippy + bit-identity tests under
+#      --no-default-features --features alloc)
+#   -> bench_hotpath smoke (writes ../BENCH_hotpath.json)
+#   -> size-budget gate (ci_size_check.sh; writes ../SIZE_core.json and
+#      prints the per-section table).
 # Run from anywhere; operates on the directory this script lives in.
 #
 # Usage: ci.sh [--quick]
 #   --quick   fmt + clippy + `cargo test -q` only (debug profile); skips
-#             the release build and the bench smoke. For inner-loop
-#             iteration — CI and pre-merge runs use the full tier.
+#             the release build, the no_std matrix, the bench smoke and
+#             the size gate. For inner-loop iteration — CI and pre-merge
+#             runs use the full tier.
 #
 # PJRT-dependent integration tests self-skip when the workspace is built
 # against the vendored stub `xla` backend, so this passes (and is
@@ -57,7 +62,23 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# no_std feature matrix: the MCU decision core must build, lint clean,
+# and produce bit-identical arithmetic without the std feature. The
+# default-features leg of the matrix is already covered above (the
+# no_std_core test runs as part of plain `cargo test`).
+echo "== no_std core: build (--no-default-features --features alloc) =="
+cargo build --lib --example core_footprint --no-default-features --features alloc
+
+echo "== no_std core: clippy -D warnings =="
+cargo clippy --lib --example core_footprint --no-default-features --features alloc -- -D warnings
+
+echo "== no_std core: bit-identity tests =="
+cargo test -q --no-default-features --features alloc --test no_std_core
+
 echo "== bench_hotpath smoke (pure-rust; writes ../BENCH_hotpath.json) =="
 cargo bench --bench bench_hotpath -- smoke
+
+echo "== size-budget gate (embedded profile; writes ../SIZE_core.json) =="
+./ci_size_check.sh
 
 echo "ci.sh: all green"

@@ -5,9 +5,13 @@
 # bench_hotpath smoke tier — run `rust/ci.sh` or
 # `cargo bench --bench bench_hotpath -- smoke` first) against the copy
 # committed at HEAD, and fails when any section's `speedup` regressed by
-# more than 25%. Sections present in only one of the two files are
-# reported but never fail the check (new benches land before their
-# baseline is committed). Timing noise is why this job is advisory:
+# more than 25%. Sections present in only one of the two files — or
+# malformed in either (non-object section, missing/non-numeric
+# `speedup`) — are warned about and skipped, never failed: new benches
+# land before their baseline is committed, and a half-written report
+# should flag itself without masquerading as a perf regression. A
+# baseline that does not parse as JSON at all skips the whole
+# comparison with a notice. Timing noise is why this job is advisory:
 # shared CI runners jitter far more than a laptop, so the guard flags
 # rather than blocks.
 #
@@ -34,25 +38,42 @@ import os
 import sys
 
 threshold = float(os.environ["THRESHOLD"])
-baseline = json.loads(os.environ["BASELINE_JSON"])
-with open(os.environ["FRESH_PATH"]) as f:
-    fresh = json.load(f)
+try:
+    baseline = json.loads(os.environ["BASELINE_JSON"])
+except ValueError as e:
+    print(f"ci_bench_check: committed baseline is not valid JSON ({e}) — skipping comparison")
+    sys.exit(0)
+try:
+    with open(os.environ["FRESH_PATH"]) as f:
+        fresh = json.load(f)
+except ValueError as e:
+    print(f"ci_bench_check: fresh report is not valid JSON ({e}) — skipping comparison")
+    sys.exit(0)
 
-def speedups(report):
+def speedups(report, label):
+    """name -> speedup for well-formed sections; warn-and-skip the rest."""
     out = {}
-    for name, section in report.get("sections", {}).items():
-        if isinstance(section, dict) and "speedup" in section:
+    sections = report.get("sections") if isinstance(report, dict) else None
+    if not isinstance(sections, dict):
+        print(f"  ({label}) report has no 'sections' object — nothing to compare from it")
+        return out
+    for name, section in sections.items():
+        if not isinstance(section, dict) or "speedup" not in section:
+            continue  # scalar metadata entries (arch, layers, *_us) are expected
+        try:
             out[name] = float(section["speedup"])
+        except (TypeError, ValueError):
+            print(f"  {name:<20} malformed speedup in {label} — skipped")
     return out
 
-base, new = speedups(baseline), speedups(fresh)
+base, new = speedups(baseline, "baseline"), speedups(fresh, "fresh")
 failures = []
 for name in sorted(base.keys() | new.keys()):
     if name not in base:
         print(f"  {name:<20} new section (no baseline) — fresh speedup {new[name]:.2f}x")
         continue
     if name not in new:
-        print(f"  {name:<20} missing from fresh report (baseline {base[name]:.2f}x)")
+        print(f"  {name:<20} missing from fresh report (baseline {base[name]:.2f}x) — skipped")
         continue
     ratio = new[name] / base[name] if base[name] > 0 else 1.0
     mark = "OK "

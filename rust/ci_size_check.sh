@@ -1,0 +1,131 @@
+#!/usr/bin/env bash
+# CI size-budget gate for the MCU-envelope core (see README "MCU
+# envelope" and .github/workflows/ci.yml).
+#
+# Builds the `core_footprint` example — the link target that pulls in
+# exactly the no_std + alloc decision core — under the `embedded`
+# release profile (opt-level=z, lto, panic=abort), measures its ELF
+# section sizes, writes ../SIZE_core.json (the same `sections` table
+# shape BENCH_hotpath.json uses), and compares against the copy
+# committed at HEAD: flash (text + rodata + data) growing by more than
+# the threshold fails the check. Like ci_bench_check.sh, a missing
+# committed baseline skips the comparison with a notice — the first run
+# on a branch produces the baseline to commit.
+#
+# Usage: ci_size_check.sh [threshold]   (default 0.10 = 10% flash growth)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+THRESHOLD="${1:-0.10}"
+OUT="../SIZE_core.json"
+BIN="target/embedded/examples/core_footprint"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci_size_check: cargo not found on PATH — install a Rust toolchain" >&2
+    exit 1
+fi
+
+echo "== build core_footprint (embedded profile, no_std + alloc core) =="
+cargo build --profile embedded --no-default-features --features alloc --example core_footprint
+
+if [ ! -f "$BIN" ]; then
+    echo "ci_size_check: expected artifact $BIN not found after build" >&2
+    exit 1
+fi
+
+# Per-section sizes from the ELF section headers directly (python
+# stdlib only — no binutils dependency). Classification follows the
+# usual MCU budget split:
+#   text   = alloc + exec            (flash: code)
+#   rodata = alloc, read-only data   (flash: constants)
+#   data   = alloc + write, w/ bits  (flash image + ram at runtime)
+#   bss    = alloc NOBITS            (ram only)
+BIN_PATH="$BIN" OUT_PATH="$OUT" THRESHOLD="$THRESHOLD" \
+BASELINE_JSON="$(git show "HEAD:SIZE_core.json" 2>/dev/null || true)" \
+python3 - <<'EOF'
+import json
+import os
+import struct
+import sys
+
+path = os.environ["BIN_PATH"]
+with open(path, "rb") as f:
+    elf = f.read()
+
+if elf[:4] != b"\x7fELF" or elf[4] != 2:
+    sys.exit(f"ci_size_check: {path} is not a 64-bit ELF")
+
+e_shoff, = struct.unpack_from("<Q", elf, 0x28)
+e_shentsize, e_shnum = struct.unpack_from("<HH", elf, 0x3A)
+
+SHT_NOBITS = 8
+SHF_WRITE, SHF_ALLOC, SHF_EXECINSTR = 0x1, 0x2, 0x4
+
+sizes = {"text": 0, "rodata": 0, "data": 0, "bss": 0}
+for i in range(e_shnum):
+    off = e_shoff + i * e_shentsize
+    sh_type, = struct.unpack_from("<I", elf, off + 4)
+    sh_flags, sh_addr, sh_off, sh_size = struct.unpack_from("<QQQQ", elf, off + 8)
+    if not sh_flags & SHF_ALLOC or sh_size == 0:
+        continue
+    if sh_type == SHT_NOBITS:
+        sizes["bss"] += sh_size
+    elif sh_flags & SHF_EXECINSTR:
+        sizes["text"] += sh_size
+    elif sh_flags & SHF_WRITE:
+        sizes["data"] += sh_size
+    else:
+        sizes["rodata"] += sh_size
+
+sizes["flash"] = sizes["text"] + sizes["rodata"] + sizes["data"]
+sizes["ram"] = sizes["data"] + sizes["bss"]
+
+report = {
+    "generated_by": "rust/ci_size_check.sh",
+    "artifact": "core_footprint (embedded profile, --no-default-features --features alloc)",
+    "sections": {name: {"bytes": n} for name, n in sizes.items()},
+}
+with open(os.environ["OUT_PATH"], "w") as f:
+    json.dump(report, f, indent=2)
+    f.write("\n")
+
+baseline_raw = os.environ.get("BASELINE_JSON", "").strip()
+baseline = None
+if baseline_raw:
+    try:
+        baseline = json.loads(baseline_raw)
+    except ValueError:
+        print("ci_size_check: committed SIZE_core.json is malformed — comparison skipped")
+
+def baseline_bytes(name):
+    try:
+        return int(baseline["sections"][name]["bytes"])
+    except (KeyError, TypeError, ValueError):
+        return None
+
+print(f"{'section':<8} {'bytes':>10}  baseline  delta")
+threshold = float(os.environ["THRESHOLD"])
+failures = []
+for name in ("text", "rodata", "data", "bss", "flash", "ram"):
+    n = sizes[name]
+    b = baseline_bytes(name) if baseline else None
+    if b is None:
+        print(f"{name:<8} {n:>10}  (no baseline)")
+        continue
+    delta = (n - b) / b if b else 0.0
+    mark = ""
+    if name == "flash" and delta > threshold:
+        mark = "  REGRESSION"
+        failures.append(name)
+    print(f"{name:<8} {n:>10}  {b:>8}  {delta:+7.1%}{mark}")
+
+if baseline is None:
+    print("ci_size_check: no committed SIZE_core.json at HEAD — baseline "
+          "written, comparison skipped (commit SIZE_core.json to arm the gate)")
+elif failures:
+    print(f"ci_size_check: flash grew >{threshold:.0%} over the committed baseline",
+          file=sys.stderr)
+    sys.exit(1)
+else:
+    print(f"ci_size_check: flash within {threshold:.0%} of the committed baseline")
+EOF

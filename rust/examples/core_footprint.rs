@@ -1,0 +1,96 @@
+//! MCU-envelope footprint artifact.
+//!
+//! Links the entire `no_std + alloc` decision core — cost accounting,
+//! budgeted layer/channel selection, segment masks, the SparseUpdate
+//! genome/feasibility machinery and the analytic masked step/embed math
+//! — and nothing host-side. `rust/ci_size_check.sh` builds this target
+//! with `--no-default-features --features alloc --profile embedded` and
+//! records its per-section sizes in `SIZE_core.json`; the printed
+//! checksums keep every subsystem reachable so the linker cannot discard
+//! the code being measured.
+//!
+//! The binary itself is hosted (it prints via std, which is always
+//! available to example crates), but the `tinytrain` library underneath
+//! is compiled without its `std` feature — exactly the code an MCU
+//! deployment would carry.
+
+use tinytrain::accounting::{backward_macs, backward_memory, CostLedger, Optimizer, UpdatePlan};
+use tinytrain::coordinator::analytic::{masked_shrink_step, EmbedState};
+use tinytrain::coordinator::criterion::Criterion;
+use tinytrain::coordinator::search::{
+    default_policy, genome_to_policy, mutate, random_feasible, resolve_budget, FeasibilityOracle,
+};
+use tinytrain::coordinator::selection::run_selection;
+use tinytrain::coordinator::{Budgets, ChannelScheme};
+use tinytrain::model::{ModelMeta, ParamStore};
+use tinytrain::util::rng::Rng;
+
+fn checksum(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| x as f64).sum()
+}
+
+fn main() {
+    let meta = ModelMeta::synthetic(6);
+    let mut rng = Rng::new(0xC0DE);
+    let theta: Vec<f32> = (0..meta.total_theta).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+    let params = ParamStore::from_theta(&meta, theta);
+
+    // Accounting: incremental ledger walk + closed-form plan pricing.
+    let mut ledger = CostLedger::new(&meta.scaled, Optimizer::Adam);
+    for l in (0..meta.scaled.layers.len()).step_by(3) {
+        ledger.set_ratio(l, 0.25);
+    }
+    let ledger_mem = ledger.memory_total();
+    let ledger_macs = ledger.macs_total();
+    let plan = UpdatePlan::adapter_drop(meta.scaled.layers.len(), meta.scaled.blocks.len(), 0.5);
+    let plan_mem = backward_memory(&meta.scaled, &plan, Optimizer::Adam).total();
+    let plan_macs = backward_macs(&meta.scaled, &plan).total();
+
+    // Selection: Algorithm-1 layer/channel picks and the segment mask.
+    let sel = run_selection(
+        &meta,
+        Criterion::L2Norm,
+        None,
+        &params.theta,
+        Budgets::default(),
+        0.5,
+        ChannelScheme::L2Norm,
+        Optimizer::Adam,
+    );
+    let mask = sel.mask(&meta);
+
+    // SparseUpdate policy machinery: on-device feasibility check/repair.
+    let policy = default_policy(&meta, 0.0);
+    let budget = resolve_budget(&meta, 0.0);
+    let mut oracle = FeasibilityOracle::new(&meta, budget);
+    let genome = random_feasible(&mut oracle, &mut rng).expect("budget admits a genome");
+    let child = mutate(&mut oracle, &genome, &mut rng);
+    let repaired = genome_to_policy(&child);
+
+    // Analytic masked steps + embed over the selected mask.
+    let s = &meta.shapes;
+    let img_len = s.img * s.img * s.channels;
+    let sup: Vec<f32> = (0..s.max_support * img_len).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let qry: Vec<f32> = (0..s.max_query * img_len).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let mut overlay: Vec<Vec<f32>> = mask
+        .runs()
+        .iter()
+        .map(|&(off, len)| params.theta[off..off + len].to_vec())
+        .collect();
+    let mut st = EmbedState::build(s, meta.total_theta, |t| params.theta[t], &sup, &qry);
+    st.refresh_plan(Some(&mask));
+    for _ in 0..4 {
+        masked_shrink_step(&mask, &mut overlay, Some(&mut st), s, &sup, &qry, 0.05);
+    }
+    st.rebuild_if_dirty(s, &sup, &qry);
+    let emb = st.normalized(s.feat_dim);
+
+    println!("arch {} theta {} mask_nnz {}", meta.arch, meta.total_theta, mask.nnz());
+    println!("ledger mem {ledger_mem:.1} macs {ledger_macs:.1}");
+    println!("plan mem {plan_mem:.1} macs {plan_macs:.1}");
+    println!("selected layers {} policy {} repaired {}", sel.layers.len(),
+        policy.layer_ratios.len(), repaired.layer_ratios.len());
+    println!("embed checksum {:.6} incremental {}", checksum(&emb), st.incremental);
+    let overlay_sum: f64 = overlay.iter().map(|seg| checksum(seg.as_slice())).sum();
+    println!("overlay checksum {overlay_sum:.6}");
+}

@@ -22,7 +22,8 @@
 //! batch 100, adapters) keep using the full `backward_memory` walk; they
 //! are priced once per table, never inside a loop.
 
-use std::collections::BTreeSet;
+use alloc::collections::BTreeSet;
+use alloc::{vec, vec::Vec};
 
 use super::{backward_macs, backward_memory, Optimizer, UpdatePlan, BYTES_F32};
 use crate::model::ArchFlavor;

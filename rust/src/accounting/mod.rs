@@ -21,6 +21,10 @@ mod compute;
 mod ledger;
 mod memory;
 
+use alloc::{vec, vec::Vec};
+
+use crate::util::math;
+
 pub use compute::{backward_macs, forward_macs, BackwardCompute};
 pub use ledger::CostLedger;
 pub use memory::{
@@ -74,7 +78,7 @@ impl UpdatePlan {
     /// AdapterDrop-X%: drop the first `frac` of blocks' adapters.
     pub fn adapter_drop(n_layers: usize, n_blocks: usize, frac: f64) -> Self {
         let mut p = Self::tinytl(n_layers, n_blocks);
-        let dropped = ((n_blocks as f64) * frac).round() as usize;
+        let dropped = math::round64((n_blocks as f64) * frac) as usize;
         for b in 0..dropped.min(n_blocks) {
             p.adapters[b] = false;
         }

@@ -1,0 +1,327 @@
+//! The analytic step/embed math — the `no_std` heart of the
+//! `AnalyticBackend`.
+//!
+//! The analytic embedding of image `x` is linear in theta:
+//! `raw[f] = Σ_i x[i] · (theta[bucket(i)] + 0.05)` over pixels `i` with
+//! lane `i % feat_dim == f`, followed by L2 normalisation. Everything
+//! theta-dependent is expressible through two per-episode tables — the
+//! per-pixel projection weight `proj[i]` and the inverse pixel→theta
+//! scatter `buckets` — and a masked step only has to touch the pixels
+//! whose bucket lies inside the mask's runs.
+//!
+//! This module holds that math over plain slices and the segment
+//! overlay representation, with no episode/runtime types: the std-side
+//! [`super::backend::AnalyticBackend`] delegates here (so host and MCU
+//! builds run literally the same code), and the MCU build gets a
+//! deterministic on-device step/embed without PJRT, threads or files.
+//! Float intrinsics route through [`crate::util::math`], whose soft
+//! fallbacks are bit-identical to std — the cross-feature bit-identity
+//! asserted by `tests/no_std_core.rs`.
+
+use alloc::{vec, vec::Vec};
+
+use super::mask::UpdateMask;
+use crate::model::EpisodeShapes;
+use crate::util::math;
+
+/// A masked step multiplies each selected weight once; an episode runs
+/// roughly this many steps. Incremental re-embedding pays when the total
+/// delta work (`steps × affected pixels`) stays below one dense rebuild
+/// (`all pixels`), so the gate is `affected × BUDGET ≤ img_len`.
+pub const INCREMENTAL_STEP_BUDGET: usize = 8;
+
+/// Theta bucket of flat pixel `i` (cheap integer hash into theta, so
+/// trained weights move the embeddings). Must stay in lock-step with
+/// the dense reference arm in `bench_hotpath`.
+#[inline]
+pub fn bucket_of(i: usize, theta_len: usize) -> usize {
+    let h = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
+    (h % theta_len as u64) as usize
+}
+
+/// Accumulate pre-norm embedding rows: `raw[b][j] += x[b][c·F + j] ·
+/// proj[c·F + j]` in ascending pixel order (bit-identical to the seed's
+/// per-pixel `row[i % F] += x·w(i)` scan, with the hash hoisted out).
+pub fn accumulate_rows(
+    images: &[f32],
+    img_len: usize,
+    proj: &[f32],
+    feat_dim: usize,
+    raw: &mut [f32],
+) {
+    if img_len == 0 {
+        return;
+    }
+    for (img, row) in images.chunks_exact(img_len).zip(raw.chunks_exact_mut(feat_dim)) {
+        for (chunk, pchunk) in img.chunks(feat_dim).zip(proj.chunks(feat_dim)) {
+            for ((r, &x), &p) in row.iter_mut().zip(chunk).zip(pchunk) {
+                *r += x * p;
+            }
+        }
+    }
+}
+
+/// Per-episode embedding state of the analytic step/embed math.
+pub struct EmbedState {
+    /// `theta[bucket(i)] + 0.05` per flat pixel, maintained on step.
+    pub proj: Vec<f32>,
+    /// Pixels grouped by theta bucket, sorted by bucket index.
+    pub buckets: Vec<(u32, Vec<u32>)>,
+    /// Pre-normalisation embedding rows, `(eval_batch, feat_dim)`.
+    pub raw: Vec<f32>,
+    /// `raw` lags `proj` (wide-mask steps skip the per-image deltas and
+    /// the next embed rebuilds densely from `proj`).
+    pub dirty: bool,
+    /// Whether per-step raw deltas pay off for the current mask.
+    pub incremental: bool,
+    /// Pixels whose bucket falls inside the current mask.
+    pub affected_pixels: usize,
+}
+
+impl EmbedState {
+    /// Build the per-episode embed state from the current theta view
+    /// (`theta_at` resolves an index through whatever overlay the
+    /// caller maintains). `sup_x`/`qry_x` are the padded support/query
+    /// image tensors, `img_len` floats per image.
+    pub fn build(
+        shapes: &EpisodeShapes,
+        theta_len: usize,
+        theta_at: impl Fn(usize) -> f32,
+        sup_x: &[f32],
+        qry_x: &[f32],
+    ) -> EmbedState {
+        debug_assert_eq!(
+            shapes.eval_batch,
+            shapes.max_support + shapes.max_query,
+            "eval batch layout"
+        );
+        let img_len = shapes.img * shapes.img * shapes.channels;
+        let mut proj = vec![1.0f32; img_len];
+        let mut buckets: Vec<(u32, Vec<u32>)> = Vec::new();
+        if theta_len > 0 {
+            let mut pairs: Vec<(u32, u32)> =
+                (0..img_len).map(|i| (bucket_of(i, theta_len) as u32, i as u32)).collect();
+            for &(t, i) in &pairs {
+                // Keep a constant floor so all-zero thetas still embed
+                // the image (seed behaviour, preserved bit-for-bit).
+                proj[i as usize] = theta_at(t as usize) + 0.05;
+            }
+            pairs.sort_unstable();
+            for (t, i) in pairs {
+                match buckets.last_mut() {
+                    Some((bt, pixels)) if *bt == t => pixels.push(i),
+                    _ => buckets.push((t, vec![i])),
+                }
+            }
+        }
+        let mut raw = vec![0.0f32; shapes.eval_batch * shapes.feat_dim];
+        let sup_rows = shapes.max_support * shapes.feat_dim;
+        accumulate_rows(sup_x, img_len, &proj, shapes.feat_dim, &mut raw[..sup_rows]);
+        accumulate_rows(qry_x, img_len, &proj, shapes.feat_dim, &mut raw[sup_rows..]);
+        EmbedState { proj, buckets, raw, dirty: false, incremental: false, affected_pixels: 0 }
+    }
+
+    /// Re-derive the incremental-vs-dense decision for `mask`.
+    pub fn refresh_plan(&mut self, mask: Option<&UpdateMask>) {
+        let img_len = self.proj.len();
+        let mut affected = 0usize;
+        if let Some(mask) = mask {
+            for &(off, len) in mask.runs() {
+                let lo = self.buckets.partition_point(|&(t, _)| (t as usize) < off);
+                for (t, pixels) in &self.buckets[lo..] {
+                    if *t as usize >= off + len {
+                        break;
+                    }
+                    affected += pixels.len();
+                }
+            }
+        }
+        self.affected_pixels = affected;
+        self.incremental = mask.is_some() && affected * INCREMENTAL_STEP_BUDGET <= img_len;
+    }
+
+    /// Dense rebuild of `raw` from `proj` when a wide-mask step left it
+    /// stale.
+    pub fn rebuild_if_dirty(&mut self, shapes: &EpisodeShapes, sup_x: &[f32], qry_x: &[f32]) {
+        if !self.dirty {
+            return;
+        }
+        let img_len = shapes.img * shapes.img * shapes.channels;
+        self.raw.fill(0.0);
+        let sup_rows = shapes.max_support * shapes.feat_dim;
+        accumulate_rows(sup_x, img_len, &self.proj, shapes.feat_dim, &mut self.raw[..sup_rows]);
+        accumulate_rows(qry_x, img_len, &self.proj, shapes.feat_dim, &mut self.raw[sup_rows..]);
+        self.dirty = false;
+    }
+
+    /// L2-normalised embedding rows (the backend's `embed` output).
+    pub fn normalized(&self, feat_dim: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.raw.len());
+        for row in self.raw.chunks(feat_dim) {
+            let norm = math::sqrt32(row.iter().map(|v| v * v).sum::<f32>()).max(1e-6);
+            out.extend(row.iter().map(|v| v / norm));
+        }
+        out
+    }
+}
+
+/// One masked shrink step (`p -= lr·0.1·p` over the masked segments
+/// only — the sparse analogue of the dense scan, with the same
+/// per-parameter update, so frozen parameters provably never move).
+/// When embed state is given, the projection table follows along, and
+/// in incremental mode the cached raw rows absorb the exact per-weight
+/// deltas; a non-incremental step marks `raw` dirty instead.
+pub fn masked_shrink_step(
+    mask: &UpdateMask,
+    overlay: &mut [Vec<f32>],
+    mut embed: Option<&mut EmbedState>,
+    shapes: &EpisodeShapes,
+    sup_x: &[f32],
+    qry_x: &[f32],
+    lr: f32,
+) {
+    let decay = lr * 0.1;
+    let img_len = shapes.img * shapes.img * shapes.channels;
+    for (run_i, &(off, _len)) in mask.runs().iter().enumerate() {
+        let seg = &mut overlay[run_i];
+        if let Some(st) = embed.as_deref_mut() {
+            let mut bi = st.buckets.partition_point(|&(bt, _)| (bt as usize) < off);
+            for (j, p) in seg.iter_mut().enumerate() {
+                let old = *p;
+                let new = old - decay * old;
+                *p = new;
+                if bi < st.buckets.len() && st.buckets[bi].0 as usize == off + j {
+                    let pixels = &st.buckets[bi].1;
+                    for &pix in pixels {
+                        st.proj[pix as usize] = new + 0.05;
+                    }
+                    let delta = new - old;
+                    if st.incremental && delta != 0.0 {
+                        for &pix in pixels {
+                            let pix = pix as usize;
+                            let lane = pix % shapes.feat_dim;
+                            for b in 0..shapes.max_support {
+                                let x = sup_x[b * img_len + pix];
+                                if x != 0.0 {
+                                    st.raw[b * shapes.feat_dim + lane] += x * delta;
+                                }
+                            }
+                            for q in 0..shapes.max_query {
+                                let x = qry_x[q * img_len + pix];
+                                if x != 0.0 {
+                                    st.raw[(shapes.max_support + q) * shapes.feat_dim + lane] +=
+                                        x * delta;
+                                }
+                            }
+                        }
+                    }
+                    bi += 1;
+                }
+            }
+            if !st.incremental {
+                st.dirty = true;
+            }
+        } else {
+            for p in seg.iter_mut() {
+                *p -= decay * *p;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn shapes() -> EpisodeShapes {
+        EpisodeShapes {
+            img: 4,
+            channels: 3,
+            max_ways: 2,
+            max_support: 2,
+            max_query: 2,
+            eval_batch: 4,
+            feat_dim: 6,
+            cosine_tau: 10.0,
+        }
+    }
+
+    fn images(rng: &mut Rng, n: usize, img_len: usize) -> Vec<f32> {
+        (0..n * img_len).map(|_| rng.range(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn incremental_step_matches_dense_rebuild() {
+        let s = shapes();
+        let img_len = s.img * s.img * s.channels;
+        let theta_len = 64usize;
+        let mut rng = Rng::new(42);
+        let theta: Vec<f32> = (0..theta_len).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+        let sup = images(&mut rng, s.max_support, img_len);
+        let qry = images(&mut rng, s.max_query, img_len);
+
+        // narrow mask → incremental path
+        let mut b = UpdateMask::builder(theta_len);
+        b.add_run(3, 2);
+        let mask = b.build().unwrap();
+        let mut overlay: Vec<Vec<f32>> =
+            mask.runs().iter().map(|&(off, len)| theta[off..off + len].to_vec()).collect();
+        let mut st = EmbedState::build(&s, theta_len, |t| theta[t], &sup, &qry);
+        st.refresh_plan(Some(&mask));
+        assert!(st.incremental, "a 2-index mask must take the incremental path");
+        for _ in 0..3 {
+            masked_shrink_step(&mask, &mut overlay, Some(&mut st), &s, &sup, &qry, 0.05);
+        }
+        assert!(!st.dirty);
+        let fast = st.normalized(s.feat_dim);
+
+        // reference: rebuild densely from the stepped theta view
+        let mut theta2 = theta.clone();
+        for (seg, &(off, _)) in overlay.iter().zip(mask.runs()) {
+            theta2[off..off + seg.len()].copy_from_slice(seg);
+        }
+        let reference = EmbedState::build(&s, theta_len, |t| theta2[t], &sup, &qry);
+        for (a, b) in fast.iter().zip(reference.normalized(s.feat_dim).iter()) {
+            assert!((a - b).abs() < 1e-5, "incremental {a} vs dense {b}");
+        }
+    }
+
+    #[test]
+    fn wide_mask_goes_dirty_and_rebuilds() {
+        let s = shapes();
+        let img_len = s.img * s.img * s.channels;
+        let theta_len = 8usize; // tiny theta: every bucket is hit
+        let mut rng = Rng::new(7);
+        let theta: Vec<f32> = (0..theta_len).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+        let sup = images(&mut rng, s.max_support, img_len);
+        let qry = images(&mut rng, s.max_query, img_len);
+        let mut b = UpdateMask::builder(theta_len);
+        b.add_run(0, theta_len);
+        let mask = b.build().unwrap();
+        let mut overlay: Vec<Vec<f32>> = vec![theta.clone()];
+        let mut st = EmbedState::build(&s, theta_len, |t| theta[t], &sup, &qry);
+        st.refresh_plan(Some(&mask));
+        assert!(!st.incremental, "a full mask over tiny theta must rebuild densely");
+        masked_shrink_step(&mask, &mut overlay, Some(&mut st), &s, &sup, &qry, 0.1);
+        assert!(st.dirty);
+        st.rebuild_if_dirty(&s, &sup, &qry);
+        assert!(!st.dirty);
+        let got = st.normalized(s.feat_dim);
+        let reference = EmbedState::build(&s, theta_len, |t| overlay[0][t], &sup, &qry);
+        assert_eq!(got, reference.normalized(s.feat_dim), "dense rebuild must be exact");
+    }
+
+    #[test]
+    fn stepping_without_embed_state_shrinks_segments() {
+        let s = shapes();
+        let mut b = UpdateMask::builder(10);
+        b.add_run(2, 3);
+        let mask = b.build().unwrap();
+        let mut overlay = vec![vec![1.0f32; 3]];
+        masked_shrink_step(&mask, &mut overlay, None, &s, &[], &[], 0.1);
+        for &v in &overlay[0] {
+            assert!((v - 0.99).abs() < 1e-7);
+        }
+    }
+}

@@ -27,9 +27,15 @@
 //! embedding rows by applying deltas only for theta indices inside the
 //! mask's runs — `O(changed weights)` instead of `O(pixels × batch)` —
 //! with a dense rebuild fallback when the mask is too wide to pay off.
+//! That math (step, scatter maintenance, embed normalisation) lives in
+//! the `no_std`-capable [`super::analytic`] module; `AnalyticBackend`
+//! only adds the std-side orchestration (episodes, copy-on-write theta
+//! overlay, pseudo-query loss, fisher proxy) around it, so host tests
+//! and the MCU build execute the identical arithmetic.
 
 use anyhow::{anyhow, ensure, Result};
 
+use super::analytic::{self, EmbedState};
 use super::criterion::channel_l2_norms;
 use super::engine::{DeviceEpisode, DeviceState, FisherOutput, ModelEngine};
 use super::mask::UpdateMask;
@@ -295,37 +301,6 @@ impl AdaptationBackend for DeviceBackend<'_> {
 // Analytic backend (no PJRT)
 // ---------------------------------------------------------------------------
 
-/// A masked step multiplies each selected weight once; an episode runs
-/// roughly this many steps. Incremental re-embedding pays when the total
-/// delta work (`steps × affected pixels`) stays below one dense rebuild
-/// (`all pixels`), so the gate is `affected × BUDGET ≤ img_len`.
-const INCREMENTAL_STEP_BUDGET: usize = 8;
-
-/// Per-episode embedding state of the analytic backend.
-///
-/// The analytic embedding of image `x` is linear in theta:
-/// `raw[f] = Σ_i x[i] · (theta[bucket(i)] + 0.05)` over pixels `i` with
-/// lane `i % feat_dim == f`, followed by L2 normalisation. Everything
-/// theta-dependent is therefore expressible through two per-episode
-/// tables — the per-pixel projection weight `proj[i]` and the inverse
-/// pixel→theta scatter `buckets` — and a masked step only has to touch
-/// the pixels whose bucket lies inside the mask's runs.
-struct EmbedState {
-    /// `theta[bucket(i)] + 0.05` per flat pixel, maintained on step.
-    proj: Vec<f32>,
-    /// Pixels grouped by theta bucket, sorted by bucket index.
-    buckets: Vec<(u32, Vec<u32>)>,
-    /// Pre-normalisation embedding rows, `(eval_batch, feat_dim)`.
-    raw: Vec<f32>,
-    /// `raw` lags `proj` (wide-mask steps skip the per-image deltas and
-    /// the next `embed` rebuilds densely from `proj`).
-    dirty: bool,
-    /// Whether per-step raw deltas pay off for the current mask.
-    incremental: bool,
-    /// Pixels whose bucket falls inside the current mask.
-    affected_pixels: usize,
-}
-
 /// Artifact-free backend: a deterministic host-side model of the four
 /// primitives. It is *not* a neural network — embeddings come from a
 /// theta-seeded sparse projection of the images and the loss follows a
@@ -379,15 +354,6 @@ impl<'m> AnalyticBackend<'m> {
         }
     }
 
-    /// Theta bucket of flat pixel `i` (cheap integer hash into theta, so
-    /// trained weights move the embeddings). Must stay in lock-step with
-    /// the dense reference arm in `bench_hotpath`.
-    #[inline]
-    fn bucket_of(i: usize, theta_len: usize) -> usize {
-        let h = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
-        (h % theta_len as u64) as usize
-    }
-
     /// Current value of theta index `t`: live overlay, else the most
     /// recently retired segment covering it, else base.
     fn theta_at(&self, t: usize) -> f32 {
@@ -436,62 +402,23 @@ impl<'m> AnalyticBackend<'m> {
         if self.embed.is_some() {
             return;
         }
-        let s = &self.meta.shapes;
-        debug_assert_eq!(s.eval_batch, s.max_support + s.max_query, "eval batch layout");
-        let img_len = s.img * s.img * s.channels;
-        let theta_len = self.base.theta.len();
-        let mut proj = vec![1.0f32; img_len];
-        let mut buckets: Vec<(u32, Vec<u32>)> = Vec::new();
-        if theta_len > 0 {
-            let mut pairs: Vec<(u32, u32)> = (0..img_len)
-                .map(|i| (Self::bucket_of(i, theta_len) as u32, i as u32))
-                .collect();
-            for &(t, i) in &pairs {
-                // Keep a constant floor so all-zero thetas still embed
-                // the image (seed behaviour, preserved bit-for-bit).
-                proj[i as usize] = self.theta_at(t as usize) + 0.05;
-            }
-            pairs.sort_unstable();
-            for (t, i) in pairs {
-                match buckets.last_mut() {
-                    Some((bt, pixels)) if *bt == t => pixels.push(i),
-                    _ => buckets.push((t, vec![i])),
-                }
-            }
-        }
-        let mut raw = vec![0.0f32; s.eval_batch * s.feat_dim];
-        let sup_rows = s.max_support * s.feat_dim;
-        accumulate_rows(&self.padded.sup_x, img_len, &proj, s.feat_dim, &mut raw[..sup_rows]);
-        accumulate_rows(&self.padded.qry_x, img_len, &proj, s.feat_dim, &mut raw[sup_rows..]);
-        self.embed = Some(EmbedState {
-            proj,
-            buckets,
-            raw,
-            dirty: false,
-            incremental: false,
-            affected_pixels: 0,
-        });
+        let st = EmbedState::build(
+            &self.meta.shapes,
+            self.base.theta.len(),
+            |t| self.theta_at(t),
+            &self.padded.sup_x,
+            &self.padded.qry_x,
+        );
+        self.embed = Some(st);
         self.refresh_embed_plan();
     }
 
     /// Re-derive the incremental-vs-dense decision for the current mask.
     fn refresh_embed_plan(&mut self) {
-        let Some(st) = self.embed.as_mut() else { return };
-        let img_len = st.proj.len();
-        let mut affected = 0usize;
-        if let Some(mask) = &self.mask {
-            for &(off, len) in mask.runs() {
-                let lo = st.buckets.partition_point(|&(t, _)| (t as usize) < off);
-                for (t, pixels) in &st.buckets[lo..] {
-                    if *t as usize >= off + len {
-                        break;
-                    }
-                    affected += pixels.len();
-                }
-            }
+        let Self { embed, mask, .. } = self;
+        if let Some(st) = embed.as_mut() {
+            st.refresh_plan(mask.as_ref());
         }
-        st.affected_pixels = affected;
-        st.incremental = self.mask.is_some() && affected * INCREMENTAL_STEP_BUDGET <= img_len;
     }
 
     /// `(affected_pixels, incremental)` of the current embed plan, once
@@ -499,22 +426,6 @@ impl<'m> AnalyticBackend<'m> {
     /// and tests).
     pub fn embed_plan(&self) -> Option<(usize, bool)> {
         self.embed.as_ref().map(|st| (st.affected_pixels, st.incremental))
-    }
-}
-
-/// Accumulate pre-norm embedding rows: `raw[b][j] += x[b][c·F + j] ·
-/// proj[c·F + j]` in ascending pixel order (bit-identical to the seed's
-/// per-pixel `row[i % F] += x·w(i)` scan, with the hash hoisted out).
-fn accumulate_rows(images: &[f32], img_len: usize, proj: &[f32], feat_dim: usize, raw: &mut [f32]) {
-    if img_len == 0 {
-        return;
-    }
-    for (img, row) in images.chunks_exact(img_len).zip(raw.chunks_exact_mut(feat_dim)) {
-        for (chunk, pchunk) in img.chunks(feat_dim).zip(proj.chunks(feat_dim)) {
-            for ((r, &x), &p) in row.iter_mut().zip(chunk).zip(pchunk) {
-                *r += x * p;
-            }
-        }
     }
 }
 
@@ -556,59 +467,17 @@ impl AdaptationBackend for AnalyticBackend<'_> {
         let mask = mask.as_ref().ok_or_else(|| anyhow!("set_mask before step"))?;
         *t += 1;
         *steps_taken += 1;
-        let decay = lr * 0.1;
-        let s = &meta.shapes;
-        let img_len = s.img * s.img * s.channels;
-        // Masked shrink step over the masked segments only — the sparse
-        // analogue of the dense scan, with the same per-parameter update
-        // (so frozen parameters provably never move). When embed state
-        // exists, the projection table follows along, and in incremental
-        // mode the cached raw rows absorb the exact per-weight deltas.
-        for (run_i, &(off, len)) in mask.runs().iter().enumerate() {
-            let seg = &mut overlay[run_i];
-            if let Some(st) = embed.as_mut() {
-                let mut bi = st.buckets.partition_point(|&(bt, _)| (bt as usize) < off);
-                for (j, p) in seg.iter_mut().enumerate() {
-                    let old = *p;
-                    let new = old - decay * old;
-                    *p = new;
-                    if bi < st.buckets.len() && st.buckets[bi].0 as usize == off + j {
-                        let pixels = &st.buckets[bi].1;
-                        for &pix in pixels {
-                            st.proj[pix as usize] = new + 0.05;
-                        }
-                        let delta = new - old;
-                        if st.incremental && delta != 0.0 {
-                            for &pix in pixels {
-                                let pix = pix as usize;
-                                let lane = pix % s.feat_dim;
-                                for b in 0..s.max_support {
-                                    let x = padded.sup_x[b * img_len + pix];
-                                    if x != 0.0 {
-                                        st.raw[b * s.feat_dim + lane] += x * delta;
-                                    }
-                                }
-                                for q in 0..s.max_query {
-                                    let x = padded.qry_x[q * img_len + pix];
-                                    if x != 0.0 {
-                                        st.raw[(s.max_support + q) * s.feat_dim + lane] +=
-                                            x * delta;
-                                    }
-                                }
-                            }
-                        }
-                        bi += 1;
-                    }
-                }
-                if !st.incremental {
-                    st.dirty = true;
-                }
-            } else {
-                for p in seg.iter_mut() {
-                    *p -= decay * *p;
-                }
-            }
-        }
+        // The masked shrink step (and its proj/raw scatter maintenance)
+        // is the shared no_std math — see `analytic::masked_shrink_step`.
+        analytic::masked_shrink_step(
+            mask,
+            overlay,
+            embed.as_mut(),
+            &meta.shapes,
+            &padded.sup_x,
+            &padded.qry_x,
+            lr,
+        );
         // Deterministic decreasing loss, mildly shaped by the pseudo
         // labels so different episodes don't return identical curves.
         let bias = pseudo.v.iter().sum::<f32>() / pseudo.v.len().max(1) as f32;
@@ -619,21 +488,10 @@ impl AdaptationBackend for AnalyticBackend<'_> {
         self.ensure_embed();
         let meta = self.meta;
         let s = &meta.shapes;
-        let img_len = s.img * s.img * s.channels;
         let Self { embed, padded, .. } = self;
         let st = embed.as_mut().expect("ensure_embed");
-        if st.dirty {
-            st.raw.fill(0.0);
-            let sup_rows = s.max_support * s.feat_dim;
-            accumulate_rows(&padded.sup_x, img_len, &st.proj, s.feat_dim, &mut st.raw[..sup_rows]);
-            accumulate_rows(&padded.qry_x, img_len, &st.proj, s.feat_dim, &mut st.raw[sup_rows..]);
-            st.dirty = false;
-        }
-        let mut out = Vec::with_capacity(s.eval_batch * s.feat_dim);
-        for row in st.raw.chunks(s.feat_dim) {
-            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
-            out.extend(row.iter().map(|v| v / norm));
-        }
+        st.rebuild_if_dirty(s, &padded.sup_x, &padded.qry_x);
+        let out = st.normalized(s.feat_dim);
         ensure!(
             out.len() == s.eval_batch * s.feat_dim,
             "analytic embed produced {} floats, expected {}",

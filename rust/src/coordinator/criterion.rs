@@ -7,8 +7,11 @@
 //! and M_i its MAC count — i.e. Fisher potential per normalised parameter
 //! per normalised MAC.
 
+use alloc::{vec, vec::Vec};
+
 use super::fisher::FisherReport;
 use crate::model::{ArchFlavor, ModelMeta};
+use crate::util::math;
 
 /// Layer-scoring schemes (Table 3's rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,7 +94,7 @@ pub fn weight_l2_norms(meta: &ModelMeta, theta: &[f32]) -> Vec<f64> {
             out[e.layer] += s;
         }
     }
-    out.iter_mut().for_each(|v| *v = v.sqrt());
+    out.iter_mut().for_each(|v| *v = math::sqrt64(*v));
     out
 }
 
@@ -116,7 +119,7 @@ pub fn channel_l2_norms(meta: &ModelMeta, theta: &[f32]) -> Vec<Vec<f64>> {
     }
     for l in &mut out {
         for v in l.iter_mut() {
-            *v = v.sqrt();
+            *v = math::sqrt64(*v);
         }
     }
     out

@@ -1,6 +1,8 @@
 //! Fisher aggregation: per-channel Delta_o -> per-layer potentials
 //! (paper Sec 2.2: P = sum_o Delta_o).
 
+use alloc::vec::Vec;
+
 use crate::model::ModelMeta;
 
 /// Per-layer view over the flat fisher output.
@@ -29,7 +31,7 @@ impl FisherReport {
     pub fn top_k_channels(&self, l: usize, k: usize) -> Vec<usize> {
         let d = &self.deltas[l];
         let mut idx: Vec<usize> = (0..d.len()).collect();
-        idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap_or(std::cmp::Ordering::Equal));
+        idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap_or(core::cmp::Ordering::Equal));
         idx.truncate(k.min(d.len()));
         idx
     }

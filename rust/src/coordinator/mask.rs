@@ -13,6 +13,8 @@
 //! - the dense f32 vector is materialised exactly once, at the PJRT
 //!   upload boundary ([`UpdateMask::dense`]).
 
+use alloc::{vec, vec::Vec};
+
 use anyhow::{ensure, Result};
 
 /// A sparse 0/1 parameter-extent mask: sorted disjoint runs over

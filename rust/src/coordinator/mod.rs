@@ -29,29 +29,50 @@
 //! per episode at the PJRT upload boundary. (The deprecated
 //! `method_selection` / `run_episode` shims were removed with this
 //! signature change; use [`Method::selection`] and [`AdaptationSession`].)
+//!
+//! no_std split: the **decision core** — scoring ([`criterion`],
+//! [`fisher`]), budgeted selection ([`selection`]), masks ([`mask`]),
+//! method/policy plumbing ([`trainer`]), the SparseUpdate genome/
+//! feasibility machinery ([`search`]) and the analytic step/embed math
+//! ([`analytic`]) — compiles `no_std + alloc`. Session orchestration,
+//! PJRT backends, the engine, evaluator, pretraining and analysis are
+//! host-side (`std`).
 
-pub mod analysis;
-pub mod backend;
+pub mod analytic;
 pub mod criterion;
-pub mod engine;
-pub mod evaluator;
 pub mod fisher;
 pub mod mask;
-pub mod pretrain;
 pub mod search;
 pub mod selection;
-pub mod session;
 pub mod trainer;
 
+#[cfg(feature = "std")]
+pub mod analysis;
+#[cfg(feature = "std")]
+pub mod backend;
+#[cfg(feature = "std")]
+pub mod engine;
+#[cfg(feature = "std")]
+pub mod evaluator;
+#[cfg(feature = "std")]
+pub mod pretrain;
+#[cfg(feature = "std")]
+pub mod session;
+
+#[cfg(feature = "std")]
 pub use backend::{
     AdaptationBackend, AnalyticBackend, Backend, DeviceBackend, HostBackend, SyncedParams,
 };
 pub use criterion::Criterion;
+#[cfg(feature = "std")]
 pub use engine::{FisherOutput, ModelEngine};
+#[cfg(feature = "std")]
 pub use evaluator::episode_accuracy;
 pub use fisher::FisherReport;
 pub use mask::{UpdateMask, UpdateMaskBuilder};
+#[cfg(feature = "std")]
 pub use pretrain::{meta_train, PretrainConfig};
 pub use selection::{Budgets, ChannelScheme, Selection};
+#[cfg(feature = "std")]
 pub use session::{AdaptationSession, SessionBuilder};
 pub use trainer::{EpisodeResult, Method, StaticPolicy, TrainConfig};

@@ -8,15 +8,32 @@
 //! accuracy on held-out *source-domain* episodes (the searcher has no
 //! access to the target data — exactly the paper's criticism of the
 //! approach), constrained by the same memory budget TinyTrain gets.
+//!
+//! no_std split: the genome machinery — [`RATIO_CHOICES`], [`Genome`],
+//! [`genome_to_policy`], [`resolve_budget`], [`FeasibilityOracle`],
+//! [`random_feasible`], [`mutate`] and [`default_policy`] — is pure
+//! ledger arithmetic and compiles for the MCU core (a device can check
+//! and locally repair a shipped policy against its real budget). Only
+//! the fitness evaluation (episodes through a PJRT session) and the
+//! JSON persistence helpers need `std`.
+
+use alloc::{vec, vec::Vec};
 
 use anyhow::{anyhow, ensure, Result};
 
+#[cfg(feature = "std")]
 use super::engine::ModelEngine;
+#[cfg(feature = "std")]
 use super::session::AdaptationSession;
-use super::trainer::{Method, StaticPolicy, TrainConfig};
+use super::trainer::StaticPolicy;
+#[cfg(feature = "std")]
+use super::trainer::{Method, TrainConfig};
 use crate::accounting::{CostLedger, Optimizer};
+#[cfg(feature = "std")]
 use crate::data::{domain_by_name, Sampler};
-use crate::model::{ModelMeta, ParamStore};
+use crate::model::ModelMeta;
+#[cfg(feature = "std")]
+use crate::model::ParamStore;
 use crate::util::rng::Rng;
 
 pub const RATIO_CHOICES: [f64; 5] = [0.0, 0.125, 0.25, 0.5, 1.0];
@@ -44,9 +61,11 @@ impl Default for SearchConfig {
     }
 }
 
-type Genome = Vec<usize>; // index into RATIO_CHOICES per layer
+/// Index into [`RATIO_CHOICES`] per layer.
+pub type Genome = Vec<usize>;
 
-fn genome_to_policy(g: &Genome) -> StaticPolicy {
+/// Materialise a genome as the static policy it encodes.
+pub fn genome_to_policy(g: &Genome) -> StaticPolicy {
     StaticPolicy {
         layer_ratios: g
             .iter()
@@ -60,7 +79,7 @@ fn genome_to_policy(g: &Genome) -> StaticPolicy {
 /// Resolve the search memory budget. Called once per search / policy
 /// derivation — never inside the per-genome feasibility path (the
 /// re-resolution per candidate was a measured hot spot).
-fn resolve_budget(meta: &ModelMeta, budget: f64) -> f64 {
+pub fn resolve_budget(meta: &ModelMeta, budget: f64) -> f64 {
     if budget > 0.0 {
         return budget;
     }
@@ -75,22 +94,22 @@ fn resolve_budget(meta: &ModelMeta, budget: f64) -> f64 {
 /// O(nonzero genes · log n) and a mutation O(flipped genes · log n),
 /// versus the former full O(layers) re-pricing (plus a redundant budget
 /// re-resolution) per candidate.
-struct FeasibilityOracle<'a> {
+pub struct FeasibilityOracle<'a> {
     ledger: CostLedger<'a>,
     budget: f64,
 }
 
 impl<'a> FeasibilityOracle<'a> {
-    fn new(meta: &'a ModelMeta, budget: f64) -> Self {
+    pub fn new(meta: &'a ModelMeta, budget: f64) -> Self {
         FeasibilityOracle { ledger: CostLedger::new(&meta.scaled, Optimizer::Adam), budget }
     }
 
-    fn within_budget(&self) -> bool {
+    pub fn within_budget(&self) -> bool {
         self.ledger.memory_total() <= self.budget
     }
 
     /// Apply a genome's nonzero genes on top of the frozen ledger.
-    fn apply(&mut self, g: &Genome) {
+    pub fn apply(&mut self, g: &Genome) {
         for (l, &r) in g.iter().enumerate() {
             if r > 0 {
                 self.ledger.set_ratio(l, RATIO_CHOICES[r]);
@@ -99,7 +118,7 @@ impl<'a> FeasibilityOracle<'a> {
     }
 
     /// Undo [`Self::apply`] of the same genome.
-    fn revert(&mut self, g: &Genome) {
+    pub fn revert(&mut self, g: &Genome) {
         for (l, &r) in g.iter().enumerate() {
             if r > 0 {
                 self.ledger.set_ratio(l, 0.0);
@@ -108,7 +127,7 @@ impl<'a> FeasibilityOracle<'a> {
     }
 
     /// Whole-genome feasibility (used for fresh random genomes).
-    fn feasible(&mut self, g: &Genome) -> bool {
+    pub fn feasible(&mut self, g: &Genome) -> bool {
         self.apply(g);
         let ok = self.within_budget();
         self.revert(g);
@@ -120,7 +139,7 @@ impl<'a> FeasibilityOracle<'a> {
 /// this sampler forever.
 const RANDOM_FEASIBLE_ATTEMPTS: usize = 256;
 
-fn random_feasible(oracle: &mut FeasibilityOracle<'_>, rng: &mut Rng) -> Result<Genome> {
+pub fn random_feasible(oracle: &mut FeasibilityOracle<'_>, rng: &mut Rng) -> Result<Genome> {
     let n = oracle.ledger.layer_count();
     ensure!(n > 0, "architecture has no layers to search over");
     for _ in 0..RANDOM_FEASIBLE_ATTEMPTS {
@@ -163,7 +182,7 @@ fn random_feasible(oracle: &mut FeasibilityOracle<'_>, rng: &mut Rng) -> Result<
 /// Mutate `g` into a feasible child. The parent is applied to the ledger
 /// once; each candidate then costs only its flipped genes (applied and
 /// reverted as deltas), so 20 attempts stay O(flips), not O(20 · layers).
-fn mutate(oracle: &mut FeasibilityOracle<'_>, g: &Genome, rng: &mut Rng) -> Genome {
+pub fn mutate(oracle: &mut FeasibilityOracle<'_>, g: &Genome, rng: &mut Rng) -> Genome {
     let n = g.len();
     oracle.apply(g);
     let mut found = None;
@@ -194,6 +213,7 @@ fn mutate(oracle: &mut FeasibilityOracle<'_>, g: &Genome, rng: &mut Rng) -> Geno
 }
 
 /// Fitness: mean post-adaptation accuracy on held-out source episodes.
+#[cfg(feature = "std")]
 fn fitness(
     engine: &ModelEngine,
     params: &ParamStore,
@@ -219,6 +239,7 @@ fn fitness(
 }
 
 /// Run the evolutionary search; returns the best static policy found.
+#[cfg(feature = "std")]
 pub fn evolutionary_search(
     engine: &ModelEngine,
     params: &ParamStore,
@@ -278,6 +299,7 @@ pub fn default_policy(meta: &crate::model::ModelMeta, mem_budget: f64) -> Static
 }
 
 /// Persist / restore a policy as JSON next to the artifacts.
+#[cfg(feature = "std")]
 pub fn save_policy(path: &std::path::Path, policy: &StaticPolicy, fitness: f64) -> Result<()> {
     use crate::util::jsonio::{arr, num, obj};
     let j = obj(vec![
@@ -295,6 +317,7 @@ pub fn save_policy(path: &std::path::Path, policy: &StaticPolicy, fitness: f64) 
     Ok(())
 }
 
+#[cfg(feature = "std")]
 pub fn load_policy(path: &std::path::Path) -> Result<StaticPolicy> {
     let j = crate::util::jsonio::Json::from_file(&path.to_string_lossy())?;
     let ratios = j

@@ -10,11 +10,14 @@
 //! analytic accounting and (b) a segment-based [`UpdateMask`] for the
 //! training backends (densified once at the PJRT upload boundary).
 
+use alloc::{vec, vec::Vec};
+
 use super::criterion::{channel_l2_norms, layer_scores, weight_l2_norms, Criterion};
 use super::fisher::FisherReport;
 use super::mask::UpdateMask;
 use crate::accounting::{CostLedger, Optimizer, UpdatePlan};
 use crate::model::ModelMeta;
+use crate::util::math;
 use crate::util::rng::Rng;
 
 /// Resource budgets for on-device adaptation.
@@ -135,7 +138,7 @@ pub fn select_layers(
     let compute_budget = ledger.full_backward_macs() * budgets.compute_frac;
 
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(core::cmp::Ordering::Equal));
 
     let mut selected = Vec::new();
     for &l in &order {
@@ -165,7 +168,7 @@ pub fn select_channels(
         .iter()
         .map(|&l| {
             let cout = meta.scaled.layers[l].cout;
-            let k = ((cout as f64 * ratio).ceil() as usize).clamp(1, cout);
+            let k = (math::ceil64(cout as f64 * ratio) as usize).clamp(1, cout);
             match scheme {
                 ChannelScheme::Fisher => fisher
                     .expect("Fisher scheme needs a fisher report")
@@ -174,7 +177,7 @@ pub fn select_channels(
                     let scores = &l2.as_ref().unwrap()[l];
                     let mut idx: Vec<usize> = (0..cout).collect();
                     idx.sort_by(|&a, &b| {
-                        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+                        scores[b].partial_cmp(&scores[a]).unwrap_or(core::cmp::Ordering::Equal)
                     });
                     idx.truncate(k);
                     idx

@@ -4,6 +4,10 @@
 //! All mask builders produce segment-based [`UpdateMask`]s — the dense
 //! f32 vector exists only at the PJRT upload boundary.
 
+use alloc::format;
+use alloc::string::String;
+use alloc::{vec, vec::Vec};
+
 use anyhow::Result;
 
 use super::criterion::Criterion;
@@ -12,6 +16,7 @@ use super::mask::UpdateMask;
 use super::selection::{run_selection, Budgets, ChannelScheme, Selection};
 use crate::accounting::{Optimizer, UpdatePlan};
 use crate::model::ModelMeta;
+use crate::util::math;
 
 /// On-device training methods (paper Sec 3.1 baselines + ours).
 #[derive(Debug, Clone, PartialEq)]
@@ -54,7 +59,7 @@ impl Method {
             Method::FullTrain => "FullTrain".into(),
             Method::LastLayer => "LastLayer".into(),
             Method::TinyTl => "TinyTL".into(),
-            Method::AdapterDrop(f) => format!("AdapterDrop-{}%", (f * 100.0).round()),
+            Method::AdapterDrop(f) => format!("AdapterDrop-{}%", math::round64(f * 100.0)),
             Method::SparseUpdate(_) => "SparseUpdate".into(),
             Method::TinyTrain { criterion, scheme, .. } => {
                 match (criterion, scheme) {
@@ -227,7 +232,7 @@ pub fn last_layer_mask(meta: &crate::model::ModelMeta) -> (UpdateMask, UpdatePla
 /// [frac*n_blocks, n_blocks) plus the head.
 pub fn adapter_mask(meta: &crate::model::ModelMeta, frac: f64) -> (UpdateMask, UpdatePlan) {
     let n_blocks = meta.scaled.blocks.len();
-    let dropped = ((n_blocks as f64) * frac).round() as usize;
+    let dropped = math::round64((n_blocks as f64) * frac) as usize;
     let mut b = UpdateMask::builder(meta.total_theta);
     for block in dropped..n_blocks {
         for e in meta.adapter_entries(block) {
@@ -255,7 +260,7 @@ pub fn static_policy_mask(
     for &(l, ratio) in &policy.layer_ratios {
         plan.layer_ratio[l] = ratio;
         let cout = meta.scaled.layers[l].cout;
-        let k = ((cout as f64 * ratio).ceil() as usize).clamp(1, cout);
+        let k = (math::ceil64(cout as f64 * ratio) as usize).clamp(1, cout);
         for e in meta.layer_entries(l) {
             // the first-k rule applies per entry period (innermost axis)
             let co = *e.shape.last().unwrap();

@@ -21,17 +21,43 @@
 //! - L2/L1 (python/compile, build-time only): JAX backbones + Pallas
 //!   kernels, AOT-lowered to the HLO artifacts [`runtime`] executes.
 //!
+//! # MCU envelope (`no_std`)
+//!
+//! With `--no-default-features --features alloc` the crate builds
+//! `no_std + alloc`: only the decision core is compiled — [`accounting`]
+//! (CostLedger, byte pricing), the [`coordinator`] selection / mask /
+//! policy-search / analytic step-and-embed math, [`model`] metadata and
+//! parameter stores, and the no_std-safe [`util`] subset (RNG, pooled
+//! buffers, soft float math). Host-only tiers ([`data`], [`devices`],
+//! [`harness`], [`metrics`], [`runtime`], [`serve`], CLI, benches) need
+//! the default-on `std` feature. `rust/ci_size_check.sh` links the core
+//! into `examples/core_footprint.rs` under the `embedded` profile and
+//! gates its section sizes (SIZE_core.json) in CI.
+//!
 //! Tier-1 verification is `rust/ci.sh` (fmt + clippy + build + test);
 //! PJRT-dependent integration tests self-skip when the workspace is
 //! built against the stub `xla` backend in `vendor/`.
 
+#![cfg_attr(not(feature = "std"), no_std)]
+
+#[cfg(not(feature = "alloc"))]
+compile_error!("tinytrain requires at least the `alloc` feature (enable `alloc` or `std`)");
+
+extern crate alloc;
+
 pub mod accounting;
 pub mod coordinator;
+#[cfg(feature = "std")]
 pub mod data;
+#[cfg(feature = "std")]
 pub mod devices;
+#[cfg(feature = "std")]
 pub mod harness;
+#[cfg(feature = "std")]
 pub mod metrics;
 pub mod model;
+#[cfg(feature = "std")]
 pub mod runtime;
+#[cfg(feature = "std")]
 pub mod serve;
 pub mod util;

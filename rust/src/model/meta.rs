@@ -1,9 +1,20 @@
 //! Parsed form of `<arch>_meta.json`.
+//!
+//! The struct definitions and the [`ModelMeta::synthetic`] constructor
+//! are `no_std + alloc` (the MCU build ships metadata baked in, or
+//! receives it pre-parsed); JSON parsing from disk is std-only.
 
+#[cfg(feature = "std")]
 use std::path::Path;
 
+use alloc::format;
+use alloc::string::String;
+use alloc::{vec, vec::Vec};
+
+#[cfg(feature = "std")]
 use anyhow::Result;
 
+#[cfg(feature = "std")]
 use crate::util::jsonio::Json;
 
 /// One conv layer — the unit of TinyTrain's layer selection.
@@ -96,6 +107,7 @@ pub struct ModelMeta {
     pub shapes: EpisodeShapes,
 }
 
+#[cfg(feature = "std")]
 fn parse_layer(j: &Json) -> Result<LayerInfo> {
     Ok(LayerInfo {
         name: j.str_of("name")?,
@@ -115,6 +127,7 @@ fn parse_layer(j: &Json) -> Result<LayerInfo> {
     })
 }
 
+#[cfg(feature = "std")]
 fn parse_block(j: &Json) -> Result<BlockInfo> {
     Ok(BlockInfo {
         idx: j.usize_of("idx")?,
@@ -134,6 +147,7 @@ fn parse_block(j: &Json) -> Result<BlockInfo> {
     })
 }
 
+#[cfg(feature = "std")]
 fn parse_flavor(j: &Json) -> Result<ArchFlavor> {
     Ok(ArchFlavor {
         img: j.usize_of("img")?,
@@ -146,6 +160,7 @@ fn parse_flavor(j: &Json) -> Result<ArchFlavor> {
 }
 
 impl ModelMeta {
+    #[cfg(feature = "std")]
     pub fn load(path: &Path) -> Result<ModelMeta> {
         let j = Json::from_file(&path.to_string_lossy())?;
         let flavors = j.req("flavors")?;

@@ -2,12 +2,22 @@
 //!
 //! The coordinator owns exactly one of these per deployed model. He-init
 //! and binary save/load live here; the packing comes from ModelMeta.
+//!
+//! The store itself (and the episode-facing `adapted_copy` /
+//! `reset_optimizer` / `from_theta`) is `no_std + alloc`; He-init and
+//! file I/O are std-only — an MCU deployment loads pretrained theta
+//! bytes through [`ParamStore::from_theta`], it never He-inits.
 
+#[cfg(feature = "std")]
 use std::path::Path;
 
+use alloc::{vec, vec::Vec};
+
+#[cfg(feature = "std")]
 use anyhow::{anyhow, Result};
 
 use super::meta::ModelMeta;
+#[cfg(feature = "std")]
 use crate::util::rng::Rng;
 
 /// Flat parameter store matching the AOT graphs' theta packing.
@@ -19,11 +29,23 @@ pub struct ParamStore {
     pub t: u64,
 }
 
+#[cfg(feature = "std")]
 const MAGIC: u32 = 0x7A11_0001; // "tinytrain weights v1"
 
 impl ParamStore {
+    /// Wrap an already-materialised theta (e.g. pretrained weights baked
+    /// into MCU flash) with fresh optimiser state. The `no_std` analogue
+    /// of `load`: length checking is on the caller, exactly as `load`
+    /// checks against `meta.total_theta`.
+    pub fn from_theta(meta: &ModelMeta, theta: Vec<f32>) -> ParamStore {
+        debug_assert_eq!(theta.len(), meta.total_theta, "theta length mismatch");
+        let n = theta.len();
+        ParamStore { theta, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
     /// He(-fan-in) initialisation: weights ~ N(0, sqrt(2/fan_in)),
     /// gamma = 1, beta = 0, adapters = 0 (inactive lite-residuals).
+    #[cfg(feature = "std")]
     pub fn init(meta: &ModelMeta, seed: u64) -> ParamStore {
         let mut theta = vec![0.0f32; meta.total_theta];
         let mut rng = Rng::new(seed);
@@ -65,6 +87,7 @@ impl ParamStore {
     }
 
     /// Save theta to a little-endian binary file (moments are transient).
+    #[cfg(feature = "std")]
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut bytes = Vec::with_capacity(8 + self.theta.len() * 4);
         bytes.extend_from_slice(&MAGIC.to_le_bytes());
@@ -76,6 +99,7 @@ impl ParamStore {
     }
 
     /// Load theta saved by `save`; moments start at zero.
+    #[cfg(feature = "std")]
     pub fn load(meta: &ModelMeta, path: &Path) -> Result<ParamStore> {
         let bytes =
             std::fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
@@ -106,6 +130,7 @@ impl ParamStore {
     }
 
     /// Load pre-trained weights if present, else He-init (and warn).
+    #[cfg(feature = "std")]
     pub fn load_or_init(meta: &ModelMeta, path: &Path, seed: u64) -> ParamStore {
         match Self::load(meta, path) {
             Ok(p) => p,

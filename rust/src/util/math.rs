@@ -1,0 +1,330 @@
+//! Float math shim for the `no_std` decision core.
+//!
+//! `f64::{sqrt, ceil, round, abs}` live in `std` (libm-backed), not
+//! `core`, so the gated modules route through these wrappers: with the
+//! `std` feature they delegate to the hardware/libm implementations;
+//! without it they fall back to the [`soft`] integer implementations
+//! below. The soft versions are **bit-identical** to IEEE-754
+//! round-to-nearest-even results (sqrt is uniquely correctly rounded,
+//! and trunc/ceil/round are exact integer-bit operations), which is
+//! what makes the std-vs-no_std bit-identity tests in
+//! `tests/no_std_core.rs` meaningful: the same selection, pricing and
+//! analytic-step arithmetic produces the same bits on host and MCU
+//! builds. The delegating wrappers keep the std hot path on hardware
+//! instructions; `soft` is compiled unconditionally so the std test
+//! suite can assert equivalence over random bit patterns.
+
+/// `x.sqrt()` (f64).
+#[cfg(feature = "std")]
+#[inline]
+pub fn sqrt64(x: f64) -> f64 {
+    x.sqrt()
+}
+
+/// `x.sqrt()` (f64), soft correctly-rounded fallback.
+#[cfg(not(feature = "std"))]
+#[inline]
+pub fn sqrt64(x: f64) -> f64 {
+    soft::sqrt64(x)
+}
+
+/// `x.sqrt()` (f32).
+#[cfg(feature = "std")]
+#[inline]
+pub fn sqrt32(x: f32) -> f32 {
+    x.sqrt()
+}
+
+/// `x.sqrt()` (f32), via the f64 soft path (double rounding through a
+/// correctly-rounded f64 sqrt is exact for f32: 53 >= 2 * 24 + 2).
+#[cfg(not(feature = "std"))]
+#[inline]
+pub fn sqrt32(x: f32) -> f32 {
+    soft::sqrt32(x)
+}
+
+/// `x.ceil()` (f64).
+#[cfg(feature = "std")]
+#[inline]
+pub fn ceil64(x: f64) -> f64 {
+    x.ceil()
+}
+
+/// `x.ceil()` (f64), soft fallback.
+#[cfg(not(feature = "std"))]
+#[inline]
+pub fn ceil64(x: f64) -> f64 {
+    soft::ceil64(x)
+}
+
+/// `x.round()` (f64): nearest integer, ties away from zero.
+#[cfg(feature = "std")]
+#[inline]
+pub fn round64(x: f64) -> f64 {
+    x.round()
+}
+
+/// `x.round()` (f64), soft fallback.
+#[cfg(not(feature = "std"))]
+#[inline]
+pub fn round64(x: f64) -> f64 {
+    soft::round64(x)
+}
+
+/// `x.abs()` (f64).
+#[cfg(feature = "std")]
+#[inline]
+pub fn abs64(x: f64) -> f64 {
+    x.abs()
+}
+
+/// `x.abs()` (f64), soft fallback (sign-bit clear).
+#[cfg(not(feature = "std"))]
+#[inline]
+pub fn abs64(x: f64) -> f64 {
+    soft::abs64(x)
+}
+
+/// Pure-integer IEEE-754 implementations, bit-identical to the std
+/// (libm/hardware) results. Compiled under every feature set so the
+/// std test suite can assert equivalence directly.
+pub mod soft {
+    const MASK52: u64 = (1u64 << 52) - 1;
+
+    /// Floor integer square root (bit-by-bit; no `u128::isqrt` on the
+    /// pinned toolchain).
+    fn isqrt_u128(n: u128) -> u128 {
+        if n == 0 {
+            return 0;
+        }
+        let mut x = n;
+        let mut r: u128 = 0;
+        let top = 127 - n.leading_zeros();
+        let mut bit = 1u128 << (top & !1);
+        while bit != 0 {
+            if x >= r + bit {
+                x -= r + bit;
+                r = (r >> 1) + bit;
+            } else {
+                r >>= 1;
+            }
+            bit >>= 2;
+        }
+        r
+    }
+
+    /// Correctly-rounded f64 square root. IEEE-754 requires sqrt to be
+    /// correctly rounded, so matching that is bit-identity with std:
+    /// decompose `x = m * 2^e` exactly, force `e` even, scale `m` so
+    /// the floor root carries 53 bits, then round up iff the remainder
+    /// exceeds the root (an exact halfway case is impossible for sqrt).
+    pub fn sqrt64(x: f64) -> f64 {
+        let bits = x.to_bits();
+        let sign = bits >> 63;
+        let exp = ((bits >> 52) & 0x7ff) as i64;
+        let frac = bits & MASK52;
+        if exp == 0x7ff {
+            // NaN propagates; sqrt(+inf) = +inf, sqrt(-inf) = NaN.
+            if frac != 0 {
+                return x;
+            }
+            return if sign == 0 { x } else { f64::NAN };
+        }
+        if exp == 0 && frac == 0 {
+            return x; // +-0 (sign preserved, as std does)
+        }
+        if sign == 1 {
+            return f64::NAN;
+        }
+        // x = m * 2^e exactly, normalized so m is a 53-bit integer.
+        let (mut m, mut e): (u128, i64) = if exp == 0 {
+            let mut m = frac as u128;
+            let mut e = -1074i64;
+            while m < (1u128 << 52) {
+                m <<= 1;
+                e -= 1;
+            }
+            (m, e)
+        } else {
+            ((frac | (1 << 52)) as u128, exp - 1023 - 52)
+        };
+        if e & 1 != 0 {
+            m <<= 1;
+            e -= 1;
+        }
+        let mut q = e / 2 - 26;
+        m <<= 52; // root of m now has exactly 53 bits
+        let mut r = isqrt_u128(m);
+        let rem = m - r * r;
+        if rem > r {
+            r += 1; // round to nearest (never exactly halfway)
+        }
+        if r == (1 << 53) {
+            r = 1 << 52;
+            q += 1;
+        }
+        // sqrt of any positive finite double is a normal double.
+        let e_out = (q + 52 + 1023) as u64;
+        f64::from_bits((e_out << 52) | (r as u64 & MASK52))
+    }
+
+    /// Correctly-rounded f32 square root via the f64 path: rounding a
+    /// correctly-rounded f64 sqrt down to f32 cannot double-round
+    /// (53 >= 2 * 24 + 2), so this matches `f32::sqrt` bit-for-bit.
+    pub fn sqrt32(x: f32) -> f32 {
+        sqrt64(x as f64) as f32
+    }
+
+    /// `x.trunc()`: clear the sub-integer mantissa bits.
+    pub fn trunc64(x: f64) -> f64 {
+        let bits = x.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i64 - 1023;
+        if exp >= 52 {
+            return x; // already integral (also inf/NaN passthrough)
+        }
+        if exp < 0 {
+            return f64::from_bits(bits & (1 << 63)); // +-0, sign kept
+        }
+        f64::from_bits(bits & !((1u64 << (52 - exp as u64)) - 1))
+    }
+
+    /// `x.ceil()`.
+    pub fn ceil64(x: f64) -> f64 {
+        if x.is_nan() {
+            return x;
+        }
+        let t = trunc64(x);
+        if t == x {
+            return t; // integral (and +-inf)
+        }
+        if x > 0.0 {
+            t + 1.0
+        } else {
+            t // negative non-integral truncates toward zero = ceil
+        }
+    }
+
+    /// `x.round()`: nearest, ties away from zero, zero sign preserved.
+    /// `x - trunc(x)` is exact (Sterbenz), so the 0.5 comparisons are
+    /// exact too.
+    pub fn round64(x: f64) -> f64 {
+        if x.is_nan() {
+            return x;
+        }
+        let t = trunc64(x);
+        let d = x - t;
+        if d >= 0.5 {
+            t + 1.0
+        } else if d <= -0.5 {
+            t - 1.0
+        } else {
+            t
+        }
+    }
+
+    /// `x.abs()`: clear the sign bit.
+    pub fn abs64(x: f64) -> f64 {
+        f64::from_bits(x.to_bits() & !(1u64 << 63))
+    }
+}
+
+#[cfg(all(test, feature = "std"))]
+mod tests {
+    use super::soft;
+    use crate::util::rng::Rng;
+
+    fn same_bits64(a: f64, b: f64) -> bool {
+        a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+    }
+
+    #[test]
+    fn soft_sqrt64_matches_std_on_random_bit_patterns() {
+        let mut rng = Rng::new(0x5eed_5eed);
+        for _ in 0..200_000 {
+            let x = f64::from_bits(rng.next_u64() & !(1u64 << 63));
+            assert!(
+                same_bits64(soft::sqrt64(x), x.sqrt()),
+                "sqrt mismatch at {x:e} ({:#x})",
+                x.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn soft_sqrt64_edges() {
+        let edges = [
+            0.0,
+            -0.0,
+            1.0,
+            2.0,
+            4.0,
+            0.25,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            5e-324,
+            1e-320,
+            1.0 + f64::EPSILON,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            -1.0,
+            -5e-324,
+        ];
+        for x in edges {
+            assert!(same_bits64(soft::sqrt64(x), x.sqrt()), "sqrt edge mismatch at {x:e}");
+        }
+        assert_eq!(soft::sqrt64(-0.0).to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn soft_sqrt32_matches_std() {
+        let mut rng = Rng::new(0xf32f_32f3);
+        for _ in 0..200_000 {
+            let x = f32::from_bits((rng.next_u64() as u32) & !(1u32 << 31));
+            let (got, want) = (soft::sqrt32(x), x.sqrt());
+            assert!(
+                got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                "sqrt32 mismatch at {x:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn soft_trunc_ceil_round_abs_match_std() {
+        let mut rng = Rng::new(0x0ddc_0ffe);
+        let mut check = |x: f64| {
+            assert!(same_bits64(soft::trunc64(x), x.trunc()), "trunc mismatch at {x:e}");
+            assert!(same_bits64(soft::ceil64(x), x.ceil()), "ceil mismatch at {x:e}");
+            assert!(same_bits64(soft::round64(x), x.round()), "round mismatch at {x:e}");
+            assert!(same_bits64(soft::abs64(x), x.abs()), "abs mismatch at {x:e}");
+        };
+        for x in [
+            0.5,
+            1.5,
+            2.5,
+            -0.5,
+            -1.5,
+            -2.5,
+            0.3,
+            -0.3,
+            0.0,
+            -0.0,
+            0.499_999_999_999_999_94,
+            -0.499_999_999_999_999_94,
+            4503599627370496.0,  // 2^52
+            -4503599627370496.0, // -2^52
+            4503599627370495.5,  // 2^52 - 0.5
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ] {
+            check(x);
+        }
+        for _ in 0..200_000 {
+            check(f64::from_bits(rng.next_u64()));
+        }
+        for _ in 0..50_000 {
+            check(Rng::new(rng.next_u64()).range(-1e7, 1e7));
+        }
+    }
+}

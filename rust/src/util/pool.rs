@@ -12,18 +12,33 @@
 //! thread-local on purpose — it composes with `parallel_map` without
 //! any locking (each worker thread owns its arena), and a buffer that
 //! migrates threads simply retires into the destination thread's arena.
+//!
+//! no_std subset: [`PoolBuf`] and [`take_zeroed`] keep their exact API
+//! and semantics but degrade to plain allocate/free (no thread-local
+//! storage without std); the arena, its counters and `parallel_map`
+//! are std-only. Callers observe identical buffer contents either way
+//! — recycling is purely an allocation-count optimization.
 
+use alloc::vec::Vec;
+use core::ops::{Deref, DerefMut};
+
+#[cfg(feature = "std")]
 use std::cell::RefCell;
+#[cfg(feature = "std")]
 use std::collections::HashMap;
-use std::ops::{Deref, DerefMut};
+#[cfg(feature = "std")]
 use std::sync::mpsc;
+#[cfg(feature = "std")]
 use std::sync::{Arc, Mutex};
 
 /// Per-length free-lists are individually capped, and the arena as a
 /// whole stops retaining once it holds this many floats (16 MB).
+#[cfg(feature = "std")]
 const MAX_PER_CLASS: usize = 16;
+#[cfg(feature = "std")]
 const MAX_HELD_FLOATS: usize = 1 << 22;
 
+#[cfg(feature = "std")]
 #[derive(Default)]
 struct TensorArena {
     by_len: HashMap<usize, Vec<Vec<f32>>>,
@@ -32,13 +47,15 @@ struct TensorArena {
     reuses: u64,
 }
 
+#[cfg(feature = "std")]
 thread_local! {
     static TENSOR_ARENA: RefCell<TensorArena> = RefCell::new(TensorArena::default());
 }
 
 /// A pooled `f32` tensor buffer: behaves like a boxed `[f32]` and
-/// returns its storage to the current thread's arena on drop. Cloning
-/// draws a fresh pooled buffer and copies into it.
+/// returns its storage to the current thread's arena on drop (std; a
+/// plain deallocation without it). Cloning draws a fresh pooled buffer
+/// and copies into it.
 pub struct PoolBuf {
     buf: Vec<f32>,
 }
@@ -54,6 +71,7 @@ impl PoolBuf {
 /// A zeroed pooled buffer of exactly `len` floats. Reuses a same-length
 /// buffer from the thread's arena when one is available (zeroing in
 /// place), allocating only on a cold arena.
+#[cfg(feature = "std")]
 pub fn take_zeroed(len: usize) -> PoolBuf {
     let recycled = TENSOR_ARENA
         .try_with(|a| {
@@ -73,13 +91,21 @@ pub fn take_zeroed(len: usize) -> PoolBuf {
             buf.fill(0.0);
             PoolBuf { buf }
         }
-        None => PoolBuf { buf: vec![0.0; len] },
+        None => PoolBuf { buf: alloc::vec![0.0; len] },
     }
+}
+
+/// A zeroed buffer of exactly `len` floats (no arena without std —
+/// every take is a fresh allocation, every drop a plain free).
+#[cfg(not(feature = "std"))]
+pub fn take_zeroed(len: usize) -> PoolBuf {
+    PoolBuf { buf: alloc::vec![0.0; len] }
 }
 
 /// `(takes, reuses)` counters of the current thread's arena — the
 /// zero-alloc property is testable as `reuses == takes` over a warm
 /// steady-state window.
+#[cfg(feature = "std")]
 pub fn arena_stats() -> (u64, u64) {
     TENSOR_ARENA
         .try_with(|a| {
@@ -89,6 +115,7 @@ pub fn arena_stats() -> (u64, u64) {
         .unwrap_or((0, 0))
 }
 
+#[cfg(feature = "std")]
 impl Drop for PoolBuf {
     fn drop(&mut self) {
         let buf = std::mem::take(&mut self.buf);
@@ -143,8 +170,8 @@ impl From<Vec<f32>> for PoolBuf {
     }
 }
 
-impl std::fmt::Debug for PoolBuf {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+impl core::fmt::Debug for PoolBuf {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
         write!(f, "PoolBuf(len={})", self.buf.len())
     }
 }
@@ -157,6 +184,7 @@ impl PartialEq for PoolBuf {
 
 /// Run `f(i)` for i in 0..n across up to `workers` threads, collecting
 /// results in index order. Panics in workers are propagated.
+#[cfg(feature = "std")]
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -203,6 +231,7 @@ where
 
 /// Number of workers to use by default (leave one core for the OS when
 /// there are many; on the 1-core testbed this is 1, i.e. sequential).
+#[cfg(feature = "std")]
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }

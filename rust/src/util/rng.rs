@@ -4,6 +4,13 @@
 //! of the coordinator (episode sampling, domain generators, evolutionary
 //! search, weight init) threads one of these explicitly, so whole
 //! experiments are reproducible from a single seed.
+//!
+//! The integer/uniform samplers are `no_std`-clean; only the
+//! Box-Muller normal samplers need libm (`ln`/`cos`) and are gated on
+//! `std` — on-device code loads pretrained weights instead of drawing
+//! fresh inits, so it never needs them.
+
+use alloc::vec::Vec;
 
 /// SplitMix64: tiny, fast, passes BigCrush when used as a stream.
 #[derive(Debug, Clone)]
@@ -66,13 +73,15 @@ impl Rng {
         lo + self.below(hi - lo + 1)
     }
 
-    /// Standard normal via Box-Muller.
+    /// Standard normal via Box-Muller (std-only: `ln`/`cos` are libm).
+    #[cfg(feature = "std")]
     pub fn normal(&mut self) -> f64 {
         let u1 = self.uniform().max(1e-300);
         let u2 = self.uniform();
-        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+        (-2.0 * u1.ln()).sqrt() * (2.0 * core::f64::consts::PI * u2).cos()
     }
 
+    #[cfg(feature = "std")]
     pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.normal()
     }

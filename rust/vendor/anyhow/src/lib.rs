@@ -3,19 +3,49 @@
 //! `Context::{context, with_context}` with a `:#` chain display. The
 //! API mirrors the real crate so swapping the path dependency for the
 //! crates.io release is a no-op.
+//!
+//! Mirroring the real crate's feature surface, `std` is default-on and
+//! disabling it yields a `no_std + alloc` build. The no_std build keeps
+//! message + context semantics but drops the boxed source chain and the
+//! blanket `From<E: std::error::Error>` impl (`core::error::Error` is
+//! not stable on the pinned 1.79 toolchain); no_std callers construct
+//! errors via the macros or `Error::msg`, which is exactly what the
+//! gated decision core of `tinytrain` does.
 
-use std::fmt;
+#![cfg_attr(not(feature = "std"), no_std)]
 
-/// Error type: a message plus an optional boxed cause chain.
+extern crate alloc;
+
+#[cfg(feature = "std")]
+use alloc::boxed::Box;
+use alloc::string::{String, ToString};
+use alloc::vec::Vec;
+use core::fmt;
+
+// Macro plumbing: `$crate::__private::format!` resolves in consumer
+// crates whether or not they themselves link `alloc` by that name.
+#[doc(hidden)]
+pub mod __private {
+    pub use alloc::format;
+}
+
+/// Error type: a message plus an optional boxed cause chain (the chain
+/// exists only with `std`, where `std::error::Error` is available).
 pub struct Error {
     msg: String,
+    #[cfg(feature = "std")]
     source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
     context: Vec<String>,
 }
 
 impl Error {
     pub fn msg<M: fmt::Display>(msg: M) -> Error {
-        Error { msg: msg.to_string(), source: None, context: Vec::new() }
+        Error {
+            msg: msg.to_string(),
+            #[cfg(feature = "std")]
+            source: None,
+            context: Vec::new(),
+        }
     }
 
     fn push_context(mut self, ctx: String) -> Error {
@@ -41,10 +71,13 @@ impl fmt::Display for Error {
             if !self.context.is_empty() {
                 write!(f, ": {}", self.msg)?;
             }
-            let mut src = self.source.as_ref().and_then(|s| s.source());
-            while let Some(s) = src {
-                write!(f, ": {s}")?;
-                src = s.source();
+            #[cfg(feature = "std")]
+            {
+                let mut src = self.source.as_ref().and_then(|s| s.source());
+                while let Some(s) = src {
+                    write!(f, ": {s}")?;
+                    src = s.source();
+                }
             }
         }
         Ok(())
@@ -57,13 +90,14 @@ impl fmt::Debug for Error {
     }
 }
 
+#[cfg(feature = "std")]
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
         Error { msg: e.to_string(), source: Some(Box::new(e)), context: Vec::new() }
     }
 }
 
-pub type Result<T, E = Error> = std::result::Result<T, E>;
+pub type Result<T, E = Error> = core::result::Result<T, E>;
 
 /// `.context(..)` / `.with_context(|| ..)` on fallible values.
 pub trait Context<T> {
@@ -71,6 +105,7 @@ pub trait Context<T> {
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 
+#[cfg(feature = "std")]
 impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
     fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
         self.map_err(|e| Error::from(e).push_context(ctx.to_string()))
@@ -104,14 +139,14 @@ impl<T> Context<T> for Option<T> {
 #[macro_export]
 macro_rules! anyhow {
     ($($arg:tt)*) => {
-        $crate::Error::msg(::std::format!($($arg)*))
+        $crate::Error::msg($crate::__private::format!($($arg)*))
     };
 }
 
 #[macro_export]
 macro_rules! bail {
     ($($arg:tt)*) => {
-        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
     };
 }
 
@@ -119,7 +154,7 @@ macro_rules! bail {
 macro_rules! ensure {
     ($cond:expr, $($arg:tt)*) => {
         if !($cond) {
-            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
         }
     };
 }
@@ -128,11 +163,13 @@ macro_rules! ensure {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "std")]
     fn io_err() -> std::io::Error {
         std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
     }
 
     #[test]
+    #[cfg(feature = "std")]
     fn display_plain_and_alternate() {
         let e: Error = anyhow!("top {}", 3);
         assert_eq!(format!("{e}"), "top 3");
@@ -157,6 +194,16 @@ mod tests {
     }
 
     #[test]
+    fn context_on_anyhow_result_and_option() {
+        let e: Result<()> = Err(anyhow!("root"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        let o: Option<u32> = None;
+        assert!(o.context("missing").is_err());
+    }
+
+    #[test]
+    #[cfg(feature = "std")]
     fn question_mark_converts_std_errors() {
         fn f() -> Result<()> {
             Err(io_err())?;
