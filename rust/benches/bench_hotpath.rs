@@ -41,6 +41,7 @@ use tinytrain::data::{
 };
 use tinytrain::harness::parallel::{accuracy_grid, cell_seed, episode_streams, GridConfig};
 use tinytrain::model::{EpisodeShapes, ModelMeta, ParamStore};
+use tinytrain::net::proto;
 use tinytrain::runtime::{ArtifactStore, Runtime};
 use tinytrain::serve::{self, LoopMode, ServeConfig, TenantStore, TraceConfig};
 use tinytrain::util::bench::bench;
@@ -554,6 +555,35 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
             ("p95_us", num(par.total.p95_us)),
         ]),
     ));
+
+    // --- wire decode: lazy byte scanner vs tree parser ------------------
+    // The serve trace doubles as the request corpus: every request body
+    // is decoded by both arms and asserted field-identical before the
+    // arms are timed (ADR-002's no-tree claim, measured and checked).
+    let bodies: Vec<String> = trace
+        .iter()
+        .map(|r| {
+            proto::submit_body(&r.tenant, &r.domain, "tinytrain", r.steps, r.lr, r.stream.state())
+        })
+        .collect();
+    for body in &bodies {
+        assert_eq!(
+            proto::decode_submit_lazy(body.as_bytes()).expect("lazy decode"),
+            proto::decode_submit_tree(body.as_bytes()).expect("tree decode"),
+            "decode arms diverged on {body}"
+        );
+    }
+    let before = bench("net decode: tree parser (before)", budget, || {
+        for b in &bodies {
+            std::hint::black_box(proto::decode_submit_tree(b.as_bytes()).unwrap().steps);
+        }
+    });
+    let after = bench("net decode: lazy scanner (after)", budget, || {
+        for b in &bodies {
+            std::hint::black_box(proto::decode_submit_lazy(b.as_bytes()).unwrap().steps);
+        }
+    });
+    sections.push(speedup_entry("net_decode", before.mean_secs(), after.mean_secs()));
     sections
 }
 

@@ -3,6 +3,8 @@
 #   fmt -> clippy (warnings are errors) -> release build -> tests
 #   -> no_std feature matrix (build + clippy + bit-identity tests under
 #      --no-default-features --features alloc)
+#   -> net loopback smoke (ci_net_smoke.sh: serve --listen + loadgen,
+#      wire results asserted bit-identical to the in-process arm)
 #   -> bench_hotpath smoke (writes ../BENCH_hotpath.json)
 #   -> size-budget gate (ci_size_check.sh; writes ../SIZE_core.json and
 #      prints the per-section table).
@@ -74,6 +76,9 @@ cargo clippy --lib --example core_footprint --no-default-features --features all
 
 echo "== no_std core: bit-identity tests =="
 cargo test -q --no-default-features --features alloc --test no_std_core
+
+echo "== net loopback smoke (serve --listen + loadgen wire bit-identity) =="
+./ci_net_smoke.sh --prebuilt
 
 echo "== bench_hotpath smoke (pure-rust; writes ../BENCH_hotpath.json) =="
 cargo bench --bench bench_hotpath -- smoke

@@ -1,0 +1,69 @@
+#!/usr/bin/env bash
+# Loopback smoke for the net/ HTTP front-end: start `tinytrain serve
+# --listen` on an ephemeral port with --verify-decode (every request is
+# decoded by both the lazy scanner and the tree parser and 500s on
+# divergence), replay a short closed-loop trace through `tinytrain
+# loadgen` over real sockets, and let loadgen's built-in reference check
+# assert the wire completions and final tenant deltas are bit-identical
+# to the in-process sequential arm. Fails on any non-zero exit: decode
+# divergence, protocol error, bit-identity mismatch, or an unclean
+# server drain.
+#
+# Usage: ci_net_smoke.sh [--prebuilt]
+#   --prebuilt   skip `cargo build --release` (ci.sh already built it)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if [ "${1:-}" != "--prebuilt" ]; then
+    echo "== cargo build --release (net smoke) =="
+    cargo build --release --bin tinytrain
+fi
+
+BIN=target/release/tinytrain
+if [ ! -x "$BIN" ]; then
+    echo "ci_net_smoke: $BIN missing (build first or drop --prebuilt)" >&2
+    exit 1
+fi
+
+LOG="$(mktemp)"
+SERVER_PID=0
+cleanup() {
+    kill "$SERVER_PID" 2>/dev/null || true
+    rm -f "$LOG"
+}
+trap cleanup EXIT
+
+echo "== serve --listen 127.0.0.1:0 --verify-decode =="
+"$BIN" serve --listen 127.0.0.1:0 --verify-decode --acceptors 4 --workers 4 \
+    >"$LOG" 2>&1 &
+SERVER_PID=$!
+
+# The server prints `listening on http://ADDR` on stdout once bound
+# (port 0 = ephemeral); scrape it rather than racing a fixed port.
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR="$(sed -n 's#^listening on http://##p' "$LOG" | head -n 1)"
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "ci_net_smoke: server exited before binding" >&2
+        cat "$LOG" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "ci_net_smoke: no listen line after 10s" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+echo "server bound on $ADDR"
+
+echo "== loadgen --mode closed (wire bit-identity + shutdown) =="
+"$BIN" loadgen --addr "$ADDR" --mode closed --connections 4 \
+    --tenants 4 --episodes 2 --steps 2 --shutdown
+
+# --shutdown drained the service; the server must exit 0 on its own.
+wait "$SERVER_PID"
+echo "-- server log --"
+cat "$LOG"
+echo "ci_net_smoke: green (wire replay bit-identical, server drained cleanly)"

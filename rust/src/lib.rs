@@ -57,6 +57,8 @@ pub mod harness;
 pub mod metrics;
 pub mod model;
 #[cfg(feature = "std")]
+pub mod net;
+#[cfg(feature = "std")]
 pub mod runtime;
 #[cfg(feature = "std")]
 pub mod serve;

@@ -6,6 +6,8 @@
 //!   adapt     --arch <a> --domain <d> [--method M] [--steps N] one on-device adaptation
 //!   grid      [--arch a] [--episodes N] [--workers K]          parallel analytic grid
 //!   serve     [--tenants N] [--workers K] [--mode open|closed] multi-tenant service replay
+//!             [--listen ADDR]                                  ... or HTTP service
+//!   loadgen   --addr HOST:PORT [--connections N] [--shutdown]  wire replay + bit-identity
 //!   exp       <table1|table2|...|fig6b|all|all-analytic> [...] regenerate paper artefacts
 //!   info      [--arch a,b,c]                                   artifact + arch summary
 //!
@@ -23,6 +25,7 @@ use tinytrain::data::{domain_by_name, Episode, Sampler};
 use tinytrain::harness::{self, parallel};
 use tinytrain::metrics::{fmt_kb, fmt_pct, fmt_us, Table};
 use tinytrain::model::{ModelMeta, ParamStore};
+use tinytrain::net;
 use tinytrain::runtime::{ArtifactStore, Runtime};
 use tinytrain::serve;
 use tinytrain::util::cli::Args;
@@ -43,7 +46,11 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("search") => run_search(args),
         Some("adapt") => adapt(args),
         Some("grid") => grid(args),
-        Some("serve") => serve(args),
+        Some("serve") => match args.opt("listen") {
+            Some(addr) => serve_listen(args, &addr),
+            None => serve(args),
+        },
+        Some("loadgen") => loadgen(args),
         Some("exp") => {
             let id = args
                 .positional
@@ -76,6 +83,16 @@ USAGE:
                      (multi-tenant adaptation service: replays a synthetic
                       trace, reports throughput + latency percentiles, asserts
                       bit-identity against the sequential reference arm)
+  tinytrain serve    --listen 127.0.0.1:0 [--acceptors N] [--verify-decode]
+                     [--workers N] [--queue-cap 64] [--delta-budget-kb KB]
+                     (HTTP front-end over the same service: POST /v1/episodes,
+                      GET /v1/tickets/{id}, GET /v1/tenants/{id}/sync,
+                      GET /metrics, GET /healthz, POST /v1/shutdown)
+  tinytrain loadgen  --addr HOST:PORT [--connections 4] [--mode open|closed]
+                     [--tenants 8] [--domains a,b] [--episodes 4] [--steps 6]
+                     [--seed S] [--no-verify] [--shutdown]
+                     (replays the synthetic trace over real sockets and asserts
+                      the wire results bit-identical to the in-process arm)
   tinytrain exp      <table1|table2|table3|table4|table5|table7|table8|table9|table10|
                       table11|fig1|fig3|fig4|fig5|fig6a|fig6b|all|all-analytic>
                      [--tier smoke|full|paper] [--arch a,b] [--episodes N] [--steps N]
@@ -378,6 +395,128 @@ fn serve(args: &Args) -> Result<()> {
         stats.absorbs,
         stats.evictions
     );
+    Ok(())
+}
+
+/// `serve --listen`: expose the adaptation service over HTTP and block
+/// until a `POST /v1/shutdown` arrives. Prints the bound address on
+/// stdout (port 0 binds an ephemeral port; scripts scrape this line).
+fn serve_listen(args: &Args, addr: &str) -> Result<()> {
+    use std::io::Write as _;
+    let (meta, params) = analytic_model(args, "serve")?;
+    let cfg = net::ServerConfig {
+        acceptors: args.usize("acceptors", 4),
+        limits: net::Limits::default(),
+        verify_decode: args.bool("verify-decode"),
+        serve: serve::ServeConfig {
+            workers: args.usize("workers", default_workers()),
+            queue_capacity: args.usize("queue-cap", 64),
+            render_cache: !args.bool("no-render-cache"),
+        },
+    };
+    let budget = match args.opt("delta-budget-kb") {
+        Some(_) => args.f64("delta-budget-kb", f64::INFINITY) * 1e3,
+        None => f64::INFINITY,
+    };
+    let store = serve::TenantStore::new(Arc::new(params), budget);
+    let listener = std::net::TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    // The loadgen/CI handshake line — keep the format stable.
+    println!("listening on http://{local}");
+    std::io::stdout().flush().ok();
+    eprintln!(
+        "[serve] {}: http on {local} ({} handlers, {} workers{})",
+        meta.arch,
+        cfg.acceptors,
+        cfg.serve.workers,
+        if cfg.verify_decode { ", verify-decode" } else { "" }
+    );
+    net::serve_blocking(listener, &meta, &store, &cfg)?;
+    let stats = store.stats();
+    eprintln!(
+        "[serve] shutdown complete | store: {} tenants, {} in deltas",
+        stats.tenants,
+        fmt_kb(stats.delta_bytes)
+    );
+    Ok(())
+}
+
+/// Socket-driven load generator: replay a synthetic trace against a
+/// `serve --listen` server, then (unless `--no-verify`) run the same
+/// trace through the in-process sequential arm and assert the wire
+/// completions and final tenant deltas are bit-identical.
+fn loadgen(args: &Args) -> Result<()> {
+    let addr = args
+        .opt("addr")
+        .ok_or_else(|| anyhow!("usage: tinytrain loadgen --addr HOST:PORT [--connections N]"))?;
+    let (meta, params) = analytic_model(args, "loadgen")?;
+    let method_name = args.str("method", "tinytrain");
+    let trace_cfg = serve::TraceConfig {
+        tenants: args.usize("tenants", 8),
+        domains: args.list("domains", &["traffic", "cub"]),
+        episodes: args.usize("episodes", 4),
+        seed: args.u64("seed", 7),
+        method: parse_method(&method_name, None, &meta)?,
+        steps: args.usize("steps", 6),
+        lr: args.f64("lr", 6e-3) as f32,
+    };
+    let mode = serve::LoopMode::parse(&args.str("mode", "closed"))?;
+    let cfg = net::WireConfig {
+        connections: args.usize("connections", 4),
+        mode,
+        method: method_name,
+        limits: net::Limits::client(),
+        shutdown: args.bool("shutdown"),
+    };
+    let trace = serve::synthetic_trace(&trace_cfg);
+    eprintln!(
+        "[loadgen] {}: {} requests -> {} ({} loop, {} connections requested)",
+        meta.arch,
+        trace.len(),
+        addr,
+        args.str("mode", "closed"),
+        cfg.connections
+    );
+    let report = net::run_wire(&addr, &meta, &trace, &cfg)?;
+    let errors = report.completions.iter().filter(|c| c.result.is_err()).count();
+    if args.bool("no-verify") {
+        eprintln!("[loadgen] --no-verify: skipping the reference arm");
+    } else {
+        net::verify_against_reference(
+            &meta,
+            Arc::new(params),
+            &trace,
+            &report,
+            !args.bool("no-render-cache"),
+        )?;
+        eprintln!(
+            "[loadgen] reference check: wire results bit-identical to the in-process arm \
+             ({} completions, {} tenants synced)",
+            report.completions.len(),
+            report.syncs.len()
+        );
+    }
+    let mut table = Table::new(
+        &format!(
+            "Wire replay — {} requests over {} connections ({} loop)",
+            trace.len(),
+            report.connections,
+            args.str("mode", "closed")
+        ),
+        &["wall s", "req/s", "p50", "p95", "p99", "errors"],
+    );
+    table.row(
+        "wire",
+        vec![
+            format!("{:.3}", report.wall_s),
+            format!("{:.1}", report.throughput_rps),
+            fmt_us(report.total.p50_us),
+            fmt_us(report.total.p95_us),
+            fmt_us(report.total.p99_us),
+            format!("{errors}"),
+        ],
+    );
+    println!("{}", table.to_markdown());
     Ok(())
 }
 

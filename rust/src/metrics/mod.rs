@@ -59,6 +59,20 @@ impl LatencyStats {
             max_us: samples[n - 1],
         }
     }
+
+    /// The JSON shape served by `net`'s `/metrics` endpoint (and
+    /// embedded in loadgen reports).
+    pub fn to_json(&self) -> crate::util::jsonio::Json {
+        use crate::util::jsonio::{num, obj};
+        obj(vec![
+            ("n", num(self.n as f64)),
+            ("mean_us", num(self.mean_us)),
+            ("p50_us", num(self.p50_us)),
+            ("p95_us", num(self.p95_us)),
+            ("p99_us", num(self.p99_us)),
+            ("max_us", num(self.max_us)),
+        ])
+    }
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice; `q` in

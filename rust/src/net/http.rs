@@ -1,0 +1,408 @@
+//! Minimal dependency-free HTTP/1.1: enough protocol to put a real
+//! socket in front of the adaptation service, no more.
+//!
+//! Supported: request/response framing with `Content-Length` bodies,
+//! keep-alive (1.1 default, `Connection: close` honoured), and the
+//! status codes the API uses. Not supported (rejected with 400):
+//! chunked transfer encoding. Every read path is bounded by
+//! [`Limits`] — see that module for the violation → status mapping —
+//! and every failure is a typed [`HttpError`], never a panic, so the
+//! parser can sit on an open port.
+
+use std::fmt;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::TcpStream;
+
+use super::limits::Limits;
+
+/// One parsed request. Header names are lowercased; the target is
+/// split at `?` into `path` and the raw `query` string.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection should survive this exchange.
+    pub keep_alive: bool,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// True when the query string carries `key` as a truthy flag
+    /// (`?wait`, `?wait=1`, `?wait=true`).
+    pub fn query_flag(&self, key: &str) -> bool {
+        self.query.split('&').any(|kv| match kv.split_once('=') {
+            None => kv == key,
+            Some((k, v)) => k == key && (v == "1" || v == "true"),
+        })
+    }
+}
+
+/// Typed protocol failure. `status()` gives the response code the
+/// server sends before closing; `Io` means the connection itself died
+/// (no response possible).
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request (400).
+    BadRequest(String),
+    /// Body exceeds `max_body_bytes` (413).
+    TooLarge(String),
+    /// Header phase exceeds its limits (431).
+    HeadersTooLarge(String),
+    /// The socket read timeout expired (408).
+    Timeout,
+    /// Transport failure; the peer is gone.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::BadRequest(_) => 400,
+            HttpError::TooLarge(_) => 413,
+            HttpError::HeadersTooLarge(_) => 431,
+            HttpError::Timeout => 408,
+            HttpError::Io(_) => 400,
+        }
+    }
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpError::BadRequest(m) => write!(f, "{m}"),
+            HttpError::TooLarge(m) => write!(f, "{m}"),
+            HttpError::HeadersTooLarge(m) => write!(f, "{m}"),
+            HttpError::Timeout => write!(f, "read timed out"),
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+fn bad(msg: &str) -> HttpError {
+    HttpError::BadRequest(msg.to_string())
+}
+
+fn map_io(e: std::io::Error) -> HttpError {
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => HttpError::Timeout,
+        _ => HttpError::Io(e),
+    }
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes (CRLF
+/// stripped). `Ok(None)` on clean EOF before any byte; `overflow()`
+/// when the cap is hit without a terminator.
+fn read_line_capped<R: BufRead>(
+    r: &mut R,
+    cap: usize,
+    overflow: impl FnOnce() -> HttpError,
+) -> Result<Option<Vec<u8>>, HttpError> {
+    let mut line = Vec::new();
+    let budget = cap as u64 + 2; // room for the CRLF itself
+    let n = r.by_ref().take(budget).read_until(b'\n', &mut line).map_err(map_io)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if line.last() != Some(&b'\n') {
+        if n as u64 == budget {
+            return Err(overflow());
+        }
+        return Err(bad("connection closed mid-line"));
+    }
+    line.pop();
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    Ok(Some(line))
+}
+
+/// Read the header block (everything up to the blank line), enforcing
+/// count and line-length limits. Names are lowercased, values trimmed.
+fn read_headers<R: BufRead>(
+    r: &mut R,
+    limits: &Limits,
+) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line_capped(r, limits.max_line_bytes, || {
+            HttpError::HeadersTooLarge("header line too long".into())
+        })?
+        .ok_or_else(|| bad("connection closed inside headers"))?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= limits.max_header_count {
+            return Err(HttpError::HeadersTooLarge(format!(
+                "more than {} headers",
+                limits.max_header_count
+            )));
+        }
+        let text = std::str::from_utf8(&line).map_err(|_| bad("header is not utf-8"))?;
+        let (name, value) = text.split_once(':').ok_or_else(|| bad("malformed header"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+}
+
+fn read_body<R: BufRead>(
+    r: &mut R,
+    headers: &[(String, String)],
+    limits: &Limits,
+) -> Result<Vec<u8>, HttpError> {
+    let find = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str());
+    if find("transfer-encoding").is_some() {
+        return Err(bad("transfer-encoding is not supported; send Content-Length"));
+    }
+    let len = match find("content-length") {
+        Some(v) => v.parse::<usize>().map_err(|_| bad("invalid content-length"))?,
+        None => 0,
+    };
+    if len > limits.max_body_bytes {
+        return Err(HttpError::TooLarge(format!(
+            "body of {len} bytes exceeds the {} byte limit",
+            limits.max_body_bytes
+        )));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| match e.kind() {
+        ErrorKind::UnexpectedEof => bad("connection closed mid-body"),
+        _ => map_io(e),
+    })?;
+    Ok(body)
+}
+
+/// Parse one request off the wire. `Ok(None)` means the peer closed
+/// cleanly between requests (normal keep-alive teardown).
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    limits: &Limits,
+) -> Result<Option<Request>, HttpError> {
+    let Some(line) = read_line_capped(r, limits.max_line_bytes, || {
+        bad("request line too long")
+    })?
+    else {
+        return Ok(None);
+    };
+    let text = std::str::from_utf8(&line).map_err(|_| bad("request line is not utf-8"))?;
+    let mut parts = text.split(' ').filter(|p| !p.is_empty());
+    let method = parts.next().ok_or_else(|| bad("empty request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| bad("missing request target"))?;
+    let version = parts.next().ok_or_else(|| bad("missing http version"))?;
+    if parts.next().is_some() {
+        return Err(bad("malformed request line"));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(bad("unsupported http version"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    let headers = read_headers(r, limits)?;
+    let body = read_body(r, &headers, limits)?;
+    let connection = headers
+        .iter()
+        .find(|(k, _)| k == "connection")
+        .map(|(_, v)| v.to_ascii_lowercase());
+    let keep_alive = match connection.as_deref() {
+        Some("close") => false,
+        Some("keep-alive") => true,
+        _ => version == "HTTP/1.1",
+    };
+    Ok(Some(Request { method, path, query, headers, body, keep_alive }))
+}
+
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+/// Write one JSON response.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n\r\n{}",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+        body
+    )?;
+    w.flush()
+}
+
+/// Parse one response: `(status, body)`.
+pub fn read_response<R: BufRead>(
+    r: &mut R,
+    limits: &Limits,
+) -> Result<(u16, Vec<u8>), HttpError> {
+    let line = read_line_capped(r, limits.max_line_bytes, || bad("status line too long"))?
+        .ok_or_else(|| bad("connection closed before the response"))?;
+    let text = std::str::from_utf8(&line).map_err(|_| bad("status line is not utf-8"))?;
+    let mut parts = text.split(' ').filter(|p| !p.is_empty());
+    let version = parts.next().ok_or_else(|| bad("empty status line"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad("unsupported http version in response"));
+    }
+    let status = parts
+        .next()
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| bad("malformed status code"))?;
+    let headers = read_headers(r, limits)?;
+    let body = read_body(r, &headers, limits)?;
+    Ok((status, body))
+}
+
+/// Blocking keep-alive HTTP client over one `TcpStream` — the load
+/// generator's transport (one `Client` per connection worker).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    limits: Limits,
+}
+
+impl Client {
+    pub fn connect(addr: &str, limits: &Limits) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(limits.read_timeout))?;
+        stream.set_write_timeout(Some(limits.read_timeout))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            limits: limits.clone(),
+        })
+    }
+
+    pub fn request(
+        &mut self,
+        method: &str,
+        target: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, Vec<u8>), HttpError> {
+        let payload = body.unwrap_or("");
+        write!(
+            self.writer,
+            "{} {} HTTP/1.1\r\nHost: tinytrain\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n{}",
+            method,
+            target,
+            payload.len(),
+            payload
+        )
+        .map_err(map_io)?;
+        self.writer.flush().map_err(map_io)?;
+        read_response(&mut self.reader, &self.limits)
+    }
+
+    pub fn get(&mut self, target: &str) -> Result<(u16, Vec<u8>), HttpError> {
+        self.request("GET", target, None)
+    }
+
+    pub fn post(&mut self, target: &str, body: &str) -> Result<(u16, Vec<u8>), HttpError> {
+        self.request("POST", target, Some(body))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str, limits: &Limits) -> Result<Option<Request>, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), limits)
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_query() {
+        let raw = "POST /v1/episodes?wait=1 HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nbody";
+        let req = parse(raw, &Limits::default()).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/episodes");
+        assert_eq!(req.query, "wait=1");
+        assert_eq!(req.body, b"body");
+        assert!(req.keep_alive);
+        assert!(req.query_flag("wait"));
+        assert!(!req.query_flag("stream"));
+        assert_eq!(req.header("host"), Some("x"));
+    }
+
+    #[test]
+    fn clean_eof_is_none_not_an_error() {
+        assert!(parse("", &Limits::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let raw = "GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        assert!(!parse(raw, &Limits::default()).unwrap().unwrap().keep_alive);
+        let raw10 = "GET / HTTP/1.0\r\n\r\n";
+        assert!(!parse(raw10, &Limits::default()).unwrap().unwrap().keep_alive);
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let limits = Limits { max_body_bytes: 8, ..Limits::default() };
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\n123456789";
+        let err = parse(raw, &limits).unwrap_err();
+        assert_eq!(err.status(), 413);
+    }
+
+    #[test]
+    fn header_floods_are_431() {
+        let limits = Limits { max_header_count: 2, ..Limits::default() };
+        let raw = "GET / HTTP/1.1\r\na: 1\r\nb: 2\r\nc: 3\r\n\r\n";
+        assert_eq!(parse(raw, &limits).unwrap_err().status(), 431);
+        let limits = Limits { max_line_bytes: 16, ..Limits::default() };
+        let raw = format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "y".repeat(64));
+        assert_eq!(parse(&raw, &limits).unwrap_err().status(), 431);
+    }
+
+    #[test]
+    fn malformed_inputs_are_400_not_panics() {
+        for raw in [
+            "GET\r\n\r\n",
+            "GET / HTTP/2\r\n\r\n",
+            "GET / HTTP/1.1 extra\r\n\r\n",
+            "GET / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            "GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort",
+        ] {
+            assert_eq!(parse(raw, &Limits::default()).unwrap_err().status(), 400, "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn response_round_trips() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 202, "{\"ticket\":7}", true).unwrap();
+        let (status, body) =
+            read_response(&mut Cursor::new(wire), &Limits::default()).unwrap();
+        assert_eq!(status, 202);
+        assert_eq!(body, b"{\"ticket\":7}");
+    }
+}

@@ -1,0 +1,46 @@
+//! Hard resource limits on the HTTP boundary.
+//!
+//! Every limit here exists so that hostile or broken input degrades
+//! into a typed error response instead of unbounded memory growth, a
+//! wedged handler thread, or a panic: body size caps allocation,
+//! line/header caps bound the header phase, and the read timeout
+//! reclaims handlers from stalled peers. Violations map to HTTP
+//! statuses in [`super::http::HttpError`] — 413 (body), 431 (headers),
+//! 408 (timeout), 400 (malformed).
+
+use std::time::Duration;
+
+/// Per-connection parsing limits (server and client side share the
+/// type; the client typically raises `max_body_bytes`, since tenant
+/// sync responses carry whole deltas).
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Largest accepted `Content-Length`, in bytes.
+    pub max_body_bytes: usize,
+    /// Maximum number of header lines per request.
+    pub max_header_count: usize,
+    /// Longest accepted request/status/header line, in bytes.
+    pub max_line_bytes: usize,
+    /// Socket read (and write) timeout; expiry surfaces as
+    /// [`super::http::HttpError::Timeout`] → 408.
+    pub read_timeout: Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_body_bytes: 1 << 20,
+            max_header_count: 64,
+            max_line_bytes: 8 << 10,
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Limits {
+    /// Client-side variant: same header discipline, roomier bodies
+    /// (sync responses scale with delta size, not request size).
+    pub fn client() -> Limits {
+        Limits { max_body_bytes: 32 << 20, ..Limits::default() }
+    }
+}

@@ -1,0 +1,314 @@
+//! Socket-driven load generation (`tinytrain loadgen`): replay a
+//! [`serve::replay`] trace over real connections and prove the wire
+//! changed nothing.
+//!
+//! The generator partitions tenants across keep-alive connections
+//! (tenant *i* → connection *i mod N*), which preserves each tenant's
+//! submission order — the invariant the service's per-tenant lanes
+//! serialize on — while letting tenants race across connections exactly
+//! as concurrent clients would. Connection count is clamped to the
+//! server's advertised handler budget (`/healthz`), because more
+//! keep-alive connections than handlers would deadlock a closed loop.
+//!
+//! Every wire completion is re-keyed to its **trace index** before
+//! comparison: server tickets are allocated in arrival order, which
+//! races across connections, but the sequential reference arm
+//! ([`sequential_replay`]) numbers completions by trace position.
+//! [`verify_against_reference`] then runs [`check_equivalent`] on the
+//! two completion lists and compares every tenant's final synced delta
+//! (`/v1/tenants/{id}/sync`) bit-for-bit — the loopback version of the
+//! "parallel equals sequential" contract, now including the protocol
+//! boundary.
+//!
+//! [`serve::replay`]: crate::serve::replay
+//! [`sequential_replay`]: crate::serve::sequential_replay
+//! [`check_equivalent`]: crate::serve::check_equivalent
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::http::Client;
+use super::limits::Limits;
+use super::proto;
+use crate::metrics::LatencyStats;
+use crate::model::{ModelMeta, ParamStore};
+use crate::serve::{
+    check_equivalent, sequential_replay, AdaptRequest, Completion, LoopMode, TenantStore,
+};
+use crate::util::jsonio::Json;
+
+/// Knobs of one wire replay.
+#[derive(Debug, Clone)]
+pub struct WireConfig {
+    /// Requested connection count (clamped to the server's handlers).
+    pub connections: usize,
+    pub mode: LoopMode,
+    /// Wire method name sent with every request; must resolve (via
+    /// [`proto::parse_method`]) to the trace's [`Method`] for the
+    /// reference comparison to be meaningful.
+    ///
+    /// [`Method`]: crate::coordinator::Method
+    pub method: String,
+    pub limits: Limits,
+    /// `POST /v1/shutdown` once the replay (and sync download) is done.
+    pub shutdown: bool,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            connections: 4,
+            mode: LoopMode::Closed,
+            method: proto::DEFAULT_METHOD.to_string(),
+            limits: Limits::client(),
+            shutdown: false,
+        }
+    }
+}
+
+/// What one wire replay observed.
+#[derive(Debug)]
+pub struct WireReport {
+    /// Completions re-keyed to trace indices, in trace order.
+    pub completions: Vec<Completion>,
+    /// Final `(steps, delta runs)` per tenant that had adapted state.
+    pub syncs: BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    /// End-to-end submit→completion latency as the client saw it
+    /// (includes the protocol boundary — the point of this module).
+    pub total: LatencyStats,
+    /// Connections actually used after the health clamp.
+    pub connections: usize,
+}
+
+fn proto_err(e: proto::ProtoError) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+fn expect_status(what: &str, want: u16, got: u16, body: &[u8]) -> Result<()> {
+    ensure!(
+        got == want,
+        "{what}: expected {want}, got {got}: {}",
+        String::from_utf8_lossy(body)
+    );
+    Ok(())
+}
+
+/// Probe `/healthz`: returns the advertised handler count after
+/// checking the server is adapting the same base model.
+fn probe_health(addr: &str, meta: &ModelMeta, limits: &Limits) -> Result<usize> {
+    let mut probe = Client::connect(addr, limits)?;
+    let (status, body) = probe.get("/healthz").map_err(|e| anyhow!("healthz: {e}"))?;
+    expect_status("healthz", 200, status, &body)?;
+    let text = std::str::from_utf8(&body)?;
+    let j = Json::parse(text).map_err(|e| anyhow!("healthz body: {e}"))?;
+    let arch = j.str_of("arch")?;
+    let theta = j.usize_of("total_theta")?;
+    ensure!(
+        arch == meta.arch && theta == meta.total_theta,
+        "model mismatch: server adapts {arch}/{theta} params, loadgen built {}/{}",
+        meta.arch,
+        meta.total_theta
+    );
+    j.usize_of("acceptors")
+}
+
+/// Replay `trace` against the server at `addr` and collect the wire's
+/// view of every completion plus each tenant's final synced delta.
+pub fn run_wire(
+    addr: &str,
+    meta: &ModelMeta,
+    trace: &[AdaptRequest],
+    cfg: &WireConfig,
+) -> Result<WireReport> {
+    ensure!(!trace.is_empty(), "empty trace");
+    let acceptors = probe_health(addr, meta, &cfg.limits)?;
+    let connections = cfg.connections.clamp(1, acceptors.max(1));
+
+    // Tenant → connection partition, preserving per-tenant trace order.
+    let mut tenant_conn: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut assignments: Vec<Vec<(usize, &AdaptRequest)>> = vec![Vec::new(); connections];
+    let mut next = 0usize;
+    for (index, req) in trace.iter().enumerate() {
+        let conn = *tenant_conn.entry(req.tenant.as_str()).or_insert_with(|| {
+            let c = next % connections;
+            next += 1;
+            c
+        });
+        assignments[conn].push((index, req));
+    }
+
+    let collected: Mutex<Vec<Completion>> = Mutex::new(Vec::with_capacity(trace.len()));
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(trace.len()));
+    let syncs: Mutex<BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>> =
+        Mutex::new(BTreeMap::new());
+    let t0 = Instant::now();
+    let worker_results: Vec<Result<()>> = std::thread::scope(|scope| {
+        let (collected, latencies, syncs) = (&collected, &latencies, &syncs);
+        let handles: Vec<_> = assignments
+            .iter()
+            .map(|mine| {
+                scope.spawn(move || {
+                    connection_worker(addr, cfg, mine, collected, latencies, syncs)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("loadgen worker panicked")).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    for r in worker_results {
+        r?;
+    }
+
+    if cfg.shutdown {
+        let mut c = Client::connect(addr, &cfg.limits)?;
+        let (status, body) = c.post("/v1/shutdown", "{}").map_err(|e| anyhow!("shutdown: {e}"))?;
+        expect_status("shutdown", 200, status, &body)?;
+    }
+
+    let mut completions = collected.into_inner().unwrap();
+    completions.sort_by_key(|c| c.ticket);
+    let total = LatencyStats::from_us(latencies.into_inner().unwrap());
+    Ok(WireReport {
+        completions,
+        syncs: syncs.into_inner().unwrap(),
+        wall_s,
+        throughput_rps: trace.len() as f64 / wall_s.max(1e-12),
+        total,
+        connections,
+    })
+}
+
+/// One connection's share of the replay: submit + wait for this
+/// connection's tenants in trace order, then download their syncs.
+fn connection_worker(
+    addr: &str,
+    cfg: &WireConfig,
+    mine: &[(usize, &AdaptRequest)],
+    collected: &Mutex<Vec<Completion>>,
+    latencies: &Mutex<Vec<f64>>,
+    syncs: &Mutex<BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>>,
+) -> Result<()> {
+    if mine.is_empty() {
+        return Ok(());
+    }
+    let mut client = Client::connect(addr, &cfg.limits)?;
+    let submit = |client: &mut Client, req: &AdaptRequest| -> Result<usize> {
+        let body = proto::submit_body(
+            &req.tenant,
+            &req.domain,
+            &cfg.method,
+            req.steps,
+            req.lr,
+            req.stream.state(),
+        );
+        let (status, resp) =
+            client.post("/v1/episodes", &body).map_err(|e| anyhow!("submit: {e}"))?;
+        expect_status("submit", 202, status, &resp)?;
+        proto::decode_ticket(&resp).map_err(proto_err)
+    };
+    let join = |client: &mut Client, ticket: usize, index: usize| -> Result<Completion> {
+        let (status, resp) = client
+            .get(&format!("/v1/tickets/{ticket}?wait=1"))
+            .map_err(|e| anyhow!("ticket {ticket}: {e}"))?;
+        expect_status("ticket", 200, status, &resp)?;
+        let mut c = proto::decode_completion(&resp).map_err(proto_err)?;
+        // Re-key to the trace index: server tickets number *arrival*
+        // across racing connections, the reference numbers the trace.
+        c.ticket = index;
+        Ok(c)
+    };
+    match cfg.mode {
+        LoopMode::Closed => {
+            for &(index, req) in mine {
+                let start = Instant::now();
+                let ticket = submit(&mut client, req)?;
+                let c = join(&mut client, ticket, index)?;
+                latencies.lock().unwrap().push(start.elapsed().as_secs_f64() * 1e6);
+                collected.lock().unwrap().push(c);
+            }
+        }
+        LoopMode::Open => {
+            let mut pending = Vec::with_capacity(mine.len());
+            for &(index, req) in mine {
+                let ticket = submit(&mut client, req)?;
+                pending.push((index, ticket, Instant::now()));
+            }
+            for (index, ticket, submitted) in pending {
+                let c = join(&mut client, ticket, index)?;
+                latencies.lock().unwrap().push(submitted.elapsed().as_secs_f64() * 1e6);
+                collected.lock().unwrap().push(c);
+            }
+        }
+    }
+    // Final synced delta for each tenant this connection owns (404 =
+    // never adapted, recorded as absent).
+    let mut seen = std::collections::BTreeSet::new();
+    for &(_, req) in mine {
+        if !seen.insert(req.tenant.as_str()) {
+            continue;
+        }
+        let (status, resp) = client
+            .get(&format!("/v1/tenants/{}/sync", req.tenant))
+            .map_err(|e| anyhow!("sync {}: {e}", req.tenant))?;
+        if status == 404 {
+            continue;
+        }
+        expect_status("sync", 200, status, &resp)?;
+        let state = proto::decode_sync(&resp).map_err(proto_err)?;
+        syncs.lock().unwrap().insert(req.tenant.clone(), state);
+    }
+    Ok(())
+}
+
+fn segments_bit_eq(a: &[(usize, Vec<f32>)], b: &[(usize, Vec<f32>)]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|((ao, av), (bo, bv))| {
+            ao == bo
+                && av.len() == bv.len()
+                && av.iter().zip(bv).all(|(x, y)| x.to_bits() == y.to_bits())
+        })
+}
+
+/// Run the in-process sequential reference arm over the same trace and
+/// assert the wire run matches it bit-for-bit: completion-by-completion
+/// via [`check_equivalent`], then every tenant's final delta.
+pub fn verify_against_reference(
+    meta: &ModelMeta,
+    base: Arc<ParamStore>,
+    trace: &[AdaptRequest],
+    report: &WireReport,
+    render_cache: bool,
+) -> Result<()> {
+    let store = TenantStore::new(base, f64::INFINITY);
+    let reference = sequential_replay(meta, &store, trace, render_cache);
+    check_equivalent(&reference.completions, &report.completions)?;
+    let mut tenants: Vec<&str> = trace.iter().map(|r| r.tenant.as_str()).collect();
+    tenants.sort_unstable();
+    tenants.dedup();
+    for tenant in tenants {
+        let want = store.sync_state(tenant);
+        let got = report.syncs.get(tenant);
+        match (&want, got) {
+            (None, None) => {}
+            (Some((ws, wsegs)), Some((gs, gsegs))) => {
+                ensure!(ws == gs, "tenant {tenant}: steps diverged ({ws} vs {gs})");
+                ensure!(
+                    segments_bit_eq(wsegs, gsegs),
+                    "tenant {tenant}: final delta diverged from the reference arm"
+                );
+            }
+            _ => bail!(
+                "tenant {tenant}: adapted state present on one side only \
+                 (reference: {}, wire: {})",
+                want.is_some(),
+                got.is_some()
+            ),
+        }
+    }
+    Ok(())
+}

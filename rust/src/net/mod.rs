@@ -1,0 +1,49 @@
+//! Network front-end for the adaptation service (`tinytrain serve
+//! --listen` / `tinytrain loadgen`).
+//!
+//! A dependency-free HTTP/1.1 layer over [`serve`]: std `TcpListener`,
+//! a bounded pool of handler threads (the same scoped-pool idiom as the
+//! adaptation workers), and a small typed JSON protocol:
+//!
+//! | endpoint                     | verb | meaning                         |
+//! |------------------------------|------|---------------------------------|
+//! | `/v1/episodes`               | POST | submit an episode → 202 ticket  |
+//! | `/v1/tickets/{id}[?wait=1]`  | GET  | poll (or block on) a ticket     |
+//! | `/v1/tenants/{id}/sync`      | GET  | download the tenant's delta     |
+//! | `/metrics`                   | GET  | queue depth, lanes, percentiles |
+//! | `/healthz`                   | GET  | handler budget + model print    |
+//! | `/v1/shutdown`               | POST | drain and stop                  |
+//!
+//! Layer map — each file is one seam:
+//!
+//! - [`limits`]: hard caps (body/header/line sizes, read timeout) so
+//!   hostile input degrades to 400/408/413/431, never a panic or OOM.
+//! - [`http`]: wire parsing/serialisation + the blocking [`Client`].
+//! - [`proto`]: routes and typed bodies. Requests decode through the
+//!   **lazy byte scanner** ([`jsonio::LazyDoc`]) — fields are extracted
+//!   by scanning bytes, no tree is built (ADR-002); the tree parser is
+//!   kept as a cross-check arm (`verify_decode`, the `net_decode`
+//!   bench). `u64` values (RNG stream states, step counters) travel as
+//!   decimal strings: JSON numbers are f64 and lose bits above 2^53,
+//!   and bit-identity is the whole point.
+//! - [`server`]: accept loop, dispatch, backpressure, shutdown.
+//! - [`loadgen`]: socket-driven replay of [`serve::replay`] traces with
+//!   a bit-identity check against the in-process sequential arm.
+//!
+//! [`serve`]: crate::serve
+//! [`serve::replay`]: crate::serve::replay
+//! [`jsonio::LazyDoc`]: crate::util::jsonio::LazyDoc
+
+pub mod http;
+pub mod limits;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use http::{Client, HttpError, Request};
+pub use limits::Limits;
+pub use loadgen::{run_wire, verify_against_reference, WireConfig, WireReport};
+pub use proto::{
+    decode_submit_lazy, decode_submit_tree, EpisodeSubmit, ProtoError, Route, DEFAULT_METHOD,
+};
+pub use server::{serve_blocking, ServerConfig};

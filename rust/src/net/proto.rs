@@ -1,0 +1,547 @@
+//! The typed JSON protocol between clients and the adaptation service.
+//!
+//! Two decode arms exist for the hot request path (`POST
+//! /v1/episodes`): [`decode_submit_lazy`] scans the body with
+//! [`LazyDoc`] and never builds a `Json` tree (SNIPPETS ADR-002 — the
+//! hot-path win the `net_decode` bench section measures), while
+//! [`decode_submit_tree`] is the reference arm through [`Json::parse`].
+//! Both funnel into the same [`validate`] bounds, so whenever both
+//! succeed they produce the same [`EpisodeSubmit`] — the server's
+//! `--verify-decode` mode and the in-tree fuzz smoke assert exactly
+//! that. Every failure anywhere in this module is a [`ProtoError`]
+//! carrying an HTTP status; nothing panics on wire input.
+//!
+//! Integer-exactness rule: `u64` values that must survive the boundary
+//! bit-for-bit (RNG stream states, cumulative step counters) travel as
+//! **decimal strings**, because a JSON number is an f64 and loses
+//! precision above 2^53. Floats travel as numbers — the writer emits
+//! the shortest decimal that re-parses to identical bits.
+
+use crate::coordinator::{search, Method};
+use crate::model::ModelMeta;
+use crate::serve::Completion;
+use crate::util::jsonio::{arr, num, obj, s, Json, JsonError, LazyDoc};
+
+/// Wire defaults for optional submit fields (mirror `tinytrain serve`).
+pub const DEFAULT_METHOD: &str = "tinytrain";
+pub const DEFAULT_STEPS: usize = 6;
+pub const DEFAULT_LR: f64 = 6e-3;
+
+/// Upper bound on `steps` per request — a submit must not be able to
+/// buy unbounded worker time.
+pub const MAX_STEPS: usize = 1000;
+const MAX_NAME_LEN: usize = 64;
+
+/// Typed protocol failure: an HTTP status plus a one-line reason that
+/// becomes the `{"error": ...}` body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl ProtoError {
+    pub fn bad(msg: impl Into<String>) -> ProtoError {
+        ProtoError { status: 400, msg: msg.into() }
+    }
+
+    pub fn not_found(msg: impl Into<String>) -> ProtoError {
+        ProtoError { status: 404, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ({})", self.msg, self.status)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+fn decode_err(e: JsonError) -> ProtoError {
+    ProtoError::bad(format!("invalid request body: {e}"))
+}
+
+/// Which endpoint a request resolves to. Path parameters are parsed
+/// (and 400'd) here; bodies are decoded by the caller.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    /// `POST /v1/episodes`
+    SubmitEpisode,
+    /// `GET /v1/tickets/{id}[?wait=1]`
+    Ticket { id: usize, wait: bool },
+    /// `GET /v1/tenants/{id}/sync`
+    TenantSync { tenant: String },
+    /// `GET /metrics`
+    Metrics,
+    /// `GET /healthz`
+    Health,
+    /// `POST /v1/shutdown`
+    Shutdown,
+}
+
+pub fn route(req: &super::http::Request) -> Result<Route, ProtoError> {
+    let segs: Vec<&str> = req.path.split('/').filter(|p| !p.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v1", "episodes"]) => Ok(Route::SubmitEpisode),
+        ("GET", ["v1", "tickets", id]) => {
+            let id = id
+                .parse::<usize>()
+                .map_err(|_| ProtoError::bad("ticket id must be a non-negative integer"))?;
+            Ok(Route::Ticket { id, wait: req.query_flag("wait") })
+        }
+        ("GET", ["v1", "tenants", tenant, "sync"]) => {
+            Ok(Route::TenantSync { tenant: tenant.to_string() })
+        }
+        ("GET", ["metrics"]) => Ok(Route::Metrics),
+        ("GET", ["healthz"]) => Ok(Route::Health),
+        ("POST", ["v1", "shutdown"]) => Ok(Route::Shutdown),
+        _ => Err(ProtoError::not_found(format!("no route for {} {}", req.method, req.path))),
+    }
+}
+
+/// One decoded `POST /v1/episodes` body. `stream` is the SplitMix64
+/// state of the request's pre-forked RNG stream ([`crate::util::rng`]):
+/// carrying the state makes the request a pure value, exactly like the
+/// in-process [`crate::serve::AdaptRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpisodeSubmit {
+    pub tenant: String,
+    pub domain: String,
+    pub method: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub stream: u64,
+}
+
+fn validate(sub: EpisodeSubmit) -> Result<EpisodeSubmit, ProtoError> {
+    let name_ok = |v: &str| {
+        !v.is_empty()
+            && v.len() <= MAX_NAME_LEN
+            && v.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.'))
+    };
+    if !name_ok(&sub.tenant) {
+        return Err(ProtoError::bad("field 'tenant' must be 1-64 chars of [A-Za-z0-9._-]"));
+    }
+    if !name_ok(&sub.domain) {
+        return Err(ProtoError::bad("field 'domain' must be 1-64 chars of [A-Za-z0-9._-]"));
+    }
+    if !name_ok(&sub.method) {
+        return Err(ProtoError::bad("field 'method' must be 1-64 chars of [A-Za-z0-9._-]"));
+    }
+    if sub.steps == 0 || sub.steps > MAX_STEPS {
+        return Err(ProtoError::bad(format!("field 'steps' must be in 1..={MAX_STEPS}")));
+    }
+    if !(sub.lr.is_finite() && sub.lr > 0.0 && sub.lr <= 10.0) {
+        return Err(ProtoError::bad("field 'lr' must be a finite number in (0, 10]"));
+    }
+    Ok(sub)
+}
+
+fn parse_stream(text: &str) -> Result<u64, ProtoError> {
+    text.parse::<u64>()
+        .map_err(|_| ProtoError::bad("field 'stream' must be a decimal u64 string"))
+}
+
+fn missing(field: &str) -> ProtoError {
+    ProtoError::bad(format!("missing required field '{field}'"))
+}
+
+/// The hot decode arm: extract exactly the six submit fields by byte
+/// scanning, no tree, no intermediate allocations beyond the field
+/// values themselves.
+pub fn decode_submit_lazy(body: &[u8]) -> Result<EpisodeSubmit, ProtoError> {
+    let doc = LazyDoc::new(body);
+    let tenant = doc.str_at(&["tenant"]).map_err(decode_err)?.ok_or_else(|| missing("tenant"))?;
+    let domain = doc.str_at(&["domain"]).map_err(decode_err)?.ok_or_else(|| missing("domain"))?;
+    let method = doc
+        .str_at(&["method"])
+        .map_err(decode_err)?
+        .unwrap_or_else(|| DEFAULT_METHOD.to_string());
+    let steps = doc.usize_at(&["steps"]).map_err(decode_err)?.unwrap_or(DEFAULT_STEPS);
+    let lr = doc.f64_at(&["lr"]).map_err(decode_err)?.unwrap_or(DEFAULT_LR) as f32;
+    let stream_text =
+        doc.str_at(&["stream"]).map_err(decode_err)?.ok_or_else(|| missing("stream"))?;
+    let stream = parse_stream(&stream_text)?;
+    validate(EpisodeSubmit { tenant, domain, method, steps, lr, stream })
+}
+
+/// The reference decode arm through the tree parser. Same defaults,
+/// same validation — kept so `--verify-decode` and the bench can assert
+/// the lazy scanner extracts identical fields.
+pub fn decode_submit_tree(body: &[u8]) -> Result<EpisodeSubmit, ProtoError> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| ProtoError::bad("request body is not utf-8"))?;
+    let j = Json::parse(text).map_err(decode_err)?;
+    if !matches!(j, Json::Obj(_)) {
+        return Err(ProtoError::bad("request body must be a json object"));
+    }
+    let str_field = |key: &str| -> Result<Option<String>, ProtoError> {
+        match j.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_str()
+                .map(|t| Some(t.to_string()))
+                .ok_or_else(|| ProtoError::bad(format!("json key '{key}' is not a string"))),
+        }
+    };
+    let num_field = |key: &str| -> Result<Option<f64>, ProtoError> {
+        match j.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| ProtoError::bad(format!("json key '{key}' is not a number"))),
+        }
+    };
+    let tenant = str_field("tenant")?.ok_or_else(|| missing("tenant"))?;
+    let domain = str_field("domain")?.ok_or_else(|| missing("domain"))?;
+    let method = str_field("method")?.unwrap_or_else(|| DEFAULT_METHOD.to_string());
+    let steps = num_field("steps")?.map(|n| n as usize).unwrap_or(DEFAULT_STEPS);
+    let lr = num_field("lr")?.unwrap_or(DEFAULT_LR) as f32;
+    let stream = parse_stream(&str_field("stream")?.ok_or_else(|| missing("stream"))?)?;
+    validate(EpisodeSubmit { tenant, domain, method, steps, lr, stream })
+}
+
+/// The artifact-free method-name parser both the server and the trace
+/// builders use, so a name on the wire resolves to the same [`Method`]
+/// everywhere (SparseUpdate gets the derived default policy — there is
+/// no artifact store on this path).
+pub fn parse_method(name: &str, meta: &ModelMeta) -> Result<Method, ProtoError> {
+    match name {
+        "none" => Ok(Method::None),
+        "fulltrain" => Ok(Method::FullTrain),
+        "lastlayer" => Ok(Method::LastLayer),
+        "tinytl" => Ok(Method::TinyTl),
+        "sparseupdate" => Ok(Method::SparseUpdate(search::default_policy(meta, 0.0))),
+        "tinytrain" => Ok(Method::tinytrain_default()),
+        other => Err(ProtoError::bad(format!("unknown method '{other}'"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Body builders + decoders for the non-hot directions (responses, the
+// load generator's requests). These go through the tree writer — the
+// lazy path exists for the server's request decode, where the 33x
+// matters.
+// ---------------------------------------------------------------------------
+
+fn u64_s(v: u64) -> Json {
+    s(&v.to_string())
+}
+
+/// `POST /v1/episodes` body for one request.
+pub fn submit_body(
+    tenant: &str,
+    domain: &str,
+    method: &str,
+    steps: usize,
+    lr: f32,
+    stream: u64,
+) -> String {
+    obj(vec![
+        ("tenant", s(tenant)),
+        ("domain", s(domain)),
+        ("method", s(method)),
+        ("steps", num(steps as f64)),
+        ("lr", num(lr as f64)),
+        ("stream", u64_s(stream)),
+    ])
+    .to_string()
+}
+
+pub fn error_body(msg: &str) -> String {
+    obj(vec![("error", s(msg))]).to_string()
+}
+
+pub fn ticket_body(ticket: usize) -> String {
+    obj(vec![("ticket", num(ticket as f64))]).to_string()
+}
+
+pub fn decode_ticket(body: &[u8]) -> Result<usize, ProtoError> {
+    let text = std::str::from_utf8(body).map_err(|_| ProtoError::bad("body is not utf-8"))?;
+    let j = Json::parse(text).map_err(decode_err)?;
+    j.usize_of("ticket").map_err(|e| ProtoError::bad(e.to_string()))
+}
+
+pub fn pending_body(ticket: usize) -> String {
+    obj(vec![("ticket", num(ticket as f64)), ("status", s("pending"))]).to_string()
+}
+
+/// Terminal ticket state. Carries exactly the fields the bit-identity
+/// checker ([`crate::serve::check_equivalent`]) compares, plus the two
+/// latency components; f32 losses are widened to f64 (exact) so they
+/// survive the JSON number round trip bit-for-bit.
+pub fn completion_body(c: &Completion) -> String {
+    let mut fields = vec![
+        ("ticket", num(c.ticket as f64)),
+        ("status", s("done")),
+        ("tenant", s(&c.tenant)),
+        ("domain", s(&c.domain)),
+        ("queue_us", num(c.queue_us)),
+        ("service_us", num(c.service_us)),
+    ];
+    match &c.result {
+        Ok(r) => {
+            fields.push(("ok", Json::Bool(true)));
+            fields.push(("acc_before", num(r.acc_before)));
+            fields.push(("acc_after", num(r.acc_after)));
+            fields.push(("losses", arr(r.losses.iter().map(|&l| num(l as f64)).collect())));
+            fields.push((
+                "selected_layers",
+                arr(r.selected_layers.iter().map(|&l| num(l as f64)).collect()),
+            ));
+        }
+        Err(e) => {
+            fields.push(("ok", Json::Bool(false)));
+            fields.push(("error", s(e)));
+        }
+    }
+    obj(fields).to_string()
+}
+
+/// Rebuild a [`Completion`] from a `"status":"done"` ticket response.
+/// Fields the wire does not carry (the analytic plan, phase timings)
+/// are filled with neutral placeholders — [`check_equivalent`] does not
+/// compare them.
+///
+/// [`check_equivalent`]: crate::serve::check_equivalent
+pub fn decode_completion(body: &[u8]) -> Result<Completion, ProtoError> {
+    let text = std::str::from_utf8(body).map_err(|_| ProtoError::bad("body is not utf-8"))?;
+    let j = Json::parse(text).map_err(decode_err)?;
+    let anyerr = |e: anyhow::Error| ProtoError::bad(e.to_string());
+    let status = j.str_of("status").map_err(anyerr)?;
+    if status != "done" {
+        return Err(ProtoError::bad(format!("ticket is not done (status '{status}')")));
+    }
+    let ticket = j.usize_of("ticket").map_err(anyerr)?;
+    let tenant = j.str_of("tenant").map_err(anyerr)?;
+    let domain = j.str_of("domain").map_err(anyerr)?;
+    let queue_us = j.f64_of("queue_us").map_err(anyerr)?;
+    let service_us = j.f64_of("service_us").map_err(anyerr)?;
+    let result = if j.bool_of("ok").map_err(anyerr)? {
+        let losses = j
+            .arr_of("losses")
+            .map_err(anyerr)?
+            .iter()
+            .map(|v| v.as_f64().map(|n| n as f32))
+            .collect::<Option<Vec<f32>>>()
+            .ok_or_else(|| ProtoError::bad("losses must be numbers"))?;
+        let selected_layers = j
+            .arr_of("selected_layers")
+            .map_err(anyerr)?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Option<Vec<usize>>>()
+            .ok_or_else(|| ProtoError::bad("selected_layers must be numbers"))?;
+        Ok(crate::coordinator::EpisodeResult {
+            method: String::new(),
+            domain: domain.clone(),
+            backend: "wire",
+            acc_before: j.f64_of("acc_before").map_err(anyerr)?,
+            acc_after: j.f64_of("acc_after").map_err(anyerr)?,
+            losses,
+            selection_s: 0.0,
+            train_s: 0.0,
+            plan: crate::accounting::UpdatePlan::frozen(0, 0),
+            selected_layers,
+        })
+    } else {
+        Err(j.str_of("error").map_err(anyerr)?)
+    };
+    Ok(Completion { ticket, tenant, domain, result, queue_us, service_us })
+}
+
+/// `GET /v1/tenants/{id}/sync` response: cumulative steps (decimal
+/// string — u64) plus the composed overlay as `[offset, [values...]]`
+/// runs. f32 values widen to f64 exactly, so the delta is bit-exact on
+/// the other side.
+pub fn sync_body(tenant: &str, steps: u64, segments: &[(usize, Vec<f32>)]) -> String {
+    let segs = segments
+        .iter()
+        .map(|(off, vals)| {
+            arr(vec![
+                num(*off as f64),
+                arr(vals.iter().map(|&v| num(v as f64)).collect()),
+            ])
+        })
+        .collect();
+    obj(vec![("tenant", s(tenant)), ("steps", u64_s(steps)), ("segments", arr(segs))])
+        .to_string()
+}
+
+pub fn decode_sync(body: &[u8]) -> Result<(u64, Vec<(usize, Vec<f32>)>), ProtoError> {
+    let text = std::str::from_utf8(body).map_err(|_| ProtoError::bad("body is not utf-8"))?;
+    let j = Json::parse(text).map_err(decode_err)?;
+    let anyerr = |e: anyhow::Error| ProtoError::bad(e.to_string());
+    let steps = j
+        .str_of("steps")
+        .map_err(anyerr)?
+        .parse::<u64>()
+        .map_err(|_| ProtoError::bad("field 'steps' must be a decimal u64 string"))?;
+    let mut segments = Vec::new();
+    for seg in j.arr_of("segments").map_err(anyerr)? {
+        let pair = seg.as_arr().ok_or_else(|| ProtoError::bad("segment must be an array"))?;
+        let (off, vals) = match pair {
+            [o, v] => (o, v),
+            _ => return Err(ProtoError::bad("segment must be [offset, values]")),
+        };
+        let off = off.as_usize().ok_or_else(|| ProtoError::bad("offset must be a number"))?;
+        let vals = vals
+            .as_arr()
+            .ok_or_else(|| ProtoError::bad("values must be an array"))?
+            .iter()
+            .map(|v| v.as_f64().map(|n| n as f32))
+            .collect::<Option<Vec<f32>>>()
+            .ok_or_else(|| ProtoError::bad("values must be numbers"))?;
+        segments.push((off, vals));
+    }
+    Ok((steps, segments))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accounting::UpdatePlan;
+    use crate::coordinator::EpisodeResult;
+
+    fn valid_body() -> String {
+        submit_body("tenant000", "traffic", "tinytrain", 6, 6e-3, u64::MAX - 17)
+    }
+
+    #[test]
+    fn lazy_and_tree_agree_on_a_valid_submit() {
+        let body = valid_body();
+        let a = decode_submit_lazy(body.as_bytes()).unwrap();
+        let b = decode_submit_tree(body.as_bytes()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.stream, u64::MAX - 17, "u64 stream must survive the string transport");
+        assert_eq!(a.tenant, "tenant000");
+    }
+
+    #[test]
+    fn defaults_fill_optional_fields_in_both_arms() {
+        let body = r#"{"tenant":"t0","domain":"cub","stream":"42"}"#;
+        let a = decode_submit_lazy(body.as_bytes()).unwrap();
+        let b = decode_submit_tree(body.as_bytes()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.method, DEFAULT_METHOD);
+        assert_eq!(a.steps, DEFAULT_STEPS);
+        assert_eq!(a.lr, DEFAULT_LR as f32);
+    }
+
+    #[test]
+    fn submit_violations_are_typed_400s() {
+        let cases = [
+            (r#"{"domain":"d","stream":"1"}"#, "missing required field 'tenant'"),
+            (r#"{"tenant":"t","domain":"d"}"#, "missing required field 'stream'"),
+            (r#"{"tenant":"t","domain":"d","stream":"-3"}"#, "decimal u64"),
+            (r#"{"tenant":"t","domain":"d","stream":9}"#, "not a string"),
+            (r#"{"tenant":"","domain":"d","stream":"1"}"#, "'tenant'"),
+            (r#"{"tenant":"a/b","domain":"d","stream":"1"}"#, "'tenant'"),
+            (r#"{"tenant":"t","domain":"d","stream":"1","steps":0}"#, "'steps'"),
+            (r#"{"tenant":"t","domain":"d","stream":"1","lr":-1}"#, "'lr'"),
+            ("not json at all", "invalid request body"),
+        ];
+        let arms: [fn(&[u8]) -> Result<EpisodeSubmit, ProtoError>; 2] =
+            [decode_submit_lazy, decode_submit_tree];
+        for (body, needle) in cases {
+            for decode in arms {
+                let err = decode(body.as_bytes()).unwrap_err();
+                assert_eq!(err.status, 400, "{body}");
+                assert!(err.msg.contains(needle), "{body}: {}", err.msg);
+            }
+        }
+    }
+
+    #[test]
+    fn routes_parse_and_reject() {
+        let req = |method: &str, target: &str| {
+            let (path, query) = match target.split_once('?') {
+                Some((p, q)) => (p.to_string(), q.to_string()),
+                None => (target.to_string(), String::new()),
+            };
+            super::super::http::Request {
+                method: method.to_string(),
+                path,
+                query,
+                headers: vec![],
+                body: vec![],
+                keep_alive: true,
+            }
+        };
+        assert_eq!(route(&req("POST", "/v1/episodes")).unwrap(), Route::SubmitEpisode);
+        assert_eq!(
+            route(&req("GET", "/v1/tickets/12?wait=1")).unwrap(),
+            Route::Ticket { id: 12, wait: true }
+        );
+        assert_eq!(
+            route(&req("GET", "/v1/tenants/tenant003/sync")).unwrap(),
+            Route::TenantSync { tenant: "tenant003".into() }
+        );
+        assert_eq!(route(&req("GET", "/metrics")).unwrap(), Route::Metrics);
+        assert_eq!(route(&req("GET", "/v1/tickets/xyz")).unwrap_err().status, 400);
+        assert_eq!(route(&req("GET", "/v1/nope")).unwrap_err().status, 404);
+        assert_eq!(route(&req("DELETE", "/v1/episodes")).unwrap_err().status, 404);
+    }
+
+    #[test]
+    fn completion_round_trips_bitwise() {
+        let c = Completion {
+            ticket: 7,
+            tenant: "tenant001".into(),
+            domain: "traffic".into(),
+            result: Ok(EpisodeResult {
+                method: "TinyTrain".into(),
+                domain: "traffic".into(),
+                backend: "analytic",
+                acc_before: 0.217_431_239_412,
+                acc_after: 0.583_100_000_777,
+                losses: vec![1.5f32, 0.25, 3.0e-7],
+                selection_s: 0.5,
+                train_s: 0.9,
+                plan: UpdatePlan::frozen(2, 1),
+                selected_layers: vec![0, 3],
+            }),
+            queue_us: 12.5,
+            service_us: 880.25,
+        };
+        let d = decode_completion(completion_body(&c).as_bytes()).unwrap();
+        assert_eq!(d.ticket, 7);
+        let (orig, got) = (c.result.as_ref().unwrap(), d.result.as_ref().unwrap());
+        assert_eq!(orig.acc_before.to_bits(), got.acc_before.to_bits());
+        assert_eq!(orig.acc_after.to_bits(), got.acc_after.to_bits());
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&orig.losses), bits(&got.losses));
+        assert_eq!(orig.selected_layers, got.selected_layers);
+        assert_eq!(d.queue_us, 12.5);
+
+        let failed = Completion { result: Err("unknown domain mars".into()), ..c };
+        let d = decode_completion(completion_body(&failed).as_bytes()).unwrap();
+        assert_eq!(d.result.unwrap_err(), "unknown domain mars");
+    }
+
+    #[test]
+    fn sync_round_trips_bitwise_including_u64_steps() {
+        let segments = vec![(3usize, vec![0.1f32, -0.0, f32::MIN_POSITIVE]), (40, vec![7.25])];
+        let steps = (1u64 << 60) + 12345;
+        let body = sync_body("tenant000", steps, &segments);
+        let (got_steps, got_segs) = decode_sync(body.as_bytes()).unwrap();
+        assert_eq!(got_steps, steps);
+        assert_eq!(got_segs.len(), segments.len());
+        for ((ao, av), (bo, bv)) in segments.iter().zip(&got_segs) {
+            assert_eq!(ao, bo);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(av), bits(bv));
+        }
+    }
+
+    #[test]
+    fn method_names_resolve_like_the_cli() {
+        let meta = ModelMeta::synthetic(4);
+        for name in ["none", "fulltrain", "lastlayer", "tinytl", "sparseupdate", "tinytrain"] {
+            assert!(parse_method(name, &meta).is_ok(), "{name}");
+        }
+        assert_eq!(parse_method("warp", &meta).unwrap_err().status, 400);
+    }
+}

@@ -1,0 +1,261 @@
+//! The HTTP front-end over [`AdaptationService`] (`tinytrain serve
+//! --listen`).
+//!
+//! Threading reuses the `serve` scoped-pool idiom: the adaptation
+//! workers live inside [`AdaptationService::run`], and the driver
+//! closure spawns `acceptors` handler threads that each loop
+//! `accept → serve connection (keep-alive) → accept`. Concurrency is
+//! therefore bounded by construction — at most `acceptors` connections
+//! are served at once, and the bounded [`TenantQueue`] provides
+//! backpressure behind them (a submit on a full queue blocks its
+//! handler, which slows that client instead of shedding its request —
+//! preserving the per-tenant order the bit-identity contract needs).
+//!
+//! Shutdown: `POST /v1/shutdown` flips an `AtomicBool` and dials one
+//! dummy loopback connection per acceptor so threads blocked in
+//! `accept` wake up, see the flag and exit; the service scope then
+//! drains the queue and joins.
+//!
+//! [`AdaptationService`]: crate::serve::AdaptationService
+//! [`AdaptationService::run`]: crate::serve::AdaptationService::run
+//! [`TenantQueue`]: crate::serve::TenantQueue
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use anyhow::Result;
+
+use super::http::{self, HttpError, Request};
+use super::limits::Limits;
+use super::proto::{self, Route};
+use crate::metrics::LatencyStats;
+use crate::model::ModelMeta;
+use crate::serve::{
+    AdaptRequest, AdaptationService, ServeConfig, TenantStore, Ticket, TicketStatus,
+};
+use crate::util::jsonio::{num, obj, s, Json};
+use crate::util::rng::Rng;
+
+/// Knobs of one HTTP service run.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Connection-handler thread count (= max concurrent connections).
+    pub acceptors: usize,
+    pub limits: Limits,
+    /// Decode every submit with both the lazy scanner and the tree
+    /// parser and fail the request (500) on any divergence — the
+    /// loopback CI smoke runs with this on, so every request in the
+    /// trace doubles as a decode-equivalence assertion.
+    pub verify_decode: bool,
+    pub serve: ServeConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            acceptors: 4,
+            limits: Limits::default(),
+            verify_decode: false,
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+/// Serve `listener` until a `POST /v1/shutdown` arrives. Blocks the
+/// calling thread; all request state lives in `tenants`, so the caller
+/// can inspect (or persist) it afterwards.
+pub fn serve_blocking(
+    listener: TcpListener,
+    meta: &ModelMeta,
+    tenants: &TenantStore,
+    cfg: &ServerConfig,
+) -> Result<()> {
+    let addr = listener.local_addr()?;
+    let stop = AtomicBool::new(false);
+    let acceptors = cfg.acceptors.max(1);
+    AdaptationService::run(meta, tenants, &cfg.serve, |svc| {
+        std::thread::scope(|scope| {
+            for _ in 0..acceptors {
+                scope.spawn(|| acceptor_loop(&listener, addr, svc, meta, tenants, cfg, &stop));
+            }
+        });
+        Ok(())
+    })
+}
+
+fn acceptor_loop(
+    listener: &TcpListener,
+    addr: SocketAddr,
+    svc: &AdaptationService,
+    meta: &ModelMeta,
+    tenants: &TenantStore,
+    cfg: &ServerConfig,
+    stop: &AtomicBool,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stop.load(Ordering::Acquire) {
+                    break; // a shutdown wake-up connection, not a client
+                }
+                // Connection-level failures only affect that peer.
+                let _ = serve_connection(stream, addr, svc, meta, tenants, cfg, stop);
+            }
+            Err(_) => {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    addr: SocketAddr,
+    svc: &AdaptationService,
+    meta: &ModelMeta,
+    tenants: &TenantStore,
+    cfg: &ServerConfig,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(cfg.limits.read_timeout))?;
+    stream.set_write_timeout(Some(cfg.limits.read_timeout))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    loop {
+        let req = match http::read_request(&mut reader, &cfg.limits) {
+            Ok(None) => break,
+            Ok(Some(req)) => req,
+            Err(HttpError::Io(_)) => break,
+            Err(e) => {
+                // Malformed/oversized/stalled input: answer with the
+                // typed status, then drop the (unsynchronized) stream.
+                let body = proto::error_body(&e.to_string());
+                let _ = http::write_response(&mut stream, e.status(), &body, false);
+                break;
+            }
+        };
+        let keep = req.keep_alive && !stop.load(Ordering::Acquire);
+        let (status, body) = respond(&req, addr, svc, meta, tenants, cfg, stop);
+        http::write_response(&mut stream, status, &body, keep)?;
+        if !keep || stop.load(Ordering::Acquire) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Dispatch one request. Always returns a `(status, json-body)` pair —
+/// protocol errors become their typed status, never a panic.
+fn respond(
+    req: &Request,
+    addr: SocketAddr,
+    svc: &AdaptationService,
+    meta: &ModelMeta,
+    tenants: &TenantStore,
+    cfg: &ServerConfig,
+    stop: &AtomicBool,
+) -> (u16, String) {
+    let route = match proto::route(req) {
+        Ok(route) => route,
+        Err(e) => return (e.status, proto::error_body(&e.msg)),
+    };
+    match route {
+        Route::SubmitEpisode => submit(req, svc, meta, cfg),
+        Route::Ticket { id, wait } => ticket(svc, id, wait),
+        Route::TenantSync { tenant } => match tenants.sync_state(&tenant) {
+            Some((steps, segments)) => (200, proto::sync_body(&tenant, steps, &segments)),
+            None => (404, proto::error_body("tenant has no adapted state")),
+        },
+        Route::Metrics => (200, metrics_body(svc)),
+        Route::Health => (200, health_body(meta, cfg)),
+        Route::Shutdown => {
+            stop.store(true, Ordering::Release);
+            // Wake every acceptor blocked in accept(); each dummy
+            // connection is recognised by the post-accept stop check.
+            for _ in 0..cfg.acceptors.max(1) {
+                let _ = TcpStream::connect(addr);
+            }
+            (200, obj(vec![("ok", Json::Bool(true))]).to_string())
+        }
+    }
+}
+
+fn submit(
+    req: &Request,
+    svc: &AdaptationService,
+    meta: &ModelMeta,
+    cfg: &ServerConfig,
+) -> (u16, String) {
+    let sub = match proto::decode_submit_lazy(&req.body) {
+        Ok(sub) => sub,
+        Err(e) => return (e.status, proto::error_body(&e.msg)),
+    };
+    if cfg.verify_decode {
+        match proto::decode_submit_tree(&req.body) {
+            Ok(tree) if tree == sub => {}
+            other => {
+                let msg = format!("lazy/tree decode divergence: lazy={sub:?} tree={other:?}");
+                return (500, proto::error_body(&msg));
+            }
+        }
+    }
+    let method = match proto::parse_method(&sub.method, meta) {
+        Ok(method) => method,
+        Err(e) => return (e.status, proto::error_body(&e.msg)),
+    };
+    let request = AdaptRequest {
+        tenant: sub.tenant,
+        domain: sub.domain,
+        method,
+        steps: sub.steps,
+        lr: sub.lr,
+        stream: Rng::from_state(sub.stream),
+    };
+    match svc.submit(request) {
+        Ok(t) => (202, proto::ticket_body(t.0)),
+        Err(_) => (503, proto::error_body("service is shutting down")),
+    }
+}
+
+fn ticket(svc: &AdaptationService, id: usize, wait: bool) -> (u16, String) {
+    match svc.status(Ticket(id)) {
+        TicketStatus::Unknown => (404, proto::error_body("unknown ticket")),
+        TicketStatus::Pending if wait => (200, proto::completion_body(&svc.join(Ticket(id)))),
+        TicketStatus::Pending => (200, proto::pending_body(id)),
+        TicketStatus::Done(c) => (200, proto::completion_body(&c)),
+    }
+}
+
+fn metrics_body(svc: &AdaptationService) -> String {
+    let (queued, lanes, busy) = svc.queue_stats();
+    let samples = svc.latency_samples();
+    let queue_us: Vec<f64> = samples.iter().map(|(q, _)| *q).collect();
+    let service_us: Vec<f64> = samples.iter().map(|(_, s)| *s).collect();
+    obj(vec![
+        ("queued", num(queued as f64)),
+        ("lanes", num(lanes as f64)),
+        ("busy_lanes", num(busy as f64)),
+        ("pending", num(svc.pending() as f64)),
+        ("completed", num(samples.len() as f64)),
+        ("queue_latency", LatencyStats::from_us(queue_us).to_json()),
+        ("service_latency", LatencyStats::from_us(service_us).to_json()),
+    ])
+    .to_string()
+}
+
+/// Reports the handler budget (the load generator clamps its
+/// connection count to it — more keep-alive connections than handlers
+/// would starve) and the model fingerprint (both ends must build the
+/// same base model for bit-identity to be meaningful).
+fn health_body(meta: &ModelMeta, cfg: &ServerConfig) -> String {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("acceptors", num(cfg.acceptors.max(1) as f64)),
+        ("arch", s(&meta.arch)),
+        ("total_theta", num(meta.total_theta as f64)),
+    ])
+    .to_string()
+}

@@ -58,5 +58,5 @@ pub use replay::{
     check_equivalent, replay, sequential_replay, synthetic_trace, tenant_name, LoopMode,
     ReplayReport, TraceConfig,
 };
-pub use service::{AdaptRequest, AdaptationService, Completion, ServeConfig, Ticket};
+pub use service::{AdaptRequest, AdaptationService, Completion, ServeConfig, Ticket, TicketStatus};
 pub use tenant::{TenantStore, TenantStoreStats};

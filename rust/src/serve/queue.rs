@@ -164,6 +164,13 @@ impl<T> TenantQueue<T> {
         self.len() == 0
     }
 
+    /// `(lanes, busy_lanes)`: tenants ever seen by this queue, and how
+    /// many of their lanes have a request in flight right now.
+    pub fn lane_stats(&self) -> (usize, usize) {
+        let g = self.inner.lock().unwrap();
+        (g.lanes.len(), g.lanes.iter().filter(|l| l.busy).count())
+    }
+
     /// Enqueue for `tenant`, blocking while the queue is full. Returns
     /// the item back if the queue is (or gets) closed while waiting.
     pub fn push(&self, tenant: &str, item: T) -> Result<(), TryPushError<T>> {

@@ -64,9 +64,26 @@ pub struct AdaptRequest {
     pub stream: Rng,
 }
 
-/// Handle to one submitted request.
+/// Handle to one submitted request. The inner id is allocated densely
+/// from 0 in submission order and is stable across the wire — `net`'s
+/// `POST /v1/episodes` returns it verbatim and `GET /v1/tickets/{id}`
+/// looks it back up.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Ticket(pub usize);
+
+/// Wire-facing view of one ticket's lifecycle — distinguishes "never
+/// issued" from "still running", which [`AdaptationService::poll`]'s
+/// `Option` collapses (an HTTP front-end must 404 the former and keep
+/// polling the latter).
+#[derive(Debug, Clone)]
+pub enum TicketStatus {
+    /// No such ticket was ever issued (or its submit failed).
+    Unknown,
+    /// Submitted and queued or running.
+    Pending,
+    /// Finished; the completion is the terminal record.
+    Done(Completion),
+}
 
 /// Terminal record of one request.
 #[derive(Debug, Clone)]
@@ -218,6 +235,37 @@ impl AdaptationService {
     /// Submitted-but-unfinished request count.
     pub fn pending(&self) -> usize {
         self.slots.lock().unwrap().values().filter(|slot| slot.is_none()).count()
+    }
+
+    /// Three-way lifecycle lookup (see [`TicketStatus`]). Unlike
+    /// [`poll`](AdaptationService::poll), never confuses an id that was
+    /// never issued with one still in flight.
+    pub fn status(&self, ticket: Ticket) -> TicketStatus {
+        match self.slots.lock().unwrap().get(&ticket.0) {
+            None => TicketStatus::Unknown,
+            Some(None) => TicketStatus::Pending,
+            Some(Some(c)) => TicketStatus::Done(c.clone()),
+        }
+    }
+
+    /// `(queued, lanes, busy_lanes)` — instantaneous queue depth plus
+    /// per-tenant lane occupancy, for `/metrics`.
+    pub fn queue_stats(&self) -> (usize, usize, usize) {
+        let queued = self.queue.len();
+        let (lanes, busy) = self.queue.lane_stats();
+        (queued, lanes, busy)
+    }
+
+    /// `(queue_us, service_us)` for every completed request so far, in
+    /// ticket order. Feeds [`crate::metrics::LatencyStats`] on the
+    /// `/metrics` endpoint without waiting for the trace to finish.
+    pub fn latency_samples(&self) -> Vec<(f64, f64)> {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .filter_map(|slot| slot.as_ref().map(|c| (c.queue_us, c.service_us)))
+            .collect()
     }
 
     fn allocate(&self) -> usize {

@@ -190,6 +190,16 @@ impl TenantStore {
         self.inner.lock().unwrap().map.get(tenant).map(|d| d.segments.clone())
     }
 
+    /// The tenant's wire-sync view: cumulative optimiser steps plus the
+    /// composed overlay runs. `None` when the tenant never adapted (or
+    /// was evicted back to base). Read-only — unlike
+    /// [`params_for`](TenantStore::params_for) it does **not** touch the
+    /// LRU clock, so an observer polling `/v1/tenants/{id}/sync` cannot
+    /// perturb eviction order.
+    pub fn sync_state(&self, tenant: &str) -> Option<(u64, Vec<(usize, Vec<f32>)>)> {
+        self.inner.lock().unwrap().map.get(tenant).map(|d| (d.steps, d.segments.clone()))
+    }
+
     pub fn stats(&self) -> TenantStoreStats {
         let g = self.inner.lock().unwrap();
         TenantStoreStats {

@@ -3,9 +3,26 @@
 //!
 //! Supports the full JSON value model; numbers are f64 (adequate for the
 //! metadata the build pipeline emits: offsets/sizes are < 2^53).
+//! Documents deeper than [`MAX_DEPTH`] and non-finite numbers are
+//! rejected — both parsers below face network input via `net::proto`,
+//! so hostile nesting must not overflow the stack and a parsed value
+//! must always re-serialize to valid JSON.
+//!
+//! Two read paths share one grammar:
+//! - [`Json::parse`] builds the full tree (metadata files, responses);
+//! - [`LazyDoc`] byte-scans a document and extracts only the requested
+//!   fields without allocating a tree — the hot request-decode path
+//!   (SNIPPETS ADR-002: lazy scanning beats tree-building ~33x for
+//!   partial field extraction). `bench_hotpath`'s `net_decode` section
+//!   keeps the two asserted-equal and measures the gap.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container nesting either parser accepts. Deep enough for any
+/// artifact this repo emits, shallow enough that recursion never
+/// threatens the stack on hostile input.
+pub const MAX_DEPTH: usize = 64;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -33,7 +50,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -46,7 +63,7 @@ impl Json {
     pub fn from_file(path: &str) -> anyhow::Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
-        Ok(Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?)
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
     }
 
     // ---- typed accessors -------------------------------------------------
@@ -152,9 +169,15 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                // Integer-valued floats print without the ".0" — but
+                // -0.0 must keep its sign (`-0.0 as i64` is 0, which
+                // would silently flip the sign bit on a round-trip).
+                if n.fract() == 0.0 && n.abs() < 9e15 && !(*n == 0.0 && n.is_sign_negative()) {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
+                    // `{}` on f64 is the shortest decimal that parses
+                    // back to the exact same bits, so Num round-trips
+                    // losslessly through write -> parse.
                     out.push_str(&format!("{n}"));
                 }
             }
@@ -221,11 +244,20 @@ fn write_escaped(s: &str, out: &mut String) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), pos: self.i }
+    }
+
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
     }
 
     fn skip_ws(&mut self) {
@@ -271,10 +303,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.eat(b'[')?;
+        self.descend()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -285,6 +319,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -294,10 +329,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.eat(b'{')?;
+        self.descend()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -313,6 +350,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -383,9 +421,14 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        txt.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("invalid number"))
+        match txt.parse::<f64>() {
+            // `"1e999".parse::<f64>()` is Ok(inf) in Rust, but a
+            // non-finite value cannot be re-serialized as JSON — reject
+            // it here so every parsed Json round-trips.
+            Ok(n) if n.is_finite() => Ok(Json::Num(n)),
+            Ok(_) => Err(self.err("number out of range")),
+            Err(_) => Err(self.err("invalid number")),
+        }
     }
 }
 
@@ -395,6 +438,344 @@ fn utf8_len(first: u8) -> usize {
         0xc0..=0xdf => 2,
         0xe0..=0xef => 3,
         _ => 4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lazy byte-scanning extraction (the hot request-decode path)
+// ---------------------------------------------------------------------------
+
+/// A JSON document viewed as raw bytes, supporting field extraction by
+/// byte-scanning instead of tree-building (SNIPPETS ADR-002).
+///
+/// [`raw`](LazyDoc::raw) walks the top-level object (and, for deeper
+/// paths, re-scans the matched sub-object), *skipping* every value it
+/// does not need: strings are traversed with escape validation but no
+/// decoding or allocation, numbers are span-parsed, containers are
+/// walked under the same [`MAX_DEPTH`] cap as the tree parser. Only the
+/// requested field's bytes are ever decoded.
+///
+/// Semantics match [`Json::parse`] wherever both succeed — duplicate
+/// keys resolve last-wins (like `BTreeMap::insert`), numbers must be
+/// finite, trailing data after the document is rejected. The scanner is
+/// strictly more permissive only about bytes it never touches
+/// semantically (it does not UTF-8-validate skipped string contents);
+/// `net::proto`'s verified mode and the `net_decode` bench assert the
+/// extracted fields equal on every request they see.
+pub struct LazyDoc<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> LazyDoc<'a> {
+    pub fn new(bytes: &'a [u8]) -> LazyDoc<'a> {
+        LazyDoc { b: bytes }
+    }
+
+    /// Byte span of the value at `path` (a chain of object keys), or
+    /// `Ok(None)` when a key along the path is absent. Errors on
+    /// structurally malformed documents, non-object path steps, or
+    /// trailing data.
+    pub fn raw(&self, path: &[&str]) -> Result<Option<&'a [u8]>, JsonError> {
+        let mut span = self.b;
+        let mut base = 0usize; // offset of `span` within self.b, for error positions
+        for (level, key) in path.iter().enumerate() {
+            let top = level == 0;
+            match scan_object_for(span, base, key, top)? {
+                Some((lo, hi)) => {
+                    span = &span[lo..hi];
+                    base += lo;
+                }
+                None => {
+                    // The remaining levels cannot match, but the
+                    // document itself was valid at this level.
+                    return Ok(None);
+                }
+            }
+        }
+        Ok(Some(span))
+    }
+
+    /// Decoded string at `path` (`Ok(None)` when absent; error when the
+    /// value is not a string).
+    pub fn str_at(&self, path: &[&str]) -> Result<Option<String>, JsonError> {
+        let Some(span) = self.raw(path)? else { return Ok(None) };
+        if span.first() != Some(&b'"') {
+            return Err(JsonError {
+                msg: format!("json key '{}' is not a string", path_label(path)),
+                pos: 0,
+            });
+        }
+        let mut p = Parser { b: span, i: 0, depth: 0 };
+        let s = p.string()?;
+        Ok(Some(s))
+    }
+
+    /// Number at `path` (`Ok(None)` when absent; error when the value
+    /// is not a number). Finiteness is enforced exactly as in the tree
+    /// parser.
+    pub fn f64_at(&self, path: &[&str]) -> Result<Option<f64>, JsonError> {
+        let Some(span) = self.raw(path)? else { return Ok(None) };
+        let ok = matches!(span.first(), Some(c) if *c == b'-' || c.is_ascii_digit());
+        if !ok {
+            return Err(JsonError {
+                msg: format!("json key '{}' is not a number", path_label(path)),
+                pos: 0,
+            });
+        }
+        let txt = std::str::from_utf8(span)
+            .map_err(|_| JsonError { msg: "invalid number".into(), pos: 0 })?;
+        match txt.parse::<f64>() {
+            Ok(n) if n.is_finite() => Ok(Some(n)),
+            _ => Err(JsonError { msg: "invalid number".into(), pos: 0 }),
+        }
+    }
+
+    /// Integer at `path` via the same `f64 as usize` narrowing the tree
+    /// accessors use (so the two decode paths agree bit-for-bit).
+    pub fn usize_at(&self, path: &[&str]) -> Result<Option<usize>, JsonError> {
+        Ok(self.f64_at(path)?.map(|n| n as usize))
+    }
+
+    /// Bool at `path` (`Ok(None)` when absent).
+    pub fn bool_at(&self, path: &[&str]) -> Result<Option<bool>, JsonError> {
+        let Some(span) = self.raw(path)? else { return Ok(None) };
+        match span {
+            b"true" => Ok(Some(true)),
+            b"false" => Ok(Some(false)),
+            _ => Err(JsonError {
+                msg: format!("json key '{}' is not a bool", path_label(path)),
+                pos: 0,
+            }),
+        }
+    }
+}
+
+fn path_label(path: &[&str]) -> String {
+    path.join(".")
+}
+
+/// Scan one object for `key`, returning the byte range of its value
+/// (last duplicate wins). Validates the whole object structurally; when
+/// `top`, also rejects trailing data after it — together that gives the
+/// scanner the tree parser's accept/reject behaviour on everything it
+/// semantically touches.
+fn scan_object_for(
+    b: &[u8],
+    base: usize,
+    key: &str,
+    top: bool,
+) -> Result<Option<(usize, usize)>, JsonError> {
+    let mut s = Scan { b, i: 0, base, depth: 0 };
+    s.skip_ws();
+    if s.peek() != Some(b'{') {
+        return Err(s.err("expected object"));
+    }
+    s.i += 1;
+    s.depth += 1;
+    let mut hit: Option<(usize, usize)> = None;
+    s.skip_ws();
+    if s.peek() == Some(b'}') {
+        s.i += 1;
+    } else {
+        loop {
+            s.skip_ws();
+            let matched = s.key_matches(key)?;
+            s.skip_ws();
+            s.eat(b':')?;
+            s.skip_ws();
+            let start = s.i;
+            s.skip_value()?;
+            if matched {
+                hit = Some((start, s.i));
+            }
+            s.skip_ws();
+            match s.peek() {
+                Some(b',') => s.i += 1,
+                Some(b'}') => {
+                    s.i += 1;
+                    break;
+                }
+                _ => return Err(s.err("expected ',' or '}'")),
+            }
+        }
+    }
+    if top {
+        s.skip_ws();
+        if s.i != s.b.len() {
+            return Err(s.err("trailing data"));
+        }
+    }
+    Ok(hit)
+}
+
+/// The skipping scanner behind [`LazyDoc`]: walks values without
+/// building anything, validating structure as it goes.
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+    /// Offset of `b` within the original document (error positions).
+    base: usize,
+    depth: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { msg: msg.to_string(), pos: self.base + self.i }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    /// Traverse the object key at the cursor and report whether it
+    /// equals `key`. The fast path compares raw bytes (keys in our
+    /// protocols never contain escapes); keys that *do* contain
+    /// escapes fall back to full decoding so duplicate-key resolution
+    /// matches the tree parser exactly.
+    fn key_matches(&mut self, key: &str) -> Result<bool, JsonError> {
+        let start = self.i;
+        let escaped = self.skip_string()?;
+        let raw = &self.b[start + 1..self.i - 1];
+        if !escaped {
+            return Ok(raw == key.as_bytes());
+        }
+        let mut p = Parser { b: self.b, i: start, depth: 0 };
+        let decoded = p.string()?;
+        Ok(decoded == key)
+    }
+
+    /// Skip one value (string/number/literal/container) validating its
+    /// structure, under the shared depth cap.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        match self.peek() {
+            Some(b'"') => self.skip_string().map(|_| ()),
+            Some(b'{') => self.skip_container(b'{', b'}'),
+            Some(b'[') => self.skip_container(b'[', b']'),
+            Some(b'n') => self.skip_literal("null"),
+            Some(b't') => self.skip_literal("true"),
+            Some(b'f') => self.skip_literal("false"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.skip_number(),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    /// Skip a string, validating escape sequences (but not decoding or
+    /// UTF-8-checking the contents). Returns whether any escape was
+    /// seen.
+    fn skip_string(&mut self) -> Result<bool, JsonError> {
+        self.eat(b'"')?;
+        let mut escaped = false;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(escaped);
+                }
+                Some(b'\\') => {
+                    escaped = true;
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f') => {
+                            self.i += 1;
+                        }
+                        Some(b'u') => {
+                            if self.i + 5 > self.b.len()
+                                || !self.b[self.i + 1..self.i + 5]
+                                    .iter()
+                                    .all(|c| c.is_ascii_hexdigit())
+                            {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            self.i += 5;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    fn skip_number(&mut self) -> Result<(), JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        match txt.parse::<f64>() {
+            Ok(n) if n.is_finite() => Ok(()),
+            _ => Err(self.err("invalid number")),
+        }
+    }
+
+    fn skip_literal(&mut self, word: &str) -> Result<(), JsonError> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    fn skip_container(&mut self, open: u8, close: u8) -> Result<(), JsonError> {
+        self.eat(open)?;
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        let object = open == b'{';
+        self.skip_ws();
+        if self.peek() == Some(close) {
+            self.i += 1;
+            self.depth -= 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            if object {
+                self.skip_string()?;
+                self.skip_ws();
+                self.eat(b':')?;
+                self.skip_ws();
+            }
+            self.skip_value()?;
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(c) if c == close => {
+                    self.i += 1;
+                    self.depth -= 1;
+                    return Ok(());
+                }
+                _ => return Err(self.err(if object {
+                    "expected ',' or '}'"
+                } else {
+                    "expected ',' or ']'"
+                })),
+            }
+        }
     }
 }
 
@@ -444,5 +825,206 @@ mod tests {
     fn whitespace_tolerant() {
         let v = Json::parse(" {\n \"a\" :\t1 } ").unwrap();
         assert_eq!(v.usize_of("a").unwrap(), 1);
+    }
+
+    #[test]
+    fn nesting_depth_is_capped_not_stack_overflowed() {
+        // Within the cap: fine.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(Json::parse(&ok).is_ok());
+        // Past the cap (hostile input): a typed error, not a blown stack.
+        let deep = format!("{}1{}", "[".repeat(100_000), "]".repeat(100_000));
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        let deep_obj = format!("{}1{}", "{\"k\":".repeat(100_000), "}".repeat(100_000));
+        assert!(Json::parse(&deep_obj).is_err());
+        // The lazy scanner honours the same cap.
+        let body = format!("{{\"a\":{deep}}}");
+        assert!(LazyDoc::new(body.as_bytes()).raw(&["a"]).is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_are_rejected() {
+        // `"1e999".parse::<f64>()` is Ok(inf); the parser must reject it
+        // because inf cannot be re-serialized as JSON.
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        assert!(Json::parse("1e308").is_ok());
+        assert!(LazyDoc::new(b"{\"a\":1e999}").f64_at(&["a"]).is_err());
+        assert!(LazyDoc::new(b"{\"a\":1e999,\"b\":2}").raw(&["b"]).is_err());
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        let s = Json::Num(-0.0).to_string();
+        let back = Json::parse(&s).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits(), "wrote {s}");
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+    }
+
+    #[test]
+    fn lazy_extracts_fields_without_a_tree() {
+        let body = br#"{"tenant":"t7","steps":6,"lr":0.006,"deep":{"x":[1,{"y":2}]},"ok":true}"#;
+        let doc = LazyDoc::new(body);
+        assert_eq!(doc.str_at(&["tenant"]).unwrap(), Some("t7".into()));
+        assert_eq!(doc.usize_at(&["steps"]).unwrap(), Some(6));
+        assert_eq!(doc.f64_at(&["lr"]).unwrap(), Some(0.006));
+        assert_eq!(doc.bool_at(&["ok"]).unwrap(), Some(true));
+        let msg = doc.f64_at(&["deep", "x"]).err().map(|e| e.msg).unwrap();
+        assert_eq!(msg, "json key 'deep.x' is not a number");
+        assert_eq!(doc.raw(&["missing"]).unwrap(), None);
+        assert_eq!(doc.str_at(&["deep", "missing"]).unwrap(), None);
+        // type mismatches are typed errors naming the key
+        assert!(doc.str_at(&["steps"]).is_err());
+        assert!(doc.f64_at(&["tenant"]).is_err());
+    }
+
+    #[test]
+    fn lazy_matches_tree_on_duplicates_escapes_and_trailing() {
+        // duplicate keys: last wins, same as BTreeMap::insert
+        let body = br#"{"a":1,"a":2}"#;
+        let tree = Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+        assert_eq!(tree.usize_of("a").unwrap(), 2);
+        assert_eq!(LazyDoc::new(body).usize_at(&["a"]).unwrap(), Some(2));
+        // escaped keys and values decode identically
+        let body = br#"{"k\n":"v\t\"qA"}"#;
+        let tree = Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+        assert_eq!(
+            LazyDoc::new(body).str_at(&["k\n"]).unwrap().as_deref(),
+            tree.get("k\n").unwrap().as_str()
+        );
+        // trailing data is rejected by both
+        assert!(Json::parse("{\"a\":1} x").is_err());
+        assert!(LazyDoc::new(b"{\"a\":1} x").raw(&["a"]).is_err());
+        // structural garbage after the wanted key is still rejected
+        assert!(LazyDoc::new(b"{\"a\":1,\"b\":nul}").raw(&["a"]).is_err());
+        assert!(LazyDoc::new(b"{\"a\":1,}").raw(&["a"]).is_err());
+    }
+
+    /// Seeded random Json trees for the round-trip properties below:
+    /// strings exercise every escape class (quotes, backslashes,
+    /// control chars, unicode), numbers exercise sign/zero/magnitude
+    /// edges, containers nest to a bounded depth.
+    fn random_json(r: &mut crate::util::rng::Rng, depth: usize) -> Json {
+        let gas = if depth >= 4 { 4 } else { 7 };
+        match r.below(gas) {
+            0 => Json::Null,
+            1 => Json::Bool(r.bool(0.5)),
+            2 => {
+                const EDGES: [f64; 9] =
+                    [0.0, -0.0, 1.0, -1.0, 0.1, -9e15, 9e15, 1e308, 5e-324];
+                Json::Num(if r.bool(0.5) {
+                    EDGES[r.below(EDGES.len())]
+                } else {
+                    (r.uniform() - 0.5) * 1e6
+                })
+            }
+            3 => {
+                let mut s = String::new();
+                for _ in 0..r.below(12) {
+                    s.push(match r.below(6) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => char::from_u32(r.below(0x20) as u32).unwrap(),
+                        3 => 'é',
+                        4 => '\u{1F600}',
+                        _ => char::from_u32(0x21 + r.below(90) as u32).unwrap(),
+                    });
+                }
+                Json::Str(s)
+            }
+            4 | 5 => {
+                Json::Arr((0..r.below(4)).map(|_| random_json(r, depth + 1)).collect())
+            }
+            _ => Json::Obj(
+                (0..r.below(4))
+                    .map(|i| (format!("k{i}"), random_json(r, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Bitwise Json equality: `PartialEq` on f64 treats -0.0 == 0.0 and
+    /// would mask a sign-flipping writer.
+    fn bit_eq(a: &Json, b: &Json) -> bool {
+        match (a, b) {
+            (Json::Num(x), Json::Num(y)) => x.to_bits() == y.to_bits(),
+            (Json::Arr(x), Json::Arr(y)) => {
+                x.len() == y.len() && x.iter().zip(y).all(|(u, v)| bit_eq(u, v))
+            }
+            (Json::Obj(x), Json::Obj(y)) => {
+                x.len() == y.len()
+                    && x.iter().zip(y).all(|((ka, u), (kb, v))| ka == kb && bit_eq(u, v))
+            }
+            _ => a == b,
+        }
+    }
+
+    #[test]
+    fn property_write_parse_round_trips_bitwise() {
+        crate::util::prop::check(
+            "jsonio-round-trip",
+            300,
+            41,
+            |r| random_json(r, 0),
+            |v| {
+                let text = v.to_string();
+                let back = Json::parse(&text)
+                    .map_err(|e| format!("re-parse of {text:?} failed: {e}"))?;
+                if bit_eq(v, &back) {
+                    Ok(())
+                } else {
+                    Err(format!("round-trip changed value: {text:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_lazy_equals_tree_on_random_objects() {
+        crate::util::prop::check(
+            "lazy-equals-tree",
+            300,
+            43,
+            |r| {
+                // always a top-level object, as the request path sees
+                let mut m = BTreeMap::new();
+                for i in 0..1 + r.below(5) {
+                    m.insert(format!("k{i}"), random_json(r, 1));
+                }
+                Json::Obj(m)
+            },
+            |v| {
+                let text = v.to_string();
+                let doc = LazyDoc::new(text.as_bytes());
+                for i in 0..6 {
+                    let key = format!("k{i}");
+                    let tree_val = v.get(&key);
+                    let raw = doc
+                        .raw(&[&key])
+                        .map_err(|e| format!("lazy scan of {text:?} failed: {e}"))?;
+                    match (tree_val, raw) {
+                        (None, None) => {}
+                        (Some(tv), Some(span)) => {
+                            let lazy_back = Json::parse(
+                                std::str::from_utf8(span).map_err(|e| e.to_string())?,
+                            )
+                            .map_err(|e| format!("lazy span unparseable: {e}"))?;
+                            if !bit_eq(tv, &lazy_back) {
+                                return Err(format!("field {key} diverged in {text:?}"));
+                            }
+                        }
+                        (t, r) => {
+                            return Err(format!(
+                                "presence diverged for {key} in {text:?}: tree={} lazy={}",
+                                t.is_some(),
+                                r.is_some()
+                            ))
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

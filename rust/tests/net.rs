@@ -1,0 +1,293 @@
+//! Integration tests for the `net/` HTTP front-end: decoder
+//! robustness on hostile bytes, the ticket/tenant lifecycle over a
+//! real loopback server, and the end-to-end wire bit-identity
+//! contract (loadgen vs the in-process sequential reference arm).
+
+use std::io::{Cursor, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tinytrain::coordinator::Method;
+use tinytrain::model::{ModelMeta, ParamStore};
+use tinytrain::net::{self, http, proto, Limits, ServerConfig, WireConfig};
+use tinytrain::serve::{self, LoopMode, ServeConfig, TenantStore, TraceConfig};
+use tinytrain::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Decoder robustness: random and mutated bytes must never panic — every
+// outcome is Ok or a typed error, and whenever both decode arms accept
+// an input they must extract identical fields.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_and_mutated_bytes_never_panic_the_decoders() {
+    let valid = proto::submit_body("tenant000", "traffic", "tinytrain", 6, 6e-3, u64::MAX - 5);
+    let mut rng = Rng::new(0xF00D);
+    let mut both_ok = 0usize;
+    for round in 0..500 {
+        let buf: Vec<u8> = match round % 3 {
+            // Pure noise.
+            0 => {
+                let len = rng.below(200);
+                (0..len).map(|_| rng.next_u64() as u8).collect()
+            }
+            // A valid body with a handful of bytes corrupted.
+            1 => {
+                let mut b = valid.clone().into_bytes();
+                for _ in 0..rng.int_range(1, 8) {
+                    let i = rng.below(b.len());
+                    b[i] = rng.next_u64() as u8;
+                }
+                b
+            }
+            // A valid body truncated mid-stream.
+            _ => valid.as_bytes()[..rng.below(valid.len() + 1)].to_vec(),
+        };
+        let lazy = proto::decode_submit_lazy(&buf);
+        let tree = proto::decode_submit_tree(&buf);
+        match (&lazy, &tree) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a, b, "decode arms diverged on {:?}", String::from_utf8_lossy(&buf));
+                both_ok += 1;
+            }
+            (Err(e), _) | (_, Err(e)) => {
+                assert_eq!(e.status, 400, "wire errors must be client errors");
+                assert!(!e.msg.is_empty());
+            }
+        }
+    }
+    // The untouched valid body must pass — prove the corpus wasn't
+    // rejected wholesale.
+    assert_eq!(
+        proto::decode_submit_lazy(valid.as_bytes()).unwrap(),
+        proto::decode_submit_tree(valid.as_bytes()).unwrap()
+    );
+    assert!(both_ok < 500, "corruption should reject at least sometimes");
+}
+
+#[test]
+fn random_bytes_never_panic_the_http_parser() {
+    let mut rng = Rng::new(0xBEEF);
+    let valid =
+        b"POST /v1/episodes HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nbody".to_vec();
+    let limits = Limits::default();
+    for round in 0..500 {
+        let buf: Vec<u8> = if round % 2 == 0 {
+            let len = rng.below(300);
+            (0..len).map(|_| rng.next_u64() as u8).collect()
+        } else {
+            let mut b = valid.clone();
+            for _ in 0..rng.int_range(1, 6) {
+                let i = rng.below(b.len());
+                b[i] = rng.next_u64() as u8;
+            }
+            b
+        };
+        // Any outcome is fine except a panic; errors must carry a
+        // response-able status.
+        match http::read_request(&mut Cursor::new(buf), &limits) {
+            Ok(_) => {}
+            Err(e) => assert!(matches!(e.status(), 400 | 408 | 413 | 431)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lifecycle over a real loopback socket.
+// ---------------------------------------------------------------------------
+
+fn lifecycle_server_config() -> ServerConfig {
+    ServerConfig {
+        acceptors: 2,
+        limits: Limits { max_body_bytes: 256, ..Limits::default() },
+        verify_decode: true,
+        serve: ServeConfig { workers: 2, queue_capacity: 8, render_cache: true },
+    }
+}
+
+fn start_server(cfg: ServerConfig) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let meta = ModelMeta::synthetic(8);
+        let store = TenantStore::new(Arc::new(ParamStore::init(&meta, 42)), f64::INFINITY);
+        net::serve_blocking(listener, &meta, &store, &cfg)
+    });
+    (addr, handle)
+}
+
+/// Raw-socket exchange: write `payload`, read until the server closes.
+fn raw_exchange(addr: &str, payload: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(payload).unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+#[test]
+fn ticket_and_tenant_lifecycle_over_the_wire() {
+    let (addr, handle) = start_server(lifecycle_server_config());
+
+    // Transport-level violations first (each closes its connection).
+    let resp = raw_exchange(&addr, b"BOGUS\r\n\r\n");
+    assert!(resp.starts_with("HTTP/1.1 400"), "garbage request line: {resp}");
+    {
+        let mut c = net::Client::connect(&addr, &Limits::client()).unwrap();
+        let big = proto::submit_body(&"t".repeat(40), "traffic", "tinytrain", 6, 6e-3, 1)
+            .replace("traffic", &"d".repeat(300));
+        let (status, body) = c.post("/v1/episodes", &big).unwrap();
+        assert_eq!(status, 413, "{}", String::from_utf8_lossy(&body));
+    }
+
+    let mut c = net::Client::connect(&addr, &Limits::client()).unwrap();
+
+    // Typed errors, all on one keep-alive connection.
+    let (status, _) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    let (status, body) = c.get("/v1/tickets/999999").unwrap();
+    assert_eq!(status, 404, "unknown ticket: {}", String::from_utf8_lossy(&body));
+    let (status, _) = c.get("/v1/tickets/notanumber").unwrap();
+    assert_eq!(status, 400);
+    let (status, body) = c.get("/v1/tenants/ghost/sync").unwrap();
+    assert_eq!(status, 404, "never-adapted tenant: {}", String::from_utf8_lossy(&body));
+    let (status, body) = c.post("/v1/episodes", "{}").unwrap();
+    assert_eq!(status, 400);
+    assert!(String::from_utf8_lossy(&body).contains("tenant"));
+    let (status, _) = c.get("/nope").unwrap();
+    assert_eq!(status, 404);
+
+    // A submit for an unknown domain is accepted (it routes and
+    // validates) but completes with a typed in-band error.
+    let body = proto::submit_body("t9", "no-such-domain", "tinytrain", 2, 6e-3, 7);
+    let (status, resp) = c.post("/v1/episodes", &body).unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&resp));
+    let bad_ticket = proto::decode_ticket(&resp).unwrap();
+    let (status, resp) = c.get(&format!("/v1/tickets/{bad_ticket}?wait=1")).unwrap();
+    assert_eq!(status, 200);
+    let done = proto::decode_completion(&resp).unwrap();
+    assert!(done.result.unwrap_err().contains("unknown domain"));
+    // ... and a failed episode leaves no adapted state behind.
+    let (status, _) = c.get("/v1/tenants/t9/sync").unwrap();
+    assert_eq!(status, 404);
+
+    // The happy path: submit, blocking-poll, then re-poll (duplicate
+    // polls after join must keep answering the terminal state).
+    let body =
+        proto::submit_body("t0", "traffic", "tinytrain", 2, 6e-3, Rng::new(5).state());
+    let (status, resp) = c.post("/v1/episodes", &body).unwrap();
+    assert_eq!(status, 202);
+    let ticket = proto::decode_ticket(&resp).unwrap();
+    let (status, resp) = c.get(&format!("/v1/tickets/{ticket}?wait=1")).unwrap();
+    assert_eq!(status, 200);
+    let first = proto::decode_completion(&resp).unwrap();
+    assert!(first.result.is_ok(), "{:?}", first.result);
+    for _ in 0..2 {
+        let (status, resp) = c.get(&format!("/v1/tickets/{ticket}")).unwrap();
+        assert_eq!(status, 200);
+        let again = proto::decode_completion(&resp).unwrap();
+        assert_eq!(again.tenant, first.tenant);
+        assert_eq!(
+            again.result.as_ref().unwrap().acc_after.to_bits(),
+            first.result.as_ref().unwrap().acc_after.to_bits(),
+            "duplicate polls must answer the identical terminal state"
+        );
+    }
+    let (status, resp) = c.get("/v1/tenants/t0/sync").unwrap();
+    assert_eq!(status, 200);
+    let (steps, segments) = proto::decode_sync(&resp).unwrap();
+    assert_eq!(steps, 2);
+    assert!(!segments.is_empty());
+
+    let (status, resp) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8_lossy(&resp).into_owned();
+    for key in ["queued", "busy_lanes", "pending", "completed", "service_latency"] {
+        assert!(text.contains(key), "metrics missing {key}: {text}");
+    }
+
+    let (status, _) = c.post("/v1/shutdown", "{}").unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn stalled_peers_get_408_and_their_handler_back() {
+    // Own server so its aggressive read timeout can't race the
+    // keep-alive clients of the other tests.
+    let cfg = ServerConfig {
+        acceptors: 1,
+        limits: Limits { read_timeout: Duration::from_millis(250), ..Limits::default() },
+        verify_decode: false,
+        serve: ServeConfig { workers: 1, queue_capacity: 4, render_cache: false },
+    };
+    let (addr, handle) = start_server(cfg);
+    let resp = raw_exchange(&addr, b"GET /healthz HTT"); // stall mid-line
+    assert!(resp.starts_with("HTTP/1.1 408"), "stalled peer: {resp}");
+    // The single handler must have been reclaimed: a well-behaved
+    // client gets served afterwards.
+    let mut c = net::Client::connect(&addr, &Limits::client()).unwrap();
+    let (status, _) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = c.post("/v1/shutdown", "{}").unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end wire bit-identity: loadgen over loopback vs the in-process
+// sequential reference arm, at several worker/acceptor/connection
+// shapes, with the server double-decoding every request.
+// ---------------------------------------------------------------------------
+
+fn wire_replay_matches_reference(mode: LoopMode, connections: usize, shape: (usize, usize)) {
+    let (acceptors, workers) = shape;
+    let meta = ModelMeta::synthetic(8);
+    let base = Arc::new(ParamStore::init(&meta, 42));
+    let trace = serve::synthetic_trace(&TraceConfig {
+        tenants: 4,
+        domains: vec!["traffic".into(), "cub".into()],
+        episodes: 2,
+        seed: 11,
+        method: Method::tinytrain_default(),
+        steps: 2,
+        lr: 6e-3,
+    });
+    let cfg = ServerConfig {
+        acceptors,
+        limits: Limits::default(),
+        verify_decode: true,
+        serve: ServeConfig { workers, queue_capacity: 16, render_cache: true },
+    };
+    let (addr, handle) = start_server(cfg);
+    let wire_cfg = WireConfig {
+        connections,
+        mode,
+        method: "tinytrain".into(),
+        limits: Limits::client(),
+        shutdown: true,
+    };
+    let report = net::run_wire(&addr, &meta, &trace, &wire_cfg).unwrap();
+    handle.join().unwrap().unwrap();
+    assert_eq!(report.completions.len(), trace.len());
+    assert!(report.connections <= acceptors, "health clamp must bound connections");
+    assert_eq!(report.total.n, trace.len());
+    net::verify_against_reference(&meta, base, &trace, &report, true).unwrap();
+}
+
+#[test]
+fn closed_loop_wire_replay_is_bit_identical_to_the_reference() {
+    wire_replay_matches_reference(LoopMode::Closed, 4, (3, 3));
+}
+
+#[test]
+fn open_loop_wire_replay_is_bit_identical_to_the_reference() {
+    wire_replay_matches_reference(LoopMode::Open, 3, (2, 2));
+}
+
+#[test]
+fn single_connection_single_worker_still_matches() {
+    wire_replay_matches_reference(LoopMode::Closed, 1, (1, 1));
+}
