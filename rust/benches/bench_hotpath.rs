@@ -511,8 +511,12 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
     };
     let trace = serve::synthetic_trace(&trace_cfg);
     let base = Arc::new(params.clone());
-    let scfg =
-        ServeConfig { workers: default_workers(), queue_capacity: 64, render_cache: true };
+    let scfg = ServeConfig {
+        workers: default_workers(),
+        queue_capacity: 64,
+        render_cache: true,
+        faults: None,
+    };
     let check_seq = TenantStore::new(Arc::clone(&base), f64::INFINITY);
     let check_ref = serve::sequential_replay(&meta, &check_seq, &trace, true);
     let check_par_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);

@@ -5,6 +5,8 @@
 #      --no-default-features --features alloc)
 #   -> net loopback smoke (ci_net_smoke.sh: serve --listen + loadgen,
 #      wire results asserted bit-identical to the in-process arm)
+#   -> chaos smoke (ci_chaos_smoke.sh: faulted replay across a server
+#      restart, final deltas asserted bit-identical to fault-free)
 #   -> bench_hotpath smoke (writes ../BENCH_hotpath.json)
 #   -> size-budget gate (ci_size_check.sh; writes ../SIZE_core.json and
 #      prints the per-section table).
@@ -79,6 +81,9 @@ cargo test -q --no-default-features --features alloc --test no_std_core
 
 echo "== net loopback smoke (serve --listen + loadgen wire bit-identity) =="
 ./ci_net_smoke.sh --prebuilt
+
+echo "== chaos smoke (fault injection + snapshot restart bit-identity) =="
+./ci_chaos_smoke.sh --prebuilt
 
 echo "== bench_hotpath smoke (pure-rust; writes ../BENCH_hotpath.json) =="
 cargo bench --bench bench_hotpath -- smoke

@@ -1,0 +1,99 @@
+#!/usr/bin/env bash
+# Chaos smoke for the fault-tolerant serving plane: run the loopback
+# wire replay THROUGH a deterministic fault plan (worker panics, slow
+# episodes, queue sheds, connection drops on both sides) and across a
+# full server restart, and require the final tenant deltas to stay
+# bit-identical to a fault-free sequential replay of the whole trace.
+#
+# Phase A: serve --listen with --faults and --state-dir, replay episode
+#   0 closed-loop (client injects its own connection drops), then
+#   --shutdown — the drain writes the authoritative tenant snapshot.
+# Phase B: restart the server on the same state dir (it restores the
+#   snapshot), replay episode 1, then verify the synced deltas against
+#   a sequential replay of the FULL trace (--verify-full-trace): proof
+#   that panics, sheds, drops, and the restart changed nothing.
+#
+# Fails on any non-zero exit: unrecovered fault, bit-identity mismatch,
+# missing snapshot, or an unclean server drain.
+#
+# Usage: ci_chaos_smoke.sh [--prebuilt]
+#   --prebuilt   skip `cargo build --release` (ci.sh already built it)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if [ "${1:-}" != "--prebuilt" ]; then
+    echo "== cargo build --release (chaos smoke) =="
+    cargo build --release --bin tinytrain
+fi
+
+BIN=target/release/tinytrain
+if [ ! -x "$BIN" ]; then
+    echo "ci_chaos_smoke: $BIN missing (build first or drop --prebuilt)" >&2
+    exit 1
+fi
+
+LOG="$(mktemp)"
+STATE="$(mktemp -d)"
+SERVER_PID=0
+cleanup() {
+    kill "$SERVER_PID" 2>/dev/null || true
+    rm -rf "$LOG" "$STATE"
+}
+trap cleanup EXIT
+
+# Start one server instance on the shared state dir and scrape the
+# `listening on http://ADDR` handshake (port 0 = ephemeral).
+start_server() {
+    : >"$LOG"
+    "$BIN" serve --listen 127.0.0.1:0 --verify-decode --acceptors 3 --workers 3 \
+        --faults "seed=5,panic=0.3,slow=0.2:10,shed=0.2,drop=0.2" \
+        --state-dir "$STATE" --snapshot-every-s 1 \
+        >"$LOG" 2>&1 &
+    SERVER_PID=$!
+
+    ADDR=""
+    for _ in $(seq 1 100); do
+        ADDR="$(sed -n 's#^listening on http://##p' "$LOG" | head -n 1)"
+        [ -n "$ADDR" ] && break
+        if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+            echo "ci_chaos_smoke: server exited before binding" >&2
+            cat "$LOG" >&2
+            exit 1
+        fi
+        sleep 0.1
+    done
+    if [ -z "$ADDR" ]; then
+        echo "ci_chaos_smoke: no listen line after 10s" >&2
+        cat "$LOG" >&2
+        exit 1
+    fi
+    echo "server bound on $ADDR (state dir $STATE)"
+}
+
+# Both phases slice the SAME deterministic trace (same tenants/
+# episodes/steps/seed), so phase A + phase B together cover exactly
+# the full trace the final verification replays.
+LOADGEN_ARGS=(--mode closed --connections 3 --tenants 4 --episodes 2 --steps 2
+    --faults "seed=21,drop=0.4" --deadline-ms 10000
+    --retry-attempts 8 --retry-seed 77 --shutdown)
+
+echo "== phase A: faulted replay of episode 0, then snapshot-on-drain =="
+start_server
+"$BIN" loadgen --addr "$ADDR" "${LOADGEN_ARGS[@]}" --to-ep 1
+wait "$SERVER_PID"
+echo "-- phase A server log --"
+cat "$LOG"
+
+if [ ! -f "$STATE/tenants.snap" ]; then
+    echo "ci_chaos_smoke: server drained without writing $STATE/tenants.snap" >&2
+    exit 1
+fi
+
+echo "== phase B: restart on the same state dir, replay episode 1 =="
+start_server
+"$BIN" loadgen --addr "$ADDR" "${LOADGEN_ARGS[@]}" --from-ep 1 --verify-full-trace
+wait "$SERVER_PID"
+echo "-- phase B server log --"
+cat "$LOG"
+
+echo "ci_chaos_smoke: green (faults + restart converged bit-identically)"

@@ -80,19 +80,31 @@ USAGE:
   tinytrain serve    [--arch mcunet] [--tenants 8] [--domains a,b] [--episodes 4]
                      [--workers N] [--queue-cap 64] [--mode open|closed]
                      [--method M] [--steps 6] [--delta-budget-kb KB] [--seed S]
+                     [--faults SPEC]
                      (multi-tenant adaptation service: replays a synthetic
                       trace, reports throughput + latency percentiles, asserts
-                      bit-identity against the sequential reference arm)
+                      bit-identity against the sequential reference arm —
+                      with --faults, through injected worker panics)
   tinytrain serve    --listen 127.0.0.1:0 [--acceptors N] [--verify-decode]
                      [--workers N] [--queue-cap 64] [--delta-budget-kb KB]
+                     [--faults SPEC] [--state-dir DIR] [--snapshot-every-s 5]
                      (HTTP front-end over the same service: POST /v1/episodes,
                       GET /v1/tickets/{id}, GET /v1/tenants/{id}/sync,
-                      GET /metrics, GET /healthz, POST /v1/shutdown)
+                      GET /metrics, GET /healthz, POST /v1/shutdown;
+                      --state-dir enables crash-safe snapshots + spill files)
   tinytrain loadgen  --addr HOST:PORT [--connections 4] [--mode open|closed]
                      [--tenants 8] [--domains a,b] [--episodes 4] [--steps 6]
-                     [--seed S] [--no-verify] [--shutdown]
+                     [--seed S] [--no-verify] [--shutdown] [--faults SPEC]
+                     [--deadline-ms MS] [--retry-attempts 8] [--retry-seed S]
+                     [--from-ep A] [--to-ep B] [--verify-full-trace]
                      (replays the synthetic trace over real sockets and asserts
-                      the wire results bit-identical to the in-process arm)
+                      the wire results bit-identical to the in-process arm;
+                      chaos client: retries sheds/drops/failures with seeded
+                      backoff; --from/--to-ep slice episodes for split runs,
+                      --verify-full-trace checks final deltas across a restart)
+
+Fault SPEC grammar: seed=U64,panic=P,slow=P[:MS],shed=P,drop=P — e.g.
+`--faults \"seed=5,panic=0.2,slow=0.1:10,shed=0.2,drop=0.1\"`.
   tinytrain exp      <table1|table2|table3|table4|table5|table7|table8|table9|table10|
                       table11|fig1|fig3|fig4|fig5|fig6a|fig6b|all|all-analytic>
                      [--tier smoke|full|paper] [--arch a,b] [--episodes N] [--steps N]
@@ -291,6 +303,14 @@ fn analytic_model(args: &Args, tag: &str) -> Result<(ModelMeta, ParamStore)> {
     }
 }
 
+/// Parse `--faults SPEC` into a shared plan (None when absent).
+fn fault_plan(args: &Args) -> Result<Option<Arc<serve::FaultPlan>>> {
+    match args.opt("faults") {
+        Some(spec) => Ok(Some(serve::FaultPlan::from_spec(&spec)?)),
+        None => Ok(None),
+    }
+}
+
 /// Multi-tenant adaptation service replay: fan a synthetic
 /// (tenants × domains × episodes) trace over the worker pool, report
 /// throughput and latency percentiles, and check the results
@@ -306,10 +326,12 @@ fn serve(args: &Args) -> Result<()> {
         steps: args.usize("steps", 6),
         lr: args.f64("lr", 6e-3) as f32,
     };
+    let faults = fault_plan(args)?;
     let cfg = serve::ServeConfig {
         workers: args.usize("workers", default_workers()),
         queue_capacity: args.usize("queue-cap", 64),
         render_cache: !args.bool("no-render-cache"),
+        faults: faults.clone(),
     };
     let mode = serve::LoopMode::parse(&args.str("mode", "open"))?;
     // Bit-identical replay needs eviction-free stores; a finite budget
@@ -344,7 +366,26 @@ fn serve(args: &Args) -> Result<()> {
     let store = serve::TenantStore::new(Arc::clone(&base), budget);
     let par = serve::replay(&meta, &store, &cfg, &trace, mode)?;
 
-    if budget.is_infinite() {
+    if let Some(plan) = &faults {
+        let c = plan.counts();
+        eprintln!(
+            "[serve] faults: {} panics, {} slows injected | {} submits recognised as retries",
+            c.panics, c.slows, par.retried
+        );
+    }
+
+    if !budget.is_infinite() {
+        eprintln!(
+            "[serve] finite delta budget ({}): skipping the bit-identity check \
+             (LRU eviction timing depends on cross-tenant interleaving)",
+            fmt_kb(budget)
+        );
+    } else if faults.is_some() && mode == serve::LoopMode::Open {
+        eprintln!(
+            "[serve] open loop with faults: skipping the bit-identity check \
+             (failed episodes are only retried by the closed-loop driver)"
+        );
+    } else {
         serve::check_equivalent(&seq.completions, &par.completions)?;
         for t in 0..trace_cfg.tenants {
             let name = serve::tenant_name(t);
@@ -352,12 +393,9 @@ fn serve(args: &Args) -> Result<()> {
                 return Err(anyhow!("tenant {name}: final delta diverged from reference"));
             }
         }
-        eprintln!("[serve] reference check: bit-identical to the sequential arm");
-    } else {
         eprintln!(
-            "[serve] finite delta budget ({}): skipping the bit-identity check \
-             (LRU eviction timing depends on cross-tenant interleaving)",
-            fmt_kb(budget)
+            "[serve] reference check: bit-identical to the sequential arm{}",
+            if faults.is_some() { " — through the injected faults" } else { "" }
         );
     }
 
@@ -404,6 +442,7 @@ fn serve(args: &Args) -> Result<()> {
 fn serve_listen(args: &Args, addr: &str) -> Result<()> {
     use std::io::Write as _;
     let (meta, params) = analytic_model(args, "serve")?;
+    let state_dir = args.opt("state-dir").map(std::path::PathBuf::from);
     let cfg = net::ServerConfig {
         acceptors: args.usize("acceptors", 4),
         limits: net::Limits::default(),
@@ -412,13 +451,41 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
             workers: args.usize("workers", default_workers()),
             queue_capacity: args.usize("queue-cap", 64),
             render_cache: !args.bool("no-render-cache"),
+            faults: fault_plan(args)?,
         },
+        snapshot: state_dir.as_ref().map(|dir| net::SnapshotConfig {
+            path: dir.join("tenants.snap"),
+            every: std::time::Duration::from_secs(args.u64("snapshot-every-s", 5)),
+        }),
     };
     let budget = match args.opt("delta-budget-kb") {
         Some(_) => args.f64("delta-budget-kb", f64::INFINITY) * 1e3,
         None => f64::INFINITY,
     };
-    let store = serve::TenantStore::new(Arc::new(params), budget);
+    let mut store = serve::TenantStore::new(Arc::new(params), budget);
+    if let Some(dir) = &state_dir {
+        // Evicted tenants spill to disk and page back in on demand
+        // instead of silently losing their adaptation.
+        store = store.with_spill_dir(dir.join("spill"))?;
+        let snap_path = dir.join("tenants.snap");
+        match serve::snapshot::load_or_quarantine(&snap_path) {
+            serve::Restore::Absent => {}
+            serve::Restore::Loaded(entries) => {
+                eprintln!(
+                    "[serve] restored {} tenants from {}",
+                    entries.len(),
+                    snap_path.display()
+                );
+                store.restore_entries(entries);
+            }
+            serve::Restore::Quarantined { to, reason } => {
+                eprintln!(
+                    "[serve] snapshot corrupt ({reason}); quarantined to {} — fresh boot",
+                    to.display()
+                );
+            }
+        }
+    }
     let listener = std::net::TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     // The loadgen/CI handshake line — keep the format stable.
@@ -467,25 +534,67 @@ fn loadgen(args: &Args) -> Result<()> {
         method: method_name,
         limits: net::Limits::client(),
         shutdown: args.bool("shutdown"),
+        faults: fault_plan(args)?,
+        deadline_ms: args.opt("deadline-ms").map(|_| args.u64("deadline-ms", 0)),
+        retry_attempts: args.usize("retry-attempts", 8) as u32,
+        retry_seed: args.u64("retry-seed", 7),
     };
-    let trace = serve::synthetic_trace(&trace_cfg);
+    // The full trace is episode-major, so slicing whole episode blocks
+    // (`--from-ep`/`--to-ep`) keeps every tenant's requests in order —
+    // the split-run shape the restart smoke drives.
+    let full_trace = serve::synthetic_trace(&trace_cfg);
+    let block = trace_cfg.tenants * trace_cfg.domains.len();
+    let episodes = trace_cfg.episodes;
+    let from_ep = args.usize("from-ep", 0).min(episodes);
+    let to_ep = args.usize("to-ep", episodes).min(episodes);
+    if from_ep >= to_ep {
+        return Err(anyhow!("empty episode slice: --from-ep {from_ep} --to-ep {to_ep}"));
+    }
+    let trace = &full_trace[from_ep * block..to_ep * block];
     eprintln!(
-        "[loadgen] {}: {} requests -> {} ({} loop, {} connections requested)",
+        "[loadgen] {}: {} requests (episodes {from_ep}..{to_ep}) -> {} ({} loop, \
+         {} connections requested)",
         meta.arch,
         trace.len(),
         addr,
         args.str("mode", "closed"),
         cfg.connections
     );
-    let report = net::run_wire(&addr, &meta, &trace, &cfg)?;
+    let report = net::run_wire(&addr, &meta, trace, &cfg)?;
     let errors = report.completions.iter().filter(|c| c.result.is_err()).count();
+    let r = &report.retries;
+    if r != &net::RetryCounts::default() {
+        eprintln!(
+            "[loadgen] recoveries: {} transport retries, {} sheds retried, \
+             {} failed episodes resubmitted, {} injected connection drops",
+            r.transport, r.shed, r.failed, r.dropped_connections
+        );
+    }
+    let base = Arc::new(params);
     if args.bool("no-verify") {
         eprintln!("[loadgen] --no-verify: skipping the reference arm");
+    } else if args.bool("verify-full-trace") {
+        // Split-run verification: completions from earlier phases died
+        // with the previous server process, but the surviving tenant
+        // state must still equal one uninterrupted sequential pass.
+        net::verify_final_deltas(
+            &meta,
+            base,
+            &full_trace,
+            &report.syncs,
+            !args.bool("no-render-cache"),
+        )?;
+        eprintln!(
+            "[loadgen] full-trace check: final deltas of {} tenants bit-identical to one \
+             uninterrupted sequential pass over all {} episodes",
+            report.syncs.len(),
+            episodes
+        );
     } else {
         net::verify_against_reference(
             &meta,
-            Arc::new(params),
-            &trace,
+            base,
+            trace,
             &report,
             !args.bool("no-render-cache"),
         )?;

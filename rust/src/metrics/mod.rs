@@ -75,6 +75,16 @@ impl LatencyStats {
     }
 }
 
+/// A flat JSON object of named `u64` counters — the shape every counter
+/// family on `/metrics` uses (queue degradation counters, tenant-store
+/// stats, injected-fault tallies). Counters are observability, not
+/// bit-identity state, so the f64 widening is acceptable here (exact up
+/// to 2^53, far beyond any realistic count).
+pub fn counters(pairs: &[(&str, u64)]) -> crate::util::jsonio::Json {
+    use crate::util::jsonio::{num, obj};
+    obj(pairs.iter().map(|&(name, v)| (name, num(v as f64))).collect())
+}
+
 /// Nearest-rank percentile over an ascending-sorted slice; `q` in
 /// [0, 1]. Empty input yields 0.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {

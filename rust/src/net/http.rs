@@ -12,8 +12,10 @@
 use std::fmt;
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use super::limits::Limits;
+use crate::util::rng::Rng;
 
 /// One parsed request. Header names are lowercased; the target is
 /// split at `?` into `path` and the raw `query` string.
@@ -69,6 +71,13 @@ impl HttpError {
             HttpError::Timeout => 408,
             HttpError::Io(_) => 400,
         }
+    }
+
+    /// Whether retrying the exchange on a fresh connection could
+    /// plausibly succeed: transport deaths and timeouts are transient,
+    /// protocol violations (400/413/431) fail the same way every time.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, HttpError::Io(_) | HttpError::Timeout)
     }
 }
 
@@ -241,16 +250,32 @@ pub fn write_response(
     body: &str,
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_with(w, status, body, keep_alive, &[])
+}
+
+/// Write one JSON response with extra headers (e.g. `Retry-After` on a
+/// 503 shed). Header names/values are trusted server-side constants —
+/// no escaping is attempted.
+pub fn write_response_with(
+    w: &mut impl Write,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+    extra: &[(&str, String)],
+) -> std::io::Result<()> {
     write!(
         w,
         "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
-         Connection: {}\r\n\r\n{}",
+         Connection: {}\r\n",
         status,
         reason(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
-        body
     )?;
+    for (name, value) in extra {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    write!(w, "\r\n{body}")?;
     w.flush()
 }
 
@@ -260,7 +285,15 @@ pub fn read_response<R: BufRead>(
     limits: &Limits,
 ) -> Result<(u16, Vec<u8>), HttpError> {
     let line = read_line_capped(r, limits.max_line_bytes, || bad("status line too long"))?
-        .ok_or_else(|| bad("connection closed before the response"))?;
+        .ok_or_else(|| {
+            // A clean close with a response owed is a transport death
+            // (e.g. the server dropped us mid-exchange) — classify as
+            // transient Io so retry policies reconnect and resend.
+            HttpError::Io(std::io::Error::new(
+                ErrorKind::UnexpectedEof,
+                "connection closed before the response",
+            ))
+        })?;
     let text = std::str::from_utf8(&line).map_err(|_| bad("status line is not utf-8"))?;
     let mut parts = text.split(' ').filter(|p| !p.is_empty());
     let version = parts.next().ok_or_else(|| bad("empty status line"))?;
@@ -276,9 +309,49 @@ pub fn read_response<R: BufRead>(
     Ok((status, body))
 }
 
+/// Deterministic bounded exponential backoff with jitter: delay for
+/// attempt `k` is drawn uniformly from `[cap/2, cap)` of the capped
+/// exponential `min(base * 2^k, cap)`. Jitter comes from a seeded
+/// [`Rng`], so two loadgen runs with the same seeds sleep identically.
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    /// Give up after this many attempts of one logical exchange.
+    pub max_attempts: u32,
+    rng: Rng,
+    /// Transient-retry count accrued through this policy (reported in
+    /// loadgen summaries).
+    pub retries: u64,
+}
+
+impl Backoff {
+    pub fn new(seed: u64) -> Backoff {
+        Backoff {
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(500),
+            max_attempts: 8,
+            rng: Rng::new(seed),
+            retries: 0,
+        }
+    }
+
+    /// The sleep before retry number `attempt` (1-based).
+    pub fn delay(&mut self, attempt: u32) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(2u32.saturating_pow(attempt.min(16)))
+            .min(self.cap)
+            .max(Duration::from_millis(1));
+        // uniform in [exp/2, exp): decorrelates retry herds
+        let half = exp.as_micros() as u64 / 2;
+        Duration::from_micros(half + self.rng.below(half.max(1) as usize) as u64)
+    }
+}
+
 /// Blocking keep-alive HTTP client over one `TcpStream` — the load
 /// generator's transport (one `Client` per connection worker).
 pub struct Client {
+    addr: String,
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     limits: Limits,
@@ -286,15 +359,28 @@ pub struct Client {
 
 impl Client {
     pub fn connect(addr: &str, limits: &Limits) -> std::io::Result<Client> {
+        let (reader, writer) = Client::open(addr, limits)?;
+        Ok(Client { addr: addr.to_string(), reader, writer, limits: limits.clone() })
+    }
+
+    fn open(
+        addr: &str,
+        limits: &Limits,
+    ) -> std::io::Result<(BufReader<TcpStream>, TcpStream)> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(Some(limits.read_timeout))?;
         stream.set_write_timeout(Some(limits.read_timeout))?;
-        Ok(Client {
-            reader: BufReader::new(stream.try_clone()?),
-            writer: stream,
-            limits: limits.clone(),
-        })
+        Ok((BufReader::new(stream.try_clone()?), stream))
+    }
+
+    /// Tear down the socket and dial the same address again (any bytes
+    /// buffered from the old connection are discarded with it).
+    pub fn reconnect(&mut self) -> std::io::Result<()> {
+        let (reader, writer) = Client::open(&self.addr, &self.limits)?;
+        self.reader = reader;
+        self.writer = writer;
+        Ok(())
     }
 
     pub fn request(
@@ -324,6 +410,38 @@ impl Client {
 
     pub fn post(&mut self, target: &str, body: &str) -> Result<(u16, Vec<u8>), HttpError> {
         self.request("POST", target, Some(body))
+    }
+
+    /// `request`, but transient failures (connection death, timeout)
+    /// reconnect and resend after a jittered backoff, up to
+    /// `policy.max_attempts`. Only safe for idempotent exchanges — the
+    /// adaptation API qualifies everywhere: GETs are reads and episode
+    /// submits are deduped server-side by their RNG stream state, so a
+    /// resent submit whose first copy actually landed returns the
+    /// original ticket instead of double-running.
+    pub fn request_with_retry(
+        &mut self,
+        method: &str,
+        target: &str,
+        body: Option<&str>,
+        policy: &mut Backoff,
+    ) -> Result<(u16, Vec<u8>), HttpError> {
+        let mut attempt = 0u32;
+        loop {
+            match self.request(method, target, body) {
+                Ok(resp) => return Ok(resp),
+                Err(e) if e.is_transient() && attempt + 1 < policy.max_attempts => {
+                    attempt += 1;
+                    policy.retries += 1;
+                    std::thread::sleep(policy.delay(attempt));
+                    // A failed redial leaves the dead socket in place;
+                    // the next request errors transiently and loops —
+                    // still bounded by max_attempts.
+                    self.reconnect().ok();
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 }
 
@@ -404,5 +522,39 @@ mod tests {
             read_response(&mut Cursor::new(wire), &Limits::default()).unwrap();
         assert_eq!(status, 202);
         assert_eq!(body, b"{\"ticket\":7}");
+    }
+
+    #[test]
+    fn extra_headers_ride_along_and_still_round_trip() {
+        let mut wire = Vec::new();
+        write_response_with(&mut wire, 503, "{}", true, &[("Retry-After", "1".to_string())])
+            .unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        let (status, body) =
+            read_response(&mut Cursor::new(wire), &Limits::default()).unwrap();
+        assert_eq!((status, body.as_slice()), (503, b"{}".as_slice()));
+    }
+
+    #[test]
+    fn eof_before_response_is_transient() {
+        let err = read_response(&mut Cursor::new(Vec::new()), &Limits::default()).unwrap_err();
+        assert!(err.is_transient(), "mid-exchange close must classify as retryable: {err}");
+        assert!(!bad("nope").is_transient());
+    }
+
+    #[test]
+    fn backoff_is_bounded_jittered_and_deterministic() {
+        let mut a = Backoff::new(9);
+        let mut b = Backoff::new(9);
+        for attempt in 1..=6 {
+            let da = a.delay(attempt);
+            assert_eq!(da, b.delay(attempt), "same seed must sleep identically");
+            let cap = Duration::from_millis(500);
+            assert!(da < cap, "attempt {attempt}: {da:?} exceeds the cap");
+            assert!(da >= Duration::from_micros(1));
+        }
+        // exponent saturates instead of overflowing
+        let _ = a.delay(u32::MAX);
     }
 }

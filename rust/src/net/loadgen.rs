@@ -20,23 +20,36 @@
 //! "parallel equals sequential" contract, now including the protocol
 //! boundary.
 //!
+//! Degradation (PR 8): the generator is also the chaos client. A
+//! [`FaultPlan`] passed in [`WireConfig::faults`] injects deliberate
+//! connection drops client-side (keyed on each episode's stream, like
+//! the server's plan); transport deaths reconnect and resend through a
+//! seeded [`Backoff`]; `503` sheds honour the server's `retry_after_s`
+//! hint (capped by the jittered backoff so loopback runs stay fast);
+//! and `failed` completions whose error is retryable
+//! ([`is_retryable_error`]) are resubmitted — the server dedupes
+//! submits by stream state, so a resend never double-runs an episode
+//! that actually landed. Every recovery is tallied in [`RetryCounts`].
+//!
 //! [`serve::replay`]: crate::serve::replay
 //! [`sequential_replay`]: crate::serve::sequential_replay
 //! [`check_equivalent`]: crate::serve::check_equivalent
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use super::http::Client;
+use super::http::{Backoff, Client};
 use super::limits::Limits;
 use super::proto;
 use crate::metrics::LatencyStats;
 use crate::model::{ModelMeta, ParamStore};
+use crate::serve::replay::cell_seed;
 use crate::serve::{
-    check_equivalent, sequential_replay, AdaptRequest, Completion, LoopMode, TenantStore,
+    check_equivalent, is_retryable_error, sequential_replay, AdaptRequest, Completion, FaultPlan,
+    LoopMode, TenantStore,
 };
 use crate::util::jsonio::Json;
 
@@ -55,6 +68,18 @@ pub struct WireConfig {
     pub limits: Limits,
     /// `POST /v1/shutdown` once the replay (and sync download) is done.
     pub shutdown: bool,
+    /// Client-side chaos: a plan whose `drop` schedule tears down this
+    /// generator's own keep-alive connections mid-replay (the other
+    /// fault kinds are server concerns and ignored here).
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Tag every submit with an SLO deadline (ms in queue); the server
+    /// sheds such submits with 503 instead of blocking when full.
+    pub deadline_ms: Option<u64>,
+    /// Retry budget per logical exchange (transport resends, shed
+    /// retries, and failed-episode resubmits each count against it).
+    pub retry_attempts: u32,
+    /// Seed of the per-connection backoff jitter streams.
+    pub retry_seed: u64,
 }
 
 impl Default for WireConfig {
@@ -65,8 +90,26 @@ impl Default for WireConfig {
             method: proto::DEFAULT_METHOD.to_string(),
             limits: Limits::client(),
             shutdown: false,
+            faults: None,
+            deadline_ms: None,
+            retry_attempts: 8,
+            retry_seed: 0,
         }
     }
+}
+
+/// How often each degradation path fired across one wire replay. All
+/// zeros on a fault-free run against an unloaded server.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RetryCounts {
+    /// Transport-level resends (connection death, timeout).
+    pub transport: u64,
+    /// `503` shed responses that were retried after backing off.
+    pub shed: u64,
+    /// `failed` completions resubmitted (worker panic, queue deadline).
+    pub failed: u64,
+    /// Client-side injected connection drops (deliberate reconnects).
+    pub dropped_connections: u64,
 }
 
 /// What one wire replay observed.
@@ -83,6 +126,8 @@ pub struct WireReport {
     pub total: LatencyStats,
     /// Connections actually used after the health clamp.
     pub connections: usize,
+    /// Degradation-path tallies summed across connections.
+    pub retries: RetryCounts,
 }
 
 fn proto_err(e: proto::ProtoError) -> anyhow::Error {
@@ -146,14 +191,16 @@ pub fn run_wire(
     let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(trace.len()));
     let syncs: Mutex<BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>> =
         Mutex::new(BTreeMap::new());
+    let retries: Mutex<RetryCounts> = Mutex::new(RetryCounts::default());
     let t0 = Instant::now();
     let worker_results: Vec<Result<()>> = std::thread::scope(|scope| {
-        let (collected, latencies, syncs) = (&collected, &latencies, &syncs);
+        let (collected, latencies, syncs, retries) = (&collected, &latencies, &syncs, &retries);
         let handles: Vec<_> = assignments
             .iter()
-            .map(|mine| {
+            .enumerate()
+            .map(|(ci, mine)| {
                 scope.spawn(move || {
-                    connection_worker(addr, cfg, mine, collected, latencies, syncs)
+                    connection_worker(addr, cfg, ci, mine, collected, latencies, syncs, retries)
                 })
             })
             .collect();
@@ -180,54 +227,158 @@ pub fn run_wire(
         throughput_rps: trace.len() as f64 / wall_s.max(1e-12),
         total,
         connections,
+        retries: retries.into_inner().unwrap(),
     })
 }
 
+/// If the client-side plan schedules a drop for this episode, tear the
+/// keep-alive connection down deliberately (fire-once per stream, like
+/// every fault kind). A failed redial is left for the next request,
+/// whose transport retry loop re-dials with backoff.
+fn inject_drop(
+    client: &mut Client,
+    cfg: &WireConfig,
+    req: &AdaptRequest,
+    counts: &mut RetryCounts,
+) {
+    if let Some(plan) = &cfg.faults {
+        if plan.drop_connection(req.stream.state()) {
+            counts.dropped_connections += 1;
+            client.reconnect().ok();
+        }
+    }
+}
+
+/// Submit one episode, surviving transport deaths (via
+/// [`Client::request_with_retry`]) and `503` sheds. A shed sleeps the
+/// jittered backoff, capped by the server's `retry_after_s` hint —
+/// a loopback shed clears in milliseconds, so honouring a full
+/// advertised second as a floor would dominate smoke-run wall time.
+fn submit_with_recovery(
+    client: &mut Client,
+    cfg: &WireConfig,
+    req: &AdaptRequest,
+    backoff: &mut Backoff,
+    counts: &mut RetryCounts,
+) -> Result<usize> {
+    let body = proto::submit_body_with(
+        &req.tenant,
+        &req.domain,
+        &cfg.method,
+        req.steps,
+        req.lr,
+        req.stream.state(),
+        cfg.deadline_ms,
+    );
+    let mut shed = 0u32;
+    loop {
+        let (status, resp) = client
+            .request_with_retry("POST", "/v1/episodes", Some(&body), backoff)
+            .map_err(|e| anyhow!("submit: {e}"))?;
+        if status == 503 {
+            shed += 1;
+            ensure!(
+                shed < backoff.max_attempts,
+                "submit: shed {shed} times in a row: {}",
+                String::from_utf8_lossy(&resp)
+            );
+            counts.shed += 1;
+            let mut delay = backoff.delay(shed);
+            if let Some(hint_s) = proto::decode_retry_after(&resp) {
+                delay = delay.min(Duration::from_secs(hint_s));
+            }
+            std::thread::sleep(delay);
+            continue;
+        }
+        expect_status("submit", 202, status, &resp)?;
+        return proto::decode_ticket(&resp).map_err(proto_err);
+    }
+}
+
+fn join_ticket(client: &mut Client, ticket: usize, backoff: &mut Backoff) -> Result<Completion> {
+    let (status, resp) = client
+        .request_with_retry("GET", &format!("/v1/tickets/{ticket}?wait=1"), None, backoff)
+        .map_err(|e| anyhow!("ticket {ticket}: {e}"))?;
+    expect_status("ticket", 200, status, &resp)?;
+    proto::decode_completion(&resp).map_err(proto_err)
+}
+
+/// Join `ticket` and drive retryable failures (worker panics, queue
+/// deadlines) to a terminal completion within the retry budget: a
+/// `failed` completion is resubmitted — the server's dedup hands out a
+/// fresh ticket precisely because the previous one failed — and
+/// rejoined. The result is re-keyed to the trace index: server tickets
+/// number *arrival* across racing connections (and retries), the
+/// reference numbers the trace.
+#[allow(clippy::too_many_arguments)]
+fn join_resolved(
+    client: &mut Client,
+    cfg: &WireConfig,
+    ticket: usize,
+    index: usize,
+    req: &AdaptRequest,
+    backoff: &mut Backoff,
+    counts: &mut RetryCounts,
+) -> Result<Completion> {
+    let mut ticket = ticket;
+    let mut attempts = 1u32;
+    loop {
+        let mut c = join_ticket(client, ticket, backoff)?;
+        if let Err(e) = &c.result {
+            if is_retryable_error(e) && attempts < cfg.retry_attempts.max(1) {
+                counts.failed += 1;
+                std::thread::sleep(backoff.delay(attempts));
+                attempts += 1;
+                ticket = submit_with_recovery(client, cfg, req, backoff, counts)?;
+                continue;
+            }
+        }
+        c.ticket = index;
+        return Ok(c);
+    }
+}
+
 /// One connection's share of the replay: submit + wait for this
-/// connection's tenants in trace order, then download their syncs.
+/// connection's tenants in trace order — recovering from transport
+/// deaths, sheds and retryable failures along the way — then download
+/// their syncs.
+#[allow(clippy::too_many_arguments)]
 fn connection_worker(
     addr: &str,
     cfg: &WireConfig,
+    ci: usize,
     mine: &[(usize, &AdaptRequest)],
     collected: &Mutex<Vec<Completion>>,
     latencies: &Mutex<Vec<f64>>,
     syncs: &Mutex<BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>>,
+    retries: &Mutex<RetryCounts>,
 ) -> Result<()> {
     if mine.is_empty() {
         return Ok(());
     }
     let mut client = Client::connect(addr, &cfg.limits)?;
-    let submit = |client: &mut Client, req: &AdaptRequest| -> Result<usize> {
-        let body = proto::submit_body(
-            &req.tenant,
-            &req.domain,
-            &cfg.method,
-            req.steps,
-            req.lr,
-            req.stream.state(),
-        );
-        let (status, resp) =
-            client.post("/v1/episodes", &body).map_err(|e| anyhow!("submit: {e}"))?;
-        expect_status("submit", 202, status, &resp)?;
-        proto::decode_ticket(&resp).map_err(proto_err)
-    };
-    let join = |client: &mut Client, ticket: usize, index: usize| -> Result<Completion> {
-        let (status, resp) = client
-            .get(&format!("/v1/tickets/{ticket}?wait=1"))
-            .map_err(|e| anyhow!("ticket {ticket}: {e}"))?;
-        expect_status("ticket", 200, status, &resp)?;
-        let mut c = proto::decode_completion(&resp).map_err(proto_err)?;
-        // Re-key to the trace index: server tickets number *arrival*
-        // across racing connections, the reference numbers the trace.
-        c.ticket = index;
-        Ok(c)
-    };
+    // One jitter stream per connection, pre-forked off the retry seed
+    // like every other stream in the system — two runs with the same
+    // seeds back off identically.
+    let mut backoff = Backoff::new(cell_seed(cfg.retry_seed, &format!("conn{ci}")));
+    backoff.max_attempts = cfg.retry_attempts.max(1);
+    let mut counts = RetryCounts::default();
     match cfg.mode {
         LoopMode::Closed => {
             for &(index, req) in mine {
                 let start = Instant::now();
-                let ticket = submit(&mut client, req)?;
-                let c = join(&mut client, ticket, index)?;
+                inject_drop(&mut client, cfg, req, &mut counts);
+                let ticket =
+                    submit_with_recovery(&mut client, cfg, req, &mut backoff, &mut counts)?;
+                let c = join_resolved(
+                    &mut client,
+                    cfg,
+                    ticket,
+                    index,
+                    req,
+                    &mut backoff,
+                    &mut counts,
+                )?;
                 latencies.lock().unwrap().push(start.elapsed().as_secs_f64() * 1e6);
                 collected.lock().unwrap().push(c);
             }
@@ -235,11 +386,21 @@ fn connection_worker(
         LoopMode::Open => {
             let mut pending = Vec::with_capacity(mine.len());
             for &(index, req) in mine {
-                let ticket = submit(&mut client, req)?;
-                pending.push((index, ticket, Instant::now()));
+                inject_drop(&mut client, cfg, req, &mut counts);
+                let ticket =
+                    submit_with_recovery(&mut client, cfg, req, &mut backoff, &mut counts)?;
+                pending.push((index, req, ticket, Instant::now()));
             }
-            for (index, ticket, submitted) in pending {
-                let c = join(&mut client, ticket, index)?;
+            for (index, req, ticket, submitted) in pending {
+                let c = join_resolved(
+                    &mut client,
+                    cfg,
+                    ticket,
+                    index,
+                    req,
+                    &mut backoff,
+                    &mut counts,
+                )?;
                 latencies.lock().unwrap().push(submitted.elapsed().as_secs_f64() * 1e6);
                 collected.lock().unwrap().push(c);
             }
@@ -262,6 +423,12 @@ fn connection_worker(
         let state = proto::decode_sync(&resp).map_err(proto_err)?;
         syncs.lock().unwrap().insert(req.tenant.clone(), state);
     }
+    counts.transport = backoff.retries;
+    let mut total = retries.lock().unwrap();
+    total.transport += counts.transport;
+    total.shed += counts.shed;
+    total.failed += counts.failed;
+    total.dropped_connections += counts.dropped_connections;
     Ok(())
 }
 
@@ -274,25 +441,19 @@ fn segments_bit_eq(a: &[(usize, Vec<f32>)], b: &[(usize, Vec<f32>)]) -> bool {
         })
 }
 
-/// Run the in-process sequential reference arm over the same trace and
-/// assert the wire run matches it bit-for-bit: completion-by-completion
-/// via [`check_equivalent`], then every tenant's final delta.
-pub fn verify_against_reference(
-    meta: &ModelMeta,
-    base: Arc<ParamStore>,
+/// Compare every tenant in `trace` between the reference `store` and
+/// the wire-synced `syncs`, bit for bit.
+fn compare_syncs(
+    store: &TenantStore,
     trace: &[AdaptRequest],
-    report: &WireReport,
-    render_cache: bool,
+    syncs: &BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>,
 ) -> Result<()> {
-    let store = TenantStore::new(base, f64::INFINITY);
-    let reference = sequential_replay(meta, &store, trace, render_cache);
-    check_equivalent(&reference.completions, &report.completions)?;
     let mut tenants: Vec<&str> = trace.iter().map(|r| r.tenant.as_str()).collect();
     tenants.sort_unstable();
     tenants.dedup();
     for tenant in tenants {
         let want = store.sync_state(tenant);
-        let got = report.syncs.get(tenant);
+        let got = syncs.get(tenant);
         match (&want, got) {
             (None, None) => {}
             (Some((ws, wsegs)), Some((gs, gsegs))) => {
@@ -311,4 +472,39 @@ pub fn verify_against_reference(
         }
     }
     Ok(())
+}
+
+/// Run the in-process sequential reference arm over the same trace and
+/// assert the wire run matches it bit-for-bit: completion-by-completion
+/// via [`check_equivalent`], then every tenant's final delta.
+pub fn verify_against_reference(
+    meta: &ModelMeta,
+    base: Arc<ParamStore>,
+    trace: &[AdaptRequest],
+    report: &WireReport,
+    render_cache: bool,
+) -> Result<()> {
+    let store = TenantStore::new(base, f64::INFINITY);
+    let reference = sequential_replay(meta, &store, trace, render_cache);
+    check_equivalent(&reference.completions, &report.completions)?;
+    compare_syncs(&store, trace, &report.syncs)
+}
+
+/// Delta-only verification for split runs: replay `full_trace`
+/// sequentially on a fresh unbounded store and assert the final synced
+/// deltas match. This is the restart proof — a wire run split into
+/// phases across a server restart can't compare phase-A completions
+/// (they died with the first process), but the surviving tenant state
+/// must still land bit-identical to one uninterrupted sequential pass
+/// over everything.
+pub fn verify_final_deltas(
+    meta: &ModelMeta,
+    base: Arc<ParamStore>,
+    full_trace: &[AdaptRequest],
+    syncs: &BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>,
+    render_cache: bool,
+) -> Result<()> {
+    let store = TenantStore::new(base, f64::INFINITY);
+    let _ = sequential_replay(meta, &store, full_trace, render_cache);
+    compare_syncs(&store, full_trace, syncs)
 }

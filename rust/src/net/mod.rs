@@ -26,12 +26,22 @@
 //!   bench). `u64` values (RNG stream states, step counters) travel as
 //!   decimal strings: JSON numbers are f64 and lose bits above 2^53,
 //!   and bit-identity is the whole point.
-//! - [`server`]: accept loop, dispatch, backpressure, shutdown.
+//! - [`server`]: accept loop, dispatch, backpressure, shutdown — plus
+//!   the degradation seams (PR 8): deadline-tagged submits shed with
+//!   `503 + Retry-After` instead of blocking, an active
+//!   [`serve::FaultPlan`] injects sheds/drops at this layer, and
+//!   [`SnapshotConfig`] turns on periodic + on-shutdown crash-safe
+//!   tenant snapshots.
 //! - [`loadgen`]: socket-driven replay of [`serve::replay`] traces with
-//!   a bit-identity check against the in-process sequential arm.
+//!   a bit-identity check against the in-process sequential arm. Doubles
+//!   as the chaos client: seeded [`Backoff`] retries for transport
+//!   deaths/sheds/failed episodes, client-side injected connection
+//!   drops, all tallied in [`RetryCounts`]; [`verify_final_deltas`]
+//!   proves split-phase (restart) runs still converge bit-identically.
 //!
 //! [`serve`]: crate::serve
 //! [`serve::replay`]: crate::serve::replay
+//! [`serve::FaultPlan`]: crate::serve::FaultPlan
 //! [`jsonio::LazyDoc`]: crate::util::jsonio::LazyDoc
 
 pub mod http;
@@ -40,10 +50,12 @@ pub mod loadgen;
 pub mod proto;
 pub mod server;
 
-pub use http::{Client, HttpError, Request};
+pub use http::{Backoff, Client, HttpError, Request};
 pub use limits::Limits;
-pub use loadgen::{run_wire, verify_against_reference, WireConfig, WireReport};
+pub use loadgen::{
+    run_wire, verify_against_reference, verify_final_deltas, RetryCounts, WireConfig, WireReport,
+};
 pub use proto::{
     decode_submit_lazy, decode_submit_tree, EpisodeSubmit, ProtoError, Route, DEFAULT_METHOD,
 };
-pub use server::{serve_blocking, ServerConfig};
+pub use server::{serve_blocking, ServerConfig, SnapshotConfig};

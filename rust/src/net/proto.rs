@@ -31,6 +31,9 @@ pub const DEFAULT_LR: f64 = 6e-3;
 /// buy unbounded worker time.
 pub const MAX_STEPS: usize = 1000;
 const MAX_NAME_LEN: usize = 64;
+/// Upper bound on a submit's queue deadline (10 minutes) — deadlines
+/// exist to shed stale work, not to encode forever.
+pub const MAX_DEADLINE_MS: u64 = 600_000;
 
 /// Typed protocol failure: an HTTP status plus a one-line reason that
 /// becomes the `{"error": ...}` body.
@@ -112,6 +115,11 @@ pub struct EpisodeSubmit {
     pub steps: usize,
     pub lr: f32,
     pub stream: u64,
+    /// Optional SLO tag: fail the episode (typed, retryable) if it sits
+    /// queued longer than this many milliseconds. A deadline also makes
+    /// the submit shed (503 + `Retry-After`) instead of blocking when
+    /// the queue is full.
+    pub deadline_ms: Option<u64>,
 }
 
 fn validate(sub: EpisodeSubmit) -> Result<EpisodeSubmit, ProtoError> {
@@ -134,6 +142,13 @@ fn validate(sub: EpisodeSubmit) -> Result<EpisodeSubmit, ProtoError> {
     }
     if !(sub.lr.is_finite() && sub.lr > 0.0 && sub.lr <= 10.0) {
         return Err(ProtoError::bad("field 'lr' must be a finite number in (0, 10]"));
+    }
+    if let Some(d) = sub.deadline_ms {
+        if d == 0 || d > MAX_DEADLINE_MS {
+            return Err(ProtoError::bad(format!(
+                "field 'deadline_ms' must be in 1..={MAX_DEADLINE_MS}"
+            )));
+        }
     }
     Ok(sub)
 }
@@ -163,7 +178,8 @@ pub fn decode_submit_lazy(body: &[u8]) -> Result<EpisodeSubmit, ProtoError> {
     let stream_text =
         doc.str_at(&["stream"]).map_err(decode_err)?.ok_or_else(|| missing("stream"))?;
     let stream = parse_stream(&stream_text)?;
-    validate(EpisodeSubmit { tenant, domain, method, steps, lr, stream })
+    let deadline_ms = doc.usize_at(&["deadline_ms"]).map_err(decode_err)?.map(|d| d as u64);
+    validate(EpisodeSubmit { tenant, domain, method, steps, lr, stream, deadline_ms })
 }
 
 /// The reference decode arm through the tree parser. Same defaults,
@@ -200,7 +216,8 @@ pub fn decode_submit_tree(body: &[u8]) -> Result<EpisodeSubmit, ProtoError> {
     let steps = num_field("steps")?.map(|n| n as usize).unwrap_or(DEFAULT_STEPS);
     let lr = num_field("lr")?.unwrap_or(DEFAULT_LR) as f32;
     let stream = parse_stream(&str_field("stream")?.ok_or_else(|| missing("stream"))?)?;
-    validate(EpisodeSubmit { tenant, domain, method, steps, lr, stream })
+    let deadline_ms = num_field("deadline_ms")?.map(|n| n as u64);
+    validate(EpisodeSubmit { tenant, domain, method, steps, lr, stream, deadline_ms })
 }
 
 /// The artifact-free method-name parser both the server and the trace
@@ -239,15 +256,45 @@ pub fn submit_body(
     lr: f32,
     stream: u64,
 ) -> String {
-    obj(vec![
+    submit_body_with(tenant, domain, method, steps, lr, stream, None)
+}
+
+/// [`submit_body`] plus the optional SLO deadline.
+#[allow(clippy::too_many_arguments)]
+pub fn submit_body_with(
+    tenant: &str,
+    domain: &str,
+    method: &str,
+    steps: usize,
+    lr: f32,
+    stream: u64,
+    deadline_ms: Option<u64>,
+) -> String {
+    let mut fields = vec![
         ("tenant", s(tenant)),
         ("domain", s(domain)),
         ("method", s(method)),
         ("steps", num(steps as f64)),
         ("lr", num(lr as f64)),
         ("stream", u64_s(stream)),
-    ])
-    .to_string()
+    ];
+    if let Some(d) = deadline_ms {
+        fields.push(("deadline_ms", num(d as f64)));
+    }
+    obj(fields).to_string()
+}
+
+/// 503 body for a shed submit; `retry_after_s` mirrors the
+/// `Retry-After` response header for clients that only read bodies.
+pub fn shed_body(msg: &str, retry_after_s: u64) -> String {
+    obj(vec![("error", s(msg)), ("retry_after_s", num(retry_after_s as f64))]).to_string()
+}
+
+/// The shed hint out of a 503 body, if present.
+pub fn decode_retry_after(body: &[u8]) -> Option<u64> {
+    let text = std::str::from_utf8(body).ok()?;
+    let j = Json::parse(text).ok()?;
+    j.get("retry_after_s")?.as_f64().map(|n| n as u64)
 }
 
 pub fn error_body(msg: &str) -> String {
@@ -275,7 +322,7 @@ pub fn pending_body(ticket: usize) -> String {
 pub fn completion_body(c: &Completion) -> String {
     let mut fields = vec![
         ("ticket", num(c.ticket as f64)),
-        ("status", s("done")),
+        ("status", s(if c.result.is_ok() { "done" } else { "failed" })),
         ("tenant", s(&c.tenant)),
         ("domain", s(&c.domain)),
         ("queue_us", num(c.queue_us)),
@@ -300,10 +347,10 @@ pub fn completion_body(c: &Completion) -> String {
     obj(fields).to_string()
 }
 
-/// Rebuild a [`Completion`] from a `"status":"done"` ticket response.
-/// Fields the wire does not carry (the analytic plan, phase timings)
-/// are filled with neutral placeholders — [`check_equivalent`] does not
-/// compare them.
+/// Rebuild a [`Completion`] from a terminal (`"done"` or `"failed"`)
+/// ticket response. Fields the wire does not carry (the analytic plan,
+/// phase timings) are filled with neutral placeholders —
+/// [`check_equivalent`] does not compare them.
 ///
 /// [`check_equivalent`]: crate::serve::check_equivalent
 pub fn decode_completion(body: &[u8]) -> Result<Completion, ProtoError> {
@@ -311,8 +358,8 @@ pub fn decode_completion(body: &[u8]) -> Result<Completion, ProtoError> {
     let j = Json::parse(text).map_err(decode_err)?;
     let anyerr = |e: anyhow::Error| ProtoError::bad(e.to_string());
     let status = j.str_of("status").map_err(anyerr)?;
-    if status != "done" {
-        return Err(ProtoError::bad(format!("ticket is not done (status '{status}')")));
+    if status != "done" && status != "failed" {
+        return Err(ProtoError::bad(format!("ticket is not terminal (status '{status}')")));
     }
     let ticket = j.usize_of("ticket").map_err(anyerr)?;
     let tenant = j.str_of("tenant").map_err(anyerr)?;
@@ -534,6 +581,49 @@ mod tests {
             let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(av), bits(bv));
         }
+    }
+
+    #[test]
+    fn deadline_rides_both_arms_and_validates() {
+        let body = submit_body_with("t0", "cub", "tinytrain", 4, 6e-3, 9, Some(250));
+        let a = decode_submit_lazy(body.as_bytes()).unwrap();
+        let b = decode_submit_tree(body.as_bytes()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.deadline_ms, Some(250));
+        // absent stays None (and submit_body never emits it)
+        let plain = submit_body("t0", "cub", "tinytrain", 4, 6e-3, 9);
+        assert!(!plain.contains("deadline_ms"));
+        assert_eq!(decode_submit_lazy(plain.as_bytes()).unwrap().deadline_ms, None);
+        for bad in [0u64, MAX_DEADLINE_MS + 1] {
+            let body = submit_body_with("t0", "cub", "tinytrain", 4, 6e-3, 9, Some(bad));
+            assert_eq!(decode_submit_lazy(body.as_bytes()).unwrap_err().status, 400);
+            assert_eq!(decode_submit_tree(body.as_bytes()).unwrap_err().status, 400);
+        }
+    }
+
+    #[test]
+    fn shed_body_round_trips_the_retry_hint() {
+        let body = shed_body("queue full", 2);
+        assert_eq!(decode_retry_after(body.as_bytes()), Some(2));
+        assert_eq!(decode_retry_after(error_body("queue full").as_bytes()), None);
+        assert_eq!(decode_retry_after(b"not json"), None);
+    }
+
+    #[test]
+    fn failed_completions_carry_failed_status() {
+        let c = Completion {
+            ticket: 3,
+            tenant: "t0".into(),
+            domain: "cub".into(),
+            result: Err("panic: injected worker panic (tenant=t0, stream=9)".into()),
+            queue_us: 1.0,
+            service_us: 2.0,
+        };
+        let body = completion_body(&c);
+        assert!(body.contains("\"failed\""), "{body}");
+        let d = decode_completion(body.as_bytes()).unwrap();
+        assert!(d.result.unwrap_err().starts_with("panic:"));
+        assert!(decode_completion(pending_body(3).as_bytes()).is_err());
     }
 
     #[test]

@@ -16,26 +16,46 @@
 //! `accept` wake up, see the flag and exit; the service scope then
 //! drains the queue and joins.
 //!
+//! Degradation (PR 8): deadline-tagged submits go through `try_submit`
+//! and shed with `503 + Retry-After` when the queue is full instead of
+//! blocking; an active [`FaultPlan`] can additionally inject sheds and
+//! connection drops at this layer (deterministically, keyed on the
+//! submit's stream). With [`ServerConfig::snapshot`] set, tenant state
+//! is snapshotted periodically and — authoritatively — after the
+//! service drains on shutdown, so a restart resumes where it left off.
+//!
 //! [`AdaptationService`]: crate::serve::AdaptationService
 //! [`AdaptationService::run`]: crate::serve::AdaptationService::run
 //! [`TenantQueue`]: crate::serve::TenantQueue
+//! [`FaultPlan`]: crate::serve::FaultPlan
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use super::http::{self, HttpError, Request};
 use super::limits::Limits;
 use super::proto::{self, Route};
-use crate::metrics::LatencyStats;
+use crate::metrics::{counters, LatencyStats};
 use crate::model::ModelMeta;
 use crate::serve::{
-    AdaptRequest, AdaptationService, ServeConfig, TenantStore, Ticket, TicketStatus,
+    snapshot, AdaptRequest, AdaptationService, ServeConfig, TenantStore, Ticket, TicketStatus,
 };
 use crate::util::jsonio::{num, obj, s, Json};
 use crate::util::rng::Rng;
+
+/// Periodic + on-shutdown tenant snapshots (crash safety).
+#[derive(Debug, Clone)]
+pub struct SnapshotConfig {
+    /// Snapshot file (atomic-renamed on every save).
+    pub path: PathBuf,
+    /// Periodic save interval while serving.
+    pub every: Duration,
+}
 
 /// Knobs of one HTTP service run.
 #[derive(Debug, Clone)]
@@ -49,6 +69,8 @@ pub struct ServerConfig {
     /// trace doubles as a decode-equivalence assertion.
     pub verify_decode: bool,
     pub serve: ServeConfig,
+    /// Crash-safe tenant state; `None` serves from memory only.
+    pub snapshot: Option<SnapshotConfig>,
 }
 
 impl Default for ServerConfig {
@@ -58,8 +80,19 @@ impl Default for ServerConfig {
             limits: Limits::default(),
             verify_decode: false,
             serve: ServeConfig::default(),
+            snapshot: None,
         }
     }
+}
+
+/// How one request leaves the connection: a normal JSON response, a
+/// shed (503 with a `Retry-After` header), or an injected connection
+/// drop (close without responding — the client sees a transport death
+/// and retries).
+enum Reply {
+    Json(u16, String),
+    Shed { body: String, retry_after_s: u64 },
+    Drop,
 }
 
 /// Serve `listener` until a `POST /v1/shutdown` arrives. Blocks the
@@ -79,9 +112,37 @@ pub fn serve_blocking(
             for _ in 0..acceptors {
                 scope.spawn(|| acceptor_loop(&listener, addr, svc, meta, tenants, cfg, &stop));
             }
+            if let Some(snap) = &cfg.snapshot {
+                scope.spawn(|| snapshot_loop(tenants, snap, &stop));
+            }
         });
         Ok(())
-    })
+    })?;
+    // The authoritative snapshot: `run` has drained and joined every
+    // worker by now, so this capture includes every absorbed delta.
+    if let Some(snap) = &cfg.snapshot {
+        snapshot::save(&snap.path, &tenants.snapshot_entries())?;
+        eprintln!("snapshot: wrote {} on shutdown", snap.path.display());
+    }
+    Ok(())
+}
+
+/// Periodic crash-safety snapshots while serving. Sleeps in short
+/// slices so shutdown is prompt; every save is atomic (tmp + rename),
+/// so a crash mid-save can never corrupt the previous snapshot.
+fn snapshot_loop(tenants: &TenantStore, snap: &SnapshotConfig, stop: &AtomicBool) {
+    let slice = Duration::from_millis(100);
+    let mut since = Duration::ZERO;
+    while !stop.load(Ordering::Acquire) {
+        std::thread::sleep(slice);
+        since += slice;
+        if since >= snap.every {
+            since = Duration::ZERO;
+            if let Err(e) = snapshot::save(&snap.path, &tenants.snapshot_entries()) {
+                eprintln!("snapshot: periodic save of {} failed: {e}", snap.path.display());
+            }
+        }
+    }
 }
 
 fn acceptor_loop(
@@ -138,8 +199,20 @@ fn serve_connection(
             }
         };
         let keep = req.keep_alive && !stop.load(Ordering::Acquire);
-        let (status, body) = respond(&req, addr, svc, meta, tenants, cfg, stop);
-        http::write_response(&mut stream, status, &body, keep)?;
+        match respond(&req, addr, svc, meta, tenants, cfg, stop) {
+            Reply::Json(status, body) => http::write_response(&mut stream, status, &body, keep)?,
+            Reply::Shed { body, retry_after_s } => http::write_response_with(
+                &mut stream,
+                503,
+                &body,
+                keep,
+                &[("Retry-After", retry_after_s.to_string())],
+            )?,
+            // Injected connection drop: vanish without a response. The
+            // submit never enqueued, so the client's retry (same stream)
+            // runs the episode exactly once.
+            Reply::Drop => break,
+        }
         if !keep || stop.load(Ordering::Acquire) {
             break;
         }
@@ -147,8 +220,8 @@ fn serve_connection(
     Ok(())
 }
 
-/// Dispatch one request. Always returns a `(status, json-body)` pair —
-/// protocol errors become their typed status, never a panic.
+/// Dispatch one request. Always returns a typed [`Reply`] — protocol
+/// errors become their status, never a panic.
 fn respond(
     req: &Request,
     addr: SocketAddr,
@@ -157,20 +230,25 @@ fn respond(
     tenants: &TenantStore,
     cfg: &ServerConfig,
     stop: &AtomicBool,
-) -> (u16, String) {
+) -> Reply {
     let route = match proto::route(req) {
         Ok(route) => route,
-        Err(e) => return (e.status, proto::error_body(&e.msg)),
+        Err(e) => return Reply::Json(e.status, proto::error_body(&e.msg)),
     };
     match route {
         Route::SubmitEpisode => submit(req, svc, meta, cfg),
-        Route::Ticket { id, wait } => ticket(svc, id, wait),
+        Route::Ticket { id, wait } => {
+            let (status, body) = ticket(svc, id, wait);
+            Reply::Json(status, body)
+        }
         Route::TenantSync { tenant } => match tenants.sync_state(&tenant) {
-            Some((steps, segments)) => (200, proto::sync_body(&tenant, steps, &segments)),
-            None => (404, proto::error_body("tenant has no adapted state")),
+            Some((steps, segments)) => {
+                Reply::Json(200, proto::sync_body(&tenant, steps, &segments))
+            }
+            None => Reply::Json(404, proto::error_body("tenant has no adapted state")),
         },
-        Route::Metrics => (200, metrics_body(svc)),
-        Route::Health => (200, health_body(meta, cfg)),
+        Route::Metrics => Reply::Json(200, metrics_body(svc, tenants, cfg)),
+        Route::Health => Reply::Json(200, health_body(meta, cfg)),
         Route::Shutdown => {
             stop.store(true, Ordering::Release);
             // Wake every acceptor blocked in accept(); each dummy
@@ -178,7 +256,7 @@ fn respond(
             for _ in 0..cfg.acceptors.max(1) {
                 let _ = TcpStream::connect(addr);
             }
-            (200, obj(vec![("ok", Json::Bool(true))]).to_string())
+            Reply::Json(200, obj(vec![("ok", Json::Bool(true))]).to_string())
         }
     }
 }
@@ -188,24 +266,40 @@ fn submit(
     svc: &AdaptationService,
     meta: &ModelMeta,
     cfg: &ServerConfig,
-) -> (u16, String) {
+) -> Reply {
     let sub = match proto::decode_submit_lazy(&req.body) {
         Ok(sub) => sub,
-        Err(e) => return (e.status, proto::error_body(&e.msg)),
+        Err(e) => return Reply::Json(e.status, proto::error_body(&e.msg)),
     };
     if cfg.verify_decode {
         match proto::decode_submit_tree(&req.body) {
             Ok(tree) if tree == sub => {}
             other => {
                 let msg = format!("lazy/tree decode divergence: lazy={sub:?} tree={other:?}");
-                return (500, proto::error_body(&msg));
+                return Reply::Json(500, proto::error_body(&msg));
             }
         }
     }
     let method = match proto::parse_method(&sub.method, meta) {
         Ok(method) => method,
-        Err(e) => return (e.status, proto::error_body(&e.msg)),
+        Err(e) => return Reply::Json(e.status, proto::error_body(&e.msg)),
     };
+    // Injected faults fire only on well-formed submits (the stream is
+    // the schedule key) and before anything enqueues, so the client's
+    // retry path recovers cleanly in both cases.
+    if let Some(plan) = &cfg.serve.faults {
+        if plan.drop_connection(sub.stream) {
+            return Reply::Drop;
+        }
+        if plan.shed_submit(sub.stream) {
+            svc.note_shed();
+            return Reply::Shed {
+                body: proto::shed_body("injected shed: queue full", 1),
+                retry_after_s: 1,
+            };
+        }
+    }
+    let deadline_ms = sub.deadline_ms;
     let request = AdaptRequest {
         tenant: sub.tenant,
         domain: sub.domain,
@@ -213,10 +307,23 @@ fn submit(
         steps: sub.steps,
         lr: sub.lr,
         stream: Rng::from_state(sub.stream),
+        deadline_ms,
     };
-    match svc.submit(request) {
-        Ok(t) => (202, proto::ticket_body(t.0)),
-        Err(_) => (503, proto::error_body("service is shutting down")),
+    if deadline_ms.is_some() {
+        // SLO-tagged submits shed instead of blocking the handler: a
+        // client with a deadline wants the truth about overload now.
+        match svc.try_submit(request) {
+            Ok(Some(t)) => Reply::Json(202, proto::ticket_body(t.0)),
+            Ok(None) => {
+                Reply::Shed { body: proto::shed_body("queue full", 1), retry_after_s: 1 }
+            }
+            Err(_) => Reply::Json(503, proto::error_body("service is shutting down")),
+        }
+    } else {
+        match svc.submit(request) {
+            Ok(t) => Reply::Json(202, proto::ticket_body(t.0)),
+            Err(_) => Reply::Json(503, proto::error_body("service is shutting down")),
+        }
     }
 }
 
@@ -225,25 +332,55 @@ fn ticket(svc: &AdaptationService, id: usize, wait: bool) -> (u16, String) {
         TicketStatus::Unknown => (404, proto::error_body("unknown ticket")),
         TicketStatus::Pending if wait => (200, proto::completion_body(&svc.join(Ticket(id)))),
         TicketStatus::Pending => (200, proto::pending_body(id)),
-        TicketStatus::Done(c) => (200, proto::completion_body(&c)),
+        // Failed is terminal and still a 200: the request was served,
+        // the *episode* failed — the body carries status "failed" plus
+        // the error for the client's retry classification.
+        TicketStatus::Done(c) | TicketStatus::Failed(c) => (200, proto::completion_body(&c)),
     }
 }
 
-fn metrics_body(svc: &AdaptationService) -> String {
-    let (queued, lanes, busy) = svc.queue_stats();
+fn metrics_body(svc: &AdaptationService, tenants: &TenantStore, cfg: &ServerConfig) -> String {
+    let qs = svc.queue_stats();
     let samples = svc.latency_samples();
     let queue_us: Vec<f64> = samples.iter().map(|(q, _)| *q).collect();
     let service_us: Vec<f64> = samples.iter().map(|(_, s)| *s).collect();
-    obj(vec![
-        ("queued", num(queued as f64)),
-        ("lanes", num(lanes as f64)),
-        ("busy_lanes", num(busy as f64)),
+    let store = tenants.stats();
+    let mut fields = vec![
+        ("queued", num(qs.queued as f64)),
+        ("lanes", num(qs.lanes as f64)),
+        ("busy_lanes", num(qs.busy_lanes as f64)),
         ("pending", num(svc.pending() as f64)),
         ("completed", num(samples.len() as f64)),
+        ("shed", num(qs.shed as f64)),
+        ("failed", num(qs.failed as f64)),
+        ("retried", num(qs.retried as f64)),
         ("queue_latency", LatencyStats::from_us(queue_us).to_json()),
         ("service_latency", LatencyStats::from_us(service_us).to_json()),
-    ])
-    .to_string()
+        (
+            "store",
+            counters(&[
+                ("tenants", store.tenants as u64),
+                ("delta_bytes", store.delta_bytes as u64),
+                ("absorbs", store.absorbs),
+                ("evictions", store.evictions),
+                ("spills", store.spills),
+                ("pageins", store.pageins),
+            ]),
+        ),
+    ];
+    if let Some(plan) = &cfg.serve.faults {
+        let c = plan.counts();
+        fields.push((
+            "faults",
+            counters(&[
+                ("panics", c.panics),
+                ("slows", c.slows),
+                ("sheds", c.sheds),
+                ("drops", c.drops),
+            ]),
+        ));
+    }
+    obj(fields).to_string()
 }
 
 /// Reports the handler budget (the load generator clamps its

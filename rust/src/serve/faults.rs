@@ -1,0 +1,318 @@
+//! Deterministic fault injection for the serving plane.
+//!
+//! A [`FaultPlan`] decides, per logical episode, whether to inject a
+//! worker panic, a slow episode, a queue-full shed, or a connection
+//! drop. Decisions are a **pure function** of `(spec seed, fault kind,
+//! episode stream state)` — the same [`cell_seed`] discipline the
+//! replay harness forks request streams with — so a chaos run's fault
+//! schedule is bit-identical at any worker count, acceptor count or
+//! client interleaving, and tests can assert against it.
+//!
+//! The failure-inducing kinds (panic, shed, drop) fire **once per
+//! episode**: the first arrival of a scheduled episode faults, every
+//! later arrival of the same stream passes. Because a faulted episode
+//! never commits a delta, a client that retries it replays the exact
+//! same pure request — which is what lets a fault-riddled run converge
+//! to tenant deltas bit-identical to the fault-free sequential arm.
+//! Slow episodes are schedule-only (no fire-once): sleeping twice
+//! changes timing, never results.
+//!
+//! Spec grammar (comma-separated `key=value`, all keys optional):
+//!
+//! ```text
+//!   seed=U64          schedule seed (default 0)
+//!   panic=P           worker panics mid-episode with probability P
+//!   slow=P[:MS]       worker sleeps MS ms (default 20) with probability P
+//!   shed=P            submit is bounced 503 + Retry-After with probability P
+//!   drop=P            connection is closed without a response with probability P
+//! ```
+//!
+//! e.g. `--faults "seed=5,panic=0.2,slow=0.1:10,shed=0.2,drop=0.1"`.
+//!
+//! [`cell_seed`]: crate::harness::parallel::cell_seed
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::harness::parallel::cell_seed;
+use crate::util::rng::Rng;
+
+/// The four injectable fault kinds. Each kind draws from its own
+/// decision stream (the kind label is folded into the seed), so e.g.
+/// `panic=0.5,shed=0.5` schedules the two kinds independently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Worker panics mid-episode (caught; ticket turns `Failed`).
+    Panic,
+    /// Worker sleeps before the episode (latency only).
+    Slow,
+    /// Submit is bounced with 503 + `Retry-After` as if the queue were full.
+    Shed,
+    /// Connection is closed without a response, before the submit enqueues.
+    Drop,
+}
+
+impl FaultKind {
+    fn label(self) -> &'static str {
+        match self {
+            FaultKind::Panic => "fault.panic",
+            FaultKind::Slow => "fault.slow",
+            FaultKind::Shed => "fault.shed",
+            FaultKind::Drop => "fault.drop",
+        }
+    }
+
+    fn index(self) -> u8 {
+        match self {
+            FaultKind::Panic => 0,
+            FaultKind::Slow => 1,
+            FaultKind::Shed => 2,
+            FaultKind::Drop => 3,
+        }
+    }
+}
+
+/// Parsed `--faults` spec. See the module docs for the grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub seed: u64,
+    pub panic_p: f64,
+    pub slow_p: f64,
+    pub slow_ms: u64,
+    pub shed_p: f64,
+    pub drop_p: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { seed: 0, panic_p: 0.0, slow_p: 0.0, slow_ms: 20, shed_p: 0.0, drop_p: 0.0 }
+    }
+}
+
+impl FaultSpec {
+    pub fn parse(text: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        let prob = |key: &str, v: &str| -> Result<f64> {
+            let p: f64 = match v.parse() {
+                Ok(p) => p,
+                Err(_) => bail!("fault spec: '{key}' wants a probability, got '{v}'"),
+            };
+            if !(0.0..=1.0).contains(&p) {
+                bail!("fault spec: '{key}={v}' is outside [0, 1]");
+            }
+            Ok(p)
+        };
+        for part in text.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((key, value)) = part.split_once('=') else {
+                bail!("fault spec: expected key=value, got '{part}'");
+            };
+            match key {
+                "seed" => {
+                    spec.seed = value
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("fault spec: seed wants a u64, got '{value}'"))?
+                }
+                "panic" => spec.panic_p = prob(key, value)?,
+                "shed" => spec.shed_p = prob(key, value)?,
+                "drop" => spec.drop_p = prob(key, value)?,
+                "slow" => match value.split_once(':') {
+                    Some((p, ms)) => {
+                        spec.slow_p = prob(key, p)?;
+                        spec.slow_ms = ms.parse().map_err(|_| {
+                            anyhow::anyhow!("fault spec: slow duration wants ms, got '{ms}'")
+                        })?;
+                    }
+                    None => spec.slow_p = prob(key, value)?,
+                },
+                other => bail!("fault spec: unknown key '{other}' (seed|panic|slow|shed|drop)"),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// How many faults a plan actually injected (runtime observability —
+/// the schedule itself is pure, these count firings).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub panics: u64,
+    pub slows: u64,
+    pub sheds: u64,
+    pub drops: u64,
+}
+
+/// A live fault injector: the pure schedule from a [`FaultSpec`] plus
+/// the fire-once bookkeeping. Shared (`Arc`) between the queue front
+/// door, the worker pool and the HTTP layer.
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    /// `(kind, stream)` pairs that already fired — the fire-once set.
+    fired: Mutex<HashSet<(u8, u64)>>,
+    counts: [AtomicU64; 4],
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            spec,
+            fired: Mutex::new(HashSet::new()),
+            counts: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+        })
+    }
+
+    /// Parse + build in one step (the CLI path).
+    pub fn from_spec(text: &str) -> Result<Arc<FaultPlan>> {
+        Ok(FaultPlan::new(FaultSpec::parse(text)?))
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// The pure schedule: is `kind` scheduled for the episode whose
+    /// pre-forked stream state is `key`? Same spec seed → same answer,
+    /// on any thread, in any process, in any order.
+    pub fn scheduled(&self, kind: FaultKind, key: u64) -> bool {
+        let p = match kind {
+            FaultKind::Panic => self.spec.panic_p,
+            FaultKind::Slow => self.spec.slow_p,
+            FaultKind::Shed => self.spec.shed_p,
+            FaultKind::Drop => self.spec.drop_p,
+        };
+        if p <= 0.0 {
+            return false;
+        }
+        Rng::new(cell_seed(self.spec.seed, kind.label()) ^ key).uniform() < p
+    }
+
+    /// Scheduled *and* not yet fired for this episode: the first call
+    /// for a scheduled `(kind, key)` returns true, later calls false —
+    /// so a retried episode passes.
+    fn fire_once(&self, kind: FaultKind, key: u64) -> bool {
+        if !self.scheduled(kind, key) {
+            return false;
+        }
+        let fresh = self.fired.lock().unwrap().insert((kind.index(), key));
+        if fresh {
+            self.counts[kind.index() as usize].fetch_add(1, Ordering::Relaxed);
+        }
+        fresh
+    }
+
+    /// Should the worker panic before running this episode?
+    pub fn worker_panic(&self, key: u64) -> bool {
+        self.fire_once(FaultKind::Panic, key)
+    }
+
+    /// How long the worker should stall before this episode, if at all.
+    pub fn slow_episode(&self, key: u64) -> Option<Duration> {
+        if self.scheduled(FaultKind::Slow, key) {
+            self.counts[FaultKind::Slow.index() as usize].fetch_add(1, Ordering::Relaxed);
+            Some(Duration::from_millis(self.spec.slow_ms))
+        } else {
+            None
+        }
+    }
+
+    /// Should this submit be bounced as if the queue were full?
+    pub fn shed_submit(&self, key: u64) -> bool {
+        self.fire_once(FaultKind::Shed, key)
+    }
+
+    /// Should the connection carrying this submit be dropped without a
+    /// response (before the request enqueues, so a retry is safe)?
+    pub fn drop_connection(&self, key: u64) -> bool {
+        self.fire_once(FaultKind::Drop, key)
+    }
+
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            panics: self.counts[0].load(Ordering::Relaxed),
+            slows: self.counts[1].load(Ordering::Relaxed),
+            sheds: self.counts[2].load(Ordering::Relaxed),
+            drops: self.counts[3].load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Classify a completion error as retryable: injected/real worker
+/// panics and queue-deadline expiries re-run cleanly (the failed
+/// attempt committed nothing), while typed request errors (unknown
+/// domain, bad method) fail the same way every time.
+pub fn is_retryable_error(msg: &str) -> bool {
+    msg.starts_with("panic:") || msg.contains("deadline")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_the_full_grammar() {
+        let s = FaultSpec::parse("seed=5, panic=0.25, slow=0.5:12, shed=1, drop=0").unwrap();
+        assert_eq!(s.seed, 5);
+        assert_eq!(s.panic_p, 0.25);
+        assert_eq!((s.slow_p, s.slow_ms), (0.5, 12));
+        assert_eq!(s.shed_p, 1.0);
+        assert_eq!(s.drop_p, 0.0);
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+        assert_eq!(FaultSpec::parse("slow=0.3").unwrap().slow_ms, 20);
+        for bad in ["panic=2", "panic=x", "nope=1", "panic", "seed=-1", "slow=0.1:ms"] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_seed_sensitive() {
+        let spec = FaultSpec { panic_p: 0.5, shed_p: 0.5, ..FaultSpec::default() };
+        let a = FaultPlan::new(FaultSpec { seed: 1, ..spec.clone() });
+        let b = FaultPlan::new(FaultSpec { seed: 1, ..spec.clone() });
+        let c = FaultPlan::new(FaultSpec { seed: 2, ..spec });
+        let keys: Vec<u64> = (0..256).map(|i| 0x9e37 ^ (i * 7919)).collect();
+        let sched = |p: &FaultPlan, k: FaultKind| -> Vec<bool> {
+            keys.iter().map(|&key| p.scheduled(k, key)).collect()
+        };
+        for kind in [FaultKind::Panic, FaultKind::Shed] {
+            assert_eq!(sched(&a, kind), sched(&b, kind), "same seed must give the same schedule");
+        }
+        assert_ne!(
+            sched(&a, FaultKind::Panic),
+            sched(&c, FaultKind::Panic),
+            "different seeds must reshuffle the schedule"
+        );
+        assert_ne!(
+            sched(&a, FaultKind::Panic),
+            sched(&a, FaultKind::Shed),
+            "kinds must draw from independent decision streams"
+        );
+        // ~half the keys should be scheduled at p=0.5
+        let hits = sched(&a, FaultKind::Panic).iter().filter(|&&x| x).count();
+        assert!((64..192).contains(&hits), "p=0.5 schedule looks degenerate: {hits}/256");
+    }
+
+    #[test]
+    fn failure_kinds_fire_once_per_episode() {
+        let plan = FaultPlan::new(FaultSpec { panic_p: 1.0, ..FaultSpec::default() });
+        assert!(plan.worker_panic(42), "first arrival of a scheduled episode must fault");
+        assert!(!plan.worker_panic(42), "the retry must pass");
+        assert!(plan.worker_panic(43), "independent episodes fault independently");
+        assert_eq!(plan.counts().panics, 2);
+        // slow is schedule-only: repeated arrivals keep sleeping
+        let slow = FaultPlan::new(FaultSpec { slow_p: 1.0, slow_ms: 7, ..FaultSpec::default() });
+        assert_eq!(slow.slow_episode(1), Some(Duration::from_millis(7)));
+        assert_eq!(slow.slow_episode(1), Some(Duration::from_millis(7)));
+    }
+
+    #[test]
+    fn error_classification_is_conservative() {
+        assert!(is_retryable_error("panic: injected worker panic (tenant=t0, stream=9)"));
+        assert!(is_retryable_error("deadline of 5ms exceeded in queue (7213us)"));
+        assert!(!is_retryable_error("unknown domain mars"));
+        assert!(!is_retryable_error("unknown method 'warp'"));
+    }
+}

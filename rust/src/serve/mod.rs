@@ -36,6 +36,19 @@
 //! - [`replay`]: synthetic (tenants × domains × episodes) traces,
 //!   open/closed-loop replay with throughput + latency percentiles, the
 //!   sequential reference arm and the bit-identity checker.
+//! - [`faults`]: the deterministic chaos plane — a [`FaultPlan`]
+//!   schedules worker panics, slow episodes, sheds and connection drops
+//!   as a pure function of (spec seed, episode stream), so fault runs
+//!   are reproducible and assertable at any worker count.
+//! - [`snapshot`]: the versioned, checksummed on-disk format for tenant
+//!   overlays — whole-store snapshots for crash-safe restarts plus
+//!   per-tenant spill files for non-destructive eviction.
+//!
+//! Degradation: worker panics are caught per episode
+//! (`catch_unwind` → [`TicketStatus::Failed`], lane released), queue
+//! pressure sheds via `try_submit`, and because a faulted attempt
+//! commits nothing, retrying the same pre-forked stream reconverges to
+//! deltas bit-identical to a fault-free run.
 //!
 //! Determinism: every request stream is forked before the fan-out (the
 //! `harness::parallel` pattern, shared via [`replay::cell_seed`] /
@@ -47,16 +60,24 @@
 //! [`TenantQueue`]: queue::TenantQueue
 //! [`TenantStore`]: tenant::TenantStore
 //! [`AdaptationService`]: service::AdaptationService
+//! [`FaultPlan`]: faults::FaultPlan
+//! [`TicketStatus::Failed`]: service::TicketStatus::Failed
 
+pub mod faults;
 pub mod queue;
 pub mod replay;
 pub mod service;
+pub mod snapshot;
 pub mod tenant;
 
+pub use faults::{is_retryable_error, FaultCounts, FaultKind, FaultPlan, FaultSpec};
 pub use queue::{Lease, TenantQueue, TryPushError};
 pub use replay::{
     check_equivalent, replay, sequential_replay, synthetic_trace, tenant_name, LoopMode,
     ReplayReport, TraceConfig,
 };
-pub use service::{AdaptRequest, AdaptationService, Completion, ServeConfig, Ticket, TicketStatus};
+pub use service::{
+    AdaptRequest, AdaptationService, Completion, QueueStats, ServeConfig, Ticket, TicketStatus,
+};
+pub use snapshot::{Restore, TenantSnapshot};
 pub use tenant::{TenantStore, TenantStoreStats};

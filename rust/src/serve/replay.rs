@@ -29,7 +29,8 @@ use anyhow::{bail, ensure, Result};
 
 pub use crate::harness::parallel::{cell_seed, episode_streams};
 
-use super::service::{run_request, AdaptRequest, AdaptationService, Completion, ServeConfig};
+use super::faults::is_retryable_error;
+use super::service::{run_request, AdaptRequest, AdaptationService, Completion, ServeConfig, Ticket};
 use super::tenant::TenantStore;
 use crate::coordinator::Method;
 use crate::metrics::LatencyStats;
@@ -117,6 +118,7 @@ pub fn synthetic_trace(cfg: &TraceConfig) -> Vec<AdaptRequest> {
                     steps: cfg.steps,
                     lr: cfg.lr,
                     stream: per_domain[di][e].clone(),
+                    deadline_ms: None,
                 });
             }
         }
@@ -138,11 +140,15 @@ pub struct ReplayReport {
     pub service: LatencyStats,
     /// Submission-to-commit latency.
     pub total: LatencyStats,
-    /// Per-request outcomes in ticket (= submission) order.
+    /// Requests the service recognised as retries (fault recovery).
+    pub retried: u64,
+    /// Per-request outcomes in trace order (closed-loop retries are
+    /// re-keyed to their trace index, so the report lines up with the
+    /// sequential arm position by position).
     pub completions: Vec<Completion>,
 }
 
-fn summarize(completions: Vec<Completion>, wall_s: f64, workers: usize) -> ReplayReport {
+fn summarize(completions: Vec<Completion>, wall_s: f64, workers: usize, retried: u64) -> ReplayReport {
     let requests = completions.len();
     ReplayReport {
         requests,
@@ -150,6 +156,7 @@ fn summarize(completions: Vec<Completion>, wall_s: f64, workers: usize) -> Repla
         wall_s,
         throughput_rps: requests as f64 / wall_s.max(1e-12),
         errors: completions.iter().filter(|c| c.result.is_err()).count(),
+        retried,
         queue: LatencyStats::from_us(completions.iter().map(|c| c.queue_us).collect()),
         service: LatencyStats::from_us(completions.iter().map(|c| c.service_us).collect()),
         total: LatencyStats::from_us(
@@ -170,40 +177,90 @@ pub fn replay(
     mode: LoopMode,
 ) -> Result<ReplayReport> {
     let t0 = Instant::now();
-    let completions = AdaptationService::run(meta, tenants, cfg, |svc| match mode {
-        LoopMode::Open => {
-            for req in trace {
-                svc.submit(req.clone())?;
+    let (completions, retried) = AdaptationService::run(meta, tenants, cfg, |svc| {
+        let completions = match mode {
+            LoopMode::Open => {
+                for req in trace {
+                    svc.submit(req.clone())?;
+                }
+                svc.join_all()
             }
-            Ok(svc.join_all())
-        }
-        LoopMode::Closed => closed_loop(svc, trace),
+            // Retry retryable failures only when a fault plan is live:
+            // closed-loop recovery is the chaos demo, while a genuine
+            // (non-injected) failure in a clean run should surface, not
+            // spin.
+            LoopMode::Closed => closed_loop(svc, trace, cfg.faults.is_some())?,
+        };
+        Ok((completions, svc.queue_stats().retried))
     })?;
-    Ok(summarize(completions, t0.elapsed().as_secs_f64(), cfg.workers.max(1)))
+    Ok(summarize(completions, t0.elapsed().as_secs_f64(), cfg.workers.max(1), retried))
+}
+
+/// Retry budget per request in the fault-recovering drivers. Fire-once
+/// injection means one retry always suffices for injected faults; the
+/// headroom covers stacked kinds.
+pub const MAX_ATTEMPTS: u32 = 8;
+
+/// One in-flight closed-loop request: enough to retry it and to re-key
+/// its completion back to the trace position it came from.
+struct Flight<'t> {
+    ticket: Ticket,
+    index: usize,
+    req: &'t AdaptRequest,
+    attempts: u32,
 }
 
 /// Closed-loop driver: join a tenant's previous ticket before
-/// submitting its next request; tenants advance in rotation.
-fn closed_loop(svc: &AdaptationService, trace: &[AdaptRequest]) -> Result<Vec<Completion>> {
+/// submitting its next request; tenants advance in rotation. With
+/// `retry`, retryable failures (worker panics, deadline expiries — see
+/// [`is_retryable_error`]) are resubmitted in place, keeping the lane
+/// until they succeed or exhaust [`MAX_ATTEMPTS`]; completions are
+/// re-keyed to trace indices so the report stays comparable to the
+/// sequential arm position by position.
+fn closed_loop(
+    svc: &AdaptationService,
+    trace: &[AdaptRequest],
+    retry: bool,
+) -> Result<Vec<Completion>> {
     let mut index: HashMap<&str, usize> = HashMap::new();
-    let mut backlog: Vec<VecDeque<&AdaptRequest>> = Vec::new();
-    for req in trace {
-        let i = *index.entry(req.tenant.as_str()).or_insert_with(|| {
+    let mut backlog: Vec<VecDeque<(usize, &AdaptRequest)>> = Vec::new();
+    for (i, req) in trace.iter().enumerate() {
+        let lane = *index.entry(req.tenant.as_str()).or_insert_with(|| {
             backlog.push(VecDeque::new());
             backlog.len() - 1
         });
-        backlog[i].push_back(req);
+        backlog[lane].push_back((i, req));
     }
-    let mut pending = vec![None; backlog.len()];
+    let mut pending: Vec<Option<Flight>> = (0..backlog.len()).map(|_| None).collect();
     let mut out = Vec::with_capacity(trace.len());
     loop {
         let mut submitted = false;
         for (lane, queue) in backlog.iter_mut().enumerate() {
-            if let Some(ticket) = pending[lane].take() {
-                out.push(svc.join(ticket));
+            if let Some(flight) = pending[lane].take() {
+                let mut c = svc.join(flight.ticket);
+                let retryable = matches!(&c.result, Err(e) if is_retryable_error(e));
+                if retry && retryable && flight.attempts < MAX_ATTEMPTS {
+                    // The failed attempt absorbed nothing, so the same
+                    // pure request re-runs bit-identically. The tenant
+                    // keeps its lane: per-tenant episode order survives.
+                    pending[lane] = Some(Flight {
+                        ticket: svc.submit(flight.req.clone())?,
+                        attempts: flight.attempts + 1,
+                        ..flight
+                    });
+                    submitted = true;
+                    continue;
+                }
+                c.ticket = flight.index;
+                out.push(c);
             }
-            if let Some(req) = queue.pop_front() {
-                pending[lane] = Some(svc.submit(req.clone())?);
+            if let Some((i, req)) = queue.pop_front() {
+                pending[lane] = Some(Flight {
+                    ticket: svc.submit(req.clone())?,
+                    index: i,
+                    req,
+                    attempts: 1,
+                });
                 submitted = true;
             }
         }
@@ -245,7 +302,7 @@ pub fn sequential_replay(
             service_us: picked.elapsed().as_secs_f64() * 1e6,
         });
     }
-    summarize(completions, t0.elapsed().as_secs_f64(), 1)
+    summarize(completions, t0.elapsed().as_secs_f64(), 1, 0)
 }
 
 /// Assert two replay arms produced bit-identical adaptation outcomes

@@ -35,12 +35,14 @@
 //! [`TenantQueue`]: super::queue::TenantQueue
 //! [`TenantStore`]: super::tenant::TenantStore
 
-use std::collections::BTreeMap;
-use std::sync::{Condvar, Mutex};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::faults::FaultPlan;
 use super::queue::{TenantQueue, TryPushError};
 use super::tenant::TenantStore;
 use crate::coordinator::{AdaptationSession, EpisodeResult, Method, SyncedParams, TrainConfig};
@@ -62,6 +64,10 @@ pub struct AdaptRequest {
     pub steps: usize,
     pub lr: f32,
     pub stream: Rng,
+    /// SLO tag: if the request sits queued longer than this many
+    /// milliseconds it fails with a typed deadline error instead of
+    /// running stale work (`None` = run whenever).
+    pub deadline_ms: Option<u64>,
 }
 
 /// Handle to one submitted request. The inner id is allocated densely
@@ -81,8 +87,13 @@ pub enum TicketStatus {
     Unknown,
     /// Submitted and queued or running.
     Pending,
-    /// Finished; the completion is the terminal record.
+    /// Finished successfully; the completion is the terminal record.
     Done(Completion),
+    /// Finished with an error (worker panic, deadline expiry, bad
+    /// request) — terminal, lane released, pool healthy. Clients decide
+    /// retryability from the error text
+    /// (see [`super::faults::is_retryable_error`]).
+    Failed(Completion),
 }
 
 /// Terminal record of one request.
@@ -109,12 +120,38 @@ pub struct ServeConfig {
     /// either way; tenants replaying overlapping domains stop
     /// re-rasterizing).
     pub render_cache: bool,
+    /// Deterministic chaos schedule injected into the worker pool
+    /// (panics and slow episodes) — `None` in production.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: default_workers(), queue_capacity: 64, render_cache: true }
+        ServeConfig {
+            workers: default_workers(),
+            queue_capacity: 64,
+            render_cache: true,
+            faults: None,
+        }
     }
+}
+
+/// Queue-side observability for `/metrics`: instantaneous depth/lane
+/// occupancy plus the degradation counter family.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Requests queued right now.
+    pub queued: usize,
+    /// Tenant lanes ever opened.
+    pub lanes: usize,
+    /// Lanes with a request queued or in flight right now.
+    pub busy_lanes: usize,
+    /// Submits bounced for capacity (real queue-full plus injected).
+    pub shed: u64,
+    /// Completions that ended in error (panics, deadlines, bad requests).
+    pub failed: u64,
+    /// Submits recognised as retries of an already-seen episode stream.
+    pub retried: u64,
 }
 
 struct Job {
@@ -141,6 +178,16 @@ pub struct AdaptationService {
     next_ticket: Mutex<usize>,
     done: Condvar,
     render_cache: bool,
+    faults: Option<Arc<FaultPlan>>,
+    /// Episode-stream state → the ticket that ran it. Makes resubmits
+    /// idempotent: a client retrying a submit whose response was lost
+    /// gets the original ticket back instead of double-running (and
+    /// double-absorbing) the episode. A stream whose ticket *failed* is
+    /// allowed through for a fresh attempt.
+    seen: Mutex<HashMap<u64, usize>>,
+    shed: AtomicU64,
+    failed: AtomicU64,
+    retried: AtomicU64,
 }
 
 impl AdaptationService {
@@ -159,6 +206,11 @@ impl AdaptationService {
             next_ticket: Mutex::new(0),
             done: Condvar::new(),
             render_cache: cfg.render_cache,
+            faults: cfg.faults.clone(),
+            seen: Mutex::new(HashMap::new()),
+            shed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
         };
         let workers = cfg.workers.max(1);
         std::thread::scope(|scope| {
@@ -171,15 +223,61 @@ impl AdaptationService {
         })
     }
 
+    /// Resubmit dedup: if this episode stream was already accepted and
+    /// did not fail, hand back the original ticket (idempotent retry).
+    /// Returns `(existing ticket, previous ticket for this stream)`.
+    fn dedup(&self, key: u64) -> (Option<Ticket>, Option<usize>) {
+        let seen = self.seen.lock().unwrap();
+        let Some(&prev) = seen.get(&key) else { return (None, None) };
+        self.retried.fetch_add(1, Ordering::Relaxed);
+        let failed =
+            matches!(self.slots.lock().unwrap().get(&prev), Some(Some(c)) if c.result.is_err());
+        if failed {
+            // The attempt failed without committing — let the retry
+            // allocate a fresh ticket and run for real.
+            (None, Some(prev))
+        } else {
+            (Some(Ticket(prev)), Some(prev))
+        }
+    }
+
+    /// Record `key → ticket` before enqueueing, so a concurrent retry of
+    /// the same stream dedups against this attempt; undone via
+    /// [`unrecord`](Self::unrecord) if the push fails.
+    fn record(&self, key: u64, ticket: usize) {
+        self.seen.lock().unwrap().insert(key, ticket);
+    }
+
+    fn unrecord(&self, key: u64, prev: Option<usize>) {
+        let mut seen = self.seen.lock().unwrap();
+        match prev {
+            Some(p) => {
+                seen.insert(key, p);
+            }
+            None => {
+                seen.remove(&key);
+            }
+        }
+    }
+
     /// Enqueue a request, blocking while the queue is at capacity
     /// (backpressure). Errors only if the service is shutting down.
+    /// Resubmitting an already-accepted episode stream returns the
+    /// original ticket instead of running the episode twice.
     pub fn submit(&self, req: AdaptRequest) -> Result<Ticket> {
+        let key = req.stream.state();
+        let (existing, prev) = self.dedup(key);
+        if let Some(t) = existing {
+            return Ok(t);
+        }
         let ticket = self.allocate();
         let tenant = req.tenant.clone();
         let job = Job { ticket, req, enqueued: Instant::now() };
+        self.record(key, ticket);
         match self.queue.push(&tenant, job) {
             Ok(()) => Ok(Ticket(ticket)),
             Err(_) => {
+                self.unrecord(key, prev);
                 self.retire(ticket);
                 Err(anyhow!("AdaptationService: queue closed"))
             }
@@ -187,23 +285,39 @@ impl AdaptationService {
     }
 
     /// Non-blocking submit: `Ok(None)` when the queue is full (the
-    /// request is shed — open-loop callers count these), error when the
-    /// service is shutting down.
+    /// request is shed — callers count these and back off), error when
+    /// the service is shutting down. Same resubmit dedup as
+    /// [`submit`](Self::submit).
     pub fn try_submit(&self, req: AdaptRequest) -> Result<Option<Ticket>> {
+        let key = req.stream.state();
+        let (existing, prev) = self.dedup(key);
+        if let Some(t) = existing {
+            return Ok(Some(t));
+        }
         let ticket = self.allocate();
         let tenant = req.tenant.clone();
         let job = Job { ticket, req, enqueued: Instant::now() };
+        self.record(key, ticket);
         match self.queue.try_push(&tenant, job) {
             Ok(()) => Ok(Some(Ticket(ticket))),
             Err(TryPushError::Full(_)) => {
+                self.unrecord(key, prev);
                 self.retire(ticket);
+                self.note_shed();
                 Ok(None)
             }
             Err(TryPushError::Closed(_)) => {
+                self.unrecord(key, prev);
                 self.retire(ticket);
                 Err(anyhow!("AdaptationService: queue closed"))
             }
         }
+    }
+
+    /// Count one shed submit (also called by front-ends that bounce a
+    /// request before it reaches the queue, e.g. injected sheds).
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// The completion for `ticket`, if it finished.
@@ -244,16 +358,30 @@ impl AdaptationService {
         match self.slots.lock().unwrap().get(&ticket.0) {
             None => TicketStatus::Unknown,
             Some(None) => TicketStatus::Pending,
+            Some(Some(c)) if c.result.is_err() => TicketStatus::Failed(c.clone()),
             Some(Some(c)) => TicketStatus::Done(c.clone()),
         }
     }
 
-    /// `(queued, lanes, busy_lanes)` — instantaneous queue depth plus
-    /// per-tenant lane occupancy, for `/metrics`.
-    pub fn queue_stats(&self) -> (usize, usize, usize) {
+    /// Instantaneous queue depth, per-tenant lane occupancy and the
+    /// degradation counters, for `/metrics`.
+    pub fn queue_stats(&self) -> QueueStats {
         let queued = self.queue.len();
-        let (lanes, busy) = self.queue.lane_stats();
-        (queued, lanes, busy)
+        let (lanes, busy_lanes) = self.queue.lane_stats();
+        QueueStats {
+            queued,
+            lanes,
+            busy_lanes,
+            shed: self.shed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            retried: self.retried.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The configured fault plan, if any (front-ends consult it for
+    /// injected sheds/drops so one spec drives every layer).
+    pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.faults.as_ref()
     }
 
     /// `(queue_us, service_us)` for every completed request so far, in
@@ -289,16 +417,48 @@ impl AdaptationService {
         while let Some((lease, job)) = self.queue.pop() {
             let picked = Instant::now();
             let queue_us = picked.duration_since(job.enqueued).as_secs_f64() * 1e6;
-            let outcome = run_request(meta, tenants, &job.req, self.render_cache);
-            let result = match outcome {
-                Ok((res, synced)) => {
-                    // Commit before releasing the lane: the tenant's
-                    // next request must see this delta.
-                    tenants.absorb(&job.req.tenant, synced);
-                    Ok(res)
+            let key = job.req.stream.state();
+            let expired = job.req.deadline_ms.filter(|&d| queue_us > d as f64 * 1000.0);
+            let result = if let Some(d) = expired {
+                // SLO shed: the request went stale in the queue — fail it
+                // typed ("deadline" classifies as retryable) rather than
+                // burn a worker on an answer nobody is waiting for.
+                Err(format!("deadline of {d}ms exceeded in queue ({queue_us:.0}us queued)"))
+            } else {
+                // Episode execution is panic-isolated: an injected (or
+                // real) worker panic becomes a Failed completion, the
+                // lane is released by the Lease drop path as usual, and
+                // the pool keeps serving. Nothing is absorbed on any
+                // failure path, so a retry of the same pre-forked stream
+                // recomputes the identical episode.
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if let Some(plan) = self.faults.as_deref() {
+                        if let Some(pause) = plan.slow_episode(key) {
+                            std::thread::sleep(pause);
+                        }
+                        if plan.worker_panic(key) {
+                            panic!(
+                                "injected worker panic (tenant={}, stream={key})",
+                                job.req.tenant
+                            );
+                        }
+                    }
+                    run_request(meta, tenants, &job.req, self.render_cache)
+                }));
+                match caught {
+                    Ok(Ok((res, synced))) => {
+                        // Commit before releasing the lane: the tenant's
+                        // next request must see this delta.
+                        tenants.absorb(&job.req.tenant, synced);
+                        Ok(res)
+                    }
+                    Ok(Err(e)) => Err(e),
+                    Err(payload) => Err(format!("panic: {}", panic_text(&payload))),
                 }
-                Err(e) => Err(e),
             };
+            if result.is_err() {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+            }
             lease.complete();
             self.finish(Completion {
                 ticket: job.ticket,
@@ -309,6 +469,18 @@ impl AdaptationService {
                 service_us: picked.elapsed().as_secs_f64() * 1e6,
             });
         }
+    }
+}
+
+/// Best-effort text of a caught panic payload (`&str` / `String`
+/// payloads cover `panic!`; anything else is opaque).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "opaque panic payload"
     }
 }
 

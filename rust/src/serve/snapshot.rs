@@ -1,0 +1,291 @@
+//! Crash-safe tenant snapshots: a versioned, checksummed binary format
+//! for [`TenantStore`](crate::serve::TenantStore) contents.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//!   u32  MAGIC  (0x544e_534e, "TNSN")
+//!   u32  VERSION (1)
+//!   u64  tenant count
+//!   per tenant:
+//!     u32  name length, then that many UTF-8 bytes
+//!     u64  steps absorbed
+//!     u64  last_used LRU clock
+//!     u64  segment count
+//!     per segment: u64 offset, u64 length, then length × f32 values
+//!   u64  FNV-1a checksum over every preceding byte
+//! ```
+//!
+//! f32 deltas travel as raw bits, so a save → restore round trip is
+//! `to_bits`-identical — restored tenants keep the serving plane's
+//! bit-identity guarantees intact.
+//!
+//! Writes go through a temp file + `fs::rename` so a crash mid-write
+//! leaves the previous snapshot untouched. Reads never panic: any
+//! truncation, bit-flip, or garbage header decodes to a typed error,
+//! and [`load_or_quarantine`] renames the bad file to `<path>.corrupt`
+//! and reports it instead of taking the boot down.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+const MAGIC: u32 = 0x544e_534e; // "TNSN"
+const VERSION: u32 = 1;
+/// Sanity cap on decoded name lengths — anything bigger is corruption,
+/// not a tenant name (wire names are capped at 64 bytes).
+const MAX_NAME: usize = 4096;
+
+/// One tenant's durable state: the composed masked-delta segments plus
+/// the LRU metadata needed to resume eviction order after a restart.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSnapshot {
+    pub tenant: String,
+    pub steps: u64,
+    pub last_used: u64,
+    pub segments: Vec<(usize, Vec<f32>)>,
+}
+
+/// FNV-1a, 64-bit. Dependency-free and plenty to catch the truncation
+/// and bit-flip corruption this format defends against (integrity, not
+/// adversarial tamper-proofing).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+pub fn encode(entries: &[TenantSnapshot]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+    for e in entries {
+        out.extend_from_slice(&(e.tenant.len() as u32).to_le_bytes());
+        out.extend_from_slice(e.tenant.as_bytes());
+        out.extend_from_slice(&e.steps.to_le_bytes());
+        out.extend_from_slice(&e.last_used.to_le_bytes());
+        out.extend_from_slice(&(e.segments.len() as u64).to_le_bytes());
+        for (off, values) in &e.segments {
+            out.extend_from_slice(&(*off as u64).to_le_bytes());
+            out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+            for v in values {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+    }
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Bounds-checked read cursor — every decode path errors instead of
+/// slicing out of range, so corrupt bytes can't panic the boot.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let remaining = self.bytes.len() - self.pos;
+        if n > remaining {
+            return Err(format!("truncated: wanted {n} bytes, {remaining} left"));
+        }
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+pub fn decode(bytes: &[u8]) -> Result<Vec<TenantSnapshot>, String> {
+    if bytes.len() < 8 {
+        return Err(format!("truncated: {} bytes is too short for a snapshot", bytes.len()));
+    }
+    let (payload, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let computed = fnv1a(payload);
+    if stored != computed {
+        return Err(format!("checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"));
+    }
+    let mut c = Cursor { bytes: payload, pos: 0 };
+    let magic = c.u32()?;
+    if magic != MAGIC {
+        return Err(format!("bad magic {magic:#010x} (want {MAGIC:#010x})"));
+    }
+    let version = c.u32()?;
+    if version != VERSION {
+        return Err(format!("unsupported snapshot version {version} (this build reads {VERSION})"));
+    }
+    let count = c.u64()? as usize;
+    let mut entries = Vec::new();
+    for i in 0..count {
+        let name_len = c.u32()? as usize;
+        if name_len > MAX_NAME {
+            return Err(format!("tenant {i}: name length {name_len} exceeds cap {MAX_NAME}"));
+        }
+        let tenant = std::str::from_utf8(c.take(name_len)?)
+            .map_err(|_| format!("tenant {i}: name is not UTF-8"))?
+            .to_string();
+        let steps = c.u64()?;
+        let last_used = c.u64()?;
+        let seg_count = c.u64()? as usize;
+        let mut segments = Vec::new();
+        for s in 0..seg_count {
+            let off = c.u64()? as usize;
+            let len = c.u64()? as usize;
+            // Bound the allocation by the bytes actually present.
+            let raw = c
+                .take(len.checked_mul(4).ok_or_else(|| format!("segment {s}: length overflow"))?)
+                .map_err(|e| format!("tenant '{tenant}' segment {s}: {e}"))?;
+            let values =
+                raw.chunks_exact(4).map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap()))).collect();
+            segments.push((off, values));
+        }
+        entries.push(TenantSnapshot { tenant, steps, last_used, segments });
+    }
+    if c.pos != payload.len() {
+        return Err(format!("{} trailing bytes after the last tenant", payload.len() - c.pos));
+    }
+    Ok(entries)
+}
+
+/// Atomic write: encode to `<path>.tmp`, fsync-free rename over the
+/// target. Creates parent directories on demand.
+pub fn save(path: &Path, entries: &[TenantSnapshot]) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, encode(entries))?;
+    fs::rename(&tmp, path)
+}
+
+/// Outcome of a restore-on-boot attempt.
+#[derive(Debug)]
+pub enum Restore {
+    /// No snapshot file — fresh boot.
+    Absent,
+    /// Snapshot decoded cleanly.
+    Loaded(Vec<TenantSnapshot>),
+    /// Snapshot was corrupt or truncated; it has been renamed aside so
+    /// the next save starts clean, and the boot proceeds empty.
+    Quarantined { to: PathBuf, reason: String },
+}
+
+/// Restore-on-boot: decode `path` if present, quarantining (renaming to
+/// `<path>.corrupt`) anything that does not decode instead of panicking.
+pub fn load_or_quarantine(path: &Path) -> Restore {
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Restore::Absent,
+        Err(e) => {
+            // Unreadable is as good as corrupt, but we can't rename what
+            // we can't reach — report and boot empty.
+            return Restore::Quarantined { to: path.to_path_buf(), reason: format!("read failed: {e}") };
+        }
+    };
+    match decode(&bytes) {
+        Ok(entries) => Restore::Loaded(entries),
+        Err(reason) => {
+            let to = PathBuf::from(format!("{}.corrupt", path.display()));
+            if let Err(e) = fs::rename(path, &to) {
+                eprintln!("snapshot: failed to quarantine {}: {e}", path.display());
+            }
+            Restore::Quarantined { to, reason }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TenantSnapshot> {
+        vec![
+            TenantSnapshot {
+                tenant: "tenant000".into(),
+                steps: 12,
+                last_used: 7,
+                segments: vec![(0, vec![1.0, -2.5, 3.25e-8]), (96, vec![f32::MIN_POSITIVE])],
+            },
+            TenantSnapshot { tenant: "t1".into(), steps: 1, last_used: 9, segments: vec![] },
+        ]
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        let entries = sample();
+        let decoded = decode(&encode(&entries)).unwrap();
+        assert_eq!(decoded.len(), entries.len());
+        for (a, b) in entries.iter().zip(&decoded) {
+            assert_eq!((a.tenant.as_str(), a.steps, a.last_used), (b.tenant.as_str(), b.steps, b.last_used));
+            assert_eq!(a.segments.len(), b.segments.len());
+            for ((off_a, va), (off_b, vb)) in a.segments.iter().zip(&b.segments) {
+                assert_eq!(off_a, off_b);
+                let bits_a: Vec<u32> = va.iter().map(|v| v.to_bits()).collect();
+                let bits_b: Vec<u32> = vb.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits_a, bits_b);
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_and_bit_flips_are_typed_errors_not_panics() {
+        let bytes = encode(&sample());
+        for cut in [0, 3, 8, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut]).is_err(), "truncation at {cut} must not decode");
+        }
+        for i in (0..bytes.len()).step_by(7) {
+            let mut flipped = bytes.clone();
+            flipped[i] ^= 0x40;
+            assert!(decode(&flipped).is_err(), "bit flip at {i} must fail the checksum");
+        }
+        assert!(decode(&[]).is_err());
+    }
+
+    #[test]
+    fn save_load_and_quarantine() {
+        let dir = std::env::temp_dir().join(format!("tinytrain-snap-{}", std::process::id()));
+        let path = dir.join("tenants.snap");
+        let entries = sample();
+        save(&path, &entries).unwrap();
+        match load_or_quarantine(&path) {
+            Restore::Loaded(got) => assert_eq!(got, entries),
+            other => panic!("expected Loaded, got {other:?}"),
+        }
+        // Corrupt it: restore must quarantine, not panic, and the bad
+        // file must be moved aside.
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+        match load_or_quarantine(&path) {
+            Restore::Quarantined { to, reason } => {
+                assert!(to.ends_with("tenants.snap.corrupt"), "quarantine path: {}", to.display());
+                assert!(to.exists(), "quarantined file should exist");
+                assert!(!path.exists(), "corrupt snapshot should be moved aside");
+                assert!(!reason.is_empty());
+            }
+            other => panic!("expected Quarantined, got {other:?}"),
+        }
+        match load_or_quarantine(&path) {
+            Restore::Absent => {}
+            other => panic!("expected Absent after quarantine, got {other:?}"),
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -26,14 +26,26 @@
 //! [`super::queue`]) is what keeps one tenant's episodes composing in
 //! trace order.
 //!
+//! **Durability** (PR 8): with a spill directory configured
+//! ([`with_spill_dir`](TenantStore::with_spill_dir)), eviction writes
+//! the victim's overlay to disk (one checksummed [`snapshot`]-format
+//! file per tenant) and any later touch pages it back in bit-identical
+//! — eviction stops destroying personalisation. Whole-store snapshots
+//! ([`snapshot_entries`](TenantStore::snapshot_entries) /
+//! [`restore_entries`](TenantStore::restore_entries)) give the serving
+//! plane crash-safe restarts on top of the same format.
+//!
 //! [`AdaptationBackend::sync`]: crate::coordinator::AdaptationBackend::sync
+//! [`snapshot`]: crate::serve::snapshot
 
 use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::accounting::BYTES_F32;
 use crate::coordinator::SyncedParams;
 use crate::model::ParamStore;
+use crate::serve::snapshot::{self, Restore, TenantSnapshot};
 
 /// One tenant's composed overlay: sorted disjoint `(offset, values)`
 /// runs over the base theta, plus bookkeeping.
@@ -63,6 +75,10 @@ pub struct TenantStoreStats {
     pub absorbs: u64,
     /// Tenants evicted to fit the byte budget since construction.
     pub evictions: u64,
+    /// Overlays spilled to the snapshot dir on eviction.
+    pub spills: u64,
+    /// Overlays paged back in from the snapshot dir.
+    pub pageins: u64,
 }
 
 struct Tenants {
@@ -71,6 +87,8 @@ struct Tenants {
     delta_bytes: f64,
     absorbs: u64,
     evictions: u64,
+    spills: u64,
+    pageins: u64,
 }
 
 /// Shared base weights + per-tenant masked-delta overlays with an LRU
@@ -79,6 +97,9 @@ pub struct TenantStore {
     base: Arc<ParamStore>,
     inner: Mutex<Tenants>,
     budget_bytes: f64,
+    /// When set, evicted overlays spill here (one file per tenant) and
+    /// page back in on the next touch instead of being lost.
+    spill_dir: Option<PathBuf>,
 }
 
 impl TenantStore {
@@ -95,14 +116,87 @@ impl TenantStore {
                 delta_bytes: 0.0,
                 absorbs: 0,
                 evictions: 0,
+                spills: 0,
+                pageins: 0,
             }),
             budget_bytes,
+            spill_dir: None,
         }
+    }
+
+    /// Enable eviction spill: evicted overlays are written to `dir`
+    /// (created on demand) and paged back in — bit-identical — on the
+    /// tenant's next touch, instead of being re-adapted from scratch.
+    pub fn with_spill_dir(mut self, dir: PathBuf) -> std::io::Result<TenantStore> {
+        std::fs::create_dir_all(&dir)?;
+        self.spill_dir = Some(dir);
+        Ok(self)
     }
 
     /// The shared base weights every tenant starts from.
     pub fn base(&self) -> &Arc<ParamStore> {
         &self.base
+    }
+
+    /// Per-tenant spill file. The `t-` prefix keeps hostile-ish names
+    /// (`.`, `..`) from escaping the directory; wire-visible names are
+    /// already restricted to `[A-Za-z0-9._-]` by `net::proto`.
+    fn spill_path(&self, tenant: &str) -> Option<PathBuf> {
+        self.spill_dir.as_ref().map(|d| d.join(format!("t-{tenant}.delta")))
+    }
+
+    /// Best-effort spill of one overlay (a single-entry snapshot file).
+    /// Durability failures degrade to plain eviction, never a panic.
+    fn spill(&self, g: &mut Tenants, tenant: &str, delta: &TenantDelta) {
+        let Some(path) = self.spill_path(tenant) else { return };
+        let entry = TenantSnapshot {
+            tenant: tenant.to_string(),
+            steps: delta.steps,
+            last_used: delta.last_used,
+            segments: delta.segments.clone(),
+        };
+        match snapshot::save(&path, std::slice::from_ref(&entry)) {
+            Ok(()) => g.spills += 1,
+            Err(e) => eprintln!("tenant spill: failed to write {}: {e}", path.display()),
+        }
+    }
+
+    /// Page `tenant` back in from its spill file, if one exists. Runs at
+    /// the top of every map access so spilled tenants are
+    /// indistinguishable from resident ones. Corrupt spill files are
+    /// quarantined (renamed `.corrupt`) and treated as absent. The byte
+    /// budget is deliberately **not** re-enforced here — only `absorb`
+    /// evicts, which keeps page-in/evict cycles impossible; a paged-in
+    /// overlay is trimmed at the next absorb like any other.
+    fn page_in(&self, g: &mut Tenants, tenant: &str) {
+        if g.map.contains_key(tenant) {
+            return;
+        }
+        let Some(path) = self.spill_path(tenant) else { return };
+        let entries = match snapshot::load_or_quarantine(&path) {
+            Restore::Absent => return,
+            Restore::Quarantined { to, reason } => {
+                eprintln!("tenant spill: quarantined {} ({reason})", to.display());
+                return;
+            }
+            Restore::Loaded(entries) => entries,
+        };
+        let Some(entry) = entries.into_iter().find(|e| e.tenant == tenant) else {
+            eprintln!("tenant spill: {} does not contain '{tenant}'", path.display());
+            return;
+        };
+        let delta = TenantDelta {
+            segments: entry.segments,
+            steps: entry.steps,
+            // Paged-in == just touched: the caller is about to use it.
+            last_used: g.clock,
+        };
+        g.delta_bytes += delta.floats() as f64 * BYTES_F32;
+        g.pageins += 1;
+        g.map.insert(tenant.to_string(), delta);
+        if let Err(e) = std::fs::remove_file(&path) {
+            eprintln!("tenant spill: failed to remove {} after page-in: {e}", path.display());
+        }
     }
 
     /// Working parameters for one of `tenant`'s episodes: a fresh copy
@@ -118,6 +212,7 @@ impl TenantStore {
     pub fn params_for(&self, tenant: &str) -> ParamStore {
         let mut params = self.base.adapted_copy();
         let mut g = self.inner.lock().unwrap();
+        self.page_in(&mut g, tenant);
         g.clock += 1;
         let now = g.clock;
         if let Some(delta) = g.map.get_mut(tenant) {
@@ -141,6 +236,7 @@ impl TenantStore {
             SyncedParams::Full(p) => (diff_segments(&self.base.theta, &p.theta), p.t),
         };
         let mut g = self.inner.lock().unwrap();
+        self.page_in(&mut g, tenant);
         g.clock += 1;
         g.absorbs += 1;
         let now = g.clock;
@@ -166,16 +262,20 @@ impl TenantStore {
                 .map(|(name, _)| name.clone())
                 .expect("non-empty map");
             let evicted = g.map.remove(&lru).expect("lru key exists");
+            self.spill(&mut g, &lru, &evicted);
             g.delta_bytes -= evicted.floats() as f64 * BYTES_F32;
             g.evictions += 1;
         }
     }
 
-    /// Drop `tenant`'s overlay (it falls back to the shared base).
+    /// Drop `tenant`'s overlay from memory (spilling it to disk first
+    /// when a spill dir is configured; otherwise it falls back to the
+    /// shared base).
     pub fn evict(&self, tenant: &str) -> bool {
         let mut g = self.inner.lock().unwrap();
         match g.map.remove(tenant) {
             Some(delta) => {
+                self.spill(&mut g, tenant, &delta);
                 g.delta_bytes -= delta.floats() as f64 * BYTES_F32;
                 g.evictions += 1;
                 true
@@ -185,9 +285,12 @@ impl TenantStore {
     }
 
     /// The tenant's current overlay runs, if any (clones — for tests,
-    /// replay equivalence checks and state export).
+    /// replay equivalence checks and state export). Pages spilled
+    /// tenants back in.
     pub fn delta(&self, tenant: &str) -> Option<Vec<(usize, Vec<f32>)>> {
-        self.inner.lock().unwrap().map.get(tenant).map(|d| d.segments.clone())
+        let mut g = self.inner.lock().unwrap();
+        self.page_in(&mut g, tenant);
+        g.map.get(tenant).map(|d| d.segments.clone())
     }
 
     /// The tenant's wire-sync view: cumulative optimiser steps plus the
@@ -197,7 +300,9 @@ impl TenantStore {
     /// LRU clock, so an observer polling `/v1/tenants/{id}/sync` cannot
     /// perturb eviction order.
     pub fn sync_state(&self, tenant: &str) -> Option<(u64, Vec<(usize, Vec<f32>)>)> {
-        self.inner.lock().unwrap().map.get(tenant).map(|d| (d.steps, d.segments.clone()))
+        let mut g = self.inner.lock().unwrap();
+        self.page_in(&mut g, tenant);
+        g.map.get(tenant).map(|d| (d.steps, d.segments.clone()))
     }
 
     pub fn stats(&self) -> TenantStoreStats {
@@ -207,6 +312,45 @@ impl TenantStore {
             delta_bytes: g.delta_bytes,
             absorbs: g.absorbs,
             evictions: g.evictions,
+            spills: g.spills,
+            pageins: g.pageins,
+        }
+    }
+
+    /// Export every **resident** overlay for a whole-store snapshot,
+    /// sorted by tenant name (deterministic bytes for identical state).
+    /// Spilled tenants already live as files in the spill dir — a state
+    /// dir that holds both the snapshot and the spills covers everyone.
+    pub fn snapshot_entries(&self) -> Vec<TenantSnapshot> {
+        let g = self.inner.lock().unwrap();
+        let mut entries: Vec<TenantSnapshot> = g
+            .map
+            .iter()
+            .map(|(tenant, d)| TenantSnapshot {
+                tenant: tenant.clone(),
+                steps: d.steps,
+                last_used: d.last_used,
+                segments: d.segments.clone(),
+            })
+            .collect();
+        entries.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+        entries
+    }
+
+    /// Restore-on-boot: adopt snapshot entries wholesale. LRU order is
+    /// resumed from the saved clocks; the byte budget is not enforced
+    /// here (the next absorb trims as usual). Intended for a freshly
+    /// constructed store — existing entries for the same tenant are
+    /// replaced.
+    pub fn restore_entries(&self, entries: Vec<TenantSnapshot>) {
+        let mut g = self.inner.lock().unwrap();
+        for e in entries {
+            let delta = TenantDelta { segments: e.segments, steps: e.steps, last_used: e.last_used };
+            g.clock = g.clock.max(e.last_used + 1);
+            g.delta_bytes += delta.floats() as f64 * BYTES_F32;
+            if let Some(old) = g.map.insert(e.tenant, delta) {
+                g.delta_bytes -= old.floats() as f64 * BYTES_F32;
+            }
         }
     }
 }
@@ -309,6 +453,7 @@ fn diff_segments(base: &[f32], full: &[f32]) -> Vec<(usize, Vec<f32>)> {
 mod tests {
     use super::*;
     use crate::model::ModelMeta;
+    use crate::serve::snapshot::{decode, encode};
 
     fn base() -> Arc<ParamStore> {
         Arc::new(ParamStore::init(&ModelMeta::synthetic(2), 42))
@@ -444,5 +589,80 @@ mod tests {
         assert!(store.evict("d"));
         assert!(!store.evict("d"));
         assert_eq!(store.params_for("d").theta, base.theta);
+    }
+
+    fn temp_spill_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tinytrain-spill-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn eviction_spills_and_pages_back_in_bit_identical() {
+        let dir = temp_spill_dir("lru");
+        let base = base();
+        // budget: two 4-float overlays exactly (same shape as the LRU test)
+        let store = TenantStore::new(Arc::clone(&base), 8.0 * BYTES_F32)
+            .with_spill_dir(dir.clone())
+            .unwrap();
+        let payload = vec![(0usize, vec![1.0f32, -2.5, 3.25e-8, f32::MIN_POSITIVE])];
+        store.absorb("a", sparse(3, payload.clone()));
+        store.absorb("b", sparse(1, vec![(8, vec![2.0; 4])]));
+        store.params_for("b"); // make "a" the LRU victim
+        store.absorb("c", sparse(1, vec![(16, vec![3.0; 4])]));
+        let stats = store.stats();
+        assert_eq!((stats.evictions, stats.spills), (1, 1));
+        assert!(dir.join("t-a.delta").exists(), "evicted overlay must be on disk");
+        // Touching "a" pages the exact bits back in.
+        let got = store.delta("a").expect("spilled tenant pages back in");
+        let bits = |runs: &[(usize, Vec<f32>)]| -> Vec<(usize, Vec<u32>)> {
+            runs.iter().map(|(o, v)| (*o, v.iter().map(|x| x.to_bits()).collect())).collect()
+        };
+        assert_eq!(bits(&got), bits(&payload));
+        assert!(!dir.join("t-a.delta").exists(), "page-in consumes the spill file");
+        let stats = store.stats();
+        assert_eq!(stats.pageins, 1);
+        // steps survived the disk round trip too
+        assert_eq!(store.params_for("a").t, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn explicit_evict_with_spill_dir_is_not_destructive() {
+        let dir = temp_spill_dir("evict");
+        let store =
+            TenantStore::new(base(), f64::INFINITY).with_spill_dir(dir.clone()).unwrap();
+        store.absorb("d", sparse(2, vec![(4, vec![0.5, -0.5])]));
+        assert!(store.evict("d"));
+        assert_eq!(store.stats().tenants, 0);
+        assert_eq!(store.sync_state("d"), Some((2, vec![(4, vec![0.5, -0.5])])));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_snapshot_round_trips_bit_identical() {
+        let base = base();
+        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        store.absorb("x", sparse(2, vec![(0, vec![1.5, -0.25])]));
+        store.absorb("y", sparse(5, vec![(10, vec![9.0])]));
+        store.params_for("x"); // perturb LRU order
+        let entries = store.snapshot_entries();
+        assert_eq!(entries.len(), 2);
+
+        let restored = TenantStore::new(base, f64::INFINITY);
+        restored.restore_entries(decode(&encode(&entries)).unwrap());
+        for t in ["x", "y"] {
+            let (a_steps, a_runs) = store.sync_state(t).unwrap();
+            let (b_steps, b_runs) = restored.sync_state(t).unwrap();
+            assert_eq!(a_steps, b_steps);
+            assert_eq!(a_runs.len(), b_runs.len());
+            for ((oa, va), (ob, vb)) in a_runs.iter().zip(&b_runs) {
+                assert_eq!(oa, ob);
+                assert!(va.iter().zip(vb).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+        assert_eq!(restored.stats().tenants, 2);
+        // LRU order survives: absorbing a third tenant under a tight
+        // budget must evict the same victim in both stores.
+        let want_bytes = store.stats().delta_bytes;
+        assert_eq!(restored.stats().delta_bytes, want_bytes);
     }
 }

@@ -11,7 +11,7 @@ use std::time::Duration;
 use tinytrain::coordinator::Method;
 use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::net::{self, http, proto, Limits, ServerConfig, WireConfig};
-use tinytrain::serve::{self, LoopMode, ServeConfig, TenantStore, TraceConfig};
+use tinytrain::serve::{self, FaultPlan, LoopMode, ServeConfig, TenantStore, TraceConfig};
 use tinytrain::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -102,7 +102,13 @@ fn lifecycle_server_config() -> ServerConfig {
         acceptors: 2,
         limits: Limits { max_body_bytes: 256, ..Limits::default() },
         verify_decode: true,
-        serve: ServeConfig { workers: 2, queue_capacity: 8, render_cache: true },
+        serve: ServeConfig {
+            workers: 2,
+            queue_capacity: 8,
+            render_cache: true,
+            faults: None,
+        },
+        snapshot: None,
     }
 }
 
@@ -221,7 +227,13 @@ fn stalled_peers_get_408_and_their_handler_back() {
         acceptors: 1,
         limits: Limits { read_timeout: Duration::from_millis(250), ..Limits::default() },
         verify_decode: false,
-        serve: ServeConfig { workers: 1, queue_capacity: 4, render_cache: false },
+        serve: ServeConfig {
+            workers: 1,
+            queue_capacity: 4,
+            render_cache: false,
+            faults: None,
+        },
+        snapshot: None,
     };
     let (addr, handle) = start_server(cfg);
     let resp = raw_exchange(&addr, b"GET /healthz HTT"); // stall mid-line
@@ -259,7 +271,13 @@ fn wire_replay_matches_reference(mode: LoopMode, connections: usize, shape: (usi
         acceptors,
         limits: Limits::default(),
         verify_decode: true,
-        serve: ServeConfig { workers, queue_capacity: 16, render_cache: true },
+        serve: ServeConfig {
+            workers,
+            queue_capacity: 16,
+            render_cache: true,
+            faults: None,
+        },
+        snapshot: None,
     };
     let (addr, handle) = start_server(cfg);
     let wire_cfg = WireConfig {
@@ -268,12 +286,18 @@ fn wire_replay_matches_reference(mode: LoopMode, connections: usize, shape: (usi
         method: "tinytrain".into(),
         limits: Limits::client(),
         shutdown: true,
+        ..WireConfig::default()
     };
     let report = net::run_wire(&addr, &meta, &trace, &wire_cfg).unwrap();
     handle.join().unwrap().unwrap();
     assert_eq!(report.completions.len(), trace.len());
     assert!(report.connections <= acceptors, "health clamp must bound connections");
     assert_eq!(report.total.n, trace.len());
+    assert_eq!(
+        report.retries,
+        net::RetryCounts::default(),
+        "fault-free loopback run must not need any recovery path"
+    );
     net::verify_against_reference(&meta, base, &trace, &report, true).unwrap();
 }
 
@@ -290,4 +314,219 @@ fn open_loop_wire_replay_is_bit_identical_to_the_reference() {
 #[test]
 fn single_connection_single_worker_still_matches() {
     wire_replay_matches_reference(LoopMode::Closed, 1, (1, 1));
+}
+
+// ---------------------------------------------------------------------------
+// Degradation over the wire: injected faults, shed headers, failed
+// tickets, and the crash-safe snapshot restart.
+// ---------------------------------------------------------------------------
+
+fn chaos_trace_cfg() -> TraceConfig {
+    TraceConfig {
+        tenants: 4,
+        domains: vec!["traffic".into(), "cub".into()],
+        episodes: 2,
+        seed: 11,
+        method: Method::tinytrain_default(),
+        steps: 2,
+        lr: 6e-3,
+    }
+}
+
+#[test]
+fn chaos_wire_replay_recovers_and_stays_bit_identical() {
+    let meta = ModelMeta::synthetic(8);
+    let base = Arc::new(ParamStore::init(&meta, 42));
+    let trace = serve::synthetic_trace(&chaos_trace_cfg());
+    let server_plan =
+        FaultPlan::from_spec("seed=5,panic=0.5,slow=0.3:2,shed=0.5,drop=0.5").unwrap();
+    let cfg = ServerConfig {
+        acceptors: 3,
+        limits: Limits::default(),
+        verify_decode: true,
+        serve: ServeConfig {
+            workers: 3,
+            queue_capacity: 16,
+            render_cache: true,
+            faults: Some(Arc::clone(&server_plan)),
+        },
+        snapshot: None,
+    };
+    let (addr, handle) = start_server(cfg);
+    let wire_cfg = WireConfig {
+        connections: 3,
+        mode: LoopMode::Closed,
+        method: "tinytrain".into(),
+        limits: Limits::client(),
+        shutdown: false,
+        faults: Some(FaultPlan::from_spec("seed=21,drop=0.5").unwrap()),
+        deadline_ms: Some(10_000),
+        retry_attempts: 8,
+        retry_seed: 77,
+    };
+    let report = net::run_wire(&addr, &meta, &trace, &wire_cfg).unwrap();
+    // Every degradation path actually fired. The fault schedule is a
+    // pure function of (spec seed, stream), so these cannot flake: the
+    // same seeds draw the same faults on every run.
+    let r = &report.retries;
+    assert!(r.failed > 0, "no injected panic was recovered: {r:?}");
+    assert!(r.shed > 0, "no injected shed was retried: {r:?}");
+    assert!(r.dropped_connections > 0, "no client-side drop fired: {r:?}");
+    assert!(r.transport > 0, "server-side drops must surface as transport retries: {r:?}");
+    // ...and despite all of it, the run is bit-identical to the
+    // fault-free in-process arm — the headline robustness contract.
+    net::verify_against_reference(&meta, base, &trace, &report, true).unwrap();
+
+    // The counter families are visible on /metrics.
+    let mut c = net::Client::connect(&addr, &Limits::client()).unwrap();
+    let (status, resp) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8_lossy(&resp).into_owned();
+    for key in
+        ["shed", "failed", "retried", "store", "spills", "pageins", "faults", "panics", "drops"]
+    {
+        assert!(text.contains(key), "metrics missing {key}: {text}");
+    }
+    let (status, _) = c.post("/v1/shutdown", "{}").unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn failed_tickets_travel_the_wire_and_a_resubmit_succeeds() {
+    let mut cfg = lifecycle_server_config();
+    cfg.serve.faults = Some(FaultPlan::from_spec("seed=3,panic=1").unwrap());
+    let (addr, handle) = start_server(cfg);
+    let mut c = net::Client::connect(&addr, &Limits::client()).unwrap();
+    let stream = Rng::new(5).state();
+    let body = proto::submit_body("t0", "traffic", "tinytrain", 2, 6e-3, stream);
+
+    // First attempt: accepted, then fails in the worker (blocking join).
+    let (status, resp) = c.post("/v1/episodes", &body).unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&resp));
+    let ticket = proto::decode_ticket(&resp).unwrap();
+    let (status, resp) = c.get(&format!("/v1/tickets/{ticket}?wait=1")).unwrap();
+    assert_eq!(status, 200, "failed tickets are served, not 5xx'd");
+    let failed = proto::decode_completion(&resp).unwrap();
+    let err = failed.result.expect_err("panic=1 must fail the first attempt");
+    assert!(err.starts_with("panic:"), "{err}");
+    // A plain poll answers the same terminal state.
+    let (status, resp) = c.get(&format!("/v1/tickets/{ticket}")).unwrap();
+    assert_eq!(status, 200);
+    assert!(proto::decode_completion(&resp).unwrap().result.is_err());
+    // No state was committed by the failed attempt.
+    let (status, _) = c.get("/v1/tenants/t0/sync").unwrap();
+    assert_eq!(status, 404);
+
+    // The resubmit of the identical stream succeeds (fire-once fault),
+    // on a fresh ticket.
+    let (status, resp) = c.post("/v1/episodes", &body).unwrap();
+    assert_eq!(status, 202);
+    let retry = proto::decode_ticket(&resp).unwrap();
+    assert_ne!(retry, ticket, "failed tickets must not be deduped onto");
+    let (status, resp) = c.get(&format!("/v1/tickets/{retry}?wait=1")).unwrap();
+    assert_eq!(status, 200);
+    assert!(proto::decode_completion(&resp).unwrap().result.is_ok());
+    let (status, _) = c.get("/v1/tenants/t0/sync").unwrap();
+    assert_eq!(status, 200, "the successful retry committed its delta");
+
+    let (status, _) = c.post("/v1/shutdown", "{}").unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn injected_sheds_answer_503_with_a_retry_after_header() {
+    let mut cfg = lifecycle_server_config();
+    cfg.serve.faults = Some(FaultPlan::from_spec("seed=1,shed=1").unwrap());
+    let (addr, handle) = start_server(cfg);
+    let body = proto::submit_body("t0", "traffic", "tinytrain", 2, 6e-3, 77);
+    let raw = format!(
+        "POST /v1/episodes HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let resp = raw_exchange(&addr, raw.as_bytes());
+    assert!(resp.starts_with("HTTP/1.1 503"), "shed must be a 503: {resp}");
+    assert!(resp.contains("Retry-After: 1\r\n"), "shed must carry the header: {resp}");
+    assert!(resp.contains("retry_after_s"), "shed body must carry the hint: {resp}");
+    let mut c = net::Client::connect(&addr, &Limits::client()).unwrap();
+    let (status, _) = c.post("/v1/shutdown", "{}").unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap().unwrap();
+}
+
+fn start_stateful_server(
+    dir: std::path::PathBuf,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let meta = ModelMeta::synthetic(8);
+        let store = TenantStore::new(Arc::new(ParamStore::init(&meta, 42)), f64::INFINITY)
+            .with_spill_dir(dir.join("spill"))?;
+        if let serve::Restore::Loaded(entries) =
+            serve::snapshot::load_or_quarantine(&dir.join("tenants.snap"))
+        {
+            store.restore_entries(entries);
+        }
+        let cfg = ServerConfig {
+            acceptors: 2,
+            limits: Limits::default(),
+            verify_decode: true,
+            serve: ServeConfig {
+                workers: 2,
+                queue_capacity: 16,
+                render_cache: true,
+                faults: None,
+            },
+            snapshot: Some(net::SnapshotConfig {
+                path: dir.join("tenants.snap"),
+                // Long period: only the authoritative shutdown save
+                // matters here, keeping the test deterministic.
+                every: Duration::from_secs(60),
+            }),
+        };
+        net::serve_blocking(listener, &meta, &store, &cfg)
+    });
+    (addr, handle)
+}
+
+#[test]
+fn snapshot_restart_converges_bit_identically_across_phases() {
+    let dir = std::env::temp_dir().join(format!("tinytrain-net-restart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let meta = ModelMeta::synthetic(8);
+    let base = Arc::new(ParamStore::init(&meta, 42));
+    let trace_cfg = chaos_trace_cfg();
+    let full_trace = serve::synthetic_trace(&trace_cfg);
+    // The trace is episode-major: one block is every (domain, tenant)
+    // pair of one episode, so slicing at a block boundary keeps each
+    // tenant's requests in order across the phases.
+    let block = trace_cfg.tenants * trace_cfg.domains.len();
+    let wire_cfg = WireConfig {
+        connections: 2,
+        mode: LoopMode::Closed,
+        method: "tinytrain".into(),
+        limits: Limits::client(),
+        shutdown: true,
+        ..WireConfig::default()
+    };
+
+    // Phase A: first episode, then shutdown — which snapshots.
+    let (addr, handle) = start_stateful_server(dir.clone());
+    let a = net::run_wire(&addr, &meta, &full_trace[..block], &wire_cfg).unwrap();
+    handle.join().unwrap().unwrap();
+    assert!(a.completions.iter().all(|c| c.result.is_ok()));
+    assert!(dir.join("tenants.snap").exists(), "shutdown must leave a snapshot behind");
+
+    // Phase B: a fresh "process" restores the snapshot, serves the
+    // remaining episode, and its final synced deltas must equal one
+    // uninterrupted sequential pass over the FULL trace.
+    let (addr, handle) = start_stateful_server(dir.clone());
+    let b = net::run_wire(&addr, &meta, &full_trace[block..], &wire_cfg).unwrap();
+    handle.join().unwrap().unwrap();
+    net::verify_final_deltas(&meta, base, &full_trace, &b.syncs, true).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
 }

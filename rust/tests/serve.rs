@@ -16,8 +16,9 @@ use std::time::Duration;
 use tinytrain::coordinator::{Budgets, ChannelScheme, Criterion, Method};
 use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::serve::{
-    check_equivalent, replay, sequential_replay, synthetic_trace, tenant_name, AdaptationService,
-    LoopMode, ServeConfig, TenantQueue, TenantStore, TraceConfig, TryPushError,
+    check_equivalent, is_retryable_error, replay, sequential_replay, synthetic_trace, tenant_name,
+    AdaptationService, FaultCounts, FaultPlan, LoopMode, ServeConfig, TenantQueue, TenantStore,
+    TicketStatus, TraceConfig, TryPushError,
 };
 
 // ---------------------------------------------------------------------------
@@ -131,7 +132,8 @@ fn replay_is_bit_identical_across_worker_counts_and_loop_modes() {
 
     for workers in [1, 2, 4] {
         for mode in [LoopMode::Open, LoopMode::Closed] {
-            let scfg = ServeConfig { workers, queue_capacity: 8, render_cache: true };
+            let scfg =
+                ServeConfig { workers, queue_capacity: 8, render_cache: true, faults: None };
             let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
             let report = replay(&meta, &store, &scfg, &trace, mode).unwrap();
             let ctx = format!("{workers} workers, {mode:?} loop");
@@ -173,7 +175,7 @@ fn service_tickets_poll_join_and_survive_bad_requests() {
     let meta = ModelMeta::synthetic(3);
     let base = Arc::new(ParamStore::init(&meta, 9));
     let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
-    let cfg = ServeConfig { workers: 2, queue_capacity: 4, render_cache: true };
+    let cfg = ServeConfig { workers: 2, queue_capacity: 4, render_cache: true, faults: None };
     let trace_cfg = TraceConfig {
         tenants: 2,
         domains: vec!["flower".into()],
@@ -220,7 +222,7 @@ fn tenant_deltas_accumulate_and_stay_isolated() {
     let cfg = tiny_trace_cfg();
     let trace = synthetic_trace(&cfg);
     let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
-    let scfg = ServeConfig { workers: 2, queue_capacity: 8, render_cache: true };
+    let scfg = ServeConfig { workers: 2, queue_capacity: 8, render_cache: true, faults: None };
     let report = replay(&meta, &store, &scfg, &trace, LoopMode::Open).unwrap();
     assert_eq!(report.errors, 0);
 
@@ -255,4 +257,121 @@ fn tenant_deltas_accumulate_and_stay_isolated() {
     let a = store.delta(&tenant_name(0)).unwrap();
     let b = store.delta(&tenant_name(1)).unwrap();
     assert_ne!(a, b, "two tenants share one delta — streams not independent?");
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: graceful degradation + deterministic convergence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injected_panic_fails_the_ticket_releases_the_lane_and_a_resubmit_succeeds() {
+    let meta = ModelMeta::synthetic(3);
+    let base = Arc::new(ParamStore::init(&meta, 9));
+    let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let plan = FaultPlan::from_spec("seed=3,panic=1").unwrap();
+    let cfg = ServeConfig {
+        workers: 2,
+        queue_capacity: 4,
+        render_cache: true,
+        faults: Some(Arc::clone(&plan)),
+    };
+    let trace_cfg = TraceConfig {
+        tenants: 1,
+        domains: vec!["flower".into()],
+        episodes: 1,
+        method: tinytrain_loose(),
+        ..TraceConfig::default()
+    };
+    let trace = synthetic_trace(&trace_cfg);
+    AdaptationService::run(&meta, &store, &cfg, |svc| {
+        let t = svc.submit(trace[0].clone())?;
+        let c = svc.join(t);
+        let err = c.result.clone().expect_err("panic=1 must fail the first attempt");
+        assert!(err.starts_with("panic:"), "typed panic error expected, got: {err}");
+        assert!(is_retryable_error(&err), "an injected panic must classify retryable");
+        // Failed is terminal and visible through status() without a join.
+        match svc.status(t) {
+            TicketStatus::Failed(fc) => assert!(fc.result.is_err()),
+            other => panic!("expected TicketStatus::Failed, got {other:?}"),
+        }
+        // The lane was released and the fault fired once: resubmitting
+        // the identical stream gets a *fresh* ticket (failed tickets
+        // are not deduped onto) and succeeds deterministically.
+        let t2 = svc.submit(trace[0].clone())?;
+        assert_ne!(t, t2, "a failed ticket must not be deduped onto");
+        assert!(svc.join(t2).result.is_ok(), "retry after a fire-once panic must succeed");
+        let qs = svc.queue_stats();
+        assert_eq!(qs.failed, 1, "one failed episode");
+        assert_eq!(qs.retried, 1, "one recognised resubmit");
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(plan.counts().panics, 1, "fire-once: the panic fired exactly once");
+    assert_eq!(store.stats().absorbs, 1, "only the successful attempt absorbed a delta");
+}
+
+#[test]
+fn faulted_closed_replay_converges_to_the_fault_free_reference() {
+    let meta = ModelMeta::synthetic(4);
+    let base = Arc::new(ParamStore::init(&meta, 42));
+    let cfg = tiny_trace_cfg();
+    let trace = synthetic_trace(&cfg);
+    let ref_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let reference = sequential_replay(&meta, &ref_store, &trace, true);
+
+    let plan = FaultPlan::from_spec("seed=5,panic=0.4,slow=0.2:1").unwrap();
+    let scfg = ServeConfig {
+        workers: 4,
+        queue_capacity: 8,
+        render_cache: true,
+        faults: Some(Arc::clone(&plan)),
+    };
+    let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let report = replay(&meta, &store, &scfg, &trace, LoopMode::Closed).unwrap();
+    assert_eq!(report.errors, 0, "closed-loop retry must clear every injected failure");
+    let counts = plan.counts();
+    assert!(counts.panics > 0, "p=0.4 over {} episodes should fire at least once", trace.len());
+    assert_eq!(report.retried, counts.panics, "every panic retried exactly once");
+    check_equivalent(&reference.completions, &report.completions).unwrap();
+    for t in 0..cfg.tenants {
+        let name = tenant_name(t);
+        assert_eq!(
+            ref_store.delta(&name),
+            store.delta(&name),
+            "tenant {name}: faulted run diverged from the fault-free arm"
+        );
+    }
+}
+
+#[test]
+fn fault_schedule_and_outcomes_are_worker_count_invariant() {
+    let meta = ModelMeta::synthetic(4);
+    let base = Arc::new(ParamStore::init(&meta, 42));
+    let cfg = tiny_trace_cfg();
+    let trace = synthetic_trace(&cfg);
+    type Deltas = Vec<Option<Vec<(usize, Vec<f32>)>>>;
+    let mut first: Option<(FaultCounts, Deltas)> = None;
+    for workers in [1, 2, 4] {
+        // A fresh plan per run: fire-once state must not leak between
+        // runs for the schedules to be comparable.
+        let plan = FaultPlan::from_spec("seed=6,panic=0.5,slow=0.25:1").unwrap();
+        let scfg = ServeConfig {
+            workers,
+            queue_capacity: 8,
+            render_cache: true,
+            faults: Some(Arc::clone(&plan)),
+        };
+        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        let report = replay(&meta, &store, &scfg, &trace, LoopMode::Closed).unwrap();
+        assert_eq!(report.errors, 0, "{workers} workers: unrecovered failures");
+        let deltas: Deltas = (0..cfg.tenants).map(|t| store.delta(&tenant_name(t))).collect();
+        let counts = plan.counts();
+        match &first {
+            None => first = Some((counts, deltas)),
+            Some((c0, d0)) => {
+                assert_eq!(&counts, c0, "{workers} workers: fault schedule diverged");
+                assert_eq!(&deltas, d0, "{workers} workers: final deltas diverged");
+            }
+        }
+    }
 }
