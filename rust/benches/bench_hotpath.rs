@@ -9,7 +9,10 @@
 //!    grid) and of the episode-pipeline overhaul (`episode_pipeline`:
 //!    cached renders + pooled tensors vs re-render + fresh allocations;
 //!    `incremental_embed`: masked-delta re-embedding vs the seed's dense
-//!    per-pixel re-embed) — on the synthetic architecture. The "before"
+//!    per-pixel re-embed; `kernels_accumulate`/`kernels_step_plan`:
+//!    8-wide blocked accumulation and the per-mask compiled step plan
+//!    vs their scalar reference arms) — on the synthetic architecture.
+//!    The "before"
 //!    arms re-implement the seed's full-recompute/dense logic verbatim,
 //!    and each pair is asserted equivalent (bit-identical where the op
 //!    is order-preserving, tight numeric tolerance for the delta-summed
@@ -423,7 +426,7 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
     let mut inc = AnalyticBackend::new(&meta, &params, padded.clone(), pseudo.clone());
     // pre-adaptation eval builds the embed state, as in the session flow
     let pre = inc.embed().unwrap();
-    assert_eq!(pre, reference_embed(&meta, &ref_theta, &padded), "pre-step embed diverged");
+    assert!(pre[..] == reference_embed(&meta, &ref_theta, &padded)[..], "pre-step embed diverged");
     inc.set_mask(&head_mask).unwrap();
     let (affected, incremental) = inc.embed_plan().unwrap();
     assert!(incremental, "head mask must take the incremental path (affected={affected})");
@@ -453,6 +456,130 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
         std::hint::black_box(inc.embed().unwrap().len());
     });
     sections.push(speedup_entry("incremental_embed", before.mean_secs(), after.mean_secs()));
+
+    // --- kernels: blocked accumulate + compiled step plan ----------------
+    // The "before" arms are the scalar implementations kept in
+    // `coordinator::analytic` as references: blocked accumulation
+    // preserves per-lane addition order, and the compiled StepPlan
+    // replays the exact slot/value visit sequence of the scalar bucket
+    // walk, so both pairs are bit-identical — asserted here before any
+    // timing, and property-tested in tests/{hotpath,no_std_core}.rs.
+    {
+        use tinytrain::coordinator::analytic::{
+            accumulate_rows, masked_shrink_step, masked_shrink_step_scalar, EmbedState,
+        };
+        let s = &meta.shapes;
+        let img_len = s.img * s.img * s.channels;
+        let sup_rows = s.max_support * s.feat_dim;
+        let st = EmbedState::build(
+            s,
+            meta.total_theta,
+            |t| params.theta[t],
+            &padded.sup_x,
+            &padded.qry_x,
+        );
+        // blocked-vs-scalar accumulate (the dense rebuild both arms run)
+        let proj: Vec<f32> = st.proj.to_vec();
+        let embed_plan = st.plan;
+        let mut raw_ref = vec![0.0f32; s.eval_batch * s.feat_dim];
+        accumulate_rows(&padded.sup_x, img_len, &proj, s.feat_dim, &mut raw_ref[..sup_rows]);
+        accumulate_rows(&padded.qry_x, img_len, &proj, s.feat_dim, &mut raw_ref[sup_rows..]);
+        assert!(
+            raw_ref.iter().zip(st.raw.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "blocked accumulate is not bit-identical to the scalar arm"
+        );
+        let before = bench("kernels: scalar accumulate_rows (before)", budget, || {
+            raw_ref.fill(0.0);
+            accumulate_rows(&padded.sup_x, img_len, &proj, s.feat_dim, &mut raw_ref[..sup_rows]);
+            accumulate_rows(&padded.qry_x, img_len, &proj, s.feat_dim, &mut raw_ref[sup_rows..]);
+            std::hint::black_box(raw_ref[0]);
+        });
+        let mut raw_blk = vec![0.0f32; s.eval_batch * s.feat_dim];
+        let after = bench("kernels: 8-wide blocked accumulate (after)", budget, || {
+            raw_blk.fill(0.0);
+            embed_plan.accumulate(&padded.sup_x, &proj, &mut raw_blk[..sup_rows]);
+            embed_plan.accumulate(&padded.qry_x, &proj, &mut raw_blk[sup_rows..]);
+            std::hint::black_box(raw_blk[0]);
+        });
+        sections.push(speedup_entry("kernels_accumulate", before.mean_secs(), after.mean_secs()));
+
+        // plan-vs-unplanned masked step over the same head mask the
+        // incremental_embed section adapts with
+        let overlay_init: Vec<Vec<f32>> = head_mask
+            .runs()
+            .iter()
+            .map(|&(off, len)| params.theta[off..off + len].to_vec())
+            .collect();
+        let build_state = || {
+            let mut st = EmbedState::build(
+                s,
+                meta.total_theta,
+                |t| params.theta[t],
+                &padded.sup_x,
+                &padded.qry_x,
+            );
+            st.refresh_plan(Some(&head_mask), &padded.sup_x, &padded.qry_x);
+            st
+        };
+        let mut st_plan = build_state();
+        let mut st_scalar = build_state();
+        assert!(st_plan.incremental, "head mask must compile an incremental plan");
+        let mut ov_plan = overlay_init.clone();
+        let mut ov_scalar = overlay_init;
+        for _ in 0..4 {
+            masked_shrink_step(
+                &head_mask,
+                &mut ov_plan,
+                Some(&mut st_plan),
+                s,
+                &padded.sup_x,
+                &padded.qry_x,
+                lr,
+            );
+            masked_shrink_step_scalar(
+                &head_mask,
+                &mut ov_scalar,
+                Some(&mut st_scalar),
+                s,
+                &padded.sup_x,
+                &padded.qry_x,
+                lr,
+            );
+        }
+        assert!(
+            st_plan.raw.iter().zip(st_scalar.raw.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "compiled step plan raw is not bit-identical to the scalar bucket walk"
+        );
+        assert!(
+            st_plan.proj.iter().zip(st_scalar.proj.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "compiled step plan proj is not bit-identical to the scalar bucket walk"
+        );
+        let before = bench("kernels: scalar masked step (before)", budget, || {
+            masked_shrink_step_scalar(
+                &head_mask,
+                &mut ov_scalar,
+                Some(&mut st_scalar),
+                s,
+                &padded.sup_x,
+                &padded.qry_x,
+                lr,
+            );
+            std::hint::black_box(ov_scalar[0][0]);
+        });
+        let after = bench("kernels: compiled-plan masked step (after)", budget, || {
+            masked_shrink_step(
+                &head_mask,
+                &mut ov_plan,
+                Some(&mut st_plan),
+                s,
+                &padded.sup_x,
+                &padded.qry_x,
+                lr,
+            );
+            std::hint::black_box(ov_plan[0][0]);
+        });
+        sections.push(speedup_entry("kernels_step_plan", before.mean_secs(), after.mean_secs()));
+    }
 
     // --- parallel episode grid ------------------------------------------
     let episodes = if smoke { 2 } else { 6 };

@@ -2,7 +2,9 @@
 # Tier-1 verification for the rust workspace (wired into README/ROADMAP):
 #   fmt -> clippy (warnings are errors) -> release build -> tests
 #   -> no_std feature matrix (build + clippy + bit-identity tests under
-#      --no-default-features --features alloc)
+#      --no-default-features --features alloc; since PR 9 this also
+#      gates the blocked-SIMD kernels in coordinator::kernels — the
+#      ragged-shape scalar-vs-blocked tests run in both feature sets)
 #   -> net loopback smoke (ci_net_smoke.sh: serve --listen + loadgen,
 #      wire results asserted bit-identical to the in-process arm)
 #   -> chaos smoke (ci_chaos_smoke.sh: faulted replay across a server

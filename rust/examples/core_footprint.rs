@@ -15,7 +15,9 @@
 //! deployment would carry.
 
 use tinytrain::accounting::{backward_macs, backward_memory, CostLedger, Optimizer, UpdatePlan};
-use tinytrain::coordinator::analytic::{masked_shrink_step, EmbedState};
+use tinytrain::coordinator::analytic::{
+    accumulate_rows, masked_shrink_step, masked_shrink_step_scalar, EmbedState,
+};
 use tinytrain::coordinator::criterion::Criterion;
 use tinytrain::coordinator::search::{
     default_policy, genome_to_policy, mutate, random_feasible, resolve_budget, FeasibilityOracle,
@@ -78,12 +80,20 @@ fn main() {
         .map(|&(off, len)| params.theta[off..off + len].to_vec())
         .collect();
     let mut st = EmbedState::build(s, meta.total_theta, |t| params.theta[t], &sup, &qry);
-    st.refresh_plan(Some(&mask));
+    st.refresh_plan(Some(&mask), &sup, &qry);
     for _ in 0..4 {
         masked_shrink_step(&mask, &mut overlay, Some(&mut st), s, &sup, &qry, 0.05);
     }
-    st.rebuild_if_dirty(s, &sup, &qry);
+    // One step through the scalar reference arm keeps it linked (and
+    // measured) alongside the planned kernels — it is the asserted
+    // baseline in tests and the bench.
+    masked_shrink_step_scalar(&mask, &mut overlay, Some(&mut st), s, &sup, &qry, 0.05);
+    st.rebuild_if_dirty(&sup, &qry);
     let emb = st.normalized(s.feat_dim);
+    let mut raw_ref = vec![0.0f32; emb.len()];
+    let sup_rows = s.max_support * s.feat_dim;
+    accumulate_rows(&sup, img_len, &st.proj, s.feat_dim, &mut raw_ref[..sup_rows]);
+    accumulate_rows(&qry, img_len, &st.proj, s.feat_dim, &mut raw_ref[sup_rows..]);
 
     println!("arch {} theta {} mask_nnz {}", meta.arch, meta.total_theta, mask.nnz());
     println!("ledger mem {ledger_mem:.1} macs {ledger_macs:.1}");
@@ -91,6 +101,7 @@ fn main() {
     println!("selected layers {} policy {} repaired {}", sel.layers.len(),
         policy.layer_ratios.len(), repaired.layer_ratios.len());
     println!("embed checksum {:.6} incremental {}", checksum(&emb), st.incremental);
+    println!("accumulate_ref checksum {:.6}", checksum(&raw_ref));
     let overlay_sum: f64 = overlay.iter().map(|seg| checksum(seg.as_slice())).sum();
     println!("overlay checksum {overlay_sum:.6}");
 }

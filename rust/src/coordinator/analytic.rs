@@ -6,8 +6,19 @@
 //! lane `i % feat_dim == f`, followed by L2 normalisation. Everything
 //! theta-dependent is expressible through two per-episode tables — the
 //! per-pixel projection weight `proj[i]` and the inverse pixel→theta
-//! scatter `buckets` — and a masked step only has to touch the pixels
-//! whose bucket lies inside the mask's runs.
+//! scatter (a CSR over `bucket_ids`/`bucket_off`/`bucket_pix`) — and a
+//! masked step only has to touch the pixels whose bucket lies inside
+//! the mask's runs.
+//!
+//! Since PR 9 the hot loops live in [`super::kernels`]: an
+//! [`EmbedPlan`] runs 8-wide blocked accumulation/normalisation, and a
+//! [`StepPlan`] (compiled per mask by [`EmbedState::refresh_plan`])
+//! replaces the bucket cursor walk + strided image gathers of the
+//! masked step with flat CSR scans over gathered columns. The scalar
+//! arms stay here — [`accumulate_rows`] and
+//! [`masked_shrink_step_scalar`] — as the asserted bit-identical
+//! references ([`masked_shrink_step`] dispatches to the plan when one
+//! is compiled and falls back to the scalar walk otherwise).
 //!
 //! This module holds that math over plain slices and the segment
 //! overlay representation, with no episode/runtime types: the std-side
@@ -20,15 +31,12 @@
 
 use alloc::{vec, vec::Vec};
 
+use super::kernels::{BucketTables, EmbedPlan, StepPlan};
 use super::mask::UpdateMask;
 use crate::model::EpisodeShapes;
-use crate::util::math;
+use crate::util::pool::{self, PoolBuf};
 
-/// A masked step multiplies each selected weight once; an episode runs
-/// roughly this many steps. Incremental re-embedding pays when the total
-/// delta work (`steps × affected pixels`) stays below one dense rebuild
-/// (`all pixels`), so the gate is `affected × BUDGET ≤ img_len`.
-pub const INCREMENTAL_STEP_BUDGET: usize = 8;
+pub use super::kernels::INCREMENTAL_STEP_BUDGET;
 
 /// Theta bucket of flat pixel `i` (cheap integer hash into theta, so
 /// trained weights move the embeddings). Must stay in lock-step with
@@ -42,6 +50,10 @@ pub fn bucket_of(i: usize, theta_len: usize) -> usize {
 /// Accumulate pre-norm embedding rows: `raw[b][j] += x[b][c·F + j] ·
 /// proj[c·F + j]` in ascending pixel order (bit-identical to the seed's
 /// per-pixel `row[i % F] += x·w(i)` scan, with the hash hoisted out).
+///
+/// This is the **scalar reference arm** for the blocked
+/// [`EmbedPlan::accumulate`] kernel — tests and the bench assert the
+/// two bit-identical on every shape, including ragged tails.
 pub fn accumulate_rows(
     images: &[f32],
     img_len: usize,
@@ -63,12 +75,18 @@ pub fn accumulate_rows(
 
 /// Per-episode embedding state of the analytic step/embed math.
 pub struct EmbedState {
+    /// Shape plan for the blocked embed kernels (fixed per episode).
+    pub plan: EmbedPlan,
     /// `theta[bucket(i)] + 0.05` per flat pixel, maintained on step.
-    pub proj: Vec<f32>,
-    /// Pixels grouped by theta bucket, sorted by bucket index.
-    pub buckets: Vec<(u32, Vec<u32>)>,
+    pub proj: PoolBuf,
+    /// Populated theta buckets, ascending.
+    pub bucket_ids: Vec<u32>,
+    /// CSR offsets into `bucket_pix` (`bucket_ids.len() + 1` entries).
+    pub bucket_off: Vec<u32>,
+    /// Pixels of each bucket, grouped per `bucket_off`.
+    pub bucket_pix: Vec<u32>,
     /// Pre-normalisation embedding rows, `(eval_batch, feat_dim)`.
-    pub raw: Vec<f32>,
+    pub raw: PoolBuf,
     /// `raw` lags `proj` (wide-mask steps skip the per-image deltas and
     /// the next embed rebuilds densely from `proj`).
     pub dirty: bool,
@@ -76,6 +94,10 @@ pub struct EmbedState {
     pub incremental: bool,
     /// Pixels whose bucket falls inside the current mask.
     pub affected_pixels: usize,
+    /// Step plan compiled for the current mask (None until
+    /// [`refresh_plan`](EmbedState::refresh_plan) sees one; the step
+    /// falls back to the scalar bucket walk without it).
+    pub step_plan: Option<StepPlan>,
 }
 
 impl EmbedState {
@@ -90,77 +112,110 @@ impl EmbedState {
         sup_x: &[f32],
         qry_x: &[f32],
     ) -> EmbedState {
-        debug_assert_eq!(
-            shapes.eval_batch,
-            shapes.max_support + shapes.max_query,
-            "eval batch layout"
-        );
-        let img_len = shapes.img * shapes.img * shapes.channels;
-        let mut proj = vec![1.0f32; img_len];
-        let mut buckets: Vec<(u32, Vec<u32>)> = Vec::new();
+        let plan = EmbedPlan::new(shapes);
+        let img_len = plan.img_len;
+        let mut proj = pool::take_zeroed(img_len);
+        let mut bucket_ids: Vec<u32> = Vec::new();
+        let mut bucket_off: Vec<u32> = Vec::new();
+        let mut bucket_pix: Vec<u32> = Vec::new();
         if theta_len > 0 {
-            let mut pairs: Vec<(u32, u32)> =
-                (0..img_len).map(|i| (bucket_of(i, theta_len) as u32, i as u32)).collect();
-            for &(t, i) in &pairs {
+            // Pack (bucket, pixel) into one u64 — numeric order equals
+            // lexicographic pair order — so the sort scratch comes from
+            // the pooled index arena and a steady-state rebuild only
+            // grows the persistent CSR tables.
+            let mut pairs = pool::take_idx_zeroed(img_len);
+            for (i, slot) in pairs.iter_mut().enumerate() {
+                let t = bucket_of(i, theta_len);
                 // Keep a constant floor so all-zero thetas still embed
                 // the image (seed behaviour, preserved bit-for-bit).
-                proj[i as usize] = theta_at(t as usize) + 0.05;
+                proj[i] = theta_at(t) + 0.05;
+                *slot = ((t as u64) << 32) | i as u64;
             }
             pairs.sort_unstable();
-            for (t, i) in pairs {
-                match buckets.last_mut() {
-                    Some((bt, pixels)) if *bt == t => pixels.push(i),
-                    _ => buckets.push((t, vec![i])),
+            bucket_pix.reserve(img_len);
+            for &packed in pairs.iter() {
+                let t = (packed >> 32) as u32;
+                if bucket_ids.last() != Some(&t) {
+                    bucket_ids.push(t);
+                    bucket_off.push(bucket_pix.len() as u32);
                 }
+                bucket_pix.push(packed as u32);
             }
+        } else {
+            proj.fill(1.0);
         }
-        let mut raw = vec![0.0f32; shapes.eval_batch * shapes.feat_dim];
+        bucket_off.push(bucket_pix.len() as u32);
+        let mut raw = pool::take_zeroed(shapes.eval_batch * shapes.feat_dim);
         let sup_rows = shapes.max_support * shapes.feat_dim;
-        accumulate_rows(sup_x, img_len, &proj, shapes.feat_dim, &mut raw[..sup_rows]);
-        accumulate_rows(qry_x, img_len, &proj, shapes.feat_dim, &mut raw[sup_rows..]);
-        EmbedState { proj, buckets, raw, dirty: false, incremental: false, affected_pixels: 0 }
+        plan.accumulate(sup_x, &proj, &mut raw[..sup_rows]);
+        plan.accumulate(qry_x, &proj, &mut raw[sup_rows..]);
+        EmbedState {
+            plan,
+            proj,
+            bucket_ids,
+            bucket_off,
+            bucket_pix,
+            raw,
+            dirty: false,
+            incremental: false,
+            affected_pixels: 0,
+            step_plan: None,
+        }
     }
 
-    /// Re-derive the incremental-vs-dense decision for `mask`.
-    pub fn refresh_plan(&mut self, mask: Option<&UpdateMask>) {
-        let img_len = self.proj.len();
-        let mut affected = 0usize;
-        if let Some(mask) = mask {
-            for &(off, len) in mask.runs() {
-                let lo = self.buckets.partition_point(|&(t, _)| (t as usize) < off);
-                for (t, pixels) in &self.buckets[lo..] {
-                    if *t as usize >= off + len {
-                        break;
-                    }
-                    affected += pixels.len();
-                }
+    /// Compile (or clear) the step plan for `mask`: the
+    /// incremental-vs-dense decision plus the CSR scatter tables the
+    /// planned [`masked_shrink_step`] path reads. `sup_x`/`qry_x` must
+    /// be the same padded tensors the state was built over — their
+    /// nonzero pixel columns are gathered once here and amortized over
+    /// every step of the episode.
+    pub fn refresh_plan(&mut self, mask: Option<&UpdateMask>, sup_x: &[f32], qry_x: &[f32]) {
+        match mask {
+            Some(mask) => {
+                let tables = BucketTables {
+                    ids: &self.bucket_ids,
+                    off: &self.bucket_off,
+                    pix: &self.bucket_pix,
+                };
+                let plan = StepPlan::build(&self.plan, mask, &tables, sup_x, qry_x);
+                self.affected_pixels = plan.affected_pixels;
+                self.incremental = plan.incremental;
+                self.step_plan = Some(plan);
+            }
+            None => {
+                self.affected_pixels = 0;
+                self.incremental = false;
+                self.step_plan = None;
             }
         }
-        self.affected_pixels = affected;
-        self.incremental = mask.is_some() && affected * INCREMENTAL_STEP_BUDGET <= img_len;
     }
 
     /// Dense rebuild of `raw` from `proj` when a wide-mask step left it
     /// stale.
-    pub fn rebuild_if_dirty(&mut self, shapes: &EpisodeShapes, sup_x: &[f32], qry_x: &[f32]) {
+    pub fn rebuild_if_dirty(&mut self, sup_x: &[f32], qry_x: &[f32]) {
         if !self.dirty {
             return;
         }
-        let img_len = shapes.img * shapes.img * shapes.channels;
         self.raw.fill(0.0);
-        let sup_rows = shapes.max_support * shapes.feat_dim;
-        accumulate_rows(sup_x, img_len, &self.proj, shapes.feat_dim, &mut self.raw[..sup_rows]);
-        accumulate_rows(qry_x, img_len, &self.proj, shapes.feat_dim, &mut self.raw[sup_rows..]);
+        let sup_rows = self.plan.max_support * self.plan.feat_dim;
+        self.plan.accumulate(sup_x, &self.proj, &mut self.raw[..sup_rows]);
+        self.plan.accumulate(qry_x, &self.proj, &mut self.raw[sup_rows..]);
         self.dirty = false;
     }
 
-    /// L2-normalised embedding rows (the backend's `embed` output).
+    /// Write the L2-normalised embedding rows into `out` (`raw.len()`
+    /// floats) — the allocation-free form of the backend's `embed`
+    /// output.
+    pub fn normalized_into(&self, out: &mut [f32]) {
+        self.plan.normalize_into(&self.raw, out);
+    }
+
+    /// Allocating convenience over
+    /// [`normalized_into`](EmbedState::normalized_into) (tests, tools).
     pub fn normalized(&self, feat_dim: usize) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.raw.len());
-        for row in self.raw.chunks(feat_dim) {
-            let norm = math::sqrt32(row.iter().map(|v| v * v).sum::<f32>()).max(1e-6);
-            out.extend(row.iter().map(|v| v / norm));
-        }
+        debug_assert_eq!(feat_dim, self.plan.feat_dim);
+        let mut out = vec![0.0f32; self.raw.len()];
+        self.normalized_into(&mut out);
         out
     }
 }
@@ -171,7 +226,40 @@ impl EmbedState {
 /// When embed state is given, the projection table follows along, and
 /// in incremental mode the cached raw rows absorb the exact per-weight
 /// deltas; a non-incremental step marks `raw` dirty instead.
+///
+/// Dispatch: when the state carries a [`StepPlan`] compiled for this
+/// mask (the backend refreshes it on every `set_mask`), the step runs
+/// through the plan's flat CSR tables; otherwise it falls back to
+/// [`masked_shrink_step_scalar`]. Both arms are bit-identical.
 pub fn masked_shrink_step(
+    mask: &UpdateMask,
+    overlay: &mut [Vec<f32>],
+    mut embed: Option<&mut EmbedState>,
+    shapes: &EpisodeShapes,
+    sup_x: &[f32],
+    qry_x: &[f32],
+    lr: f32,
+) {
+    if let Some(st) = embed.as_deref_mut() {
+        let EmbedState { step_plan, proj, raw, incremental, dirty, .. } = st;
+        if let Some(plan) = step_plan.as_ref() {
+            plan.shrink_step(overlay, proj, raw, lr * 0.1);
+            // Same semantics as the scalar arm: only a step that
+            // actually visited a run can leave `raw` stale.
+            if !*incremental && !mask.runs().is_empty() {
+                *dirty = true;
+            }
+            return;
+        }
+    }
+    masked_shrink_step_scalar(mask, overlay, embed, shapes, sup_x, qry_x, lr);
+}
+
+/// The scalar arm of [`masked_shrink_step`]: walks the bucket tables
+/// with a cursor advanced monotonically across the (sorted, disjoint)
+/// runs and strides across the image tensors per affected pixel. Kept
+/// public as the asserted reference for the planned path.
+pub fn masked_shrink_step_scalar(
     mask: &UpdateMask,
     overlay: &mut [Vec<f32>],
     mut embed: Option<&mut EmbedState>,
@@ -182,16 +270,23 @@ pub fn masked_shrink_step(
 ) {
     let decay = lr * 0.1;
     let img_len = shapes.img * shapes.img * shapes.channels;
+    // Runs are sorted and disjoint and bucket ids ascend, so one cursor
+    // serves every run (the seed re-ran partition_point per run).
+    let mut bi = 0usize;
     for (run_i, &(off, _len)) in mask.runs().iter().enumerate() {
         let seg = &mut overlay[run_i];
         if let Some(st) = embed.as_deref_mut() {
-            let mut bi = st.buckets.partition_point(|&(bt, _)| (bt as usize) < off);
+            while bi < st.bucket_ids.len() && (st.bucket_ids[bi] as usize) < off {
+                bi += 1;
+            }
             for (j, p) in seg.iter_mut().enumerate() {
                 let old = *p;
                 let new = old - decay * old;
                 *p = new;
-                if bi < st.buckets.len() && st.buckets[bi].0 as usize == off + j {
-                    let pixels = &st.buckets[bi].1;
+                if bi < st.bucket_ids.len() && st.bucket_ids[bi] as usize == off + j {
+                    let lo = st.bucket_off[bi] as usize;
+                    let hi = st.bucket_off[bi + 1] as usize;
+                    let pixels = &st.bucket_pix[lo..hi];
                     for &pix in pixels {
                         st.proj[pix as usize] = new + 0.05;
                     }
@@ -268,8 +363,9 @@ mod tests {
         let mut overlay: Vec<Vec<f32>> =
             mask.runs().iter().map(|&(off, len)| theta[off..off + len].to_vec()).collect();
         let mut st = EmbedState::build(&s, theta_len, |t| theta[t], &sup, &qry);
-        st.refresh_plan(Some(&mask));
+        st.refresh_plan(Some(&mask), &sup, &qry);
         assert!(st.incremental, "a 2-index mask must take the incremental path");
+        assert!(st.step_plan.is_some(), "refresh_plan must compile a step plan");
         for _ in 0..3 {
             masked_shrink_step(&mask, &mut overlay, Some(&mut st), &s, &sup, &qry, 0.05);
         }
@@ -288,6 +384,41 @@ mod tests {
     }
 
     #[test]
+    fn planned_step_is_bit_identical_to_scalar_arm() {
+        let s = shapes();
+        let img_len = s.img * s.img * s.channels;
+        let theta_len = 48usize;
+        let mut rng = Rng::new(11);
+        let theta: Vec<f32> = (0..theta_len).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+        let sup = images(&mut rng, s.max_support, img_len);
+        let qry = images(&mut rng, s.max_query, img_len);
+        let mut b = UpdateMask::builder(theta_len);
+        b.add_run(1, 2);
+        b.add_run(9, 3);
+        let mask = b.build().unwrap();
+        let overlay0: Vec<Vec<f32>> =
+            mask.runs().iter().map(|&(off, len)| theta[off..off + len].to_vec()).collect();
+
+        let mut st_p = EmbedState::build(&s, theta_len, |t| theta[t], &sup, &qry);
+        let mut st_s = EmbedState::build(&s, theta_len, |t| theta[t], &sup, &qry);
+        st_p.refresh_plan(Some(&mask), &sup, &qry);
+        st_s.refresh_plan(Some(&mask), &sup, &qry);
+        let mut ov_p = overlay0.clone();
+        let mut ov_s = overlay0;
+        for _ in 0..4 {
+            masked_shrink_step(&mask, &mut ov_p, Some(&mut st_p), &s, &sup, &qry, 0.05);
+            masked_shrink_step_scalar(&mask, &mut ov_s, Some(&mut st_s), &s, &sup, &qry, 0.05);
+        }
+        assert_eq!(ov_p, ov_s, "overlay updates must match exactly");
+        for (a, b) in st_p.proj.iter().zip(st_s.proj.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "proj must be bit-identical");
+        }
+        for (a, b) in st_p.raw.iter().zip(st_s.raw.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "raw must be bit-identical");
+        }
+    }
+
+    #[test]
     fn wide_mask_goes_dirty_and_rebuilds() {
         let s = shapes();
         let img_len = s.img * s.img * s.channels;
@@ -301,11 +432,11 @@ mod tests {
         let mask = b.build().unwrap();
         let mut overlay: Vec<Vec<f32>> = vec![theta.clone()];
         let mut st = EmbedState::build(&s, theta_len, |t| theta[t], &sup, &qry);
-        st.refresh_plan(Some(&mask));
+        st.refresh_plan(Some(&mask), &sup, &qry);
         assert!(!st.incremental, "a full mask over tiny theta must rebuild densely");
         masked_shrink_step(&mask, &mut overlay, Some(&mut st), &s, &sup, &qry, 0.1);
         assert!(st.dirty);
-        st.rebuild_if_dirty(&s, &sup, &qry);
+        st.rebuild_if_dirty(&sup, &qry);
         assert!(!st.dirty);
         let got = st.normalized(s.feat_dim);
         let reference = EmbedState::build(&s, theta_len, |t| overlay[0][t], &sup, &qry);

@@ -27,6 +27,10 @@
 //! embedding rows by applying deltas only for theta indices inside the
 //! mask's runs — `O(changed weights)` instead of `O(pixels × batch)` —
 //! with a dense rebuild fallback when the mask is too wide to pay off.
+//! Since PR 9 those hot loops run through the 8-wide blocked kernels
+//! and per-mask compiled step plans of [`super::kernels`] (recompiled
+//! on every `set_mask`), and `embed` returns a pooled buffer written
+//! in place — allocation-free in steady state.
 //! That math (step, scatter maintenance, embed normalisation) lives in
 //! the `no_std`-capable [`super::analytic`] module; `AnalyticBackend`
 //! only adds the std-side orchestration (episodes, copy-on-write theta
@@ -41,6 +45,7 @@ use super::engine::{DeviceEpisode, DeviceState, FisherOutput, ModelEngine};
 use super::mask::UpdateMask;
 use crate::data::{PaddedEpisode, PseudoQuery};
 use crate::model::{ModelMeta, ParamStore};
+use crate::util::pool::{self, PoolBuf};
 
 /// Which backend an `AdaptationSession` should run its episodes on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -135,8 +140,10 @@ pub trait AdaptationBackend {
     fn step(&mut self, lr: f32) -> Result<f32>;
 
     /// Embed the episode's eval batch (support then query images);
-    /// returns `(eval_batch, feat_dim)` embeddings row-major.
-    fn embed(&mut self) -> Result<Vec<f32>>;
+    /// returns `(eval_batch, feat_dim)` embeddings row-major in a
+    /// pooled buffer (derefs to `&[f32]`; recycled on drop, so the
+    /// steady-state embed path allocates nothing).
+    fn embed(&mut self) -> Result<PoolBuf>;
 
     /// Fisher pass (paper Eq. 2): per-channel Delta_o over the episode.
     fn fisher(&mut self) -> Result<FisherOutput>;
@@ -195,9 +202,9 @@ impl AdaptationBackend for HostBackend<'_> {
         self.engine.train_step(&mut self.params, mask, lr, &self.padded, &self.pseudo)
     }
 
-    fn embed(&mut self) -> Result<Vec<f32>> {
+    fn embed(&mut self) -> Result<PoolBuf> {
         let batch = self.engine.eval_batch(&self.padded);
-        Ok(self.engine.embed_with(&self.params, batch)?.data)
+        Ok(self.engine.embed_with(&self.params, batch)?.data.into())
     }
 
     fn fisher(&mut self) -> Result<FisherOutput> {
@@ -269,9 +276,9 @@ impl AdaptationBackend for DeviceBackend<'_> {
         self.engine.train_step_device(&mut self.state, mask, lr, &self.dev_ep)
     }
 
-    fn embed(&mut self) -> Result<Vec<f32>> {
+    fn embed(&mut self) -> Result<PoolBuf> {
         let batch = self.engine.eval_batch(&self.padded);
-        Ok(self.engine.embed_device(&self.state, batch)?.data)
+        Ok(self.engine.embed_device(&self.state, batch)?.data.into())
     }
 
     fn fisher(&mut self) -> Result<FisherOutput> {
@@ -413,11 +420,15 @@ impl<'m> AnalyticBackend<'m> {
         self.refresh_embed_plan();
     }
 
-    /// Re-derive the incremental-vs-dense decision for the current mask.
+    /// Recompile the step plan (incremental-vs-dense decision + CSR
+    /// scatter tables) for the current mask. The padded image tensors
+    /// are stable for the whole episode (`refresh_pseudo` replaces only
+    /// the pseudo-query tensors), so the gathered plan columns stay
+    /// valid until the next `set_mask`.
     fn refresh_embed_plan(&mut self) {
-        let Self { embed, mask, .. } = self;
+        let Self { embed, mask, padded, .. } = self;
         if let Some(st) = embed.as_mut() {
-            st.refresh_plan(mask.as_ref());
+            st.refresh_plan(mask.as_ref(), &padded.sup_x, &padded.qry_x);
         }
     }
 
@@ -484,20 +495,21 @@ impl AdaptationBackend for AnalyticBackend<'_> {
         Ok((1.5 + 0.5 * bias) / (1.0 + 0.25 * *steps_taken as f32))
     }
 
-    fn embed(&mut self) -> Result<Vec<f32>> {
+    fn embed(&mut self) -> Result<PoolBuf> {
         self.ensure_embed();
         let meta = self.meta;
         let s = &meta.shapes;
         let Self { embed, padded, .. } = self;
         let st = embed.as_mut().expect("ensure_embed");
-        st.rebuild_if_dirty(s, &padded.sup_x, &padded.qry_x);
-        let out = st.normalized(s.feat_dim);
+        st.rebuild_if_dirty(&padded.sup_x, &padded.qry_x);
         ensure!(
-            out.len() == s.eval_batch * s.feat_dim,
-            "analytic embed produced {} floats, expected {}",
-            out.len(),
+            st.raw.len() == s.eval_batch * s.feat_dim,
+            "analytic embed holds {} floats, expected {}",
+            st.raw.len(),
             s.eval_batch * s.feat_dim
         );
+        let mut out = pool::take_zeroed(st.raw.len());
+        st.normalized_into(&mut out);
         Ok(out)
     }
 

@@ -1,0 +1,416 @@
+//! SIMD-blocked kernels and per-episode compiled plans for the analytic
+//! hot loop — the `no_std` layer under [`super::analytic`].
+//!
+//! Two ideas, both amortized per episode:
+//!
+//! 1. **8-wide blocked kernels.** The embed row accumulation, the row
+//!    L2-normalisation and the masked-step delta scatter run over
+//!    manual `[f32; LANES]` register blocks (`chunks_exact`, stable on
+//!    the pinned 1.79 toolchain — no nightly `portable_simd`). Blocking
+//!    keeps each lane's additions in exactly the scalar arm's order
+//!    (the accumulator block is *loaded from* and *stored back to* the
+//!    row, never re-reduced), so every blocked kernel is bit-identical
+//!    to its scalar reference in `analytic` — asserted by
+//!    `tests/no_std_core.rs` under both feature sets.
+//! 2. **Compiled plans.** [`EmbedPlan`] freezes the episode's shape
+//!    derivation (flat image length, lane layout, eval-batch split)
+//!    once; [`StepPlan`] compiles the mask actually selected for the
+//!    episode into CSR form — the per-run bucket `partition_point`
+//!    walks of the scalar path become a flat masked-theta→pixel list,
+//!    and the strided `b·img_len + pix` image gathers of the
+//!    incremental scatter become a **column-gathered copy** of the
+//!    affected pixels' nonzero support/query values (`raw` slot per
+//!    value precomputed, zeros compressed out at build time with the
+//!    same `x != 0.0` test the scalar loop applies per step). A masked
+//!    step then reads only contiguous memory. The plan is fixed for the
+//!    whole episode, so the build cost amortizes over every step.
+//!
+//! Scalar reference arms stay in [`super::analytic`]
+//! (`accumulate_rows`, `masked_shrink_step_scalar`) and in the bench's
+//! seed-verbatim closures; benches and tests assert the pairs
+//! bit-identical before timing them.
+
+use alloc::vec::Vec;
+
+use super::mask::UpdateMask;
+use crate::model::EpisodeShapes;
+use crate::util::math;
+
+/// Block width of the manual f32 kernels. Eight lanes map onto one
+/// AVX/NEON-pair register file without nightly features; the tail
+/// handling below keeps any `feat_dim` correct.
+pub const LANES: usize = 8;
+
+/// A masked step multiplies each selected weight once; an episode runs
+/// roughly this many steps. Incremental re-embedding pays when the total
+/// delta work (`steps × affected pixels`) stays below one dense rebuild
+/// (`all pixels`), so the gate is `affected × BUDGET ≤ img_len`.
+pub const INCREMENTAL_STEP_BUDGET: usize = 8;
+
+/// L2-normalise each `feat_dim` row of `raw` into `out`. The
+/// sum-of-squares reduction stays scalar-sequential (a reordered
+/// reduction would change the norm's bits — it is load-bearing for the
+/// std/no_std identity gate); only the elementwise division is blocked,
+/// which is order-free per element. Bit-identical to the seed's
+/// `Σ v·v → sqrt → v / norm` row loop.
+pub fn normalize_rows_into(raw: &[f32], feat_dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(raw.len(), out.len());
+    debug_assert!(feat_dim > 0);
+    for (row, orow) in raw.chunks(feat_dim).zip(out.chunks_mut(feat_dim)) {
+        let mut sumsq = 0.0f32;
+        for &v in row {
+            sumsq += v * v;
+        }
+        let norm = math::sqrt32(sumsq).max(1e-6);
+        let mut rc = row.chunks_exact(LANES);
+        let mut oc = orow.chunks_exact_mut(LANES);
+        for (rb, ob) in (&mut rc).zip(&mut oc) {
+            for (o, &r) in ob.iter_mut().zip(rb) {
+                *o = r / norm;
+            }
+        }
+        for (o, &r) in oc.into_remainder().iter_mut().zip(rc.remainder()) {
+            *o = r / norm;
+        }
+    }
+}
+
+/// `raw[slot] += x · delta` over one gathered column, in 8-wide blocks.
+/// The slots of a column are pairwise distinct (one per eval row), so
+/// the gather → multiply-add → scatter of a block cannot alias itself,
+/// and each slot still receives exactly one addition in the scalar
+/// visit order — bit-identical to the strided scalar scatter.
+#[inline]
+pub fn scatter_axpy(slots: &[u32], xs: &[f32], delta: f32, raw: &mut [f32]) {
+    debug_assert_eq!(slots.len(), xs.len());
+    let mut sc = slots.chunks_exact(LANES);
+    let mut xc = xs.chunks_exact(LANES);
+    for (sb, xb) in (&mut sc).zip(&mut xc) {
+        let mut v = [0.0f32; LANES];
+        for (vk, &sk) in v.iter_mut().zip(sb) {
+            *vk = raw[sk as usize];
+        }
+        for (vk, &xk) in v.iter_mut().zip(xb) {
+            *vk += xk * delta;
+        }
+        for (&sk, &vk) in sb.iter().zip(&v) {
+            raw[sk as usize] = vk;
+        }
+    }
+    for (&sk, &xk) in sc.remainder().iter().zip(xc.remainder()) {
+        raw[sk as usize] += xk * delta;
+    }
+}
+
+/// One image row of blocked accumulation: `row[j] += Σ_c img[c·F + j] ·
+/// proj[c·F + j]` for every lane `j`, full chunks first, then the
+/// partial trailing chunk, exactly as the scalar `chunks(feat_dim)`
+/// walk orders them. The accumulator block is initialised *from* the
+/// row and stored back — per-lane addition order is untouched.
+fn accumulate_row_blocked(img: &[f32], proj: &[f32], feat_dim: usize, row: &mut [f32]) {
+    let lane_blocks = feat_dim / LANES;
+    for blk in 0..lane_blocks {
+        let jb = blk * LANES;
+        let mut acc: [f32; LANES] = row[jb..jb + LANES].try_into().expect("lane block");
+        let mut chunks = img.chunks_exact(feat_dim);
+        let mut pchunks = proj.chunks_exact(feat_dim);
+        for (chunk, pchunk) in (&mut chunks).zip(&mut pchunks) {
+            let c: &[f32; LANES] = chunk[jb..jb + LANES].try_into().expect("lane block");
+            let p: &[f32; LANES] = pchunk[jb..jb + LANES].try_into().expect("lane block");
+            for ((a, &x), &w) in acc.iter_mut().zip(c.iter()).zip(p.iter()) {
+                *a += x * w;
+            }
+        }
+        let (rem, prem) = (chunks.remainder(), pchunks.remainder());
+        if rem.len() > jb {
+            let n = (rem.len() - jb).min(LANES);
+            for ((a, &x), &w) in acc.iter_mut().zip(&rem[jb..jb + n]).zip(&prem[jb..jb + n]) {
+                *a += x * w;
+            }
+        }
+        row[jb..jb + LANES].copy_from_slice(&acc);
+    }
+    // Lane tail (`feat_dim % LANES`): scalar strided walk in the same
+    // ascending pixel order.
+    for (j, r) in row.iter_mut().enumerate().skip(lane_blocks * LANES) {
+        let mut a = *r;
+        let mut i = j;
+        while i < img.len() {
+            a += img[i] * proj[i];
+            i += feat_dim;
+        }
+        *r = a;
+    }
+}
+
+/// Per-episode shape plan for the blocked embed kernels: the flat image
+/// length, the lane layout and the eval-batch split are derived once
+/// per episode instead of per call.
+#[derive(Debug, Clone, Copy)]
+pub struct EmbedPlan {
+    /// Floats per image (`img² · channels`).
+    pub img_len: usize,
+    pub feat_dim: usize,
+    pub max_support: usize,
+    pub max_query: usize,
+    /// `img_len % feat_dim == 0`: no partial trailing chunk per image.
+    pub full_chunks: bool,
+    /// `feat_dim % LANES == 0`: every lane sits in a full 8-wide block.
+    pub full_lanes: bool,
+}
+
+impl EmbedPlan {
+    pub fn new(shapes: &EpisodeShapes) -> EmbedPlan {
+        debug_assert_eq!(
+            shapes.eval_batch,
+            shapes.max_support + shapes.max_query,
+            "eval batch layout"
+        );
+        EmbedPlan::from_dims(
+            shapes.img * shapes.img * shapes.channels,
+            shapes.feat_dim,
+            shapes.max_support,
+            shapes.max_query,
+        )
+    }
+
+    /// Plan over raw dimensions (tests exercise ragged shapes directly).
+    pub fn from_dims(
+        img_len: usize,
+        feat_dim: usize,
+        max_support: usize,
+        max_query: usize,
+    ) -> EmbedPlan {
+        debug_assert!(feat_dim > 0, "feat_dim must be positive");
+        EmbedPlan {
+            img_len,
+            feat_dim,
+            max_support,
+            max_query,
+            full_chunks: img_len % feat_dim == 0,
+            full_lanes: feat_dim % LANES == 0,
+        }
+    }
+
+    /// Whether every inner loop runs fully blocked (no tail code).
+    pub fn is_fully_blocked(&self) -> bool {
+        self.full_chunks && self.full_lanes
+    }
+
+    /// Blocked accumulate over a batch of images — bit-identical to the
+    /// scalar [`super::analytic::accumulate_rows`] (same per-lane
+    /// addition order; asserted in tests and the bench).
+    pub fn accumulate(&self, images: &[f32], proj: &[f32], raw: &mut [f32]) {
+        if self.img_len == 0 {
+            return;
+        }
+        debug_assert_eq!(proj.len(), self.img_len);
+        let rows = raw.chunks_exact_mut(self.feat_dim);
+        for (img, row) in images.chunks_exact(self.img_len).zip(rows) {
+            accumulate_row_blocked(img, proj, self.feat_dim, row);
+        }
+    }
+
+    /// Blocked row normalisation into a caller buffer (allocation-free
+    /// embed output; see [`normalize_rows_into`]).
+    pub fn normalize_into(&self, raw: &[f32], out: &mut [f32]) {
+        normalize_rows_into(raw, self.feat_dim, out);
+    }
+}
+
+/// Borrowed view of an episode's pixel→theta CSR bucket tables
+/// (`ids[k]` is the k-th populated theta bucket, ascending;
+/// `pix[off[k]..off[k+1]]` its pixels).
+#[derive(Clone, Copy)]
+pub struct BucketTables<'a> {
+    pub ids: &'a [u32],
+    pub off: &'a [u32],
+    pub pix: &'a [u32],
+}
+
+/// The scatter/patch loop of a masked step, compiled for one specific
+/// mask (fixed per episode):
+///
+/// - `pix_off`/`pix`: CSR from flattened masked-theta position (run
+///   order, the overlay's iteration order) to affected pixels — the
+///   per-step bucket cursor walk is gone.
+/// - `col_off`/`col_slot`/`col_x` (incremental mode only): per affected
+///   pixel, the gathered column of its nonzero support-then-query image
+///   values with the destination `raw` slot (`row·feat_dim + lane`)
+///   precomputed — the per-step strided image gathers and `x != 0.0`
+///   tests are hoisted into the build.
+///
+/// [`StepPlan::shrink_step`] replays exactly the scalar arm's per-slot
+/// visit order and arithmetic, so the planned path is bit-identical to
+/// [`super::analytic::masked_shrink_step_scalar`].
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    nnz: usize,
+    pix_off: Vec<u32>,
+    pix: Vec<u32>,
+    col_off: Vec<u32>,
+    col_slot: Vec<u32>,
+    col_x: Vec<f32>,
+    /// Pixels whose bucket falls inside the mask.
+    pub affected_pixels: usize,
+    /// Whether per-step raw deltas pay off for this mask (same gate as
+    /// the scalar path: `affected × INCREMENTAL_STEP_BUDGET ≤ img_len`).
+    pub incremental: bool,
+}
+
+impl StepPlan {
+    /// Compile the plan for `mask` over the episode's bucket tables and
+    /// padded image tensors. One monotone cursor pass builds the
+    /// masked-theta→pixel CSR (runs and bucket ids are both ascending);
+    /// a second pass gathers the image columns when the mask qualifies
+    /// for incremental mode.
+    pub fn build(
+        plan: &EmbedPlan,
+        mask: &UpdateMask,
+        buckets: &BucketTables<'_>,
+        sup_x: &[f32],
+        qry_x: &[f32],
+    ) -> StepPlan {
+        let nnz = mask.nnz();
+        let mut pix_off: Vec<u32> = Vec::with_capacity(nnz + 1);
+        pix_off.push(0);
+        let mut pix: Vec<u32> = Vec::new();
+        let mut bi = 0usize;
+        for &(off, len) in mask.runs() {
+            while bi < buckets.ids.len() && (buckets.ids[bi] as usize) < off {
+                bi += 1;
+            }
+            for t in off..off + len {
+                if bi < buckets.ids.len() && buckets.ids[bi] as usize == t {
+                    let lo = buckets.off[bi] as usize;
+                    let hi = buckets.off[bi + 1] as usize;
+                    pix.extend_from_slice(&buckets.pix[lo..hi]);
+                    bi += 1;
+                }
+                pix_off.push(pix.len() as u32);
+            }
+        }
+        let affected = pix.len();
+        let incremental = affected * INCREMENTAL_STEP_BUDGET <= plan.img_len;
+
+        let mut col_off: Vec<u32> = Vec::new();
+        let mut col_slot: Vec<u32> = Vec::new();
+        let mut col_x: Vec<f32> = Vec::new();
+        if incremental && affected > 0 {
+            let (img_len, feat_dim) = (plan.img_len, plan.feat_dim);
+            col_off.reserve(affected + 1);
+            col_off.push(0);
+            for &p in &pix {
+                let pu = p as usize;
+                let lane = pu % feat_dim;
+                for b in 0..plan.max_support {
+                    let x = sup_x[b * img_len + pu];
+                    if x != 0.0 {
+                        col_slot.push((b * feat_dim + lane) as u32);
+                        col_x.push(x);
+                    }
+                }
+                for q in 0..plan.max_query {
+                    let x = qry_x[q * img_len + pu];
+                    if x != 0.0 {
+                        col_slot.push(((plan.max_support + q) * feat_dim + lane) as u32);
+                        col_x.push(x);
+                    }
+                }
+                col_off.push(col_x.len() as u32);
+            }
+        }
+        StepPlan {
+            nnz,
+            pix_off,
+            pix,
+            col_off,
+            col_slot,
+            col_x,
+            affected_pixels: affected,
+            incremental,
+        }
+    }
+
+    /// One masked shrink step through the compiled plan: per selected
+    /// weight (overlay run order — the order the plan was built in),
+    /// shrink, patch `proj` for the weight's pixels, and in incremental
+    /// mode scatter the exact delta into `raw` through the gathered
+    /// columns. Bit-identical to the scalar arm: same per-slot visit
+    /// order, same arithmetic, same zero-skip semantics (pre-compiled).
+    pub fn shrink_step(
+        &self,
+        overlay: &mut [Vec<f32>],
+        proj: &mut [f32],
+        raw: &mut [f32],
+        decay: f32,
+    ) {
+        debug_assert_eq!(self.pix_off.len(), self.nnz + 1);
+        debug_assert_eq!(overlay.iter().map(Vec::len).sum::<usize>(), self.nnz);
+        let mut q = 0usize;
+        for seg in overlay.iter_mut() {
+            for p in seg.iter_mut() {
+                let old = *p;
+                let new = old - decay * old;
+                *p = new;
+                let lo = self.pix_off[q] as usize;
+                let hi = self.pix_off[q + 1] as usize;
+                q += 1;
+                if lo == hi {
+                    continue;
+                }
+                let w = new + 0.05;
+                for &px in &self.pix[lo..hi] {
+                    proj[px as usize] = w;
+                }
+                let delta = new - old;
+                if self.incremental && delta != 0.0 {
+                    for pi in lo..hi {
+                        let clo = self.col_off[pi] as usize;
+                        let chi = self.col_off[pi + 1] as usize;
+                        scatter_axpy(&self.col_slot[clo..chi], &self.col_x[clo..chi], delta, raw);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use alloc::vec;
+
+    #[test]
+    fn scatter_axpy_matches_scalar_on_ragged_columns() {
+        // 11 entries: one full 8-block plus a 3-tail.
+        let slots: Vec<u32> = (0..11u32).map(|k| (k * 7) % 20).collect();
+        let xs: Vec<f32> = (0..11).map(|k| 0.25 * k as f32 - 1.0).collect();
+        let delta = 0.125f32;
+        let mut blocked = vec![0.5f32; 20];
+        let mut scalar = blocked.clone();
+        scatter_axpy(&slots, &xs, delta, &mut blocked);
+        for (&sk, &xk) in slots.iter().zip(&xs) {
+            scalar[sk as usize] += xk * delta;
+        }
+        for (a, b) in blocked.iter().zip(&scalar) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn embed_plan_flags_describe_the_shape() {
+        let p = EmbedPlan::from_dims(64, 16, 2, 2);
+        assert!(p.full_chunks && p.full_lanes && p.is_fully_blocked());
+        let p = EmbedPlan::from_dims(50, 6, 2, 2);
+        assert!(!p.full_chunks && !p.full_lanes && !p.is_fully_blocked());
+    }
+
+    #[test]
+    fn normalize_handles_zero_rows_via_the_norm_floor() {
+        let raw = vec![0.0f32; 12];
+        let mut out = vec![1.0f32; 12];
+        normalize_rows_into(&raw, 6, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0), "zero rows normalise to zero via the 1e-6 floor");
+    }
+}

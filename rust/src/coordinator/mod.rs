@@ -34,13 +34,15 @@
 //! [`fisher`]), budgeted selection ([`selection`]), masks ([`mask`]),
 //! method/policy plumbing ([`trainer`]), the SparseUpdate genome/
 //! feasibility machinery ([`search`]) and the analytic step/embed math
-//! ([`analytic`]) — compiles `no_std + alloc`. Session orchestration,
+//! ([`analytic`]) with its blocked-SIMD kernel / compiled-plan layer
+//! ([`kernels`]) — compiles `no_std + alloc`. Session orchestration,
 //! PJRT backends, the engine, evaluator, pretraining and analysis are
 //! host-side (`std`).
 
 pub mod analytic;
 pub mod criterion;
 pub mod fisher;
+pub mod kernels;
 pub mod mask;
 pub mod search;
 pub mod selection;

@@ -274,7 +274,11 @@ impl<'e> AdaptationSession<'e> {
 
         let mut backend = self.make_backend(base, padded, pseudo)?;
 
-        // Accuracy before adaptation.
+        // Accuracy before adaptation. (On the analytic backend this
+        // first embed also builds the per-episode embed state, so the
+        // later `set_mask` can compile its step plan against the bucket
+        // tables; the returned buffer is pooled — no per-episode embed
+        // allocation in steady state.)
         let emb = backend.embed()?;
         let acc_before = episode_accuracy(&emb, backend.padded(), s);
 

@@ -13,11 +13,18 @@
 //! any locking (each worker thread owns its arena), and a buffer that
 //! migrates threads simply retires into the destination thread's arena.
 //!
-//! no_std subset: [`PoolBuf`] and [`take_zeroed`] keep their exact API
-//! and semantics but degrade to plain allocate/free (no thread-local
-//! storage without std); the arena, its counters and `parallel_map`
-//! are std-only. Callers observe identical buffer contents either way
-//! — recycling is purely an allocation-count optimization.
+//! Two arenas share one generic free-list (`Arena<T>`): the f32 tensor
+//! arena behind [`PoolBuf`]/[`take_zeroed`], and a u64 index arena
+//! behind [`IdxBuf`]/[`take_idx_zeroed`] used for sort scratch on the
+//! embed build path (packed `(bucket, pixel)` keys), so the per-episode
+//! analytic rebuild allocates nothing in steady state either.
+//!
+//! no_std subset: [`PoolBuf`]/[`IdxBuf`] and their `take_*` fns keep
+//! their exact API and semantics but degrade to plain allocate/free (no
+//! thread-local storage without std); the arenas, their counters and
+//! `parallel_map` are std-only. Callers observe identical buffer
+//! contents either way — recycling is purely an allocation-count
+//! optimization.
 
 use alloc::vec::Vec;
 use core::ops::{Deref, DerefMut};
@@ -30,26 +37,77 @@ use std::collections::HashMap;
 use std::sync::mpsc;
 #[cfg(feature = "std")]
 use std::sync::{Arc, Mutex};
+#[cfg(feature = "std")]
+use std::thread::LocalKey;
 
-/// Per-length free-lists are individually capped, and the arena as a
-/// whole stops retaining once it holds this many floats (16 MB).
+/// Per-length free-lists are individually capped, and each arena as a
+/// whole stops retaining once it holds this many elements (16 MB of
+/// f32 floats / u64 indices respectively).
 #[cfg(feature = "std")]
 const MAX_PER_CLASS: usize = 16;
 #[cfg(feature = "std")]
 const MAX_HELD_FLOATS: usize = 1 << 22;
+#[cfg(feature = "std")]
+const MAX_HELD_IDX: usize = 1 << 21;
 
 #[cfg(feature = "std")]
-#[derive(Default)]
-struct TensorArena {
-    by_len: HashMap<usize, Vec<Vec<f32>>>,
-    held_floats: usize,
+struct Arena<T> {
+    by_len: HashMap<usize, Vec<Vec<T>>>,
+    held: usize,
     takes: u64,
     reuses: u64,
 }
 
+// Manual impl: a derived Default would demand `T: Default` for no reason.
+#[cfg(feature = "std")]
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Arena { by_len: HashMap::new(), held: 0, takes: 0, reuses: 0 }
+    }
+}
+
 #[cfg(feature = "std")]
 thread_local! {
-    static TENSOR_ARENA: RefCell<TensorArena> = RefCell::new(TensorArena::default());
+    static TENSOR_ARENA: RefCell<Arena<f32>> = RefCell::new(Arena::default());
+    static INDEX_ARENA: RefCell<Arena<u64>> = RefCell::new(Arena::default());
+}
+
+/// Pop a same-length recycled buffer from `arena`, if one is held.
+#[cfg(feature = "std")]
+fn arena_take<T>(arena: &'static LocalKey<RefCell<Arena<T>>>, len: usize) -> Option<Vec<T>> {
+    arena
+        .try_with(|a| {
+            let mut a = a.borrow_mut();
+            a.takes += 1;
+            let buf = a.by_len.get_mut(&len).and_then(Vec::pop);
+            if let Some(b) = &buf {
+                a.held -= b.len();
+                a.reuses += 1;
+            }
+            buf
+        })
+        .ok()
+        .flatten()
+}
+
+/// Retire `buf` into `arena`, subject to the per-class and total caps.
+#[cfg(feature = "std")]
+fn arena_put<T>(arena: &'static LocalKey<RefCell<Arena<T>>>, buf: Vec<T>, max_held: usize) {
+    if buf.is_empty() {
+        return;
+    }
+    // try_with: during thread teardown the TLS slot may already be
+    // gone — then the buffer just deallocates normally.
+    let _ = arena.try_with(|a| {
+        let mut a = a.borrow_mut();
+        if a.held + buf.len() <= max_held {
+            let class = a.by_len.entry(buf.len()).or_default();
+            if class.len() < MAX_PER_CLASS {
+                a.held += buf.len();
+                class.push(buf);
+            }
+        }
+    });
 }
 
 /// A pooled `f32` tensor buffer: behaves like a boxed `[f32]` and
@@ -73,20 +131,7 @@ impl PoolBuf {
 /// place), allocating only on a cold arena.
 #[cfg(feature = "std")]
 pub fn take_zeroed(len: usize) -> PoolBuf {
-    let recycled = TENSOR_ARENA
-        .try_with(|a| {
-            let mut a = a.borrow_mut();
-            a.takes += 1;
-            let buf = a.by_len.get_mut(&len).and_then(Vec::pop);
-            if let Some(b) = &buf {
-                a.held_floats -= b.len();
-                a.reuses += 1;
-            }
-            buf
-        })
-        .ok()
-        .flatten();
-    match recycled {
+    match arena_take(&TENSOR_ARENA, len) {
         Some(mut buf) => {
             buf.fill(0.0);
             PoolBuf { buf }
@@ -102,9 +147,62 @@ pub fn take_zeroed(len: usize) -> PoolBuf {
     PoolBuf { buf: alloc::vec![0.0; len] }
 }
 
-/// `(takes, reuses)` counters of the current thread's arena — the
-/// zero-alloc property is testable as `reuses == takes` over a warm
-/// steady-state window.
+/// A pooled `u64` scratch buffer: sort/index workspace for the analytic
+/// embed build (packed `(bucket, pixel)` keys). Same recycling contract
+/// as [`PoolBuf`], against its own thread-local arena.
+pub struct IdxBuf {
+    buf: Vec<u64>,
+}
+
+/// A zeroed pooled index buffer of exactly `len` u64s.
+#[cfg(feature = "std")]
+pub fn take_idx_zeroed(len: usize) -> IdxBuf {
+    match arena_take(&INDEX_ARENA, len) {
+        Some(mut buf) => {
+            buf.fill(0);
+            IdxBuf { buf }
+        }
+        None => IdxBuf { buf: alloc::vec![0u64; len] },
+    }
+}
+
+/// A zeroed index buffer of exactly `len` u64s (plain allocation
+/// without std, mirroring [`take_zeroed`]).
+#[cfg(not(feature = "std"))]
+pub fn take_idx_zeroed(len: usize) -> IdxBuf {
+    IdxBuf { buf: alloc::vec![0u64; len] }
+}
+
+#[cfg(feature = "std")]
+impl Drop for IdxBuf {
+    fn drop(&mut self) {
+        arena_put(&INDEX_ARENA, std::mem::take(&mut self.buf), MAX_HELD_IDX);
+    }
+}
+
+impl Deref for IdxBuf {
+    type Target = [u64];
+    fn deref(&self) -> &[u64] {
+        &self.buf
+    }
+}
+
+impl DerefMut for IdxBuf {
+    fn deref_mut(&mut self) -> &mut [u64] {
+        &mut self.buf
+    }
+}
+
+impl core::fmt::Debug for IdxBuf {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "IdxBuf(len={})", self.buf.len())
+    }
+}
+
+/// `(takes, reuses)` counters of the current thread's **f32** arena —
+/// the zero-alloc property is testable as `reuses == takes` over a warm
+/// steady-state window. (The index arena has its own counters, exposed
+/// via [`idx_arena_stats`].)
 #[cfg(feature = "std")]
 pub fn arena_stats() -> (u64, u64) {
     TENSOR_ARENA
@@ -115,25 +213,21 @@ pub fn arena_stats() -> (u64, u64) {
         .unwrap_or((0, 0))
 }
 
+/// `(takes, reuses)` counters of the current thread's u64 index arena.
+#[cfg(feature = "std")]
+pub fn idx_arena_stats() -> (u64, u64) {
+    INDEX_ARENA
+        .try_with(|a| {
+            let a = a.borrow();
+            (a.takes, a.reuses)
+        })
+        .unwrap_or((0, 0))
+}
+
 #[cfg(feature = "std")]
 impl Drop for PoolBuf {
     fn drop(&mut self) {
-        let buf = std::mem::take(&mut self.buf);
-        if buf.is_empty() {
-            return;
-        }
-        // try_with: during thread teardown the TLS slot may already be
-        // gone — then the buffer just deallocates normally.
-        let _ = TENSOR_ARENA.try_with(|a| {
-            let mut a = a.borrow_mut();
-            if a.held_floats + buf.len() <= MAX_HELD_FLOATS {
-                let class = a.by_len.entry(buf.len()).or_default();
-                if class.len() < MAX_PER_CLASS {
-                    a.held_floats += buf.len();
-                    class.push(buf);
-                }
-            }
-        });
+        arena_put(&TENSOR_ARENA, std::mem::take(&mut self.buf), MAX_HELD_FLOATS);
     }
 }
 
@@ -283,6 +377,20 @@ mod tests {
         assert_eq!(v[3], 2.5);
         let c: PoolBuf = v.into();
         assert_eq!(&c[..], &b[..]);
+    }
+
+    #[test]
+    fn idx_buf_recycles_storage() {
+        let len = 2048usize;
+        let first = take_idx_zeroed(len);
+        let ptr = first.as_ptr();
+        drop(first);
+        let (t0, r0) = idx_arena_stats();
+        let second = take_idx_zeroed(len);
+        let (t1, r1) = idx_arena_stats();
+        assert_eq!(second.as_ptr(), ptr, "same-length take must reuse the dropped buffer");
+        assert!(second.iter().all(|&v| v == 0), "recycled index buffer must be re-zeroed");
+        assert_eq!((t1 - t0, r1 - r0), (1, 1));
     }
 
     #[test]

@@ -11,11 +11,15 @@
 //! - the analytic backend's incremental masked re-embedding matches a
 //!   dense recompute for random masks/step counts (property test), and
 //!   its sparse copy-on-write sync materialises the exact stepped theta;
+//! - the compiled step plan (`coordinator::kernels::StepPlan`) is
+//!   bit-identical to the scalar bucket-walk arm for random masks and
+//!   step counts over real padded episode tensors (property test);
 //! - the render cache is determinism-preserving: identical tables with
 //!   the cache on or off, at 1 or N workers, and replayed streams end at
 //!   identical RNG positions.
 
 use tinytrain::accounting::{backward_macs, backward_memory, CostLedger, Optimizer, UpdatePlan};
+use tinytrain::coordinator::analytic::{masked_shrink_step, masked_shrink_step_scalar, EmbedState};
 use tinytrain::coordinator::backend::{AdaptationBackend, AnalyticBackend};
 use tinytrain::coordinator::{
     Budgets, ChannelScheme, Criterion, FisherReport, Method, Selection, StaticPolicy, UpdateMask,
@@ -466,7 +470,7 @@ fn incremental_embed_matches_dense_recompute_property() {
             // pre-adaptation embed (builds the scatter table) must be
             // bit-identical to the seed's dense scan
             let pre = backend.embed().map_err(|e| e.to_string())?;
-            if pre != reference_embed(&meta, &params.theta, &padded) {
+            if pre[..] != reference_embed(&meta, &params.theta, &padded)[..] {
                 return Err("pre-step embed not bit-identical to the dense scan".into());
             }
             backend.set_mask(mask).map_err(|e| e.to_string())?;
@@ -586,6 +590,98 @@ fn embed_plan_picks_incremental_for_narrow_masks_and_dense_for_wide() {
         let max_diff = max_abs_diff(&post, &post_ref);
         assert!(max_diff < 1e-4, "mode {incremental}: diverged by {max_diff}");
     }
+}
+
+#[test]
+fn planned_step_matches_scalar_arm_property() {
+    // Random masks (occasionally the full theta) over real padded
+    // episode tensors — padded rows are zero, so the plan's build-time
+    // zero compression faces the scalar arm's per-step `x != 0.0` test.
+    let meta = ModelMeta::synthetic(5);
+    let params = ParamStore::init(&meta, 6);
+    let s = meta.shapes.clone();
+    let d = domain_by_name("traffic").unwrap();
+    let mut erng = Rng::new(71);
+    let ep = Sampler::new(d.as_ref(), &s).sample(&mut erng);
+    let padded = ep.pad(&s);
+    let total = meta.total_theta;
+    check(
+        "planned-vs-scalar-step",
+        25,
+        53,
+        |r| {
+            let mut b = UpdateMask::builder(total);
+            if r.bool(0.2) {
+                b.add_run(0, total);
+            } else {
+                for _ in 0..r.int_range(1, 5) {
+                    let off = r.below(total);
+                    let len = r.int_range(1, (total - off).min(256));
+                    b.add_run(off, len);
+                }
+            }
+            (b.build().unwrap(), r.int_range(1, 7), (1e-3 + r.uniform() * 5e-3) as f32)
+        },
+        |(mask, steps, lr)| {
+            let overlay0: Vec<Vec<f32>> = mask
+                .runs()
+                .iter()
+                .map(|&(off, len)| params.theta[off..off + len].to_vec())
+                .collect();
+            let build = || {
+                let mut st = EmbedState::build(
+                    &meta.shapes,
+                    total,
+                    |t| params.theta[t],
+                    &padded.sup_x,
+                    &padded.qry_x,
+                );
+                st.refresh_plan(Some(mask), &padded.sup_x, &padded.qry_x);
+                st
+            };
+            let mut st_p = build();
+            let mut st_s = build();
+            let mut ov_p = overlay0.clone();
+            let mut ov_s = overlay0;
+            for _ in 0..*steps {
+                masked_shrink_step(
+                    mask,
+                    &mut ov_p,
+                    Some(&mut st_p),
+                    &meta.shapes,
+                    &padded.sup_x,
+                    &padded.qry_x,
+                    *lr,
+                );
+                masked_shrink_step_scalar(
+                    mask,
+                    &mut ov_s,
+                    Some(&mut st_s),
+                    &meta.shapes,
+                    &padded.sup_x,
+                    &padded.qry_x,
+                    *lr,
+                );
+            }
+            if ov_p != ov_s {
+                return Err("overlays diverged".into());
+            }
+            if st_p.dirty != st_s.dirty {
+                return Err("dirty flags diverged".into());
+            }
+            for (a, b) in st_p.proj.iter().zip(st_s.proj.iter()) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("proj bits diverged: {a} vs {b}"));
+                }
+            }
+            for (a, b) in st_p.raw.iter().zip(st_s.raw.iter()) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("raw bits diverged: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 // ---------------------------------------------------------------------------

@@ -13,9 +13,18 @@
 //! workload produces. Under `std` that proves native == soft bit-for-
 //! bit on real data; under `no_std` the same binary re-derives the
 //! identical bits.
+//!
+//! The blocked-SIMD kernels and compiled step plans of
+//! `coordinator::kernels` ride the same gate: every blocked/planned arm
+//! is asserted bit-identical to its scalar reference arm here, under
+//! both feature sets and on ragged shapes (lane tails, partial trailing
+//! chunks).
 
 use tinytrain::accounting::{activation_peak_bytes, CostLedger, Optimizer};
-use tinytrain::coordinator::analytic::{masked_shrink_step, EmbedState};
+use tinytrain::coordinator::analytic::{
+    accumulate_rows, masked_shrink_step, masked_shrink_step_scalar, EmbedState,
+};
+use tinytrain::coordinator::kernels::{normalize_rows_into, scatter_axpy, EmbedPlan, LANES};
 use tinytrain::coordinator::UpdateMask;
 use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::util::math;
@@ -134,7 +143,7 @@ fn analytic_masked_step_and_embed_are_bit_exact() {
     let before = overlay.clone();
 
     let mut st = EmbedState::build(s, meta.total_theta, |t| params.theta[t], &sup, &qry);
-    st.refresh_plan(Some(&mask));
+    st.refresh_plan(Some(&mask), &sup, &qry);
     masked_shrink_step(&mask, &mut overlay, Some(&mut st), s, &sup, &qry, LR);
 
     // The shrink update is one multiply and one subtract per selected
@@ -149,7 +158,7 @@ fn analytic_masked_step_and_embed_are_bit_exact() {
     // Embed normalisation: the only intrinsic is sqrt32. Pin the
     // delegating wrapper to the soft implementation on the row norms
     // this workload actually produces, then replicate the whole row.
-    st.rebuild_if_dirty(s, &sup, &qry);
+    st.rebuild_if_dirty(&sup, &qry);
     let out = st.normalized(s.feat_dim);
     assert_eq!(out.len(), s.eval_batch * s.feat_dim);
     for (row, out_row) in st.raw.chunks(s.feat_dim).zip(out.chunks(s.feat_dim)) {
@@ -162,6 +171,129 @@ fn analytic_masked_step_and_embed_are_bit_exact() {
         let norm = math::sqrt32(sumsq).max(1e-6);
         for (&o, &r) in out_row.iter().zip(row) {
             assert_eq!(o.to_bits(), (r / norm).to_bits());
+        }
+    }
+}
+
+#[test]
+fn blocked_accumulate_matches_scalar_on_ragged_shapes() {
+    let mut rng = Rng::new(0xACC);
+    // (feat_dim, img_len): full blocks, lane tails (feat_dim % 8 != 0),
+    // partial trailing chunks (img_len % feat_dim != 0), feat_dim >
+    // img_len, and empty images.
+    for &(feat_dim, img_len) in &[(8usize, 64usize), (16, 160), (6, 50), (13, 131), (5, 3), (9, 0)]
+    {
+        let rows = 3usize;
+        let images: Vec<f32> = (0..rows * img_len).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let proj: Vec<f32> = (0..img_len).map(|_| rng.range(-2.0, 2.0) as f32).collect();
+        // nonzero initial rows exercise the `+=` (load-accumulate-store)
+        // contract, not just accumulation from zero
+        let init: Vec<f32> = (0..rows * feat_dim).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+        let mut scalar = init.clone();
+        accumulate_rows(&images, img_len, &proj, feat_dim, &mut scalar);
+        let mut blocked = init;
+        let plan = EmbedPlan::from_dims(img_len, feat_dim, rows, 0);
+        plan.accumulate(&images, &proj, &mut blocked);
+        for (i, (a, b)) in blocked.iter().zip(&scalar).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "feat_dim={feat_dim} img_len={img_len} slot {i}: blocked {a} vs scalar {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_normalize_matches_scalar_reference_bitwise() {
+    let mut rng = Rng::new(0x4012);
+    for &feat_dim in &[5usize, 8, 12, 16, 21] {
+        let rows = 4usize;
+        let mut raw: Vec<f32> = (0..rows * feat_dim).map(|_| rng.range(-3.0, 3.0) as f32).collect();
+        // a zero row exercises the 1e-6 norm floor
+        for v in raw[feat_dim..2 * feat_dim].iter_mut() {
+            *v = 0.0;
+        }
+        let mut out = vec![9.0f32; raw.len()];
+        normalize_rows_into(&raw, feat_dim, &mut out);
+        for (row, orow) in raw.chunks(feat_dim).zip(out.chunks(feat_dim)) {
+            let norm = math::sqrt32(row.iter().map(|v| v * v).sum::<f32>()).max(1e-6);
+            for (&o, &r) in orow.iter().zip(row) {
+                assert_eq!(o.to_bits(), (r / norm).to_bits(), "feat_dim={feat_dim}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scatter_axpy_is_bit_exact_across_block_tails() {
+    let mut rng = Rng::new(0x5CA7);
+    for &n in &[0usize, 1, LANES - 1, LANES, LANES + 3, 3 * LANES + 5] {
+        // distinct slots (one per eval row in real columns), non-monotone
+        let slots: Vec<u32> = (0..n).rev().map(|k| (2 * k + 1) as u32).collect();
+        let xs: Vec<f32> = (0..n).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let delta = rng.range(-0.25, 0.25) as f32;
+        let mut blocked: Vec<f32> = (0..2 * n + 2).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let mut scalar = blocked.clone();
+        scatter_axpy(&slots, &xs, delta, &mut blocked);
+        for (&sk, &xk) in slots.iter().zip(&xs) {
+            scalar[sk as usize] += xk * delta;
+        }
+        for (i, (a, b)) in blocked.iter().zip(&scalar).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "n={n} slot {i}");
+        }
+    }
+}
+
+#[test]
+fn planned_step_matches_scalar_walk_bitwise() {
+    let meta = ModelMeta::synthetic(3);
+    let s = &meta.shapes;
+    let img_len = s.img * s.img * s.channels;
+    let mut rng = Rng::new(0xBEEF);
+    let theta: Vec<f32> = (0..meta.total_theta).map(|_| rng.range(-0.5, 0.5) as f32).collect();
+    let sup: Vec<f32> = (0..s.max_support * img_len).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let qry: Vec<f32> = (0..s.max_query * img_len).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+
+    // Narrow (incremental) and wide (dense-rebuild) masks both route
+    // through the compiled plan; each must match the scalar walk
+    // bit-for-bit, including the dirty flag and the final embedding.
+    let masks = {
+        let mut narrow = UpdateMask::builder(meta.total_theta);
+        narrow.add_run(3, 2);
+        narrow.add_run(19, 4);
+        let mut wide = UpdateMask::builder(meta.total_theta);
+        wide.add_run(0, meta.total_theta);
+        [narrow.build().unwrap(), wide.build().unwrap()]
+    };
+    for mask in &masks {
+        let overlay0: Vec<Vec<f32>> =
+            mask.runs().iter().map(|&(off, len)| theta[off..off + len].to_vec()).collect();
+        let mut st_p = EmbedState::build(s, meta.total_theta, |t| theta[t], &sup, &qry);
+        let mut st_s = EmbedState::build(s, meta.total_theta, |t| theta[t], &sup, &qry);
+        st_p.refresh_plan(Some(mask), &sup, &qry);
+        st_s.refresh_plan(Some(mask), &sup, &qry);
+        assert!(st_p.step_plan.is_some(), "refresh_plan must compile a step plan");
+        let mut ov_p = overlay0.clone();
+        let mut ov_s = overlay0;
+        for _ in 0..3 {
+            masked_shrink_step(mask, &mut ov_p, Some(&mut st_p), s, &sup, &qry, LR);
+            masked_shrink_step_scalar(mask, &mut ov_s, Some(&mut st_s), s, &sup, &qry, LR);
+        }
+        assert_eq!(st_p.dirty, st_s.dirty, "dirty flags must agree");
+        assert_eq!(ov_p, ov_s, "overlay updates must match");
+        for (a, b) in st_p.proj.iter().zip(st_s.proj.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "proj must be bit-identical");
+        }
+        st_p.rebuild_if_dirty(&sup, &qry);
+        st_s.rebuild_if_dirty(&sup, &qry);
+        for (a, b) in st_p.raw.iter().zip(st_s.raw.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "raw must be bit-identical");
+        }
+        let out_p = st_p.normalized(s.feat_dim);
+        let out_s = st_s.normalized(s.feat_dim);
+        for (a, b) in out_p.iter().zip(&out_s) {
+            assert_eq!(a.to_bits(), b.to_bits(), "embeddings must be bit-identical");
         }
     }
 }
