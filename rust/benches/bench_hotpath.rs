@@ -37,7 +37,7 @@ use tinytrain::accounting::{backward_macs, backward_memory, CostLedger, Optimize
 use tinytrain::coordinator::backend::{AdaptationBackend, AnalyticBackend};
 use tinytrain::coordinator::selection::select_layers;
 use tinytrain::coordinator::{
-    episode_accuracy, Budgets, Method, ModelEngine, Selection, UpdateMask,
+    episode_accuracy, Budgets, Method, ModelEngine, Selection, SyncedParams, UpdateMask,
 };
 use tinytrain::data::{
     augment, domain_by_name, Episode, PaddedEpisode, RenderCache, Sample, Sampler,
@@ -46,7 +46,10 @@ use tinytrain::harness::parallel::{accuracy_grid, cell_seed, episode_streams, Gr
 use tinytrain::model::{EpisodeShapes, ModelMeta, ParamStore};
 use tinytrain::net::proto;
 use tinytrain::runtime::{ArtifactStore, Runtime};
-use tinytrain::serve::{self, LoopMode, ServeConfig, TenantStore, TraceConfig};
+use tinytrain::serve::{
+    self, shard::auto_shards, LoopMode, QuantPolicy, Residency, ServeConfig, TenantStore,
+    TenantStoreConfig, TraceConfig,
+};
 use tinytrain::util::bench::bench;
 use tinytrain::util::jsonio::{num, obj, s, Json};
 use tinytrain::util::pool::default_workers;
@@ -643,10 +646,16 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
         queue_capacity: 64,
         render_cache: true,
         faults: None,
+        ..ServeConfig::default()
     };
-    let check_seq = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let unbounded = |base: &Arc<ParamStore>| {
+        TenantStoreConfig { shards: 1, ..TenantStoreConfig::default() }
+            .build(Arc::clone(base))
+            .expect("unbounded single-shard store")
+    };
+    let check_seq = unbounded(&base);
     let check_ref = serve::sequential_replay(&meta, &check_seq, &trace, true);
-    let check_par_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let check_par_store = unbounded(&base);
     let check_par = serve::replay(&meta, &check_par_store, &scfg, &trace, LoopMode::Open)
         .expect("serve replay");
     serve::check_equivalent(&check_ref.completions, &check_par.completions)
@@ -659,9 +668,9 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
             "tenant {name}: final delta diverged from the reference arm"
         );
     }
-    let seq_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let seq_store = unbounded(&base);
     let seq = serve::sequential_replay(&meta, &seq_store, &trace, true);
-    let par_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let par_store = unbounded(&base);
     let par = serve::replay(&meta, &par_store, &scfg, &trace, LoopMode::Open)
         .expect("serve replay");
     println!(
@@ -684,6 +693,120 @@ fn pure_rust_section(smoke: bool) -> Vec<(String, Json)> {
             ("speedup", num(seq.wall_s / par.wall_s.max(1e-12))),
             ("throughput_rps", num(par.throughput_rps)),
             ("p95_us", num(par.total.p95_us)),
+        ]),
+    ));
+
+    // --- tenant sweep: single-mutex vs sharded tenant plane -------------
+    // Raw store traffic (absorb + params_for, no adaptation math), so
+    // the arms time the store's locking. Both arms do identical
+    // per-tenant work; the after arm hashes tenants across shards, and
+    // an untimed pre-pass asserts the arms land bit-identical (shard
+    // count is unobservable with quantization off and no budget).
+    let sweep_tenants = if smoke { 16 } else { 64 };
+    let sweep_workers = default_workers().clamp(2, 8);
+    let sweep_rounds = if smoke { 8 } else { 32 };
+    let sweep_weights = 64usize;
+    let offset_span = meta.total_theta.saturating_sub(sweep_weights).max(1);
+    let sweep = |store: &TenantStore| {
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for w in 0..sweep_workers {
+                scope.spawn(move || {
+                    for round in 0..sweep_rounds {
+                        let mut t = w;
+                        while t < sweep_tenants {
+                            let name = serve::tenant_name(t);
+                            let fill = (round * sweep_tenants + t) as f32 * 1e-3 + 1.0;
+                            let segments = vec![(t * 97 % offset_span, vec![fill; sweep_weights])];
+                            store.absorb(&name, SyncedParams::Sparse { t: 1, segments });
+                            std::hint::black_box(store.params_for(&name).t);
+                            t += sweep_workers;
+                        }
+                    }
+                });
+            }
+        });
+        t0.elapsed().as_secs_f64()
+    };
+    let single = unbounded(&base);
+    let shards = auto_shards(sweep_workers);
+    let sharded = TenantStoreConfig { shards, ..TenantStoreConfig::default() }
+        .build(Arc::clone(&base))
+        .expect("sharded store");
+    sweep(&single); // untimed warm + correctness pass
+    sweep(&sharded);
+    for t in 0..sweep_tenants {
+        let name = serve::tenant_name(t);
+        assert_eq!(
+            single.delta(&name),
+            sharded.delta(&name),
+            "tenant {name}: sharded sweep diverged from the single-mutex arm"
+        );
+    }
+    let single_s = sweep(&single);
+    let sharded_s = sweep(&sharded);
+    println!(
+        "tenant sweep: {sweep_tenants} tenants x {sweep_workers} workers single-mutex \
+         {single_s:.3}s ({} contended) | {shards} shards {sharded_s:.3}s ({} contended)",
+        single.stats().contended,
+        sharded.stats().contended
+    );
+
+    // Residency at a fixed budget, with and without cold quantization:
+    // int8 overlays cost ~1/4 of f32, so the same budget keeps more
+    // tenants resident instead of spilling them.
+    let sweep_budget = sweep_tenants as f64 / 4.0 * sweep_weights as f64 * 4.0;
+    let spill_root = std::env::temp_dir().join(format!("tt-bench-sweep-{}", std::process::id()));
+    let residency = |arm: &str, quantize: QuantPolicy| {
+        let store = TenantStoreConfig {
+            budget_bytes: sweep_budget,
+            shards: 1,
+            quantize,
+            spill_dir: Some(spill_root.join(arm)),
+            ..TenantStoreConfig::default()
+        }
+        .build(Arc::clone(&base))
+        .expect("budgeted store");
+        for t in 0..sweep_tenants {
+            let segments = vec![(t * 97 % offset_span, vec![1.0f32; sweep_weights])];
+            store.absorb(&serve::tenant_name(t), SyncedParams::Sparse { t: 1, segments });
+        }
+        let mut counts = [0usize; 3];
+        for t in 0..sweep_tenants {
+            match store.tenant_stats(&serve::tenant_name(t)).map(|s| s.residency) {
+                Some(Residency::Resident) => counts[0] += 1,
+                Some(Residency::Quantized) => counts[1] += 1,
+                Some(Residency::Spilled) => counts[2] += 1,
+                None => {}
+            }
+        }
+        counts
+    };
+    let off = residency("off", QuantPolicy::Off);
+    let cold = residency("cold", QuantPolicy::Cold { hot_fraction: 0.25 });
+    std::fs::remove_dir_all(&spill_root).ok();
+    println!(
+        "tenant sweep residency @ {:.0} bytes: quantize off {}/{}/{} \
+         (resident/quantized/spilled) | quantize 0.25 {}/{}/{}",
+        sweep_budget, off[0], off[1], off[2], cold[0], cold[1], cold[2]
+    );
+    sections.push((
+        "tenant_sweep".into(),
+        obj(vec![
+            ("tenants", num(sweep_tenants as f64)),
+            ("workers", num(sweep_workers as f64)),
+            ("shards", num(shards as f64)),
+            ("before_us", num(single_s * 1e6)),
+            ("after_us", num(sharded_s * 1e6)),
+            ("speedup", num(single_s / sharded_s.max(1e-12))),
+            ("contended_before", num(single.stats().contended as f64)),
+            ("contended_after", num(sharded.stats().contended as f64)),
+            ("resident_off", num(off[0] as f64)),
+            ("quantized_off", num(off[1] as f64)),
+            ("spilled_off", num(off[2] as f64)),
+            ("resident_quant", num(cold[0] as f64)),
+            ("quantized_quant", num(cold[1] as f64)),
+            ("spilled_quant", num(cold[2] as f64)),
         ]),
     ));
 

@@ -12,9 +12,18 @@
 #   snapshot), replay episode 1, then verify the synced deltas against
 #   a sequential replay of the FULL trace (--verify-full-trace): proof
 #   that panics, sheds, drops, and the restart changed nothing.
+# Phases C/D: the same two-phase restart on a fresh state dir with the
+#   quantizing tenant plane armed (--delta-budget-kb 1 --quantize 0.25
+#   --shards 2): cold overlays demote to int8, round-trip the snapshot
+#   as quantized, and the final deltas must converge to the exact
+#   sequential reference within the int8 error bound
+#   (--quant-slack 4). Static-mask method (lastlayer) keeps the delta
+#   support stable under the rounding. The phase-C drain must report a
+#   nonzero quantization count, or the leg exercised nothing.
 #
 # Fails on any non-zero exit: unrecovered fault, bit-identity mismatch,
-# missing snapshot, or an unclean server drain.
+# convergence outside the quantization bound, zero quantizations in
+# the quantize leg, missing snapshot, or an unclean server drain.
 #
 # Usage: ci_chaos_smoke.sh [--prebuilt]
 #   --prebuilt   skip `cargo build --release` (ci.sh already built it)
@@ -34,20 +43,25 @@ fi
 
 LOG="$(mktemp)"
 STATE="$(mktemp -d)"
+QSTATE="$(mktemp -d)"
 SERVER_PID=0
 cleanup() {
     kill "$SERVER_PID" 2>/dev/null || true
-    rm -rf "$LOG" "$STATE"
+    rm -rf "$LOG" "$STATE" "$QSTATE"
 }
 trap cleanup EXIT
 
-# Start one server instance on the shared state dir and scrape the
-# `listening on http://ADDR` handshake (port 0 = ephemeral).
+# Start one server instance on the given state dir (extra server flags
+# may follow it) and scrape the `listening on http://ADDR` handshake
+# (port 0 = ephemeral).
 start_server() {
+    local state_dir="$1"
+    shift
     : >"$LOG"
     "$BIN" serve --listen 127.0.0.1:0 --verify-decode --acceptors 3 --workers 3 \
         --faults "seed=5,panic=0.3,slow=0.2:10,shed=0.2,drop=0.2" \
-        --state-dir "$STATE" --snapshot-every-s 1 \
+        --state-dir "$state_dir" --snapshot-every-s 1 \
+        "$@" \
         >"$LOG" 2>&1 &
     SERVER_PID=$!
 
@@ -67,7 +81,7 @@ start_server() {
         cat "$LOG" >&2
         exit 1
     fi
-    echo "server bound on $ADDR (state dir $STATE)"
+    echo "server bound on $ADDR (state dir $state_dir)"
 }
 
 # Both phases slice the SAME deterministic trace (same tenants/
@@ -78,7 +92,7 @@ LOADGEN_ARGS=(--mode closed --connections 3 --tenants 4 --episodes 2 --steps 2
     --retry-attempts 8 --retry-seed 77 --shutdown)
 
 echo "== phase A: faulted replay of episode 0, then snapshot-on-drain =="
-start_server
+start_server "$STATE"
 "$BIN" loadgen --addr "$ADDR" "${LOADGEN_ARGS[@]}" --to-ep 1
 wait "$SERVER_PID"
 echo "-- phase A server log --"
@@ -90,10 +104,46 @@ if [ ! -f "$STATE/tenants.snap" ]; then
 fi
 
 echo "== phase B: restart on the same state dir, replay episode 1 =="
-start_server
+start_server "$STATE"
 "$BIN" loadgen --addr "$ADDR" "${LOADGEN_ARGS[@]}" --from-ep 1 --verify-full-trace
 wait "$SERVER_PID"
 echo "-- phase B server log --"
 cat "$LOG"
 
-echo "ci_chaos_smoke: green (faults + restart converged bit-identically)"
+# The quantize leg runs a static-mask method so quantization rounding
+# cannot flip the dynamic layer selection (which would change the delta
+# support, not just its values), and skips the phase-C bit-identity
+# check — against a quantizing server only the final
+# within-quant-error convergence check (phase D) is meaningful.
+QUANT_SERVER=(--delta-budget-kb 1 --quantize 0.25 --shards 2 --compact-depth 2)
+QUANT_LOADGEN=("${LOADGEN_ARGS[@]}" --method lastlayer)
+
+echo "== phase C: quantize-enabled faulted replay of episode 0 =="
+start_server "$QSTATE" "${QUANT_SERVER[@]}"
+"$BIN" loadgen --addr "$ADDR" "${QUANT_LOADGEN[@]}" --to-ep 1 --no-verify
+wait "$SERVER_PID"
+echo "-- phase C server log --"
+cat "$LOG"
+
+QUANTS="$(sed -n 's/.*shutdown complete.*deltas, \([0-9][0-9]*\) quantizations.*/\1/p' "$LOG" | head -n 1)"
+if [ -z "$QUANTS" ] || [ "$QUANTS" -eq 0 ]; then
+    echo "ci_chaos_smoke: quantize leg reported no quantizations ('${QUANTS:-missing}')" >&2
+    exit 1
+fi
+echo "phase C drained with $QUANTS quantizations"
+
+if [ ! -f "$QSTATE/tenants.snap" ]; then
+    echo "ci_chaos_smoke: quantize leg drained without writing $QSTATE/tenants.snap" >&2
+    exit 1
+fi
+
+echo "== phase D: quantize-enabled restart, replay episode 1, bounded convergence =="
+start_server "$QSTATE" "${QUANT_SERVER[@]}"
+"$BIN" loadgen --addr "$ADDR" "${QUANT_LOADGEN[@]}" --from-ep 1 \
+    --verify-full-trace --quant-slack 4
+wait "$SERVER_PID"
+echo "-- phase D server log --"
+cat "$LOG"
+
+echo "ci_chaos_smoke: green (faults + restart converged bit-identically;" \
+    "quantize leg converged within the int8 error bound)"

@@ -104,4 +104,9 @@ fn main() {
     println!("accumulate_ref checksum {:.6}", checksum(&raw_ref));
     let overlay_sum: f64 = overlay.iter().map(|seg| checksum(seg.as_slice())).sum();
     println!("overlay checksum {overlay_sum:.6}");
+    // int8 delta codec (util::quant) — part of the MCU core: flash-
+    // resident deltas reuse the serving tier's exact encoder.
+    let q = tinytrain::util::quant::quantize_run(&emb);
+    let dq = tinytrain::util::quant::dequantize_run(&q);
+    println!("quant scale {:e} checksum {:.6}", q.scale, checksum(&dq));
 }

@@ -80,16 +80,22 @@ USAGE:
   tinytrain serve    [--arch mcunet] [--tenants 8] [--domains a,b] [--episodes 4]
                      [--workers N] [--queue-cap 64] [--mode open|closed]
                      [--method M] [--steps 6] [--delta-budget-kb KB] [--seed S]
+                     [--shards N] [--compact-depth 4] [--quantize off|FRAC]
                      [--faults SPEC]
                      (multi-tenant adaptation service: replays a synthetic
                       trace, reports throughput + latency percentiles, asserts
                       bit-identity against the sequential reference arm —
-                      with --faults, through injected worker panics)
+                      with --faults, through injected worker panics.
+                      --shards 0 auto-sizes from the worker count;
+                      --quantize FRAC keeps FRAC of the budget f32-hot and
+                      demotes LRU-cold overlays to int8)
   tinytrain serve    --listen 127.0.0.1:0 [--acceptors N] [--verify-decode]
                      [--workers N] [--queue-cap 64] [--delta-budget-kb KB]
+                     [--shards N] [--compact-depth 4] [--quantize off|FRAC]
                      [--faults SPEC] [--state-dir DIR] [--snapshot-every-s 5]
                      (HTTP front-end over the same service: POST /v1/episodes,
                       GET /v1/tickets/{id}, GET /v1/tenants/{id}/sync,
+                      GET /v1/tenants/{id}/stats, GET /v1/stats,
                       GET /metrics, GET /healthz, POST /v1/shutdown;
                       --state-dir enables crash-safe snapshots + spill files)
   tinytrain loadgen  --addr HOST:PORT [--connections 4] [--mode open|closed]
@@ -97,11 +103,14 @@ USAGE:
                      [--seed S] [--no-verify] [--shutdown] [--faults SPEC]
                      [--deadline-ms MS] [--retry-attempts 8] [--retry-seed S]
                      [--from-ep A] [--to-ep B] [--verify-full-trace]
+                     [--quant-slack S]
                      (replays the synthetic trace over real sockets and asserts
                       the wire results bit-identical to the in-process arm;
                       chaos client: retries sheds/drops/failures with seeded
                       backoff; --from/--to-ep slice episodes for split runs,
-                      --verify-full-trace checks final deltas across a restart)
+                      --verify-full-trace checks final deltas across a restart,
+                      --quant-slack S loosens that check to S half-steps of the
+                      int8 grid for a --quantize server)
 
 Fault SPEC grammar: seed=U64,panic=P,slow=P[:MS],shed=P,drop=P — e.g.
 `--faults \"seed=5,panic=0.2,slow=0.1:10,shed=0.2,drop=0.1\"`.
@@ -311,6 +320,36 @@ fn fault_plan(args: &Args) -> Result<Option<Arc<serve::FaultPlan>>> {
     }
 }
 
+/// Parse the tenant-plane knobs shared by `serve` and `serve --listen`
+/// (`--delta-budget-kb`, `--shards`, `--compact-depth`, `--quantize`)
+/// into one [`serve::TenantStoreConfig`]. `--shards 0` (the default)
+/// lets the builder auto-size from the worker count.
+fn store_config(args: &Args) -> Result<serve::TenantStoreConfig> {
+    let budget_bytes = match args.opt("delta-budget-kb") {
+        Some(_) => args.f64("delta-budget-kb", f64::INFINITY) * 1e3,
+        None => f64::INFINITY,
+    };
+    let quantize = match args.opt("quantize") {
+        Some(spec) => serve::QuantPolicy::parse(&spec).map_err(|e| anyhow!("--quantize: {e}"))?,
+        None => serve::QuantPolicy::Off,
+    };
+    Ok(serve::TenantStoreConfig {
+        budget_bytes,
+        shards: args.usize("shards", 0),
+        compact_depth: args.usize("compact-depth", 4),
+        quantize,
+        spill_dir: None,
+    })
+}
+
+/// Eviction-free, quantization-free, single-shard store for reference
+/// arms and warm passes.
+fn reference_store(base: Arc<ParamStore>) -> Result<serve::TenantStore> {
+    serve::TenantStoreConfig { shards: 1, ..Default::default() }
+        .build(base)
+        .map_err(|e| anyhow!("reference store: {e}"))
+}
+
 /// Multi-tenant adaptation service replay: fan a synthetic
 /// (tenants × domains × episodes) trace over the worker pool, report
 /// throughput and latency percentiles, and check the results
@@ -332,14 +371,15 @@ fn serve(args: &Args) -> Result<()> {
         queue_capacity: args.usize("queue-cap", 64),
         render_cache: !args.bool("no-render-cache"),
         faults: faults.clone(),
+        store: store_config(args)?,
+        snapshot: None,
     };
     let mode = serve::LoopMode::parse(&args.str("mode", "open"))?;
-    // Bit-identical replay needs eviction-free stores; a finite budget
-    // is for capacity experiments, where the check is skipped.
-    let budget = match args.opt("delta-budget-kb") {
-        Some(_) => args.f64("delta-budget-kb", f64::INFINITY) * 1e3,
-        None => f64::INFINITY,
-    };
+    // Bit-identical replay needs eviction-free, quantization-free
+    // stores; a finite budget or a quantize policy is for capacity
+    // experiments, where the check is skipped.
+    let budget = cfg.store.budget_bytes;
+    let quantizing = cfg.store.quantize != serve::QuantPolicy::Off;
     let trace = serve::synthetic_trace(&trace_cfg);
     eprintln!(
         "[serve] {}: {} tenants x {} domains x {} episodes = {} requests, {} workers, {} loop",
@@ -357,13 +397,13 @@ fn serve(args: &Args) -> Result<()> {
     // otherwise pay the shared render cache's cold misses for both,
     // biasing the reported scaling (the bench de-biases the same way).
     if cfg.render_cache {
-        let warm = serve::TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        let warm = reference_store(Arc::clone(&base))?;
         serve::sequential_replay(&meta, &warm, &trace, true);
     }
 
-    let seq_store = serve::TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let seq_store = reference_store(Arc::clone(&base))?;
     let seq = serve::sequential_replay(&meta, &seq_store, &trace, cfg.render_cache);
-    let store = serve::TenantStore::new(Arc::clone(&base), budget);
+    let store = cfg.build_store(Arc::clone(&base))?;
     let par = serve::replay(&meta, &store, &cfg, &trace, mode)?;
 
     if let Some(plan) = &faults {
@@ -379,6 +419,11 @@ fn serve(args: &Args) -> Result<()> {
             "[serve] finite delta budget ({}): skipping the bit-identity check \
              (LRU eviction timing depends on cross-tenant interleaving)",
             fmt_kb(budget)
+        );
+    } else if quantizing {
+        eprintln!(
+            "[serve] --quantize: skipping the bit-identity check \
+             (int8 demotion rounds cold overlays by up to scale/2)"
         );
     } else if faults.is_some() && mode == serve::LoopMode::Open {
         eprintln!(
@@ -425,13 +470,19 @@ fn serve(args: &Args) -> Result<()> {
     println!("{}", table.to_markdown());
     let stats = store.stats();
     eprintln!(
-        "[serve] throughput {:.2}x over sequential | store: {} tenants, {} in deltas, \
-         {} absorbs, {} evictions",
+        "[serve] throughput {:.2}x over sequential | store: {} tenants ({} quantized) on \
+         {} shards, {} in deltas, {} absorbs, {} evictions, {} quantizations, \
+         {} compactions, {} contended",
         par.throughput_rps / seq.throughput_rps.max(1e-12),
         stats.tenants,
+        stats.quantized,
+        stats.shards,
         fmt_kb(stats.delta_bytes),
         stats.absorbs,
-        stats.evictions
+        stats.evictions,
+        stats.quantizations,
+        stats.compactions,
+        stats.contended
     );
     Ok(())
 }
@@ -443,6 +494,10 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
     use std::io::Write as _;
     let (meta, params) = analytic_model(args, "serve")?;
     let state_dir = args.opt("state-dir").map(std::path::PathBuf::from);
+    let mut store_cfg = store_config(args)?;
+    // With a state dir, evicted tenants spill to disk and page back in
+    // on demand instead of silently losing their adaptation.
+    store_cfg.spill_dir = state_dir.as_ref().map(|dir| dir.join("spill"));
     let cfg = net::ServerConfig {
         acceptors: args.usize("acceptors", 4),
         limits: net::Limits::default(),
@@ -452,21 +507,15 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
             queue_capacity: args.usize("queue-cap", 64),
             render_cache: !args.bool("no-render-cache"),
             faults: fault_plan(args)?,
+            store: store_cfg,
+            snapshot: state_dir.as_ref().map(|dir| serve::SnapshotConfig {
+                path: dir.join("tenants.snap"),
+                every: std::time::Duration::from_secs(args.u64("snapshot-every-s", 5)),
+            }),
         },
-        snapshot: state_dir.as_ref().map(|dir| net::SnapshotConfig {
-            path: dir.join("tenants.snap"),
-            every: std::time::Duration::from_secs(args.u64("snapshot-every-s", 5)),
-        }),
     };
-    let budget = match args.opt("delta-budget-kb") {
-        Some(_) => args.f64("delta-budget-kb", f64::INFINITY) * 1e3,
-        None => f64::INFINITY,
-    };
-    let mut store = serve::TenantStore::new(Arc::new(params), budget);
+    let store = cfg.serve.build_store(Arc::new(params))?;
     if let Some(dir) = &state_dir {
-        // Evicted tenants spill to disk and page back in on demand
-        // instead of silently losing their adaptation.
-        store = store.with_spill_dir(dir.join("spill"))?;
         let snap_path = dir.join("tenants.snap");
         match serve::snapshot::load_or_quarantine(&snap_path) {
             serve::Restore::Absent => {}
@@ -500,10 +549,18 @@ fn serve_listen(args: &Args, addr: &str) -> Result<()> {
     );
     net::serve_blocking(listener, &meta, &store, &cfg)?;
     let stats = store.stats();
+    // The chaos-smoke scripts grep this line — keep the field names.
     eprintln!(
-        "[serve] shutdown complete | store: {} tenants, {} in deltas",
+        "[serve] shutdown complete | store: {} tenants ({} quantized) on {} shards, \
+         {} in deltas, {} quantizations, {} promotions, {} compactions, {} contended",
         stats.tenants,
-        fmt_kb(stats.delta_bytes)
+        stats.quantized,
+        stats.shards,
+        fmt_kb(stats.delta_bytes),
+        stats.quantizations,
+        stats.promotions,
+        stats.compactions,
+        stats.contended
     );
     Ok(())
 }
@@ -577,19 +634,44 @@ fn loadgen(args: &Args) -> Result<()> {
         // Split-run verification: completions from earlier phases died
         // with the previous server process, but the surviving tenant
         // state must still equal one uninterrupted sequential pass.
-        net::verify_final_deltas(
-            &meta,
-            base,
-            &full_trace,
-            &report.syncs,
-            !args.bool("no-render-cache"),
-        )?;
-        eprintln!(
-            "[loadgen] full-trace check: final deltas of {} tenants bit-identical to one \
-             uninterrupted sequential pass over all {} episodes",
-            report.syncs.len(),
-            episodes
-        );
+        // Against a `--quantize` server, `--quant-slack S` loosens the
+        // comparison to S half-steps of each run's int8 grid.
+        match args.opt("quant-slack") {
+            Some(_) => {
+                let slack = args.f64("quant-slack", 2.0);
+                net::verify_final_deltas_within_quant_error(
+                    &meta,
+                    base,
+                    &full_trace,
+                    &report.syncs,
+                    !args.bool("no-render-cache"),
+                    slack,
+                )?;
+                eprintln!(
+                    "[loadgen] full-trace check: final deltas of {} tenants within {}x the \
+                     int8 quantization error of one uninterrupted sequential pass over all \
+                     {} episodes",
+                    report.syncs.len(),
+                    slack,
+                    episodes
+                );
+            }
+            None => {
+                net::verify_final_deltas(
+                    &meta,
+                    base,
+                    &full_trace,
+                    &report.syncs,
+                    !args.bool("no-render-cache"),
+                )?;
+                eprintln!(
+                    "[loadgen] full-trace check: final deltas of {} tenants bit-identical to \
+                     one uninterrupted sequential pass over all {} episodes",
+                    report.syncs.len(),
+                    episodes
+                );
+            }
+        }
     } else {
         net::verify_against_reference(
             &meta,

@@ -49,7 +49,7 @@ use crate::model::{ModelMeta, ParamStore};
 use crate::serve::replay::cell_seed;
 use crate::serve::{
     check_equivalent, is_retryable_error, sequential_replay, AdaptRequest, Completion, FaultPlan,
-    LoopMode, TenantStore,
+    LoopMode, TenantStore, TenantStoreConfig,
 };
 use crate::util::jsonio::Json;
 
@@ -441,12 +441,38 @@ fn segments_bit_eq(a: &[(usize, Vec<f32>)], b: &[(usize, Vec<f32>)]) -> bool {
         })
 }
 
+/// Like [`segments_bit_eq`], but tolerating per-run quantization error:
+/// offsets, run count and lengths must still match exactly, while
+/// values may differ by `slack` half-steps of the run's int8 grid —
+/// `slack * max_abs / 254`, since the codec's per-run error bound is
+/// `scale / 2` with `scale ≈ max_abs / 127`. `slack` is in units of
+/// that bound (2.0 = twice the worst case, room for one re-quantize).
+fn segments_within_quant_error(
+    a: &[(usize, Vec<f32>)],
+    b: &[(usize, Vec<f32>)],
+    slack: f64,
+) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|((ao, av), (bo, bv))| {
+            let max_abs = av.iter().fold(0f64, |m, v| m.max(f64::from(v.abs())));
+            let tol = slack * max_abs / 254.0;
+            ao == bo
+                && av.len() == bv.len()
+                && av
+                    .iter()
+                    .zip(bv)
+                    .all(|(x, y)| (f64::from(*x) - f64::from(*y)).abs() <= tol)
+        })
+}
+
 /// Compare every tenant in `trace` between the reference `store` and
-/// the wire-synced `syncs`, bit for bit.
+/// the wire-synced `syncs` — bit for bit, or (with `quant_slack`)
+/// within the int8 quantization error bound.
 fn compare_syncs(
     store: &TenantStore,
     trace: &[AdaptRequest],
     syncs: &BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>,
+    quant_slack: Option<f64>,
 ) -> Result<()> {
     let mut tenants: Vec<&str> = trace.iter().map(|r| r.tenant.as_str()).collect();
     tenants.sort_unstable();
@@ -458,9 +484,14 @@ fn compare_syncs(
             (None, None) => {}
             (Some((ws, wsegs)), Some((gs, gsegs))) => {
                 ensure!(ws == gs, "tenant {tenant}: steps diverged ({ws} vs {gs})");
+                let ok = match quant_slack {
+                    None => segments_bit_eq(wsegs, gsegs),
+                    Some(slack) => segments_within_quant_error(wsegs, gsegs, slack),
+                };
                 ensure!(
-                    segments_bit_eq(wsegs, gsegs),
-                    "tenant {tenant}: final delta diverged from the reference arm"
+                    ok,
+                    "tenant {tenant}: final delta diverged from the reference arm{}",
+                    if quant_slack.is_some() { " (beyond quantization error)" } else { "" }
                 );
             }
             _ => bail!(
@@ -474,6 +505,11 @@ fn compare_syncs(
     Ok(())
 }
 
+/// Eviction-free, quantization-free store for the reference arms.
+fn reference_store(base: Arc<ParamStore>) -> Result<TenantStore> {
+    TenantStoreConfig::default().build(base).map_err(|e| anyhow!("reference store: {e}"))
+}
+
 /// Run the in-process sequential reference arm over the same trace and
 /// assert the wire run matches it bit-for-bit: completion-by-completion
 /// via [`check_equivalent`], then every tenant's final delta.
@@ -484,10 +520,10 @@ pub fn verify_against_reference(
     report: &WireReport,
     render_cache: bool,
 ) -> Result<()> {
-    let store = TenantStore::new(base, f64::INFINITY);
+    let store = reference_store(base)?;
     let reference = sequential_replay(meta, &store, trace, render_cache);
     check_equivalent(&reference.completions, &report.completions)?;
-    compare_syncs(&store, trace, &report.syncs)
+    compare_syncs(&store, trace, &report.syncs, None)
 }
 
 /// Delta-only verification for split runs: replay `full_trace`
@@ -504,7 +540,27 @@ pub fn verify_final_deltas(
     syncs: &BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>,
     render_cache: bool,
 ) -> Result<()> {
-    let store = TenantStore::new(base, f64::INFINITY);
+    let store = reference_store(base)?;
     let _ = sequential_replay(meta, &store, full_trace, render_cache);
-    compare_syncs(&store, full_trace, syncs)
+    compare_syncs(&store, full_trace, syncs, None)
+}
+
+/// [`verify_final_deltas`] for a server running with `--quantize`:
+/// final synced deltas must converge to the exact reference within
+/// `slack` half-steps of each run's int8 grid (see
+/// [`segments_within_quant_error`]) — the restart proof for the
+/// quantize-enabled chaos leg, where cold tenants round-trip through
+/// int8 (and possibly a quantized spill file) before syncing.
+pub fn verify_final_deltas_within_quant_error(
+    meta: &ModelMeta,
+    base: Arc<ParamStore>,
+    full_trace: &[AdaptRequest],
+    syncs: &BTreeMap<String, (u64, Vec<(usize, Vec<f32>)>)>,
+    render_cache: bool,
+    slack: f64,
+) -> Result<()> {
+    ensure!(slack > 0.0, "quant slack must be positive, got {slack}");
+    let store = reference_store(base)?;
+    let _ = sequential_replay(meta, &store, full_trace, render_cache);
+    compare_syncs(&store, full_trace, syncs, Some(slack))
 }

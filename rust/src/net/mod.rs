@@ -10,6 +10,8 @@
 //! | `/v1/episodes`               | POST | submit an episode → 202 ticket  |
 //! | `/v1/tickets/{id}[?wait=1]`  | GET  | poll (or block on) a ticket     |
 //! | `/v1/tenants/{id}/sync`      | GET  | download the tenant's delta     |
+//! | `/v1/tenants/{id}/stats`     | GET  | one tenant's residency + depth  |
+//! | `/v1/stats`                  | GET  | store totals + per-shard table  |
 //! | `/metrics`                   | GET  | queue depth, lanes, percentiles |
 //! | `/healthz`                   | GET  | handler budget + model print    |
 //! | `/v1/shutdown`               | POST | drain and stop                  |
@@ -53,7 +55,8 @@ pub mod server;
 pub use http::{Backoff, Client, HttpError, Request};
 pub use limits::Limits;
 pub use loadgen::{
-    run_wire, verify_against_reference, verify_final_deltas, RetryCounts, WireConfig, WireReport,
+    run_wire, verify_against_reference, verify_final_deltas,
+    verify_final_deltas_within_quant_error, RetryCounts, WireConfig, WireReport,
 };
 pub use proto::{
     decode_submit_lazy, decode_submit_tree, EpisodeSubmit, ProtoError, Route, DEFAULT_METHOD,

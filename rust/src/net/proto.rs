@@ -19,7 +19,7 @@
 
 use crate::coordinator::{search, Method};
 use crate::model::ModelMeta;
-use crate::serve::Completion;
+use crate::serve::{Completion, Residency, ShardStats, TenantStats, TenantStoreStats};
 use crate::util::jsonio::{arr, num, obj, s, Json, JsonError, LazyDoc};
 
 /// Wire defaults for optional submit fields (mirror `tinytrain serve`).
@@ -75,6 +75,10 @@ pub enum Route {
     Ticket { id: usize, wait: bool },
     /// `GET /v1/tenants/{id}/sync`
     TenantSync { tenant: String },
+    /// `GET /v1/tenants/{id}/stats`
+    TenantStatsRoute { tenant: String },
+    /// `GET /v1/stats`
+    Stats,
     /// `GET /metrics`
     Metrics,
     /// `GET /healthz`
@@ -96,6 +100,10 @@ pub fn route(req: &super::http::Request) -> Result<Route, ProtoError> {
         ("GET", ["v1", "tenants", tenant, "sync"]) => {
             Ok(Route::TenantSync { tenant: tenant.to_string() })
         }
+        ("GET", ["v1", "tenants", tenant, "stats"]) => {
+            Ok(Route::TenantStatsRoute { tenant: tenant.to_string() })
+        }
+        ("GET", ["v1", "stats"]) => Ok(Route::Stats),
         ("GET", ["metrics"]) => Ok(Route::Metrics),
         ("GET", ["healthz"]) => Ok(Route::Health),
         ("POST", ["v1", "shutdown"]) => Ok(Route::Shutdown),
@@ -446,6 +454,101 @@ pub fn decode_sync(body: &[u8]) -> Result<(u64, Vec<(usize, Vec<f32>)>), ProtoEr
     Ok((steps, segments))
 }
 
+fn residency_name(r: Residency) -> &'static str {
+    match r {
+        Residency::Resident => "resident",
+        Residency::Quantized => "quantized",
+        Residency::Spilled => "spilled",
+    }
+}
+
+/// `GET /v1/tenants/{id}/stats` response. u64 counters travel as
+/// decimal strings (the integer-exactness rule above); small counts and
+/// byte totals are plain numbers, same shape as the `store` block on
+/// `/metrics`.
+pub fn tenant_stats_body(tenant: &str, ts: &TenantStats) -> String {
+    obj(vec![
+        ("tenant", s(tenant)),
+        ("residency", s(residency_name(ts.residency))),
+        ("steps", u64_s(ts.steps)),
+        ("overlay_depth", num(ts.overlay_depth as f64)),
+        ("weights", num(ts.weights as f64)),
+        ("bytes", num(ts.bytes)),
+        ("shard", num(ts.shard as f64)),
+    ])
+    .to_string()
+}
+
+/// Rebuild a [`TenantStats`] from its wire body (tests, external
+/// observers).
+pub fn decode_tenant_stats(body: &[u8]) -> Result<(String, TenantStats), ProtoError> {
+    let text = std::str::from_utf8(body).map_err(|_| ProtoError::bad("body is not utf-8"))?;
+    let j = Json::parse(text).map_err(decode_err)?;
+    let anyerr = |e: anyhow::Error| ProtoError::bad(e.to_string());
+    let residency = match j.str_of("residency").map_err(anyerr)?.as_str() {
+        "resident" => Residency::Resident,
+        "quantized" => Residency::Quantized,
+        "spilled" => Residency::Spilled,
+        other => return Err(ProtoError::bad(format!("unknown residency '{other}'"))),
+    };
+    let steps = j
+        .str_of("steps")
+        .map_err(anyerr)?
+        .parse::<u64>()
+        .map_err(|_| ProtoError::bad("field 'steps' must be a decimal u64 string"))?;
+    Ok((
+        j.str_of("tenant").map_err(anyerr)?,
+        TenantStats {
+            residency,
+            steps,
+            overlay_depth: j.usize_of("overlay_depth").map_err(anyerr)?,
+            weights: j.usize_of("weights").map_err(anyerr)?,
+            bytes: j.f64_of("bytes").map_err(anyerr)?,
+            shard: j.usize_of("shard").map_err(anyerr)?,
+        },
+    ))
+}
+
+/// `GET /v1/stats` response: aggregated store counters plus the
+/// per-shard occupancy/contention table, in shard-index order. Same
+/// field names as the `store` block on `/metrics`; u64 counters as
+/// decimal strings.
+pub fn stats_body(store: &TenantStoreStats, shards: &[ShardStats]) -> String {
+    let shard_rows = shards
+        .iter()
+        .map(|sh| {
+            obj(vec![
+                ("tenants", num(sh.tenants as f64)),
+                ("quantized", num(sh.quantized as f64)),
+                ("delta_bytes", num(sh.delta_bytes)),
+                ("contended", u64_s(sh.contended)),
+                ("evictions", u64_s(sh.evictions)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        (
+            "store",
+            obj(vec![
+                ("tenants", num(store.tenants as f64)),
+                ("quantized", num(store.quantized as f64)),
+                ("delta_bytes", num(store.delta_bytes)),
+                ("shards", num(store.shards as f64)),
+                ("absorbs", u64_s(store.absorbs)),
+                ("evictions", u64_s(store.evictions)),
+                ("spills", u64_s(store.spills)),
+                ("pageins", u64_s(store.pageins)),
+                ("quantizations", u64_s(store.quantizations)),
+                ("promotions", u64_s(store.promotions)),
+                ("compactions", u64_s(store.compactions)),
+                ("contended", u64_s(store.contended)),
+            ]),
+        ),
+        ("shards", arr(shard_rows)),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -526,6 +629,12 @@ mod tests {
             route(&req("GET", "/v1/tenants/tenant003/sync")).unwrap(),
             Route::TenantSync { tenant: "tenant003".into() }
         );
+        assert_eq!(
+            route(&req("GET", "/v1/tenants/tenant003/stats")).unwrap(),
+            Route::TenantStatsRoute { tenant: "tenant003".into() }
+        );
+        assert_eq!(route(&req("GET", "/v1/stats")).unwrap(), Route::Stats);
+        assert_eq!(route(&req("POST", "/v1/stats")).unwrap_err().status, 404);
         assert_eq!(route(&req("GET", "/metrics")).unwrap(), Route::Metrics);
         assert_eq!(route(&req("GET", "/v1/tickets/xyz")).unwrap_err().status, 400);
         assert_eq!(route(&req("GET", "/v1/nope")).unwrap_err().status, 404);
@@ -624,6 +733,56 @@ mod tests {
         let d = decode_completion(body.as_bytes()).unwrap();
         assert!(d.result.unwrap_err().starts_with("panic:"));
         assert!(decode_completion(pending_body(3).as_bytes()).is_err());
+    }
+
+    #[test]
+    fn tenant_stats_round_trips_including_u64_steps() {
+        let ts = TenantStats {
+            residency: Residency::Quantized,
+            steps: (1u64 << 61) + 99,
+            overlay_depth: 3,
+            weights: 224,
+            bytes: 228.0,
+            shard: 5,
+        };
+        let body = tenant_stats_body("tenant042", &ts);
+        let (tenant, got) = decode_tenant_stats(body.as_bytes()).unwrap();
+        assert_eq!(tenant, "tenant042");
+        assert_eq!(got, ts, "steps above 2^53 must survive the string transport");
+        for r in [Residency::Resident, Residency::Spilled] {
+            let body = tenant_stats_body("t", &TenantStats { residency: r, ..ts.clone() });
+            assert_eq!(decode_tenant_stats(body.as_bytes()).unwrap().1.residency, r);
+        }
+    }
+
+    #[test]
+    fn stats_body_carries_the_shard_table() {
+        let store = TenantStoreStats {
+            tenants: 3,
+            quantized: 1,
+            delta_bytes: 96.0,
+            absorbs: 9,
+            contended: u64::MAX - 2,
+            shards: 2,
+            ..TenantStoreStats::default()
+        };
+        let shards = vec![
+            ShardStats { tenants: 2, quantized: 1, delta_bytes: 64.0, contended: 4, evictions: 0 },
+            ShardStats { tenants: 1, quantized: 0, delta_bytes: 32.0, contended: 0, evictions: 2 },
+        ];
+        let body = stats_body(&store, &shards);
+        let j = Json::parse(&body).unwrap();
+        let st = j.get("store").unwrap();
+        assert_eq!(st.get("tenants").and_then(|v| v.as_usize()), Some(3));
+        // ADR-002: u64 counters travel as decimal strings.
+        assert_eq!(
+            st.get("contended").and_then(|v| v.as_str()),
+            Some((u64::MAX - 2).to_string().as_str())
+        );
+        let rows = j.get("shards").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("tenants").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(rows[1].get("evictions").and_then(|v| v.as_str()), Some("2"));
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! and shed with `503 + Retry-After` when the queue is full instead of
 //! blocking; an active [`FaultPlan`] can additionally inject sheds and
 //! connection drops at this layer (deterministically, keyed on the
-//! submit's stream). With [`ServerConfig::snapshot`] set, tenant state
+//! submit's stream). With `ServeConfig::snapshot` set, tenant state
 //! is snapshotted periodically and — authoritatively — after the
 //! service drains on shutdown, so a restart resumes where it left off.
 //!
@@ -31,7 +31,6 @@
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
@@ -45,17 +44,12 @@ use crate::model::ModelMeta;
 use crate::serve::{
     snapshot, AdaptRequest, AdaptationService, ServeConfig, TenantStore, Ticket, TicketStatus,
 };
-use crate::util::jsonio::{num, obj, s, Json};
+use crate::util::jsonio::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
 
-/// Periodic + on-shutdown tenant snapshots (crash safety).
-#[derive(Debug, Clone)]
-pub struct SnapshotConfig {
-    /// Snapshot file (atomic-renamed on every save).
-    pub path: PathBuf,
-    /// Periodic save interval while serving.
-    pub every: Duration,
-}
+// Durability config moved next to the codec it drives; re-exported here
+// so `net::SnapshotConfig` keeps resolving.
+pub use crate::serve::SnapshotConfig;
 
 /// Knobs of one HTTP service run.
 #[derive(Debug, Clone)]
@@ -68,9 +62,9 @@ pub struct ServerConfig {
     /// loopback CI smoke runs with this on, so every request in the
     /// trace doubles as a decode-equivalence assertion.
     pub verify_decode: bool,
+    /// The serving plane: workers, queue, tenant-store policy and
+    /// durability (`serve.snapshot`) in one value.
     pub serve: ServeConfig,
-    /// Crash-safe tenant state; `None` serves from memory only.
-    pub snapshot: Option<SnapshotConfig>,
 }
 
 impl Default for ServerConfig {
@@ -80,7 +74,6 @@ impl Default for ServerConfig {
             limits: Limits::default(),
             verify_decode: false,
             serve: ServeConfig::default(),
-            snapshot: None,
         }
     }
 }
@@ -112,7 +105,7 @@ pub fn serve_blocking(
             for _ in 0..acceptors {
                 scope.spawn(|| acceptor_loop(&listener, addr, svc, meta, tenants, cfg, &stop));
             }
-            if let Some(snap) = &cfg.snapshot {
+            if let Some(snap) = &cfg.serve.snapshot {
                 scope.spawn(|| snapshot_loop(tenants, snap, &stop));
             }
         });
@@ -120,7 +113,7 @@ pub fn serve_blocking(
     })?;
     // The authoritative snapshot: `run` has drained and joined every
     // worker by now, so this capture includes every absorbed delta.
-    if let Some(snap) = &cfg.snapshot {
+    if let Some(snap) = &cfg.serve.snapshot {
         snapshot::save(&snap.path, &tenants.snapshot_entries())?;
         eprintln!("snapshot: wrote {} on shutdown", snap.path.display());
     }
@@ -247,6 +240,13 @@ fn respond(
             }
             None => Reply::Json(404, proto::error_body("tenant has no adapted state")),
         },
+        Route::TenantStatsRoute { tenant } => match tenants.tenant_stats(&tenant) {
+            Some(ts) => Reply::Json(200, proto::tenant_stats_body(&tenant, &ts)),
+            None => Reply::Json(404, proto::error_body("tenant has no adapted state")),
+        },
+        Route::Stats => {
+            Reply::Json(200, proto::stats_body(&tenants.stats(), &tenants.shard_stats()))
+        }
         Route::Metrics => Reply::Json(200, metrics_body(svc, tenants, cfg)),
         Route::Health => Reply::Json(200, health_body(meta, cfg)),
         Route::Shutdown => {
@@ -360,12 +360,34 @@ fn metrics_body(svc: &AdaptationService, tenants: &TenantStore, cfg: &ServerConf
             "store",
             counters(&[
                 ("tenants", store.tenants as u64),
+                ("quantized", store.quantized as u64),
                 ("delta_bytes", store.delta_bytes as u64),
+                ("shards", store.shards as u64),
                 ("absorbs", store.absorbs),
                 ("evictions", store.evictions),
                 ("spills", store.spills),
                 ("pageins", store.pageins),
+                ("quantizations", store.quantizations),
+                ("promotions", store.promotions),
+                ("compactions", store.compactions),
+                ("contended", store.contended),
             ]),
+        ),
+        (
+            "shards",
+            arr(tenants
+                .shard_stats()
+                .iter()
+                .map(|sh| {
+                    counters(&[
+                        ("tenants", sh.tenants as u64),
+                        ("quantized", sh.quantized as u64),
+                        ("delta_bytes", sh.delta_bytes as u64),
+                        ("contended", sh.contended),
+                        ("evictions", sh.evictions),
+                    ])
+                })
+                .collect()),
         ),
     ];
     if let Some(plan) = &cfg.serve.faults {

@@ -30,7 +30,11 @@
 //!   round-robin fairness across tenants, at-most-one-in-flight per
 //!   tenant (which is also what makes replays order-deterministic).
 //! - [`tenant`]: the [`TenantStore`] — one shared base `ParamStore`,
-//!   per-tenant composed masked-delta overlays, LRU byte budget.
+//!   per-tenant masked-delta overlay chains under an LRU byte budget,
+//!   built from a [`TenantStoreConfig`]: hashed across power-of-two
+//!   shards ([`shard`]), chains compacted at a configurable depth, and
+//!   LRU-cold overlays demoted to int8 ([`quant`]) under
+//!   [`QuantPolicy::Cold`].
 //! - [`service`]: the [`AdaptationService`] — scoped worker pool,
 //!   `submit -> Ticket`, `poll`/`join`/`join_all`.
 //! - [`replay`]: synthetic (tenants × domains × episodes) traces,
@@ -59,14 +63,18 @@
 //!
 //! [`TenantQueue`]: queue::TenantQueue
 //! [`TenantStore`]: tenant::TenantStore
+//! [`TenantStoreConfig`]: tenant::TenantStoreConfig
+//! [`QuantPolicy::Cold`]: tenant::QuantPolicy::Cold
 //! [`AdaptationService`]: service::AdaptationService
 //! [`FaultPlan`]: faults::FaultPlan
 //! [`TicketStatus::Failed`]: service::TicketStatus::Failed
 
 pub mod faults;
+pub mod quant;
 pub mod queue;
 pub mod replay;
 pub mod service;
+pub mod shard;
 pub mod snapshot;
 pub mod tenant;
 
@@ -79,5 +87,8 @@ pub use replay::{
 pub use service::{
     AdaptRequest, AdaptationService, Completion, QueueStats, ServeConfig, Ticket, TicketStatus,
 };
-pub use snapshot::{Restore, TenantSnapshot};
-pub use tenant::{TenantStore, TenantStoreStats};
+pub use shard::ShardStats;
+pub use snapshot::{Restore, SnapshotConfig, SnapshotPayload, TenantSnapshot};
+pub use tenant::{
+    QuantPolicy, Residency, TenantStats, TenantStore, TenantStoreConfig, TenantStoreStats,
+};

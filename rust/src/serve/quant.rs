@@ -1,0 +1,116 @@
+//! Segment-level int8 quantization for tenant overlays.
+//!
+//! The [`TenantStore`] demotes LRU-cold tenants' composed masked deltas
+//! from f32 runs to int8 codes with one f32 scale per run — ~4x more
+//! tenants per byte budget (the 256KB-paper quantization playbook in
+//! PAPERS.md). This module adapts the `no_std` core codec
+//! ([`util::quant`]) to the store's `(offset, run)` segment form; the
+//! store itself decides *who* demotes and when promotion (dequantize on
+//! next touch) happens.
+//!
+//! Contract, asserted by the `quant_roundtrip` property test below:
+//! quantize → dequantize preserves run offsets and lengths exactly, and
+//! every weight lands within `scale / 2` of the original, per segment.
+//! Bit-identity is explicitly **not** promised — which is why replay
+//! verification pins `--quantize off` arms, and the quantize-enabled
+//! chaos leg asserts convergence within this bound instead.
+//!
+//! [`TenantStore`]: crate::serve::TenantStore
+//! [`util::quant`]: crate::util::quant
+
+pub use crate::util::quant::{dequantize_run, quantize_run, QuantRun, BYTES_I8};
+
+/// Quantized mirror of the store's segment form: sorted disjoint
+/// `(offset, codes)` runs.
+pub type QuantSegments = Vec<(usize, QuantRun)>;
+
+/// Encode composed overlay runs as int8 segments (offsets/lengths are
+/// preserved; each run gets its own scale).
+pub fn quantize_segments(segments: &[(usize, Vec<f32>)]) -> QuantSegments {
+    segments.iter().map(|(off, run)| (*off, quantize_run(run))).collect()
+}
+
+/// Decode int8 segments back to f32 runs.
+pub fn dequantize_segments(qsegs: &[(usize, QuantRun)]) -> Vec<(usize, Vec<f32>)> {
+    qsegs.iter().map(|(off, q)| (*off, dequantize_run(q))).collect()
+}
+
+/// Accounting size of a quantized overlay: one byte per code plus a
+/// 4-byte scale per segment (mirrors the f32 pricing convention of
+/// [`accounting::BYTES_F32`](crate::accounting::BYTES_F32) — payload
+/// bytes, not allocator overhead).
+pub fn quantized_bytes(qsegs: &[(usize, QuantRun)]) -> f64 {
+    qsegs.iter().map(|(_, q)| q.values.len() as f64 * BYTES_I8 + 4.0).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_segments(r: &mut Rng) -> Vec<(usize, Vec<f32>)> {
+        let mut segs = Vec::new();
+        let mut off = r.below(32);
+        for _ in 0..r.below(6) {
+            let len = 1 + r.below(24);
+            // Mix magnitudes so per-segment scales actually differ.
+            let mag = 10f64.powi(r.below(9) as i32 - 4);
+            segs.push((
+                off,
+                (0..len).map(|_| (r.range(-mag, mag)) as f32).collect::<Vec<f32>>(),
+            ));
+            off += len + 1 + r.below(16);
+        }
+        segs
+    }
+
+    /// The tentpole property: round-trip preserves structure and bounds
+    /// every weight's error by the owning segment's `scale / 2`.
+    #[test]
+    fn quant_roundtrip() {
+        check("quant_roundtrip", 500, 0x51a7, random_segments, |segs| {
+            let q = quantize_segments(segs);
+            let back = dequantize_segments(&q);
+            if segs.len() != back.len() {
+                return Err(format!("segment count changed: {} -> {}", segs.len(), back.len()));
+            }
+            for (((off_a, va), (off_b, vb)), (_, qs)) in segs.iter().zip(&back).zip(&q) {
+                if off_a != off_b || va.len() != vb.len() {
+                    return Err(format!(
+                        "run structure changed: ({off_a},{}) -> ({off_b},{})",
+                        va.len(),
+                        vb.len()
+                    ));
+                }
+                let half = qs.scale as f64 / 2.0;
+                for (&orig, &deq) in va.iter().zip(vb) {
+                    let err = (orig as f64 - deq as f64).abs();
+                    if err > half {
+                        return Err(format!(
+                            "per-weight error {err:e} exceeds scale/2 = {half:e} \
+                             (orig {orig:e}, deq {deq:e})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantized_bytes_prices_codes_plus_scales() {
+        let segs = vec![(0usize, vec![1.0f32; 10]), (64, vec![0.5f32; 6])];
+        let q = quantize_segments(&segs);
+        assert_eq!(quantized_bytes(&q), 10.0 + 4.0 + 6.0 + 4.0);
+        assert_eq!(quantized_bytes(&[]), 0.0);
+    }
+
+    #[test]
+    fn empty_and_zero_segments_round_trip() {
+        let segs = vec![(3usize, vec![0.0f32; 5])];
+        let back = dequantize_segments(&quantize_segments(&segs));
+        assert_eq!(back, segs);
+        assert!(quantize_segments(&[]).is_empty());
+    }
+}

@@ -44,7 +44,8 @@ use anyhow::{anyhow, Result};
 
 use super::faults::FaultPlan;
 use super::queue::{TenantQueue, TryPushError};
-use super::tenant::TenantStore;
+use super::snapshot::SnapshotConfig;
+use super::tenant::{TenantStore, TenantStoreConfig};
 use crate::coordinator::{AdaptationSession, EpisodeResult, Method, SyncedParams, TrainConfig};
 use crate::data::{domain_by_name, RenderCache, Sampler};
 use crate::model::ModelMeta;
@@ -111,7 +112,9 @@ pub struct Completion {
     pub service_us: f64,
 }
 
-/// Knobs of one service run.
+/// Knobs of one service run — the single value both CLI paths and the
+/// HTTP front-end construct the serving plane from: worker pool, queue,
+/// tenant-store policy and durability all travel together.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub workers: usize,
@@ -123,6 +126,14 @@ pub struct ServeConfig {
     /// Deterministic chaos schedule injected into the worker pool
     /// (panics and slow episodes) — `None` in production.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Tenant-store policy (budget, shards, compaction, quantization,
+    /// spill). Build the store with
+    /// [`build_store`](ServeConfig::build_store) so `shards: 0`
+    /// auto-sizes against this config's worker count.
+    pub store: TenantStoreConfig,
+    /// Periodic + on-shutdown whole-store snapshots (crash safety);
+    /// `None` disables durability.
+    pub snapshot: Option<SnapshotConfig>,
 }
 
 impl Default for ServeConfig {
@@ -132,7 +143,23 @@ impl Default for ServeConfig {
             queue_capacity: 64,
             render_cache: true,
             faults: None,
+            store: TenantStoreConfig::default(),
+            snapshot: None,
         }
+    }
+}
+
+impl ServeConfig {
+    /// Build the tenant store for this run: `store.shards: 0` resolves
+    /// to ~4 shards per worker (see
+    /// [`auto_shards`](crate::serve::shard::auto_shards)) instead of
+    /// the bare single-worker default.
+    pub fn build_store(&self, base: Arc<crate::model::ParamStore>) -> Result<TenantStore> {
+        let mut cfg = self.store.clone();
+        if cfg.shards == 0 {
+            cfg.shards = crate::serve::shard::auto_shards(self.workers.max(1));
+        }
+        cfg.build(base).map_err(|e| anyhow!("tenant store config: {e}"))
     }
 }
 

@@ -1,24 +1,35 @@
 //! Crash-safe tenant snapshots: a versioned, checksummed binary format
 //! for [`TenantStore`](crate::serve::TenantStore) contents.
 //!
-//! Layout (all integers little-endian):
+//! Layout, version 2 (all integers little-endian):
 //!
 //! ```text
 //!   u32  MAGIC  (0x544e_534e, "TNSN")
-//!   u32  VERSION (1)
+//!   u32  VERSION (2)
 //!   u64  tenant count
 //!   per tenant:
 //!     u32  name length, then that many UTF-8 bytes
 //!     u64  steps absorbed
 //!     u64  last_used LRU clock
+//!     u8   repr: 0 = f32 runs, 1 = int8-quantized runs
 //!     u64  segment count
-//!     per segment: u64 offset, u64 length, then length × f32 values
+//!     repr 0 segment: u64 offset, u64 length, then length × f32 bits
+//!     repr 1 segment: u64 offset, u64 length, u32 scale bits, then
+//!                     length × i8 codes
 //!   u64  FNV-1a checksum over every preceding byte
 //! ```
 //!
-//! f32 deltas travel as raw bits, so a save → restore round trip is
-//! `to_bits`-identical — restored tenants keep the serving plane's
-//! bit-identity guarantees intact.
+//! Version 1 (pre-quantization) is the same minus the repr byte —
+//! every segment f32. The decoder reads both, so snapshots and spill
+//! files written before the quantizing tenant plane landed still
+//! restore; the encoder always writes version 2.
+//!
+//! Values travel as raw bits (f32 weights, f32 scales, i8 codes), so a
+//! save → restore round trip is representation-preserving: an f32
+//! overlay restores `to_bits`-identical, and a **quantized overlay
+//! restores as quantized** — same codes, same scales — rather than
+//! being silently dequantized (which would both lose the byte savings
+//! and re-randomize the error on the next demote).
 //!
 //! Writes go through a temp file + `fs::rename` so a crash mid-write
 //! leaves the previous snapshot untouched. Reads never panic: any
@@ -29,21 +40,71 @@
 use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::serve::quant::QuantRun;
 
 const MAGIC: u32 = 0x544e_534e; // "TNSN"
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 /// Sanity cap on decoded name lengths — anything bigger is corruption,
 /// not a tenant name (wire names are capped at 64 bytes).
 const MAX_NAME: usize = 4096;
 
-/// One tenant's durable state: the composed masked-delta segments plus
-/// the LRU metadata needed to resume eviction order after a restart.
+/// Periodic + on-shutdown tenant snapshots (crash safety). Part of
+/// [`ServeConfig`](crate::serve::ServeConfig), so both CLI paths and
+/// the HTTP front-end configure durability from one value.
+#[derive(Debug, Clone)]
+pub struct SnapshotConfig {
+    /// Snapshot file (atomic-renamed on every save).
+    pub path: PathBuf,
+    /// Periodic save interval while serving.
+    pub every: Duration,
+}
+
+/// One tenant's overlay in its stored representation: hot tenants carry
+/// f32 runs, demoted tenants carry int8 codes + per-run scales. The
+/// snapshot preserves whichever form the store held.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapshotPayload {
+    F32(Vec<(usize, Vec<f32>)>),
+    Quantized(Vec<(usize, QuantRun)>),
+}
+
+impl SnapshotPayload {
+    /// Stored weight count (codes and floats both count one weight).
+    pub fn weights(&self) -> usize {
+        match self {
+            SnapshotPayload::F32(segs) => segs.iter().map(|(_, s)| s.len()).sum(),
+            SnapshotPayload::Quantized(segs) => segs.iter().map(|(_, q)| q.values.len()).sum(),
+        }
+    }
+}
+
+/// One tenant's durable state: the overlay payload plus the LRU
+/// metadata needed to resume eviction order after a restart.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TenantSnapshot {
     pub tenant: String,
     pub steps: u64,
     pub last_used: u64,
-    pub segments: Vec<(usize, Vec<f32>)>,
+    pub payload: SnapshotPayload,
+}
+
+impl TenantSnapshot {
+    /// Convenience constructor for the common f32 case.
+    pub fn f32_runs(
+        tenant: impl Into<String>,
+        steps: u64,
+        last_used: u64,
+        segments: Vec<(usize, Vec<f32>)>,
+    ) -> TenantSnapshot {
+        TenantSnapshot {
+            tenant: tenant.into(),
+            steps,
+            last_used,
+            payload: SnapshotPayload::F32(segments),
+        }
+    }
 }
 
 /// FNV-1a, 64-bit. Dependency-free and plenty to catch the truncation
@@ -68,12 +129,29 @@ pub fn encode(entries: &[TenantSnapshot]) -> Vec<u8> {
         out.extend_from_slice(e.tenant.as_bytes());
         out.extend_from_slice(&e.steps.to_le_bytes());
         out.extend_from_slice(&e.last_used.to_le_bytes());
-        out.extend_from_slice(&(e.segments.len() as u64).to_le_bytes());
-        for (off, values) in &e.segments {
-            out.extend_from_slice(&(*off as u64).to_le_bytes());
-            out.extend_from_slice(&(values.len() as u64).to_le_bytes());
-            for v in values {
-                out.extend_from_slice(&v.to_bits().to_le_bytes());
+        match &e.payload {
+            SnapshotPayload::F32(segments) => {
+                out.push(0);
+                out.extend_from_slice(&(segments.len() as u64).to_le_bytes());
+                for (off, values) in segments {
+                    out.extend_from_slice(&(*off as u64).to_le_bytes());
+                    out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+                    for v in values {
+                        out.extend_from_slice(&v.to_bits().to_le_bytes());
+                    }
+                }
+            }
+            SnapshotPayload::Quantized(segments) => {
+                out.push(1);
+                out.extend_from_slice(&(segments.len() as u64).to_le_bytes());
+                for (off, q) in segments {
+                    out.extend_from_slice(&(*off as u64).to_le_bytes());
+                    out.extend_from_slice(&(q.values.len() as u64).to_le_bytes());
+                    out.extend_from_slice(&q.scale.to_bits().to_le_bytes());
+                    out.extend_from_slice(
+                        &q.values.iter().map(|&c| c as u8).collect::<Vec<u8>>(),
+                    );
+                }
             }
         }
     }
@@ -100,6 +178,10 @@ impl<'a> Cursor<'a> {
         Ok(out)
     }
 
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
     fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -107,6 +189,46 @@ impl<'a> Cursor<'a> {
     fn u64(&mut self) -> Result<u64, String> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
+}
+
+fn decode_f32_segments(
+    c: &mut Cursor,
+    tenant: &str,
+) -> Result<Vec<(usize, Vec<f32>)>, String> {
+    let seg_count = c.u64()? as usize;
+    let mut segments = Vec::new();
+    for s in 0..seg_count {
+        let off = c.u64()? as usize;
+        let len = c.u64()? as usize;
+        // Bound the allocation by the bytes actually present.
+        let raw = c
+            .take(len.checked_mul(4).ok_or_else(|| format!("segment {s}: length overflow"))?)
+            .map_err(|e| format!("tenant '{tenant}' segment {s}: {e}"))?;
+        let values = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())))
+            .collect();
+        segments.push((off, values));
+    }
+    Ok(segments)
+}
+
+fn decode_quant_segments(
+    c: &mut Cursor,
+    tenant: &str,
+) -> Result<Vec<(usize, QuantRun)>, String> {
+    let seg_count = c.u64()? as usize;
+    let mut segments = Vec::new();
+    for s in 0..seg_count {
+        let off = c.u64()? as usize;
+        let len = c.u64()? as usize;
+        let scale = f32::from_bits(c.u32()?);
+        let raw =
+            c.take(len).map_err(|e| format!("tenant '{tenant}' quant segment {s}: {e}"))?;
+        let values = raw.iter().map(|&b| b as i8).collect();
+        segments.push((off, QuantRun { scale, values }));
+    }
+    Ok(segments)
 }
 
 pub fn decode(bytes: &[u8]) -> Result<Vec<TenantSnapshot>, String> {
@@ -125,8 +247,10 @@ pub fn decode(bytes: &[u8]) -> Result<Vec<TenantSnapshot>, String> {
         return Err(format!("bad magic {magic:#010x} (want {MAGIC:#010x})"));
     }
     let version = c.u32()?;
-    if version != VERSION {
-        return Err(format!("unsupported snapshot version {version} (this build reads {VERSION})"));
+    if version == 0 || version > VERSION {
+        return Err(format!(
+            "unsupported snapshot version {version} (this build reads 1..={VERSION})"
+        ));
     }
     let count = c.u64()? as usize;
     let mut entries = Vec::new();
@@ -140,20 +264,14 @@ pub fn decode(bytes: &[u8]) -> Result<Vec<TenantSnapshot>, String> {
             .to_string();
         let steps = c.u64()?;
         let last_used = c.u64()?;
-        let seg_count = c.u64()? as usize;
-        let mut segments = Vec::new();
-        for s in 0..seg_count {
-            let off = c.u64()? as usize;
-            let len = c.u64()? as usize;
-            // Bound the allocation by the bytes actually present.
-            let raw = c
-                .take(len.checked_mul(4).ok_or_else(|| format!("segment {s}: length overflow"))?)
-                .map_err(|e| format!("tenant '{tenant}' segment {s}: {e}"))?;
-            let values =
-                raw.chunks_exact(4).map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap()))).collect();
-            segments.push((off, values));
-        }
-        entries.push(TenantSnapshot { tenant, steps, last_used, segments });
+        // v1 predates the repr byte: every segment list is f32.
+        let repr = if version >= 2 { c.u8()? } else { 0 };
+        let payload = match repr {
+            0 => SnapshotPayload::F32(decode_f32_segments(&mut c, &tenant)?),
+            1 => SnapshotPayload::Quantized(decode_quant_segments(&mut c, &tenant)?),
+            other => return Err(format!("tenant '{tenant}': unknown repr tag {other}")),
+        };
+        entries.push(TenantSnapshot { tenant, steps, last_used, payload });
     }
     if c.pos != payload.len() {
         return Err(format!("{} trailing bytes after the last tenant", payload.len() - c.pos));
@@ -195,7 +313,10 @@ pub fn load_or_quarantine(path: &Path) -> Restore {
         Err(e) => {
             // Unreadable is as good as corrupt, but we can't rename what
             // we can't reach — report and boot empty.
-            return Restore::Quarantined { to: path.to_path_buf(), reason: format!("read failed: {e}") };
+            return Restore::Quarantined {
+                to: path.to_path_buf(),
+                reason: format!("read failed: {e}"),
+            };
         }
     };
     match decode(&bytes) {
@@ -216,31 +337,111 @@ mod tests {
 
     fn sample() -> Vec<TenantSnapshot> {
         vec![
+            TenantSnapshot::f32_runs(
+                "tenant000",
+                12,
+                7,
+                vec![(0, vec![1.0, -2.5, 3.25e-8]), (96, vec![f32::MIN_POSITIVE])],
+            ),
+            TenantSnapshot::f32_runs("t1", 1, 9, vec![]),
             TenantSnapshot {
-                tenant: "tenant000".into(),
-                steps: 12,
-                last_used: 7,
-                segments: vec![(0, vec![1.0, -2.5, 3.25e-8]), (96, vec![f32::MIN_POSITIVE])],
+                tenant: "cold".into(),
+                steps: 4,
+                last_used: 3,
+                payload: SnapshotPayload::Quantized(vec![
+                    (8, QuantRun { scale: 0.0123, values: vec![-127, 0, 5, 127] }),
+                    (64, QuantRun { scale: f32::MIN_POSITIVE, values: vec![1] }),
+                ]),
             },
-            TenantSnapshot { tenant: "t1".into(), steps: 1, last_used: 9, segments: vec![] },
         ]
     }
 
+    /// A v1 writer (the pre-quantization layout), kept test-side only:
+    /// the live encoder always writes v2, but old snapshot and spill
+    /// files must keep loading.
+    fn encode_v1(entries: &[TenantSnapshot]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+        for e in entries {
+            let SnapshotPayload::F32(segments) = &e.payload else {
+                panic!("v1 cannot carry quantized payloads");
+            };
+            out.extend_from_slice(&(e.tenant.len() as u32).to_le_bytes());
+            out.extend_from_slice(e.tenant.as_bytes());
+            out.extend_from_slice(&e.steps.to_le_bytes());
+            out.extend_from_slice(&e.last_used.to_le_bytes());
+            out.extend_from_slice(&(segments.len() as u64).to_le_bytes());
+            for (off, values) in segments {
+                out.extend_from_slice(&(*off as u64).to_le_bytes());
+                out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+                for v in values {
+                    out.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
     #[test]
-    fn round_trip_is_bit_identical() {
+    fn round_trip_is_bit_identical_including_quantized_entries() {
         let entries = sample();
         let decoded = decode(&encode(&entries)).unwrap();
         assert_eq!(decoded.len(), entries.len());
         for (a, b) in entries.iter().zip(&decoded) {
-            assert_eq!((a.tenant.as_str(), a.steps, a.last_used), (b.tenant.as_str(), b.steps, b.last_used));
-            assert_eq!(a.segments.len(), b.segments.len());
-            for ((off_a, va), (off_b, vb)) in a.segments.iter().zip(&b.segments) {
-                assert_eq!(off_a, off_b);
-                let bits_a: Vec<u32> = va.iter().map(|v| v.to_bits()).collect();
-                let bits_b: Vec<u32> = vb.iter().map(|v| v.to_bits()).collect();
-                assert_eq!(bits_a, bits_b);
+            assert_eq!(
+                (a.tenant.as_str(), a.steps, a.last_used),
+                (b.tenant.as_str(), b.steps, b.last_used)
+            );
+            match (&a.payload, &b.payload) {
+                (SnapshotPayload::F32(sa), SnapshotPayload::F32(sb)) => {
+                    assert_eq!(sa.len(), sb.len());
+                    for ((off_a, va), (off_b, vb)) in sa.iter().zip(sb) {
+                        assert_eq!(off_a, off_b);
+                        let bits_a: Vec<u32> = va.iter().map(|v| v.to_bits()).collect();
+                        let bits_b: Vec<u32> = vb.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(bits_a, bits_b);
+                    }
+                }
+                (SnapshotPayload::Quantized(sa), SnapshotPayload::Quantized(sb)) => {
+                    assert_eq!(sa.len(), sb.len());
+                    for ((off_a, qa), (off_b, qb)) in sa.iter().zip(sb) {
+                        assert_eq!(off_a, off_b);
+                        assert_eq!(qa.scale.to_bits(), qb.scale.to_bits());
+                        assert_eq!(qa.values, qb.values);
+                    }
+                }
+                (a, b) => panic!("representation changed across the round trip: {a:?} vs {b:?}"),
             }
         }
+    }
+
+    #[test]
+    fn v1_files_forward_load_as_f32_payloads() {
+        let entries: Vec<TenantSnapshot> = sample()
+            .into_iter()
+            .filter(|e| matches!(e.payload, SnapshotPayload::F32(_)))
+            .collect();
+        let v1_bytes = encode_v1(&entries);
+        let decoded = decode(&v1_bytes).expect("v1 snapshots must keep loading");
+        assert_eq!(decoded, entries);
+        // and the re-encode is v2 (round-trips through the live format)
+        assert_eq!(decode(&encode(&decoded)).unwrap(), entries);
+    }
+
+    #[test]
+    fn future_versions_and_bad_reprs_are_typed_errors() {
+        let mut bytes = encode(&sample());
+        // Patch the version field to 3 and re-checksum.
+        bytes[4..8].copy_from_slice(&3u32.to_le_bytes());
+        let n = bytes.len();
+        let sum = fnv1a(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.contains("unsupported snapshot version 3"), "{err}");
     }
 
     #[test]

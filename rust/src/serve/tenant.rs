@@ -1,132 +1,403 @@
-//! Per-tenant parameter state over one shared base model.
+//! Per-tenant parameter state over one shared base model — the tenant
+//! plane.
 //!
 //! TinyTrain's serving premise is MCUNet-style: the pre-trained backbone
 //! is deployed once (flash-resident, shared by everyone) and each user
 //! owns only the tiny sparse delta their on-device adaptation produced.
 //! [`TenantStore`] is that artifact's host: one shared `Arc<ParamStore>`
-//! base plus, per tenant, the composed masked-delta overlay that
+//! base plus, per tenant, the masked-delta overlay that
 //! [`AdaptationBackend::sync`] hands back as [`SyncedParams`].
 //!
-//! Operations:
-//! - [`params_for`](TenantStore::params_for) materialises a working
-//!   store for one episode (base copy + overlay patch — the analytic
-//!   backend is copy-on-write on top of it, so the episode's own
-//!   working set stays `O(mask nnz)`);
-//! - [`absorb`](TenantStore::absorb) composes a fresh episode delta
-//!   into the tenant's overlay (newest value of an index wins, runs are
-//!   re-coalesced);
-//! - overlays live under an **LRU byte budget** priced at
-//!   [`accounting::BYTES_F32`] per stored float: absorbing past the
-//!   budget evicts least-recently-used tenants back to the shared base
-//!   (their personalisation is reconstructible by re-adaptation — the
-//!   overlay is serving state, not ground truth).
+//! The store is built from a [`TenantStoreConfig`] and scales along
+//! three axes:
+//!
+//! - **Sharding.** Tenants hash (FNV-1a, [`shard_index`]) onto `N`
+//!   power-of-two shards, each with its own mutex, LRU clock and
+//!   `budget / N` byte slice, so absorbs and materialisations on
+//!   distinct tenants stop serialising on one lock. Lock acquisition is
+//!   try-then-wait: a blocked acquisition bumps the shard's `contended`
+//!   counter, the signal sharding exists to drive toward zero. With
+//!   quantization off and an unbounded budget the shard count is
+//!   unobservable — per-tenant state never crosses shards.
+//! - **Compaction.** An absorbed episode pushes one composed link onto
+//!   the tenant's overlay *chain* instead of eagerly re-composing the
+//!   whole overlay; once the chain reaches
+//!   [`compact_depth`](TenantStoreConfig::compact_depth) links it folds
+//!   into a single run list via the same [`compose_segments`] the eager
+//!   path used — compaction is a pure function of the chain and
+//!   bit-identical to linear application by construction
+//!   (`compact_depth: 1` *is* the old eager behaviour).
+//! - **Quantization.** Under [`QuantPolicy::Cold`], LRU-cold tenants
+//!   beyond the hot fraction of the budget slice demote their composed
+//!   overlay to int8 codes + per-run f32 scales (~4x more tenants per
+//!   byte) and promote back to f32 on the next touch. Per-weight error
+//!   is bounded by `scale / 2` (see [`util::quant`]); `--quantize off`
+//!   arms stay bit-identical.
+//!
+//! Overlays live under an **LRU byte budget** priced at
+//! [`accounting::BYTES_F32`] per stored float (and
+//! [`BYTES_I8`](crate::serve::quant::BYTES_I8) + scale per quantized
+//! weight): absorbing past a shard's slice first demotes cold tenants
+//! (when quantization is on), then evicts least-recently-used tenants
+//! back to the shared base. The budget is enforced at absorb only —
+//! page-in and promotion may transiently overshoot and are trimmed by
+//! the next absorb, which keeps page-in/evict cycles impossible.
 //!
 //! All methods take `&self` and are safe to call from any worker
-//! thread; the queue's per-tenant serialization (see
-//! [`super::queue`]) is what keeps one tenant's episodes composing in
-//! trace order.
+//! thread; the queue's per-tenant serialization (see [`super::queue`])
+//! is what keeps one tenant's episodes composing in trace order.
+//! Read-side views ([`delta`](TenantStore::delta) /
+//! [`sync_state`](TenantStore::sync_state)) snapshot the overlay's
+//! `Arc`s under the shard lock and compose **outside** it, so a slow
+//! observer cannot stall the absorb path.
 //!
-//! **Durability** (PR 8): with a spill directory configured
-//! ([`with_spill_dir`](TenantStore::with_spill_dir)), eviction writes
+//! **Durability:** with a spill directory configured, eviction writes
 //! the victim's overlay to disk (one checksummed [`snapshot`]-format
-//! file per tenant) and any later touch pages it back in bit-identical
-//! — eviction stops destroying personalisation. Whole-store snapshots
+//! file per tenant, quantized overlays spilling *as quantized*) and any
+//! later touch pages it back in — eviction stops destroying
+//! personalisation. Whole-store snapshots
 //! ([`snapshot_entries`](TenantStore::snapshot_entries) /
 //! [`restore_entries`](TenantStore::restore_entries)) give the serving
 //! plane crash-safe restarts on top of the same format.
 //!
 //! [`AdaptationBackend::sync`]: crate::coordinator::AdaptationBackend::sync
 //! [`snapshot`]: crate::serve::snapshot
+//! [`shard_index`]: crate::serve::shard::shard_index
+//! [`util::quant`]: crate::util::quant
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::accounting::BYTES_F32;
 use crate::coordinator::SyncedParams;
 use crate::model::ParamStore;
-use crate::serve::snapshot::{self, Restore, TenantSnapshot};
+use crate::serve::quant::{
+    dequantize_segments, quantize_segments, quantized_bytes, QuantSegments,
+};
+use crate::serve::shard::{auto_shards, shard_index, ShardStats};
+use crate::serve::snapshot::{self, Restore, SnapshotPayload, TenantSnapshot};
 
-/// One tenant's composed overlay: sorted disjoint `(offset, values)`
-/// runs over the base theta, plus bookkeeping.
+/// Sorted disjoint `(offset, values)` runs over the base theta — the
+/// store's invariant segment form.
+pub type Runs = Vec<(usize, Vec<f32>)>;
+
+/// When (if ever) LRU-cold overlays demote to int8.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum QuantPolicy {
+    /// Never quantize — every overlay stays f32 and every read is
+    /// bit-identical to what was absorbed. Required for replay
+    /// verification.
+    #[default]
+    Off,
+    /// Keep at most `hot_fraction` of each shard's budget slice in f32;
+    /// beyond that, demote LRU-coldest overlays to int8 (promoted back
+    /// to f32 on their next touch).
+    Cold {
+        /// Fraction of the budget slice reserved for f32 overlays,
+        /// in `(0, 1]`.
+        hot_fraction: f64,
+    },
+}
+
+impl QuantPolicy {
+    /// CLI form: `off`, or a hot fraction in `(0, 1]` (e.g. `0.25`
+    /// keeps a quarter of the budget f32-hot).
+    pub fn parse(s: &str) -> Result<QuantPolicy, String> {
+        if s.eq_ignore_ascii_case("off") {
+            return Ok(QuantPolicy::Off);
+        }
+        let f: f64 = s
+            .parse()
+            .map_err(|_| format!("quantize wants 'off' or a hot fraction in (0, 1], got '{s}'"))?;
+        if f > 0.0 && f <= 1.0 {
+            Ok(QuantPolicy::Cold { hot_fraction: f })
+        } else {
+            Err(format!("quantize hot fraction must be in (0, 1], got {f}"))
+        }
+    }
+}
+
+/// Builder-style construction for [`TenantStore`] — one value carries
+/// every policy knob, so call sites stop growing positional arguments.
+///
+/// ```
+/// # use tinytrain::serve::TenantStoreConfig;
+/// # use tinytrain::model::{ModelMeta, ParamStore};
+/// # use std::sync::Arc;
+/// # let base = Arc::new(ParamStore::init(&ModelMeta::synthetic(1), 1));
+/// let store = TenantStoreConfig {
+///     budget_bytes: 64.0 * 1024.0,
+///     shards: 8,
+///     ..TenantStoreConfig::default()
+/// }
+/// .build(base)
+/// .unwrap();
+/// # drop(store);
+/// ```
+#[derive(Debug, Clone)]
+pub struct TenantStoreConfig {
+    /// Total overlay byte budget across all shards (`f64::INFINITY` for
+    /// an unbounded store — required for bit-identical trace replay,
+    /// where eviction timing must not depend on cross-tenant
+    /// interleaving). Each shard enforces `budget_bytes / shards`.
+    pub budget_bytes: f64,
+    /// Shard count: a power of two, or `0` to auto-size (~4 slices per
+    /// worker via [`auto_shards`]; a bare `build` resolves `0` against
+    /// one worker).
+    pub shards: usize,
+    /// Compact a tenant's overlay chain once it holds this many links.
+    /// `1` composes eagerly on every absorb (the pre-chain behaviour);
+    /// higher values amortise composition across episodes.
+    pub compact_depth: usize,
+    /// int8 demotion policy for LRU-cold overlays.
+    pub quantize: QuantPolicy,
+    /// When set, evicted overlays spill here (one file per tenant,
+    /// created on demand) and page back in on the next touch instead of
+    /// being lost.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for TenantStoreConfig {
+    fn default() -> TenantStoreConfig {
+        TenantStoreConfig {
+            budget_bytes: f64::INFINITY,
+            shards: 0,
+            compact_depth: 4,
+            quantize: QuantPolicy::Off,
+            spill_dir: None,
+        }
+    }
+}
+
+impl TenantStoreConfig {
+    /// Validate the knobs and construct the store over `base`.
+    pub fn build(self, base: Arc<ParamStore>) -> Result<TenantStore, String> {
+        let shards = match self.shards {
+            0 => auto_shards(1),
+            n if n.is_power_of_two() => n,
+            n => return Err(format!("shards must be a power of two (or 0 for auto), got {n}")),
+        };
+        if self.compact_depth == 0 {
+            return Err("compact_depth must be >= 1 (1 composes every absorb)".to_string());
+        }
+        if !(self.budget_bytes > 0.0) {
+            return Err(format!("budget_bytes must be positive, got {}", self.budget_bytes));
+        }
+        if let QuantPolicy::Cold { hot_fraction } = self.quantize {
+            if !(hot_fraction > 0.0 && hot_fraction <= 1.0) {
+                return Err(format!("quantize hot fraction must be in (0, 1], got {hot_fraction}"));
+            }
+        }
+        if let Some(dir) = &self.spill_dir {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("spill dir {}: {e}", dir.display()))?;
+        }
+        Ok(TenantStore {
+            base,
+            shards: (0..shards).map(|_| Shard::default()).collect(),
+            budget_slice: self.budget_bytes / shards as f64,
+            compact_depth: self.compact_depth,
+            quantize: self.quantize,
+            spill_dir: self.spill_dir,
+        })
+    }
+}
+
+/// One tenant's overlay in its resident representation.
+#[derive(Debug, Clone)]
+enum Overlay {
+    /// f32 chain, oldest link first; applying the links in order equals
+    /// applying their composition. Compacted back to one link at
+    /// `compact_depth`.
+    Hot(Vec<Arc<Runs>>),
+    /// Demoted: the composed overlay as int8 codes + per-run scales.
+    Cold(Arc<QuantSegments>),
+}
+
+impl Overlay {
+    /// Stored weight count (floats across the chain, or codes).
+    fn stored_weights(&self) -> usize {
+        match self {
+            Overlay::Hot(chain) => {
+                chain.iter().map(|l| l.iter().map(|(_, s)| s.len()).sum::<usize>()).sum()
+            }
+            Overlay::Cold(q) => q.iter().map(|(_, r)| r.values.len()).sum(),
+        }
+    }
+
+    /// Accounting bytes under the store's pricing model.
+    fn bytes(&self) -> f64 {
+        match self {
+            Overlay::Hot(_) => self.stored_weights() as f64 * BYTES_F32,
+            Overlay::Cold(q) => quantized_bytes(q),
+        }
+    }
+
+    fn depth(&self) -> usize {
+        match self {
+            Overlay::Hot(chain) => chain.len(),
+            Overlay::Cold(_) => 1,
+        }
+    }
+
+    fn is_hot(&self) -> bool {
+        matches!(self, Overlay::Hot(_))
+    }
+
+    /// The composed f32 view (dequantizing if cold). Pure — safe to run
+    /// on a cloned overlay outside any lock.
+    fn materialize(&self) -> Runs {
+        match self {
+            Overlay::Hot(chain) => compose_chain(chain),
+            Overlay::Cold(q) => dequantize_segments(q),
+        }
+    }
+}
+
+/// One tenant's overlay plus bookkeeping.
 #[derive(Debug, Clone)]
 struct TenantDelta {
-    segments: Vec<(usize, Vec<f32>)>,
+    overlay: Overlay,
     /// Cumulative optimiser steps absorbed across episodes.
     steps: u64,
     /// Logical-clock timestamp of the last touch (LRU ordering).
     last_used: u64,
 }
 
-impl TenantDelta {
-    fn floats(&self) -> usize {
-        self.segments.iter().map(|(_, s)| s.len()).sum()
-    }
-}
-
-/// Observability counters for the store (see [`TenantStore::stats`]).
+/// Store-wide observability counters, aggregated across shards (see
+/// [`TenantStore::stats`]; per-shard rows come from
+/// [`TenantStore::shard_stats`]).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TenantStoreStats {
-    /// Tenants currently holding an overlay.
+    /// Tenants currently resident (f32 or quantized).
     pub tenants: usize,
-    /// Bytes held across all overlays (floats × `BYTES_F32`).
+    /// Of those, tenants currently holding int8-quantized overlays.
+    pub quantized: usize,
+    /// Bytes held across all overlays (f32 + quantized pricing).
     pub delta_bytes: f64,
     /// Deltas absorbed since construction.
     pub absorbs: u64,
     /// Tenants evicted to fit the byte budget since construction.
     pub evictions: u64,
-    /// Overlays spilled to the snapshot dir on eviction.
+    /// Overlays spilled to the spill dir on eviction.
     pub spills: u64,
-    /// Overlays paged back in from the snapshot dir.
+    /// Overlays paged back in from the spill dir.
     pub pageins: u64,
+    /// Hot → int8 demotions.
+    pub quantizations: u64,
+    /// int8 → f32 promotions (cold tenant touched again).
+    pub promotions: u64,
+    /// Overlay chains folded to one link.
+    pub compactions: u64,
+    /// Blocked shard-lock acquisitions (see [`ShardStats::contended`]).
+    pub contended: u64,
+    /// Shard count the store was built with.
+    pub shards: usize,
 }
 
+/// Where one tenant's state currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// In memory as f32 runs.
+    Resident,
+    /// In memory as int8 codes + scales.
+    Quantized,
+    /// On disk in the spill dir (pages in on next touch).
+    Spilled,
+}
+
+/// Per-tenant view for `GET /v1/tenants/{id}/stats` — read-only, does
+/// not touch the LRU clock or consume spill files.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStats {
+    pub residency: Residency,
+    /// Cumulative optimiser steps absorbed.
+    pub steps: u64,
+    /// Overlay chain links (1 once compacted or quantized; spilled
+    /// overlays are stored composed).
+    pub overlay_depth: usize,
+    /// Stored weight count (floats across the chain, or int8 codes).
+    pub weights: usize,
+    /// Accounting bytes under the store's pricing model.
+    pub bytes: f64,
+    /// Which shard the tenant hashes to.
+    pub shard: usize,
+}
+
+#[derive(Default)]
 struct Tenants {
     map: HashMap<String, TenantDelta>,
     clock: u64,
+    /// Total accounting bytes on this shard (hot + cold).
     delta_bytes: f64,
+    /// f32 subset of `delta_bytes` — what [`QuantPolicy::Cold`] bounds.
+    hot_bytes: f64,
     absorbs: u64,
     evictions: u64,
     spills: u64,
     pageins: u64,
+    quantizations: u64,
+    promotions: u64,
+    compactions: u64,
 }
 
-/// Shared base weights + per-tenant masked-delta overlays with an LRU
-/// byte budget. See the module docs.
+#[derive(Default)]
+struct Shard {
+    inner: Mutex<Tenants>,
+    /// Blocked acquisitions of `inner` on serving paths (try-then-wait
+    /// accounting; observers use a plain lock so polling `/metrics`
+    /// cannot inflate the signal).
+    contended: AtomicU64,
+}
+
+impl Shard {
+    /// Serving-path lock: try first, count the block if we must wait.
+    fn lock(&self) -> MutexGuard<'_, Tenants> {
+        if let Ok(g) = self.inner.try_lock() {
+            return g;
+        }
+        self.contended.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap()
+    }
+
+    /// Observer lock: stats and snapshots must not perturb the
+    /// contention counter they report.
+    fn observe(&self) -> MutexGuard<'_, Tenants> {
+        self.inner.lock().unwrap()
+    }
+}
+
+/// Shared base weights + per-tenant masked-delta overlays, sharded
+/// under an LRU byte budget with optional compaction-deferral and
+/// cold-tenant int8 quantization. Construct via
+/// [`TenantStoreConfig::build`]; see the module docs.
 pub struct TenantStore {
     base: Arc<ParamStore>,
-    inner: Mutex<Tenants>,
-    budget_bytes: f64,
-    /// When set, evicted overlays spill here (one file per tenant) and
-    /// page back in on the next touch instead of being lost.
+    shards: Vec<Shard>,
+    /// Per-shard byte budget (`config.budget_bytes / shards`).
+    budget_slice: f64,
+    compact_depth: usize,
+    quantize: QuantPolicy,
     spill_dir: Option<PathBuf>,
 }
 
 impl TenantStore {
-    /// A store over `base` whose overlays may hold at most
-    /// `budget_bytes` (use `f64::INFINITY` for an unbounded store —
-    /// required for bit-identical trace replay, where eviction timing
-    /// must not depend on cross-tenant interleaving).
+    /// A single-shard store over `base` with `budget_bytes` and every
+    /// other knob at its default.
+    #[deprecated(
+        note = "construct through TenantStoreConfig { budget_bytes, .. }.build(base) — \
+                new() hardwires one shard and no quantization"
+    )]
     pub fn new(base: Arc<ParamStore>, budget_bytes: f64) -> TenantStore {
-        TenantStore {
-            base,
-            inner: Mutex::new(Tenants {
-                map: HashMap::new(),
-                clock: 0,
-                delta_bytes: 0.0,
-                absorbs: 0,
-                evictions: 0,
-                spills: 0,
-                pageins: 0,
-            }),
-            budget_bytes,
-            spill_dir: None,
-        }
+        TenantStoreConfig { budget_bytes, shards: 1, ..TenantStoreConfig::default() }
+            .build(base)
+            .expect("legacy single-shard config is always valid")
     }
 
-    /// Enable eviction spill: evicted overlays are written to `dir`
-    /// (created on demand) and paged back in — bit-identical — on the
-    /// tenant's next touch, instead of being re-adapted from scratch.
+    /// Enable eviction spill after construction.
+    #[deprecated(note = "set TenantStoreConfig::spill_dir instead")]
     pub fn with_spill_dir(mut self, dir: PathBuf) -> std::io::Result<TenantStore> {
         std::fs::create_dir_all(&dir)?;
         self.spill_dir = Some(dir);
@@ -138,6 +409,15 @@ impl TenantStore {
         &self.base
     }
 
+    /// Shard count the store was built with (a power of two).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, tenant: &str) -> &Shard {
+        &self.shards[shard_index(tenant, self.shards.len())]
+    }
+
     /// Per-tenant spill file. The `t-` prefix keeps hostile-ish names
     /// (`.`, `..`) from escaping the directory; wire-visible names are
     /// already restricted to `[A-Za-z0-9._-]` by `net::proto`.
@@ -146,14 +426,21 @@ impl TenantStore {
     }
 
     /// Best-effort spill of one overlay (a single-entry snapshot file).
-    /// Durability failures degrade to plain eviction, never a panic.
+    /// Hot chains spill composed; quantized overlays spill **as
+    /// quantized** — codes and scales intact, so re-demotion after a
+    /// page-in cannot re-randomize the error. Durability failures
+    /// degrade to plain eviction, never a panic.
     fn spill(&self, g: &mut Tenants, tenant: &str, delta: &TenantDelta) {
         let Some(path) = self.spill_path(tenant) else { return };
+        let payload = match &delta.overlay {
+            Overlay::Hot(chain) => SnapshotPayload::F32(compose_chain(chain)),
+            Overlay::Cold(q) => SnapshotPayload::Quantized((**q).clone()),
+        };
         let entry = TenantSnapshot {
             tenant: tenant.to_string(),
             steps: delta.steps,
             last_used: delta.last_used,
-            segments: delta.segments.clone(),
+            payload,
         };
         match snapshot::save(&path, std::slice::from_ref(&entry)) {
             Ok(()) => g.spills += 1,
@@ -163,11 +450,11 @@ impl TenantStore {
 
     /// Page `tenant` back in from its spill file, if one exists. Runs at
     /// the top of every map access so spilled tenants are
-    /// indistinguishable from resident ones. Corrupt spill files are
+    /// indistinguishable from resident ones; the stored representation
+    /// (f32 vs quantized) is preserved. Corrupt spill files are
     /// quarantined (renamed `.corrupt`) and treated as absent. The byte
     /// budget is deliberately **not** re-enforced here — only `absorb`
-    /// evicts, which keeps page-in/evict cycles impossible; a paged-in
-    /// overlay is trimmed at the next absorb like any other.
+    /// evicts, which keeps page-in/evict cycles impossible.
     fn page_in(&self, g: &mut Tenants, tenant: &str) {
         if g.map.contains_key(tenant) {
             return;
@@ -185,13 +472,23 @@ impl TenantStore {
             eprintln!("tenant spill: {} does not contain '{tenant}'", path.display());
             return;
         };
+        let overlay = match entry.payload {
+            SnapshotPayload::F32(segments) => {
+                if segments.is_empty() {
+                    Overlay::Hot(Vec::new())
+                } else {
+                    Overlay::Hot(vec![Arc::new(segments)])
+                }
+            }
+            SnapshotPayload::Quantized(q) => Overlay::Cold(Arc::new(q)),
+        };
         let delta = TenantDelta {
-            segments: entry.segments,
+            overlay,
             steps: entry.steps,
             // Paged-in == just touched: the caller is about to use it.
             last_used: g.clock,
         };
-        g.delta_bytes += delta.floats() as f64 * BYTES_F32;
+        credit(g, &delta);
         g.pageins += 1;
         g.map.insert(tenant.to_string(), delta);
         if let Err(e) = std::fs::remove_file(&path) {
@@ -202,32 +499,48 @@ impl TenantStore {
     /// Working parameters for one of `tenant`'s episodes: a fresh copy
     /// of the base with the tenant's overlay patched in (and the
     /// optimiser moments zeroed — adaptation always starts clean).
-    /// Touches the tenant's LRU timestamp.
+    /// Touches the tenant's LRU timestamp; a quantized tenant is
+    /// promoted back to f32 first (this *is* the "next touch").
     ///
     /// Costs one `O(total_theta)` base copy plus the zeroed moments —
     /// the full `ParamStore` contract, which the PJRT upload path
-    /// requires; only the overlay patch itself is `O(delta nnz)`. What
-    /// stays `O(nnz)` per tenant is the *retained* state: overlays,
-    /// never whole stores.
+    /// requires; only the overlay patch itself is `O(delta nnz)`, and
+    /// it runs outside the shard lock on a chain snapshot.
     pub fn params_for(&self, tenant: &str) -> ParamStore {
         let mut params = self.base.adapted_copy();
-        let mut g = self.inner.lock().unwrap();
-        self.page_in(&mut g, tenant);
-        g.clock += 1;
-        let now = g.clock;
-        if let Some(delta) = g.map.get_mut(tenant) {
-            delta.last_used = now;
-            params.t = delta.steps;
-            for (off, seg) in &delta.segments {
-                params.theta[*off..off + seg.len()].copy_from_slice(seg);
+        let snap = {
+            let shard = self.shard(tenant);
+            let mut g = shard.lock();
+            self.page_in(&mut g, tenant);
+            g.clock += 1;
+            let now = g.clock;
+            promote(&mut g, tenant);
+            g.map.get_mut(tenant).map(|delta| {
+                delta.last_used = now;
+                let chain = match &delta.overlay {
+                    Overlay::Hot(chain) => chain.clone(),
+                    Overlay::Cold(_) => unreachable!("promoted above"),
+                };
+                (delta.steps, chain)
+            })
+        };
+        if let Some((steps, chain)) = snap {
+            params.t = steps;
+            for link in &chain {
+                for (off, seg) in link.iter() {
+                    params.theta[*off..off + seg.len()].copy_from_slice(seg);
+                }
             }
         }
         params
     }
 
-    /// Compose one episode's synced delta into `tenant`'s overlay, then
-    /// enforce the byte budget (evicting least-recently-used tenants —
-    /// possibly this one, if a single overlay exceeds the whole budget).
+    /// Compose one episode's synced delta into `tenant`'s overlay (as a
+    /// new chain link, folding the chain at `compact_depth`), then
+    /// enforce the shard's byte slice: demote LRU-cold hot tenants past
+    /// the quantization policy's hot fraction, then evict
+    /// least-recently-used tenants — possibly this one, if a single
+    /// overlay exceeds the whole slice.
     pub fn absorb(&self, tenant: &str, synced: SyncedParams) {
         let (fresh, steps) = match synced {
             SyncedParams::Sparse { t, segments } => (segments, t),
@@ -235,7 +548,8 @@ impl TenantStore {
             // so the overlay stays masked-delta-sized.
             SyncedParams::Full(p) => (diff_segments(&self.base.theta, &p.theta), p.t),
         };
-        let mut g = self.inner.lock().unwrap();
+        let shard = self.shard(tenant);
+        let mut g = shard.lock();
         self.page_in(&mut g, tenant);
         g.clock += 1;
         g.absorbs += 1;
@@ -243,18 +557,59 @@ impl TenantStore {
         if fresh.is_empty() && !g.map.contains_key(tenant) {
             return; // a no-op episode on a base-only tenant stores nothing
         }
+        // A cold tenant receiving new episodes re-enters the hot set.
+        promote(&mut g, tenant);
+        // Normalise the episode's runs (they may self-overlap, later
+        // segments winning) into the invariant form before chaining.
+        let link = compose_segments(&[], &fresh);
         let entry = g.map.entry(tenant.to_string()).or_insert_with(|| TenantDelta {
-            segments: Vec::new(),
+            overlay: Overlay::Hot(Vec::new()),
             steps: 0,
             last_used: now,
         });
-        let before = entry.floats();
-        entry.segments = compose_segments(&entry.segments, &fresh);
+        let before = entry.overlay.bytes();
+        let Overlay::Hot(chain) = &mut entry.overlay else {
+            unreachable!("promoted above")
+        };
+        if !link.is_empty() {
+            chain.push(Arc::new(link));
+        }
+        let compacted = if chain.len() >= self.compact_depth && chain.len() > 1 {
+            let folded = compose_chain(chain);
+            *chain = vec![Arc::new(folded)];
+            true
+        } else {
+            false
+        };
         entry.steps += steps;
         entry.last_used = now;
-        let after = entry.floats();
-        g.delta_bytes += (after as f64 - before as f64) * BYTES_F32;
-        while g.delta_bytes > self.budget_bytes && !g.map.is_empty() {
+        let after = entry.overlay.bytes();
+        g.delta_bytes += after - before;
+        g.hot_bytes += after - before;
+        if compacted {
+            g.compactions += 1;
+        }
+        self.enforce(&mut g);
+    }
+
+    /// Budget enforcement for one shard (runs after every absorb).
+    fn enforce(&self, g: &mut Tenants) {
+        if let QuantPolicy::Cold { hot_fraction } = self.quantize {
+            let hot_budget = self.budget_slice * hot_fraction;
+            while g.hot_bytes > hot_budget {
+                let victim = g
+                    .map
+                    .iter()
+                    .filter(|(_, d)| d.overlay.is_hot())
+                    .min_by_key(|(_, d)| d.last_used)
+                    .map(|(name, _)| name.clone());
+                let Some(victim) = victim else { break };
+                if !demote(g, &victim) {
+                    break;
+                }
+            }
+        }
+        while g.delta_bytes > self.budget_slice && !g.map.is_empty() {
             let lru = g
                 .map
                 .iter()
@@ -262,8 +617,8 @@ impl TenantStore {
                 .map(|(name, _)| name.clone())
                 .expect("non-empty map");
             let evicted = g.map.remove(&lru).expect("lru key exists");
-            self.spill(&mut g, &lru, &evicted);
-            g.delta_bytes -= evicted.floats() as f64 * BYTES_F32;
+            self.spill(g, &lru, &evicted);
+            debit(g, &evicted);
             g.evictions += 1;
         }
     }
@@ -272,11 +627,11 @@ impl TenantStore {
     /// when a spill dir is configured; otherwise it falls back to the
     /// shared base).
     pub fn evict(&self, tenant: &str) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shard(tenant).lock();
         match g.map.remove(tenant) {
             Some(delta) => {
                 self.spill(&mut g, tenant, &delta);
-                g.delta_bytes -= delta.floats() as f64 * BYTES_F32;
+                debit(&mut g, &delta);
                 g.evictions += 1;
                 true
             }
@@ -284,75 +639,237 @@ impl TenantStore {
         }
     }
 
-    /// The tenant's current overlay runs, if any (clones — for tests,
-    /// replay equivalence checks and state export). Pages spilled
-    /// tenants back in.
-    pub fn delta(&self, tenant: &str) -> Option<Vec<(usize, Vec<f32>)>> {
-        let mut g = self.inner.lock().unwrap();
+    /// Snapshot the tenant's overlay `Arc`s under the shard lock; the
+    /// caller composes/dequantizes outside it.
+    fn overlay_view(&self, tenant: &str) -> Option<(u64, Overlay)> {
+        let mut g = self.shard(tenant).lock();
         self.page_in(&mut g, tenant);
-        g.map.get(tenant).map(|d| d.segments.clone())
+        g.map.get(tenant).map(|d| (d.steps, d.overlay.clone()))
+    }
+
+    /// The tenant's current composed overlay runs, if any (clones — for
+    /// tests, replay equivalence checks and state export). Pages
+    /// spilled tenants back in; a quantized tenant's view is its
+    /// dequantized values (bounded error — see the module docs).
+    /// Composition happens outside the shard lock.
+    pub fn delta(&self, tenant: &str) -> Option<Runs> {
+        self.overlay_view(tenant).map(|(_, overlay)| overlay.materialize())
     }
 
     /// The tenant's wire-sync view: cumulative optimiser steps plus the
     /// composed overlay runs. `None` when the tenant never adapted (or
-    /// was evicted back to base). Read-only — unlike
+    /// was evicted back to base with no spill dir). Read-only — unlike
     /// [`params_for`](TenantStore::params_for) it does **not** touch the
-    /// LRU clock, so an observer polling `/v1/tenants/{id}/sync` cannot
-    /// perturb eviction order.
-    pub fn sync_state(&self, tenant: &str) -> Option<(u64, Vec<(usize, Vec<f32>)>)> {
-        let mut g = self.inner.lock().unwrap();
-        self.page_in(&mut g, tenant);
-        g.map.get(tenant).map(|d| (d.steps, d.segments.clone()))
+    /// LRU clock or promote, so an observer polling
+    /// `/v1/tenants/{id}/sync` cannot perturb eviction order.
+    /// Composition happens outside the shard lock.
+    pub fn sync_state(&self, tenant: &str) -> Option<(u64, Runs)> {
+        self.overlay_view(tenant).map(|(steps, overlay)| (steps, overlay.materialize()))
     }
 
+    /// Aggregated counters across every shard.
     pub fn stats(&self) -> TenantStoreStats {
-        let g = self.inner.lock().unwrap();
-        TenantStoreStats {
-            tenants: g.map.len(),
-            delta_bytes: g.delta_bytes,
-            absorbs: g.absorbs,
-            evictions: g.evictions,
-            spills: g.spills,
-            pageins: g.pageins,
+        let mut s = TenantStoreStats { shards: self.shards.len(), ..TenantStoreStats::default() };
+        for shard in &self.shards {
+            let g = shard.observe();
+            s.tenants += g.map.len();
+            s.quantized += g.map.values().filter(|d| !d.overlay.is_hot()).count();
+            s.delta_bytes += g.delta_bytes;
+            s.absorbs += g.absorbs;
+            s.evictions += g.evictions;
+            s.spills += g.spills;
+            s.pageins += g.pageins;
+            s.quantizations += g.quantizations;
+            s.promotions += g.promotions;
+            s.compactions += g.compactions;
+            s.contended += shard.contended.load(Ordering::Relaxed);
         }
+        s
+    }
+
+    /// One occupancy/contention row per shard, in shard-index order
+    /// (exported on `/metrics` and `GET /v1/stats`).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|shard| {
+                let g = shard.observe();
+                ShardStats {
+                    tenants: g.map.len(),
+                    quantized: g.map.values().filter(|d| !d.overlay.is_hot()).count(),
+                    delta_bytes: g.delta_bytes,
+                    contended: shard.contended.load(Ordering::Relaxed),
+                    evictions: g.evictions,
+                }
+            })
+            .collect()
+    }
+
+    /// Read-only per-tenant view for `GET /v1/tenants/{id}/stats`.
+    /// Unlike every touch path this does **not** page a spilled tenant
+    /// back in — the spill file is read in place, so a stats probe
+    /// cannot perturb residency or LRU order.
+    pub fn tenant_stats(&self, tenant: &str) -> Option<TenantStats> {
+        let shard_idx = shard_index(tenant, self.shards.len());
+        {
+            let g = self.shards[shard_idx].observe();
+            if let Some(d) = g.map.get(tenant) {
+                return Some(TenantStats {
+                    residency: if d.overlay.is_hot() {
+                        Residency::Resident
+                    } else {
+                        Residency::Quantized
+                    },
+                    steps: d.steps,
+                    overlay_depth: d.overlay.depth(),
+                    weights: d.overlay.stored_weights(),
+                    bytes: d.overlay.bytes(),
+                    shard: shard_idx,
+                });
+            }
+        }
+        let path = self.spill_path(tenant)?;
+        let bytes = std::fs::read(&path).ok()?;
+        let entries = snapshot::decode(&bytes).ok()?;
+        let e = entries.into_iter().find(|e| e.tenant == tenant)?;
+        let (weights, acct_bytes, depth) = match &e.payload {
+            SnapshotPayload::F32(segs) => {
+                let w: usize = segs.iter().map(|(_, s)| s.len()).sum();
+                (w, w as f64 * BYTES_F32, usize::from(!segs.is_empty()))
+            }
+            SnapshotPayload::Quantized(q) => (e.payload.weights(), quantized_bytes(q), 1),
+        };
+        Some(TenantStats {
+            residency: Residency::Spilled,
+            steps: e.steps,
+            overlay_depth: depth,
+            weights,
+            bytes: acct_bytes,
+            shard: shard_idx,
+        })
     }
 
     /// Export every **resident** overlay for a whole-store snapshot,
     /// sorted by tenant name (deterministic bytes for identical state).
+    /// Hot chains are composed; quantized overlays export as quantized.
     /// Spilled tenants already live as files in the spill dir — a state
     /// dir that holds both the snapshot and the spills covers everyone.
     pub fn snapshot_entries(&self) -> Vec<TenantSnapshot> {
-        let g = self.inner.lock().unwrap();
-        let mut entries: Vec<TenantSnapshot> = g
-            .map
-            .iter()
-            .map(|(tenant, d)| TenantSnapshot {
-                tenant: tenant.clone(),
-                steps: d.steps,
-                last_used: d.last_used,
-                segments: d.segments.clone(),
-            })
-            .collect();
+        let mut entries: Vec<TenantSnapshot> = Vec::new();
+        for shard in &self.shards {
+            let g = shard.observe();
+            for (tenant, d) in &g.map {
+                let payload = match &d.overlay {
+                    Overlay::Hot(chain) => SnapshotPayload::F32(compose_chain(chain)),
+                    Overlay::Cold(q) => SnapshotPayload::Quantized((**q).clone()),
+                };
+                entries.push(TenantSnapshot {
+                    tenant: tenant.clone(),
+                    steps: d.steps,
+                    last_used: d.last_used,
+                    payload,
+                });
+            }
+        }
         entries.sort_by(|a, b| a.tenant.cmp(&b.tenant));
         entries
     }
 
-    /// Restore-on-boot: adopt snapshot entries wholesale. LRU order is
-    /// resumed from the saved clocks; the byte budget is not enforced
-    /// here (the next absorb trims as usual). Intended for a freshly
-    /// constructed store — existing entries for the same tenant are
-    /// replaced.
+    /// Restore-on-boot: adopt snapshot entries wholesale, each routed to
+    /// its shard. LRU order is resumed from the saved clocks; the byte
+    /// budget is not enforced here (the next absorb trims as usual).
+    /// Intended for a freshly constructed store — existing entries for
+    /// the same tenant are replaced. Quantized entries restore as
+    /// quantized.
     pub fn restore_entries(&self, entries: Vec<TenantSnapshot>) {
-        let mut g = self.inner.lock().unwrap();
         for e in entries {
-            let delta = TenantDelta { segments: e.segments, steps: e.steps, last_used: e.last_used };
+            let mut g = self.shard(&e.tenant).observe();
+            let overlay = match e.payload {
+                SnapshotPayload::F32(segments) => {
+                    if segments.is_empty() {
+                        Overlay::Hot(Vec::new())
+                    } else {
+                        Overlay::Hot(vec![Arc::new(segments)])
+                    }
+                }
+                SnapshotPayload::Quantized(q) => Overlay::Cold(Arc::new(q)),
+            };
+            let delta = TenantDelta { overlay, steps: e.steps, last_used: e.last_used };
             g.clock = g.clock.max(e.last_used + 1);
-            g.delta_bytes += delta.floats() as f64 * BYTES_F32;
+            credit(&mut g, &delta);
             if let Some(old) = g.map.insert(e.tenant, delta) {
-                g.delta_bytes -= old.floats() as f64 * BYTES_F32;
+                debit(&mut g, &old);
             }
         }
     }
+}
+
+/// Add `delta`'s bytes to the shard's accounting.
+fn credit(g: &mut Tenants, delta: &TenantDelta) {
+    let b = delta.overlay.bytes();
+    g.delta_bytes += b;
+    if delta.overlay.is_hot() {
+        g.hot_bytes += b;
+    }
+}
+
+/// Remove `delta`'s bytes from the shard's accounting.
+fn debit(g: &mut Tenants, delta: &TenantDelta) {
+    let b = delta.overlay.bytes();
+    g.delta_bytes -= b;
+    if delta.overlay.is_hot() {
+        g.hot_bytes -= b;
+    }
+}
+
+/// Dequantize a cold tenant back to a single-link hot chain. No-op for
+/// absent or already-hot tenants.
+fn promote(g: &mut Tenants, tenant: &str) {
+    let (runs, old_bytes) = match g.map.get(tenant) {
+        Some(TenantDelta { overlay: Overlay::Cold(q), .. }) => {
+            (dequantize_segments(q), quantized_bytes(q))
+        }
+        _ => return,
+    };
+    let new_bytes = runs.iter().map(|(_, s)| s.len()).sum::<usize>() as f64 * BYTES_F32;
+    let delta = g.map.get_mut(tenant).expect("checked above");
+    delta.overlay = Overlay::Hot(vec![Arc::new(runs)]);
+    g.delta_bytes += new_bytes - old_bytes;
+    g.hot_bytes += new_bytes;
+    g.promotions += 1;
+}
+
+/// Compose a hot tenant's chain and re-encode it as int8 — the overlay
+/// leaves the hot set. Returns `false` for absent or already-cold
+/// tenants (the enforcement loop's termination signal).
+fn demote(g: &mut Tenants, tenant: &str) -> bool {
+    let (qsegs, old_bytes) = match g.map.get(tenant) {
+        Some(TenantDelta { overlay: Overlay::Hot(chain), .. }) => {
+            let composed = compose_chain(chain);
+            let bytes =
+                chain.iter().map(|l| l.iter().map(|(_, s)| s.len()).sum::<usize>()).sum::<usize>()
+                    as f64
+                    * BYTES_F32;
+            (quantize_segments(&composed), bytes)
+        }
+        _ => return false,
+    };
+    let new_bytes = quantized_bytes(&qsegs);
+    let delta = g.map.get_mut(tenant).expect("checked above");
+    delta.overlay = Overlay::Cold(Arc::new(qsegs));
+    g.delta_bytes += new_bytes - old_bytes;
+    g.hot_bytes -= old_bytes;
+    g.quantizations += 1;
+    true
+}
+
+/// Fold an overlay chain (oldest first) into one composed run list —
+/// the definition of compaction. By construction this equals applying
+/// the links in order, which is what `params_for` does for uncompacted
+/// chains; the `compaction_is_bit_identical_to_linear_application` test
+/// pins the equivalence.
+fn compose_chain(chain: &[Arc<Runs>]) -> Runs {
+    chain.iter().fold(Runs::new(), |acc, link| compose_segments(&acc, link))
 }
 
 /// Merge two run lists over the same extent; where they overlap, `new`
@@ -364,8 +881,8 @@ impl TenantStore {
 ///
 /// Cost is `O(old floats + new nnz)`: only the episode-sized `new` goes
 /// through a map, the accumulated overlay is swept linearly. This runs
-/// under the store mutex every commit, so a long-lived tenant's large
-/// overlay must not pay a per-float tree rebuild.
+/// under the shard mutex on every compaction, so a long-lived tenant's
+/// large overlay must not pay a per-float tree rebuild.
 fn compose_segments(
     old: &[(usize, Vec<f32>)],
     new: &[(usize, Vec<f32>)],
@@ -463,6 +980,23 @@ mod tests {
         SyncedParams::Sparse { t, segments }
     }
 
+    /// Single-shard store with eager composition — byte-for-byte the
+    /// pre-sharding behaviour, which the LRU-sensitive tests rely on.
+    fn single_shard(base: Arc<ParamStore>, budget_bytes: f64) -> TenantStore {
+        TenantStoreConfig {
+            budget_bytes,
+            shards: 1,
+            compact_depth: 1,
+            ..TenantStoreConfig::default()
+        }
+        .build(base)
+        .unwrap()
+    }
+
+    fn bits(runs: &[(usize, Vec<f32>)]) -> Vec<(usize, Vec<u32>)> {
+        runs.iter().map(|(o, v)| (*o, v.iter().map(|x| x.to_bits()).collect())).collect()
+    }
+
     #[test]
     fn compose_newest_wins_and_coalesces() {
         let old = vec![(0, vec![1.0, 2.0]), (10, vec![5.0])];
@@ -525,7 +1059,7 @@ mod tests {
     #[test]
     fn absorb_then_params_for_round_trips() {
         let base = base();
-        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        let store = single_shard(Arc::clone(&base), f64::INFINITY);
         store.absorb("alice", sparse(3, vec![(4, vec![0.25, -0.5])]));
         let p = store.params_for("alice");
         assert_eq!(p.theta[4], 0.25);
@@ -541,7 +1075,7 @@ mod tests {
     #[test]
     fn full_sync_is_diffed_against_base() {
         let base = base();
-        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        let store = single_shard(Arc::clone(&base), f64::INFINITY);
         let mut adapted = base.adapted_copy();
         adapted.theta[7] += 1.0;
         adapted.theta[8] += 1.0;
@@ -557,7 +1091,7 @@ mod tests {
     fn lru_eviction_respects_the_byte_budget() {
         let base = base();
         // budget: two 4-float overlays exactly
-        let store = TenantStore::new(base, 8.0 * BYTES_F32);
+        let store = single_shard(base, 8.0 * BYTES_F32);
         store.absorb("a", sparse(1, vec![(0, vec![1.0; 4])]));
         store.absorb("b", sparse(1, vec![(8, vec![2.0; 4])]));
         assert_eq!(store.stats().tenants, 2);
@@ -575,7 +1109,7 @@ mod tests {
 
     #[test]
     fn noop_sync_on_fresh_tenant_stores_nothing() {
-        let store = TenantStore::new(base(), f64::INFINITY);
+        let store = single_shard(base(), f64::INFINITY);
         store.absorb("idle", sparse(0, vec![]));
         assert_eq!(store.stats().tenants, 0);
         assert!(store.delta("idle").is_none());
@@ -584,7 +1118,7 @@ mod tests {
     #[test]
     fn explicit_evict_falls_back_to_base() {
         let base = base();
-        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        let store = single_shard(Arc::clone(&base), f64::INFINITY);
         store.absorb("d", sparse(2, vec![(0, vec![9.0])]));
         assert!(store.evict("d"));
         assert!(!store.evict("d"));
@@ -600,9 +1134,15 @@ mod tests {
         let dir = temp_spill_dir("lru");
         let base = base();
         // budget: two 4-float overlays exactly (same shape as the LRU test)
-        let store = TenantStore::new(Arc::clone(&base), 8.0 * BYTES_F32)
-            .with_spill_dir(dir.clone())
-            .unwrap();
+        let store = TenantStoreConfig {
+            budget_bytes: 8.0 * BYTES_F32,
+            shards: 1,
+            compact_depth: 1,
+            spill_dir: Some(dir.clone()),
+            ..TenantStoreConfig::default()
+        }
+        .build(Arc::clone(&base))
+        .unwrap();
         let payload = vec![(0usize, vec![1.0f32, -2.5, 3.25e-8, f32::MIN_POSITIVE])];
         store.absorb("a", sparse(3, payload.clone()));
         store.absorb("b", sparse(1, vec![(8, vec![2.0; 4])]));
@@ -611,11 +1151,14 @@ mod tests {
         let stats = store.stats();
         assert_eq!((stats.evictions, stats.spills), (1, 1));
         assert!(dir.join("t-a.delta").exists(), "evicted overlay must be on disk");
+        // A stats probe sees the spilled tenant without paging it in.
+        let ts = store.tenant_stats("a").expect("spilled tenant still has stats");
+        assert_eq!(ts.residency, Residency::Spilled);
+        assert_eq!(ts.steps, 3);
+        assert_eq!(ts.weights, 4);
+        assert!(dir.join("t-a.delta").exists(), "stats probe must not consume the spill");
         // Touching "a" pages the exact bits back in.
         let got = store.delta("a").expect("spilled tenant pages back in");
-        let bits = |runs: &[(usize, Vec<f32>)]| -> Vec<(usize, Vec<u32>)> {
-            runs.iter().map(|(o, v)| (*o, v.iter().map(|x| x.to_bits()).collect())).collect()
-        };
         assert_eq!(bits(&got), bits(&payload));
         assert!(!dir.join("t-a.delta").exists(), "page-in consumes the spill file");
         let stats = store.stats();
@@ -628,8 +1171,13 @@ mod tests {
     #[test]
     fn explicit_evict_with_spill_dir_is_not_destructive() {
         let dir = temp_spill_dir("evict");
-        let store =
-            TenantStore::new(base(), f64::INFINITY).with_spill_dir(dir.clone()).unwrap();
+        let store = TenantStoreConfig {
+            shards: 1,
+            spill_dir: Some(dir.clone()),
+            ..TenantStoreConfig::default()
+        }
+        .build(base())
+        .unwrap();
         store.absorb("d", sparse(2, vec![(4, vec![0.5, -0.5])]));
         assert!(store.evict("d"));
         assert_eq!(store.stats().tenants, 0);
@@ -640,29 +1188,287 @@ mod tests {
     #[test]
     fn store_snapshot_round_trips_bit_identical() {
         let base = base();
-        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        let store = single_shard(Arc::clone(&base), f64::INFINITY);
         store.absorb("x", sparse(2, vec![(0, vec![1.5, -0.25])]));
         store.absorb("y", sparse(5, vec![(10, vec![9.0])]));
         store.params_for("x"); // perturb LRU order
         let entries = store.snapshot_entries();
         assert_eq!(entries.len(), 2);
 
-        let restored = TenantStore::new(base, f64::INFINITY);
+        let restored = single_shard(base, f64::INFINITY);
         restored.restore_entries(decode(&encode(&entries)).unwrap());
         for t in ["x", "y"] {
             let (a_steps, a_runs) = store.sync_state(t).unwrap();
             let (b_steps, b_runs) = restored.sync_state(t).unwrap();
             assert_eq!(a_steps, b_steps);
-            assert_eq!(a_runs.len(), b_runs.len());
-            for ((oa, va), (ob, vb)) in a_runs.iter().zip(&b_runs) {
-                assert_eq!(oa, ob);
-                assert!(va.iter().zip(vb).all(|(x, y)| x.to_bits() == y.to_bits()));
-            }
+            assert_eq!(bits(&a_runs), bits(&b_runs));
         }
         assert_eq!(restored.stats().tenants, 2);
-        // LRU order survives: absorbing a third tenant under a tight
-        // budget must evict the same victim in both stores.
-        let want_bytes = store.stats().delta_bytes;
-        assert_eq!(restored.stats().delta_bytes, want_bytes);
+        assert_eq!(restored.stats().delta_bytes, store.stats().delta_bytes);
+    }
+
+    /// Random episode stream for the equivalence tests: a few tenants,
+    /// each absorbing overlapping runs.
+    fn random_episodes(seed: u64, episodes: usize) -> Vec<(String, SyncedParams)> {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(seed);
+        (0..episodes)
+            .map(|_| {
+                let tenant = format!("tenant{:03}", r.below(7));
+                let mut segs: Vec<(usize, Vec<f32>)> = Vec::new();
+                for _ in 0..1 + r.below(3) {
+                    let off = r.below(48);
+                    let len = 1 + r.below(6);
+                    segs.push((off, (0..len).map(|_| r.uniform() as f32).collect()));
+                }
+                (tenant, sparse(1 + r.below(4) as u64, segs))
+            })
+            .collect()
+    }
+
+    /// The compaction contract: a deferred chain folded at any depth
+    /// yields bit-identical composed state to eager composition.
+    #[test]
+    fn compaction_is_bit_identical_to_linear_application() {
+        for depth in [2usize, 3, 4, 7] {
+            let base = base();
+            let eager = single_shard(Arc::clone(&base), f64::INFINITY);
+            let chained = TenantStoreConfig {
+                shards: 1,
+                compact_depth: depth,
+                ..TenantStoreConfig::default()
+            }
+            .build(Arc::clone(&base))
+            .unwrap();
+            for (tenant, ep) in random_episodes(0xC0DE + depth as u64, 60) {
+                let (t, segs) = match ep {
+                    SyncedParams::Sparse { t, segments } => (t, segments),
+                    SyncedParams::Full(_) => unreachable!(),
+                };
+                eager.absorb(&tenant, sparse(t, segs.clone()));
+                chained.absorb(&tenant, sparse(t, segs));
+            }
+            for i in 0..7 {
+                let tenant = format!("tenant{i:03}");
+                match (eager.sync_state(&tenant), chained.sync_state(&tenant)) {
+                    (None, None) => {}
+                    (Some((ta, ra)), Some((tb, rb))) => {
+                        assert_eq!(ta, tb, "steps diverged for {tenant}");
+                        assert_eq!(
+                            bits(&ra),
+                            bits(&rb),
+                            "runs diverged for {tenant} at depth {depth}"
+                        );
+                        // params_for applies the live (possibly uncompacted)
+                        // chain — it must agree too.
+                        let pa = eager.params_for(&tenant);
+                        let pb = chained.params_for(&tenant);
+                        assert!(pa
+                            .theta
+                            .iter()
+                            .zip(&pb.theta)
+                            .all(|(x, y)| x.to_bits() == y.to_bits()));
+                    }
+                    (a, b) => panic!("presence diverged for {tenant}: {a:?} vs {b:?}"),
+                }
+            }
+            assert!(chained.stats().compactions > 0, "depth {depth} never compacted");
+            assert_eq!(eager.stats().absorbs, chained.stats().absorbs);
+        }
+    }
+
+    #[test]
+    fn chain_folds_exactly_at_compact_depth() {
+        let store = TenantStoreConfig {
+            shards: 1,
+            compact_depth: 3,
+            ..TenantStoreConfig::default()
+        }
+        .build(base())
+        .unwrap();
+        store.absorb("t", sparse(1, vec![(0, vec![1.0])]));
+        store.absorb("t", sparse(1, vec![(4, vec![2.0])]));
+        assert_eq!(store.tenant_stats("t").unwrap().overlay_depth, 2);
+        assert_eq!(store.stats().compactions, 0);
+        store.absorb("t", sparse(1, vec![(8, vec![3.0])]));
+        let ts = store.tenant_stats("t").unwrap();
+        assert_eq!(ts.overlay_depth, 1, "third link must trigger the fold");
+        assert_eq!(ts.weights, 3);
+        assert_eq!(store.stats().compactions, 1);
+        assert_eq!(
+            store.delta("t").unwrap(),
+            vec![(0, vec![1.0]), (4, vec![2.0]), (8, vec![3.0])]
+        );
+    }
+
+    #[test]
+    fn cold_tenants_demote_to_int8_and_promote_on_touch() {
+        // Slice: 16 floats; hot fraction 0.5 → at most 8 f32 floats stay hot.
+        let store = TenantStoreConfig {
+            budget_bytes: 16.0 * BYTES_F32,
+            shards: 1,
+            compact_depth: 1,
+            quantize: QuantPolicy::Cold { hot_fraction: 0.5 },
+            ..TenantStoreConfig::default()
+        }
+        .build(base())
+        .unwrap();
+        let a_vals = vec![1.0f32, -0.5, 0.25, 0.125];
+        store.absorb("a", sparse(1, vec![(0, a_vals.clone())]));
+        store.absorb("b", sparse(1, vec![(8, vec![2.0; 4])]));
+        assert_eq!(store.stats().quantized, 0, "8 hot floats fit the hot budget");
+        store.absorb("c", sparse(1, vec![(16, vec![3.0; 4])]));
+        let stats = store.stats();
+        assert_eq!(stats.tenants, 3, "quantization must absorb pressure before eviction");
+        assert_eq!(stats.evictions, 0);
+        assert_eq!((stats.quantized, stats.quantizations), (1, 1));
+        assert_eq!(store.tenant_stats("a").unwrap().residency, Residency::Quantized);
+        // The dequantized view is within scale/2 ≈ max_abs/254 per weight.
+        let got = store.delta("a").unwrap();
+        assert_eq!(got.len(), 1);
+        for (&orig, &deq) in a_vals.iter().zip(&got[0].1) {
+            assert!((orig as f64 - deq as f64).abs() <= 1.0 / 250.0, "{orig} vs {deq}");
+        }
+        // delta() is a read — residency unchanged; params_for promotes.
+        assert_eq!(store.tenant_stats("a").unwrap().residency, Residency::Quantized);
+        let p = store.params_for("a");
+        assert_eq!(store.tenant_stats("a").unwrap().residency, Residency::Resident);
+        assert_eq!(store.stats().promotions, 1);
+        for (i, &orig) in a_vals.iter().enumerate() {
+            assert!((orig as f64 - p.theta[i] as f64).abs() <= 1.0 / 250.0);
+        }
+    }
+
+    #[test]
+    fn quantized_overlays_spill_and_page_in_as_quantized() {
+        let dir = temp_spill_dir("quant");
+        // Slice of 5 floats (20 B), hot fraction 0.5 → hot budget 10 B,
+        // so every 4-float (16 B) tenant demotes on arrival to 4 codes +
+        // a 4-byte scale = 8 B. Two quantized tenants fit (16 ≤ 20); the
+        // third (24 > 20) evicts the LRU — "a", already quantized — so
+        // the spill file must carry the int8 payload.
+        let store = TenantStoreConfig {
+            budget_bytes: 5.0 * BYTES_F32,
+            shards: 1,
+            compact_depth: 1,
+            quantize: QuantPolicy::Cold { hot_fraction: 0.5 },
+            spill_dir: Some(dir.clone()),
+            ..TenantStoreConfig::default()
+        }
+        .build(base())
+        .unwrap();
+        store.absorb("a", sparse(1, vec![(0, vec![1.0, -1.0, 0.5, 0.25])]));
+        assert_eq!(store.tenant_stats("a").unwrap().residency, Residency::Quantized);
+        let quantized_view = store.delta("a").unwrap();
+        store.absorb("b", sparse(1, vec![(8, vec![2.0; 4])]));
+        store.absorb("c", sparse(1, vec![(16, vec![3.0; 4])]));
+        let stats = store.stats();
+        assert!(stats.evictions >= 1, "third tenant must push an eviction");
+        assert!(stats.spills >= 1);
+        let ts = store.tenant_stats("a").expect("evicted tenant readable from spill");
+        assert_eq!(ts.residency, Residency::Spilled);
+        assert_eq!(ts.bytes, 4.0 + 4.0, "spill must stay int8-priced, not rehydrate to f32");
+        // Page back in: still quantized, and the exact same dequantized
+        // values (codes + scales survived the disk round trip).
+        let got = store.delta("a").unwrap();
+        assert_eq!(bits(&got), bits(&quantized_view));
+        assert_eq!(store.tenant_stats("a").unwrap().residency, Residency::Quantized);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The tentpole invariance: with quantization off and an unbounded
+    /// budget, the shard count is unobservable — same episodes, same
+    /// bits, whether 1 shard or 16.
+    #[test]
+    fn shard_count_is_unobservable_with_quantize_off() {
+        let base = base();
+        let one = TenantStoreConfig { shards: 1, ..TenantStoreConfig::default() }
+            .build(Arc::clone(&base))
+            .unwrap();
+        let sixteen = TenantStoreConfig { shards: 16, ..TenantStoreConfig::default() }
+            .build(Arc::clone(&base))
+            .unwrap();
+        for (tenant, ep) in random_episodes(0x5eed, 80) {
+            let (t, segs) = match ep {
+                SyncedParams::Sparse { t, segments } => (t, segments),
+                SyncedParams::Full(_) => unreachable!(),
+            };
+            one.absorb(&tenant, sparse(t, segs.clone()));
+            sixteen.absorb(&tenant, sparse(t, segs));
+        }
+        for i in 0..7 {
+            let tenant = format!("tenant{i:03}");
+            match (one.sync_state(&tenant), sixteen.sync_state(&tenant)) {
+                (None, None) => {}
+                (Some((ta, ra)), Some((tb, rb))) => {
+                    assert_eq!(ta, tb);
+                    assert_eq!(bits(&ra), bits(&rb), "shard count leaked into {tenant}");
+                }
+                (a, b) => panic!("presence diverged for {tenant}: {a:?} vs {b:?}"),
+            }
+        }
+        let (sa, sb) = (one.stats(), sixteen.stats());
+        assert_eq!(
+            (sa.tenants, sa.absorbs, sa.delta_bytes),
+            (sb.tenants, sb.absorbs, sb.delta_bytes)
+        );
+        assert_eq!(sa.shards, 1);
+        assert_eq!(sb.shards, 16);
+        assert_eq!(sixteen.shard_stats().len(), 16);
+        let spread: usize = sixteen.shard_stats().iter().filter(|s| s.tenants > 0).count();
+        assert!(spread > 1, "7 tenants should land on more than one of 16 shards");
+    }
+
+    #[test]
+    fn builder_validates_its_knobs() {
+        let b = base();
+        let err = |cfg: TenantStoreConfig| cfg.build(Arc::clone(&b)).unwrap_err();
+        assert!(err(TenantStoreConfig { shards: 3, ..TenantStoreConfig::default() })
+            .contains("power of two"));
+        assert!(err(TenantStoreConfig { compact_depth: 0, ..TenantStoreConfig::default() })
+            .contains("compact_depth"));
+        assert!(err(TenantStoreConfig { budget_bytes: 0.0, ..TenantStoreConfig::default() })
+            .contains("budget_bytes"));
+        assert!(err(TenantStoreConfig { budget_bytes: f64::NAN, ..TenantStoreConfig::default() })
+            .contains("budget_bytes"));
+        assert!(err(TenantStoreConfig {
+            quantize: QuantPolicy::Cold { hot_fraction: 1.5 },
+            ..TenantStoreConfig::default()
+        })
+        .contains("hot fraction"));
+        // shards: 0 auto-resolves to a power of two
+        let auto = TenantStoreConfig::default().build(Arc::clone(&b)).unwrap();
+        assert!(auto.shard_count().is_power_of_two());
+        assert!(auto.shard_count() >= 4);
+    }
+
+    #[test]
+    fn quant_policy_parses_cli_forms() {
+        assert_eq!(QuantPolicy::parse("off").unwrap(), QuantPolicy::Off);
+        assert_eq!(QuantPolicy::parse("OFF").unwrap(), QuantPolicy::Off);
+        assert_eq!(
+            QuantPolicy::parse("0.25").unwrap(),
+            QuantPolicy::Cold { hot_fraction: 0.25 }
+        );
+        assert_eq!(QuantPolicy::parse("1").unwrap(), QuantPolicy::Cold { hot_fraction: 1.0 });
+        assert!(QuantPolicy::parse("0").is_err());
+        assert!(QuantPolicy::parse("1.5").is_err());
+        assert!(QuantPolicy::parse("warm").is_err());
+    }
+
+    /// The legacy constructors still work for one deprecation cycle.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_the_single_shard_config() {
+        let dir = temp_spill_dir("shim");
+        let base = base();
+        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY)
+            .with_spill_dir(dir.clone())
+            .unwrap();
+        assert_eq!(store.shard_count(), 1);
+        store.absorb("s", sparse(1, vec![(0, vec![4.0])]));
+        assert!(store.evict("s"));
+        assert_eq!(store.sync_state("s"), Some((1, vec![(0, vec![4.0])])));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

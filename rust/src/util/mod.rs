@@ -1,9 +1,9 @@
 //! Infrastructure substrates built in-house (the offline vendor set has no
 //! serde/clap/rand/tokio/criterion/proptest — see DESIGN.md).
 //!
-//! no_std split: `math`, `rng` and the [`pool`] buffer subset are part
-//! of the MCU decision core; timing (`bench`), CLI, JSON I/O and the
-//! property-test harness are host-only.
+//! no_std split: `math`, `quant`, `rng` and the [`pool`] buffer subset
+//! are part of the MCU decision core; timing (`bench`), CLI, JSON I/O
+//! and the property-test harness are host-only.
 
 #[cfg(feature = "std")]
 pub mod bench;
@@ -13,6 +13,7 @@ pub mod cli;
 pub mod jsonio;
 pub mod math;
 pub mod pool;
+pub mod quant;
 #[cfg(feature = "std")]
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,194 @@
+//! int8 run quantization for masked-delta storage (`no_std` core math).
+//!
+//! The serving tier packs LRU-cold tenant overlays as int8 codes with
+//! one f32 scale per run — the 256KB-paper playbook: 4x the tenants per
+//! byte budget, with a *bounded* per-weight error instead of a silent
+//! one. This module is the arithmetic only; policy (who gets demoted,
+//! when promotion happens) lives in [`serve::tenant`]. It is
+//! `no_std + alloc` clean so an MCU build can reuse the exact same
+//! codec for its own flash-resident deltas.
+//!
+//! Guarantees, asserted by the `quant_roundtrip` property tests in
+//! `serve::quant`:
+//!
+//! - **Error bound:** for finite inputs, every dequantized weight is
+//!   within `scale / 2` of the original. The encoder makes this true by
+//!   construction rather than by analysis: the scale is nudged up one
+//!   ulp if `127 * scale` rounded below the run's max magnitude, and
+//!   each code is chosen as the *closer* of the two bracketing integers
+//!   under exact-in-f64 arithmetic (an i8 × f32 product is exact in
+//!   f64, so the comparison never lies).
+//! - **Determinism:** encoding is a pure function of the input bits —
+//!   no float-environment or platform dependence beyond IEEE-754
+//!   round-to-nearest, which the rest of the crate already assumes.
+//!
+//! Codes use the symmetric range `[-127, 127]`; `-128` is never
+//! emitted, so negation of a quantized run can never overflow.
+//!
+//! [`serve::tenant`]: ../../serve/tenant/index.html
+
+use alloc::vec::Vec;
+
+/// Bytes per stored int8 code (accounting mirror of
+/// [`accounting::BYTES_F32`](crate::accounting::BYTES_F32)).
+pub const BYTES_I8: f64 = 1.0;
+
+/// One quantized run: `values[i]` decodes to `values[i] as f32 * scale`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantRun {
+    /// Per-run step size. Zero only when every source weight was zero.
+    pub scale: f32,
+    pub values: Vec<i8>,
+}
+
+impl QuantRun {
+    /// Decoded length in weights.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// Encode one f32 run as int8 codes + a per-run scale. See the module
+/// docs for the `scale / 2` error contract. Non-finite inputs are not
+/// part of the contract (training deltas are finite); they clamp to the
+/// extreme codes instead of poisoning the scale.
+pub fn quantize_run(values: &[f32]) -> QuantRun {
+    let mut max_abs = 0.0f32;
+    for &v in values {
+        if v.is_finite() {
+            let a = abs32(v);
+            if a > max_abs {
+                max_abs = a;
+            }
+        }
+    }
+    if max_abs == 0.0 {
+        return QuantRun { scale: 0.0, values: alloc::vec![0i8; values.len()] };
+    }
+    let mut scale = max_abs / 127.0;
+    if scale == 0.0 {
+        // max_abs so deep in the subnormals that /127 flushed to zero.
+        scale = f32::from_bits(1); // smallest positive subnormal
+    }
+    // Make 127 * scale ≥ max_abs exactly (f64 products of i8 × f32 are
+    // exact), so the extremes always have an in-range bracketing code.
+    while 127.0 * scale as f64 < max_abs as f64 {
+        scale = f32::from_bits(scale.to_bits() + 1);
+    }
+    let s = scale as f64;
+    let codes = values
+        .iter()
+        .map(|&v| {
+            if !v.is_finite() {
+                return if v > 0.0 || v.is_nan() { 127 } else { -127 };
+            }
+            let r = v as f64 / s;
+            // Bracketing integers, clamped to the symmetric code range.
+            let lo = clamp_code(floor64(r));
+            let hi = clamp_code(floor64(r) + 1.0);
+            let vd = v as f64;
+            // i8 × f32 promoted to f64 is exact (7 + 24 < 53 bits), so
+            // picking the closer candidate is picking the true nearest
+            // representable value — error ≤ half the code step.
+            if (vd - hi as f64 * s).abs() < (vd - lo as f64 * s).abs() {
+                hi
+            } else {
+                lo
+            }
+        })
+        .collect();
+    QuantRun { scale, values: codes }
+}
+
+/// Decode a quantized run back to f32 weights. The product is computed
+/// in f64 (exact) and rounded once to f32.
+pub fn dequantize_run(q: &QuantRun) -> Vec<f32> {
+    let s = q.scale as f64;
+    q.values.iter().map(|&c| (c as f64 * s) as f32).collect()
+}
+
+fn clamp_code(x: f64) -> i8 {
+    if x < -127.0 {
+        -127
+    } else if x > 127.0 {
+        127
+    } else {
+        x as i8
+    }
+}
+
+/// `x.abs()` for f32 without the std intrinsic (sign-bit clear).
+fn abs32(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() & !(1u32 << 31))
+}
+
+/// `x.floor()` for f64 in core: truncate, then step down for negative
+/// non-integers. |x| here is ≤ a few hundred, so `trunc` via the soft
+/// bit path is exact.
+fn floor64(x: f64) -> f64 {
+    let t = crate::util::math::soft::trunc64(x);
+    if x < 0.0 && t != x {
+        t - 1.0
+    } else {
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_run_round_trips_to_zero_scale() {
+        let q = quantize_run(&[0.0, -0.0, 0.0]);
+        assert_eq!(q.scale, 0.0);
+        assert_eq!(q.values, alloc::vec![0, 0, 0]);
+        assert!(dequantize_run(&q).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn extremes_map_to_full_code_range() {
+        let q = quantize_run(&[1.0, -1.0, 0.5, 0.0]);
+        assert_eq!(q.values[0], 127);
+        assert_eq!(q.values[1], -127);
+        assert_eq!(q.values[3], 0);
+        let d = dequantize_run(&q);
+        assert!((d[0] - 1.0).abs() <= q.scale / 2.0);
+        assert!((d[1] + 1.0).abs() <= q.scale / 2.0);
+    }
+
+    #[test]
+    fn error_bound_holds_on_adversarial_magnitudes() {
+        // Subnormal max, huge dynamic range, exact halves.
+        for run in [
+            alloc::vec![1.0e-44f32, -3.0e-45, 0.0],
+            alloc::vec![f32::MAX, 1.0, -f32::MAX],
+            alloc::vec![1.5, -2.5, 0.25, 1.0 / 3.0],
+        ] {
+            let q = quantize_run(&run);
+            let d = dequantize_run(&q);
+            for (&v, &r) in run.iter().zip(&d) {
+                let err = (v as f64 - r as f64).abs();
+                assert!(
+                    err <= q.scale as f64 / 2.0,
+                    "err {err:e} > scale/2 {:e} for {v:e}",
+                    q.scale as f64 / 2.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nonfinite_inputs_clamp_instead_of_poisoning_the_scale() {
+        let q = quantize_run(&[f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 2.0]);
+        assert_eq!(q.values[0], 127);
+        assert_eq!(q.values[1], -127);
+        assert_eq!(q.values[2], 127);
+        // scale derives from the finite 2.0, not the infinities
+        assert!((q.scale - 2.0 / 127.0).abs() < 1e-6);
+    }
+}

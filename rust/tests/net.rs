@@ -11,8 +11,19 @@ use std::time::Duration;
 use tinytrain::coordinator::Method;
 use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::net::{self, http, proto, Limits, ServerConfig, WireConfig};
-use tinytrain::serve::{self, FaultPlan, LoopMode, ServeConfig, TenantStore, TraceConfig};
+use tinytrain::serve::{
+    self, FaultPlan, LoopMode, QuantPolicy, ServeConfig, TenantStore, TenantStoreConfig,
+    TraceConfig,
+};
 use tinytrain::util::rng::Rng;
+
+/// Unbounded single-shard store over a fresh synthetic base — the
+/// loopback servers' default tenant plane.
+fn unbounded_store(meta: &ModelMeta) -> TenantStore {
+    TenantStoreConfig { shards: 1, ..TenantStoreConfig::default() }
+        .build(Arc::new(ParamStore::init(meta, 42)))
+        .expect("unbounded store")
+}
 
 // ---------------------------------------------------------------------------
 // Decoder robustness: random and mutated bytes must never panic — every
@@ -107,8 +118,8 @@ fn lifecycle_server_config() -> ServerConfig {
             queue_capacity: 8,
             render_cache: true,
             faults: None,
+            ..ServeConfig::default()
         },
-        snapshot: None,
     }
 }
 
@@ -117,7 +128,7 @@ fn start_server(cfg: ServerConfig) -> (String, std::thread::JoinHandle<anyhow::R
     let addr = listener.local_addr().unwrap().to_string();
     let handle = std::thread::spawn(move || {
         let meta = ModelMeta::synthetic(8);
-        let store = TenantStore::new(Arc::new(ParamStore::init(&meta, 42)), f64::INFINITY);
+        let store = unbounded_store(&meta);
         net::serve_blocking(listener, &meta, &store, &cfg)
     });
     (addr, handle)
@@ -232,8 +243,8 @@ fn stalled_peers_get_408_and_their_handler_back() {
             queue_capacity: 4,
             render_cache: false,
             faults: None,
+            ..ServeConfig::default()
         },
-        snapshot: None,
     };
     let (addr, handle) = start_server(cfg);
     let resp = raw_exchange(&addr, b"GET /healthz HTT"); // stall mid-line
@@ -276,8 +287,8 @@ fn wire_replay_matches_reference(mode: LoopMode, connections: usize, shape: (usi
             queue_capacity: 16,
             render_cache: true,
             faults: None,
+            ..ServeConfig::default()
         },
-        snapshot: None,
     };
     let (addr, handle) = start_server(cfg);
     let wire_cfg = WireConfig {
@@ -349,8 +360,8 @@ fn chaos_wire_replay_recovers_and_stays_bit_identical() {
             queue_capacity: 16,
             render_cache: true,
             faults: Some(Arc::clone(&server_plan)),
+            ..ServeConfig::default()
         },
-        snapshot: None,
     };
     let (addr, handle) = start_server(cfg);
     let wire_cfg = WireConfig {
@@ -464,13 +475,6 @@ fn start_stateful_server(
     let addr = listener.local_addr().unwrap().to_string();
     let handle = std::thread::spawn(move || {
         let meta = ModelMeta::synthetic(8);
-        let store = TenantStore::new(Arc::new(ParamStore::init(&meta, 42)), f64::INFINITY)
-            .with_spill_dir(dir.join("spill"))?;
-        if let serve::Restore::Loaded(entries) =
-            serve::snapshot::load_or_quarantine(&dir.join("tenants.snap"))
-        {
-            store.restore_entries(entries);
-        }
         let cfg = ServerConfig {
             acceptors: 2,
             limits: Limits::default(),
@@ -480,14 +484,25 @@ fn start_stateful_server(
                 queue_capacity: 16,
                 render_cache: true,
                 faults: None,
+                store: TenantStoreConfig {
+                    shards: 1,
+                    spill_dir: Some(dir.join("spill")),
+                    ..TenantStoreConfig::default()
+                },
+                snapshot: Some(net::SnapshotConfig {
+                    path: dir.join("tenants.snap"),
+                    // Long period: only the authoritative shutdown save
+                    // matters here, keeping the test deterministic.
+                    every: Duration::from_secs(60),
+                }),
             },
-            snapshot: Some(net::SnapshotConfig {
-                path: dir.join("tenants.snap"),
-                // Long period: only the authoritative shutdown save
-                // matters here, keeping the test deterministic.
-                every: Duration::from_secs(60),
-            }),
         };
+        let store = cfg.serve.build_store(Arc::new(ParamStore::init(&meta, 42)))?;
+        if let serve::Restore::Loaded(entries) =
+            serve::snapshot::load_or_quarantine(&dir.join("tenants.snap"))
+        {
+            store.restore_entries(entries);
+        }
         net::serve_blocking(listener, &meta, &store, &cfg)
     });
     (addr, handle)
@@ -529,4 +544,150 @@ fn snapshot_restart_converges_bit_identically_across_phases() {
     handle.join().unwrap().unwrap();
     net::verify_final_deltas(&meta, base, &full_trace, &b.syncs, true).unwrap();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Tenant-plane observability routes: GET /v1/stats and
+// GET /v1/tenants/{id}/stats.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stats_routes_expose_the_tenant_plane_over_the_wire() {
+    use tinytrain::util::jsonio::Json;
+
+    let cfg = ServerConfig {
+        acceptors: 2,
+        limits: Limits::default(),
+        verify_decode: true,
+        serve: ServeConfig {
+            workers: 2,
+            queue_capacity: 8,
+            render_cache: true,
+            faults: None,
+            store: TenantStoreConfig { shards: 4, ..TenantStoreConfig::default() },
+            snapshot: None,
+        },
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let meta = ModelMeta::synthetic(8);
+        let store = cfg.serve.build_store(Arc::new(ParamStore::init(&meta, 42)))?;
+        net::serve_blocking(listener, &meta, &store, &cfg)
+    });
+    let mut c = net::Client::connect(&addr, &Limits::client()).unwrap();
+
+    // A tenant that never adapted has no stats.
+    let (status, _) = c.get("/v1/tenants/ghost/stats").unwrap();
+    assert_eq!(status, 404);
+
+    // Adapt one tenant, then read its per-tenant view back.
+    let body = proto::submit_body("t0", "traffic", "tinytrain", 2, 6e-3, Rng::new(5).state());
+    let (status, resp) = c.post("/v1/episodes", &body).unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&resp));
+    let ticket = proto::decode_ticket(&resp).unwrap();
+    let (status, resp) = c.get(&format!("/v1/tickets/{ticket}?wait=1")).unwrap();
+    assert_eq!(status, 200);
+    assert!(proto::decode_completion(&resp).unwrap().result.is_ok());
+
+    let (status, resp) = c.get("/v1/tenants/t0/stats").unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    let (tenant, ts) = proto::decode_tenant_stats(&resp).unwrap();
+    assert_eq!(tenant, "t0");
+    assert_eq!(ts.residency, serve::Residency::Resident);
+    assert_eq!(ts.steps, 2);
+    assert!(ts.weights > 0 && ts.bytes > 0.0);
+    assert!(ts.shard < 4, "shard index {} out of range", ts.shard);
+    // The probe is read-only: polling it again answers the same state.
+    let (_, again) = c.get("/v1/tenants/t0/stats").unwrap();
+    assert_eq!(resp, again, "a stats probe must not perturb the store");
+
+    // The store-wide view: totals plus one row per shard, with u64
+    // counters as decimal strings (ADR-002).
+    let (status, resp) = c.get("/v1/stats").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+    let store = j.get("store").expect("store object");
+    assert_eq!(store.usize_of("tenants").unwrap(), 1);
+    assert_eq!(store.usize_of("shards").unwrap(), 4);
+    assert_eq!(store.str_of("absorbs").unwrap(), "1");
+    assert_eq!(store.str_of("quantizations").unwrap(), "0");
+    let rows = j.arr_of("shards").unwrap();
+    assert_eq!(rows.len(), 4, "one row per shard");
+    let row_tenants: usize = rows.iter().map(|r| r.usize_of("tenants").unwrap()).sum();
+    assert_eq!(row_tenants, 1, "the adapted tenant lives in exactly one shard");
+    assert_eq!(rows[ts.shard].usize_of("tenants").unwrap(), 1, "in its routed shard");
+
+    // /metrics carries the same counter families as JSON numbers.
+    let (status, resp) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8_lossy(&resp).into_owned();
+    for key in ["quantized", "quantizations", "promotions", "compactions", "contended", "shards"] {
+        assert!(text.contains(key), "metrics missing {key}: {text}");
+    }
+
+    let (status, _) = c.post("/v1/shutdown", "{}").unwrap();
+    assert_eq!(status, 200);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn quantizing_server_syncs_within_the_int8_error_bound() {
+    let meta = ModelMeta::synthetic(8);
+    let base = Arc::new(ParamStore::init(&meta, 42));
+    // Static-mask method: quantization rounding must not be able to
+    // flip a dynamic layer selection (which would change the delta
+    // support, not just its values).
+    let trace_cfg = TraceConfig { method: Method::LastLayer, ..chaos_trace_cfg() };
+    let trace = serve::synthetic_trace(&trace_cfg);
+    // A tiny budget with a cold policy: every tenant's overlay demotes
+    // to int8 between episodes.
+    let cfg = ServerConfig {
+        acceptors: 2,
+        limits: Limits::default(),
+        verify_decode: true,
+        serve: ServeConfig {
+            workers: 2,
+            queue_capacity: 16,
+            render_cache: true,
+            faults: None,
+            store: TenantStoreConfig {
+                budget_bytes: 1e3,
+                shards: 2,
+                quantize: QuantPolicy::Cold { hot_fraction: 0.25 },
+                spill_dir: Some(
+                    std::env::temp_dir()
+                        .join(format!("tinytrain-net-quant-{}", std::process::id())),
+                ),
+                ..TenantStoreConfig::default()
+            },
+            snapshot: None,
+        },
+    };
+    let spill = cfg.serve.store.spill_dir.clone().unwrap();
+    let _ = std::fs::remove_dir_all(&spill);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let meta2 = meta.clone();
+    let handle = std::thread::spawn(move || {
+        let store = cfg.serve.build_store(Arc::new(ParamStore::init(&meta2, 42)))?;
+        net::serve_blocking(listener, &meta2, &store, &cfg)
+    });
+    let wire_cfg = WireConfig {
+        connections: 2,
+        mode: LoopMode::Closed,
+        method: "lastlayer".into(),
+        limits: Limits::client(),
+        shutdown: true,
+        ..WireConfig::default()
+    };
+    let report = net::run_wire(&addr, &meta, &trace, &wire_cfg).unwrap();
+    handle.join().unwrap().unwrap();
+    assert!(report.completions.iter().all(|c| c.result.is_ok()));
+    // Exact bit-identity is impossible here — demoted overlays round —
+    // but the synced deltas must land within the int8 error bound of
+    // the exact sequential arm.
+    net::verify_final_deltas_within_quant_error(&meta, base, &trace, &report.syncs, true, 4.0)
+        .unwrap();
+    let _ = std::fs::remove_dir_all(&spill);
 }

@@ -320,3 +320,25 @@ fn soft_float_wrappers_are_bit_identical_on_random_patterns() {
         assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()), "sqrt32({y:e})");
     }
 }
+
+#[test]
+fn int8_quant_roundtrip_is_deterministic_and_within_half_a_step() {
+    use tinytrain::util::quant::{dequantize_run, quantize_run};
+    let mut rng = Rng::new(0xDE0DE);
+    for len in [1usize, 7, 64, 255] {
+        let run: Vec<f32> = (0..len)
+            .map(|_| ((rng.next_u64() as i32) % 2000) as f32 * 1e-3)
+            .collect();
+        let q = quantize_run(&run);
+        assert_eq!(q, quantize_run(&run), "encoding must be a pure function of the bits");
+        assert_eq!(q.len(), len);
+        assert!(q.values.iter().all(|&c| c != i8::MIN), "-128 is never emitted");
+        for (&v, &r) in run.iter().zip(&dequantize_run(&q)) {
+            assert!(
+                (f64::from(v) - f64::from(r)).abs() <= f64::from(q.scale) / 2.0,
+                "|{v:e} - {r:e}| beyond scale/2 = {:e}",
+                f64::from(q.scale) / 2.0
+            );
+        }
+    }
+}

@@ -18,8 +18,17 @@ use tinytrain::model::{ModelMeta, ParamStore};
 use tinytrain::serve::{
     check_equivalent, is_retryable_error, replay, sequential_replay, synthetic_trace, tenant_name,
     AdaptationService, FaultCounts, FaultPlan, LoopMode, ServeConfig, TenantQueue, TenantStore,
-    TicketStatus, TraceConfig, TryPushError,
+    TenantStoreConfig, TicketStatus, TraceConfig, TryPushError,
 };
+
+/// Unbounded single-shard store — the configuration every bit-identity
+/// arm in this file wants (no eviction, no quantization, shard routing
+/// out of the picture).
+fn unbounded(base: &Arc<ParamStore>) -> TenantStore {
+    TenantStoreConfig { shards: 1, ..TenantStoreConfig::default() }
+        .build(Arc::clone(base))
+        .expect("unbounded single-shard store")
+}
 
 // ---------------------------------------------------------------------------
 // Queue: backpressure
@@ -125,16 +134,21 @@ fn replay_is_bit_identical_across_worker_counts_and_loop_modes() {
     let cfg = tiny_trace_cfg();
     let trace = synthetic_trace(&cfg);
 
-    let ref_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let ref_store = unbounded(&base);
     let reference = sequential_replay(&meta, &ref_store, &trace, true);
     assert_eq!(reference.errors, 0, "reference arm had errors");
     assert_eq!(reference.requests, trace.len());
 
     for workers in [1, 2, 4] {
         for mode in [LoopMode::Open, LoopMode::Closed] {
-            let scfg =
-                ServeConfig { workers, queue_capacity: 8, render_cache: true, faults: None };
-            let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+            let scfg = ServeConfig {
+                workers,
+                queue_capacity: 8,
+                render_cache: true,
+                faults: None,
+                ..ServeConfig::default()
+            };
+            let store = unbounded(&base);
             let report = replay(&meta, &store, &scfg, &trace, mode).unwrap();
             let ctx = format!("{workers} workers, {mode:?} loop");
             assert_eq!(report.errors, 0, "{ctx}: errors");
@@ -159,9 +173,9 @@ fn render_cache_off_changes_nothing_but_time() {
     let base = Arc::new(ParamStore::init(&meta, 5));
     let cfg = TraceConfig { tenants: 2, episodes: 2, ..tiny_trace_cfg() };
     let trace = synthetic_trace(&cfg);
-    let store_on = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let store_on = unbounded(&base);
     let on = sequential_replay(&meta, &store_on, &trace, true);
-    let store_off = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let store_off = unbounded(&base);
     let off = sequential_replay(&meta, &store_off, &trace, false);
     check_equivalent(&on.completions, &off.completions).unwrap();
 }
@@ -174,8 +188,14 @@ fn render_cache_off_changes_nothing_but_time() {
 fn service_tickets_poll_join_and_survive_bad_requests() {
     let meta = ModelMeta::synthetic(3);
     let base = Arc::new(ParamStore::init(&meta, 9));
-    let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
-    let cfg = ServeConfig { workers: 2, queue_capacity: 4, render_cache: true, faults: None };
+    let store = unbounded(&base);
+    let cfg = ServeConfig {
+        workers: 2,
+        queue_capacity: 4,
+        render_cache: true,
+        faults: None,
+        ..ServeConfig::default()
+    };
     let trace_cfg = TraceConfig {
         tenants: 2,
         domains: vec!["flower".into()],
@@ -221,8 +241,14 @@ fn tenant_deltas_accumulate_and_stay_isolated() {
     let base = Arc::new(ParamStore::init(&meta, 42));
     let cfg = tiny_trace_cfg();
     let trace = synthetic_trace(&cfg);
-    let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
-    let scfg = ServeConfig { workers: 2, queue_capacity: 8, render_cache: true, faults: None };
+    let store = unbounded(&base);
+    let scfg = ServeConfig {
+        workers: 2,
+        queue_capacity: 8,
+        render_cache: true,
+        faults: None,
+        ..ServeConfig::default()
+    };
     let report = replay(&meta, &store, &scfg, &trace, LoopMode::Open).unwrap();
     assert_eq!(report.errors, 0);
 
@@ -267,13 +293,14 @@ fn tenant_deltas_accumulate_and_stay_isolated() {
 fn injected_panic_fails_the_ticket_releases_the_lane_and_a_resubmit_succeeds() {
     let meta = ModelMeta::synthetic(3);
     let base = Arc::new(ParamStore::init(&meta, 9));
-    let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let store = unbounded(&base);
     let plan = FaultPlan::from_spec("seed=3,panic=1").unwrap();
     let cfg = ServeConfig {
         workers: 2,
         queue_capacity: 4,
         render_cache: true,
         faults: Some(Arc::clone(&plan)),
+        ..ServeConfig::default()
     };
     let trace_cfg = TraceConfig {
         tenants: 1,
@@ -316,7 +343,7 @@ fn faulted_closed_replay_converges_to_the_fault_free_reference() {
     let base = Arc::new(ParamStore::init(&meta, 42));
     let cfg = tiny_trace_cfg();
     let trace = synthetic_trace(&cfg);
-    let ref_store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let ref_store = unbounded(&base);
     let reference = sequential_replay(&meta, &ref_store, &trace, true);
 
     let plan = FaultPlan::from_spec("seed=5,panic=0.4,slow=0.2:1").unwrap();
@@ -325,8 +352,9 @@ fn faulted_closed_replay_converges_to_the_fault_free_reference() {
         queue_capacity: 8,
         render_cache: true,
         faults: Some(Arc::clone(&plan)),
+        ..ServeConfig::default()
     };
-    let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+    let store = unbounded(&base);
     let report = replay(&meta, &store, &scfg, &trace, LoopMode::Closed).unwrap();
     assert_eq!(report.errors, 0, "closed-loop retry must clear every injected failure");
     let counts = plan.counts();
@@ -360,8 +388,9 @@ fn fault_schedule_and_outcomes_are_worker_count_invariant() {
             queue_capacity: 8,
             render_cache: true,
             faults: Some(Arc::clone(&plan)),
+            ..ServeConfig::default()
         };
-        let store = TenantStore::new(Arc::clone(&base), f64::INFINITY);
+        let store = unbounded(&base);
         let report = replay(&meta, &store, &scfg, &trace, LoopMode::Closed).unwrap();
         assert_eq!(report.errors, 0, "{workers} workers: unrecovered failures");
         let deltas: Deltas = (0..cfg.tenants).map(|t| store.delta(&tenant_name(t))).collect();
@@ -374,4 +403,73 @@ fn fault_schedule_and_outcomes_are_worker_count_invariant() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded, compacting tenant plane through the full service path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_compacting_store_replays_bit_identical_to_the_reference() {
+    let meta = ModelMeta::synthetic(4);
+    let base = Arc::new(ParamStore::init(&meta, 42));
+    let cfg = tiny_trace_cfg();
+    let trace = synthetic_trace(&cfg);
+    let ref_store = unbounded(&base);
+    let reference = sequential_replay(&meta, &ref_store, &trace, true);
+    // With quantization off and no budget, per-tenant composition is
+    // shard-local, so neither the shard count nor the compaction depth
+    // is observable in any tenant's final delta.
+    for shards in [1, 8] {
+        for compact_depth in [1, 3] {
+            let ctx = format!("shards={shards} depth={compact_depth}");
+            let store =
+                TenantStoreConfig { shards, compact_depth, ..TenantStoreConfig::default() }
+                    .build(Arc::clone(&base))
+                    .unwrap();
+            let scfg = ServeConfig {
+                workers: 4,
+                queue_capacity: 8,
+                render_cache: true,
+                faults: None,
+                ..ServeConfig::default()
+            };
+            let report = replay(&meta, &store, &scfg, &trace, LoopMode::Open).unwrap();
+            assert_eq!(report.errors, 0, "{ctx}: errors");
+            check_equivalent(&reference.completions, &report.completions)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            for t in 0..cfg.tenants {
+                let name = tenant_name(t);
+                assert_eq!(
+                    ref_store.delta(&name),
+                    store.delta(&name),
+                    "{ctx}: tenant {name} final delta diverged"
+                );
+            }
+            assert_eq!(store.shard_count(), shards, "{ctx}: shard count");
+        }
+    }
+}
+
+#[test]
+fn serve_config_build_store_auto_sizes_shards_from_workers() {
+    let meta = ModelMeta::synthetic(2);
+    let base = Arc::new(ParamStore::init(&meta, 1));
+    let cfg = ServeConfig { workers: 3, ..ServeConfig::default() };
+    let store = cfg.build_store(Arc::clone(&base)).unwrap();
+    // auto_shards: ~4 slots per worker, rounded up to a power of two.
+    assert_eq!(store.shard_count(), 16);
+    // An explicit shard count wins over the auto-sizing.
+    let cfg = ServeConfig {
+        workers: 3,
+        store: TenantStoreConfig { shards: 2, ..TenantStoreConfig::default() },
+        ..ServeConfig::default()
+    };
+    assert_eq!(cfg.build_store(Arc::clone(&base)).unwrap().shard_count(), 2);
+    // ...and an invalid one still fails through the builder.
+    let cfg = ServeConfig {
+        store: TenantStoreConfig { shards: 3, ..TenantStoreConfig::default() },
+        ..ServeConfig::default()
+    };
+    assert!(cfg.build_store(base).is_err(), "non-power-of-two shard count must be rejected");
 }
